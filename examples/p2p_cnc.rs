@@ -1,0 +1,68 @@
+//! Peer-to-peer showcase — the paper's Algorithm 2/3 on the real PJRT
+//! path: a 20-client chain-training fleet under the four experiment-1
+//! settings (CNC E=4, CNC E=2, random-15, all-20), reporting accuracy vs
+//! the two consumption axes of Fig 9.
+//!
+//! ```sh
+//! cargo run --release --example p2p_cnc [rounds]
+//! ```
+
+use anyhow::Result;
+
+use cnc_fl::data::Split;
+use cnc_fl::exp::figures::FigOpts;
+use cnc_fl::exp::p2p_figs::{experiment1_settings, run_p2p_setting};
+use cnc_fl::exp::presets::Backend;
+use cnc_fl::metrics::Metric;
+use cnc_fl::netsim::topology::TopologyGen;
+
+fn main() -> Result<()> {
+    let rounds: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+
+    println!("== peer-to-peer architecture: experiment 1 (20 clients, {rounds} rounds) ==");
+    println!("designed 20-client consumption matrix, Algorithm 3 path selection\n");
+
+    let g = TopologyGen::designed_20(0);
+    let opts = FigOpts {
+        rounds: Some(rounds),
+        backend: Backend::Pjrt,
+        seed: 0,
+        out_dir: "results".into(),
+        verbose: false,
+    };
+
+    println!(
+        "{:<10} {:>9} {:>16} {:>14} {:>12}",
+        "setting", "accuracy", "chain_delay(s)", "path_cost", "clients/rnd"
+    );
+    for s in experiment1_settings() {
+        let clients_per_round = match s.tag {
+            "random15" => 15,
+            _ => 20,
+        };
+        let h = run_p2p_setting(20, &g, &s, Split::Iid, rounds, &opts)?;
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        println!(
+            "{:<10} {:>9.4} {:>16.2} {:>14.2} {:>12}",
+            s.tag,
+            h.final_accuracy(),
+            mean(&h.series(Metric::LocalDelayRound)),
+            mean(&h.series(Metric::TxEnergyRound)),
+            clients_per_round,
+        );
+        h.write_csv(std::path::Path::new(&format!(
+            "results/example_p2p_{}.csv",
+            s.tag
+        )))?;
+    }
+
+    println!(
+        "\nreading: CNC E=4 parallel chains cut the straggler chain delay \
+         (~4× shorter than all-20) at a modest path-cost premium — Fig 9's story."
+    );
+    println!("wrote results/example_p2p_<setting>.csv");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Quickstart: the end-to-end driver proving all three layers compose.
+//!
+//! Boots the CNC stack, runs a short Pr1-style federated training on the
+//! synthetic MNIST-like workload **through the real PJRT path** (Rust
+//! coordinator → AOT HLO artifacts → JAX model → Pallas kernels), logs the
+//! accuracy/loss curve, then classifies fresh samples with the trained
+//! global model.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart [rounds]
+//! ```
+
+use anyhow::Result;
+
+use cnc_fl::cnc::optimize::{CohortStrategy, RbStrategy};
+use cnc_fl::cnc::CncSystem;
+use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
+use cnc_fl::coordinator::PjrtTrainer;
+use cnc_fl::data::synth::gen_dataset;
+use cnc_fl::data::{Partition, Prototypes, Split, SynthSpec};
+use cnc_fl::netsim::channel::ChannelParams;
+use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::runtime::{ArtifactStore, Engine};
+
+fn main() -> Result<()> {
+    let rounds: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+
+    println!("== cnc-fl quickstart ==");
+    println!("loading AOT artifacts (python built these once; no python now)");
+    let store = ArtifactStore::load(&ArtifactStore::default_dir())?;
+    println!(
+        "  {} artifacts, {}-param model, batch size {}",
+        store.artifacts.len(),
+        store.param_count,
+        store.batch_size
+    );
+    let engine = Engine::new(store)?;
+
+    // fleet: 100 clients, the paper's Pr1 (cfraction 0.1, 1 local epoch)
+    let num_clients = 100;
+    let spec = SynthSpec::default();
+    let partition = Partition::new(num_clients, Split::Iid, 0);
+    let mut trainer = PjrtTrainer::new(engine, partition, spec.clone(), 0.01, 0)?;
+    trainer.warmup()?;
+
+    let mut sys = CncSystem::bootstrap(
+        num_clients,
+        600,
+        1,
+        PowerProfile::Bimodal,
+        ChannelParams::default(),
+        0,
+    );
+    let cfg = TraditionalConfig {
+        rounds,
+        cohort_size: 10,
+        n_rb: 10,
+        epoch_local: 1,
+        cohort_strategy: CohortStrategy::PowerGrouping { m: 10 },
+        rb_strategy: RbStrategy::HungarianEnergy,
+        eval_every: 1,
+        tx_deadline_s: None,
+        seed: 0,
+        verbose: false,
+    };
+    println!("\ntraining {rounds} global rounds (Pr1, CNC optimization, IID) …");
+    let (h, global) =
+        traditional::run_with_model(&mut sys, &mut trainer, &cfg, "quickstart")?;
+
+    println!("\nround  accuracy  train_loss  t_diff(s)  tx_energy(J)");
+    for r in &h.rounds {
+        println!(
+            "{:>5}  {:>8.4}  {:>10.4}  {:>9.3}  {:>12.5}",
+            r.round,
+            r.accuracy,
+            r.train_loss,
+            r.local_delay_diff_s(),
+            r.tx_energy_round_j()
+        );
+    }
+    println!("\nfinal test accuracy: {:.4}", h.final_accuracy());
+    let stats = trainer.engine().stats();
+    println!(
+        "PJRT: {} executions, {:.2}s exec wall, {} compiles ({:.2}s)",
+        stats.executions, stats.exec_wall_s, stats.compile_count, stats.compile_wall_s
+    );
+
+    // classify fresh samples with the trained model (Pallas forward pass)
+    let protos = Prototypes::build(&spec);
+    let demo = gen_dataset(
+        &protos,
+        &spec,
+        "quickstart/demo",
+        100,
+        &(0..10).collect::<Vec<_>>(),
+    );
+    let preds = trainer
+        .engine()
+        .predict("predict_100", &global, &demo.x, 100)?;
+    let correct = preds
+        .iter()
+        .zip(&demo.y)
+        .filter(|(p, y)| p == y)
+        .count();
+    println!("\nfresh-sample classification: {correct}/100 correct");
+    println!("  first 10 predictions: {:?}", &preds[..10]);
+    println!("  first 10 labels:      {:?}", &demo.y[..10]);
+
+    let out = std::path::Path::new("results/quickstart.csv");
+    h.write_csv(out)?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}

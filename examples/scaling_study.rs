@@ -1,0 +1,59 @@
+//! Scaling study (the paper's Fig 11): how the average global-round
+//! latency grows with the fleet size under
+//!   * CNC optimization (balanced E=4 partition + Algorithm 3 paths),
+//!   * a single greedy chain over everyone, and
+//!   * a single exact-TSP chain (n ≤ 20 — Held–Karp's tractability wall).
+//!
+//! Latency is the simulated quantity (Eq 8 local delays + path costs), so
+//! this uses the mock training backend — the scheduling decisions are the
+//! real thing.
+//!
+//! ```sh
+//! cargo run --release --example scaling_study
+//! ```
+
+use anyhow::Result;
+
+use cnc_fl::exp::figures::FigOpts;
+use cnc_fl::exp::p2p_figs::fig11;
+use cnc_fl::exp::presets::Backend;
+
+fn main() -> Result<()> {
+    let sizes = [8usize, 12, 16, 20, 24, 28, 32];
+    println!("== scaling study: avg global-round latency vs fleet size (Fig 11) ==\n");
+
+    let opts = FigOpts {
+        rounds: Some(5),
+        backend: Backend::Mock,
+        seed: 0,
+        out_dir: "results".into(),
+        verbose: false,
+    };
+    let path = fig11(&opts, &sizes)?;
+    let text = std::fs::read_to_string(&path)?;
+
+    println!("{:<12} {:>14} {:>16} {:>12}", "clients", "CNC E=4 (s)", "all-chain (s)", "TSP (s)");
+    for line in text.lines().skip(1) {
+        let cells: Vec<&str> = line.split(',').collect();
+        let fmt = |s: &str| {
+            s.parse::<f64>()
+                .map(|x| if x.is_nan() { "—".to_string() } else { format!("{x:.1}") })
+                .unwrap_or_else(|_| "—".to_string())
+        };
+        println!(
+            "{:<12} {:>14} {:>16} {:>12}",
+            cells[0],
+            fmt(cells[1]),
+            fmt(cells[2]),
+            fmt(cells[3])
+        );
+    }
+    println!(
+        "\nreading: the CNC's parallel balanced chains keep the latency \
+         growth rate far below the serial chain (the paper's Fig 11 claim); \
+         exact TSP helps path cost but cannot fix the serial-chain latency \
+         and stops scaling at n = 20."
+    );
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

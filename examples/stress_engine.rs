@@ -1,0 +1,104 @@
+//! Engine stress probe — leak/perf diagnostics for the PJRT runtime.
+//!
+//! Loops a single artifact execution and prints RSS every N iterations so
+//! memory growth can be attributed to a specific call path (this is the
+//! tool that isolated the `execute::<Literal>` input-buffer leak in the
+//! vendored crate's C++ shim — see EXPERIMENTS.md §Perf).
+//!
+//! ```sh
+//! cargo run --release --example stress_engine [train_epoch|train_step|eval] [iters]
+//! ```
+
+use anyhow::Result;
+
+use cnc_fl::data::batch::{epoch_batches, eval_chunks};
+use cnc_fl::data::synth::{gen_dataset, gen_test_set, Prototypes, SynthSpec};
+use cnc_fl::runtime::{ArtifactStore, Engine};
+use cnc_fl::util::rng::Pcg64;
+
+fn rss_mb() -> f64 {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches(" kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+fn main() -> Result<()> {
+    let mode = std::env::args().nth(1).unwrap_or_else(|| "train_epoch".into());
+    let iters: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    let engine = Engine::new(ArtifactStore::load(&ArtifactStore::default_dir())?)?;
+    let params = engine.store().init_params()?;
+    let spec = SynthSpec::default();
+    let protos = Prototypes::build(&spec);
+
+    println!("mode={mode} iters={iters}");
+    let report_every = (iters / 10).max(1);
+
+    match mode.as_str() {
+        "train_epoch" => {
+            let d = gen_dataset(&protos, &spec, "stress", 600, &[0, 1, 2]);
+            let mut rng = Pcg64::seed_from(0);
+            let b = epoch_batches(&d, 10, &mut rng);
+            for i in 0..iters {
+                let _ = engine.train_epoch(
+                    "train_epoch_600",
+                    &params,
+                    &b.x,
+                    &b.y,
+                    b.num_batches,
+                    0.01,
+                )?;
+                if i % report_every == 0 {
+                    println!("iter {i:>6}  rss {:.0} MB", rss_mb());
+                }
+            }
+        }
+        "train_step" => {
+            let d = gen_dataset(&protos, &spec, "stress", 10, &[0, 1]);
+            for i in 0..iters {
+                let _ = engine.train_step(&params, &d.x, &d.y, 0.01)?;
+                if i % report_every == 0 {
+                    println!("iter {i:>6}  rss {:.0} MB", rss_mb());
+                }
+            }
+        }
+        "eval" => {
+            let t = gen_test_set(&protos, &spec);
+            let ch = eval_chunks(&t, 1000);
+            for i in 0..iters {
+                let _ = engine.eval_chunk(
+                    "eval_1000",
+                    &params,
+                    &ch.chunks_x[0],
+                    &ch.chunks_y[0],
+                    1000,
+                )?;
+                if i % report_every == 0 {
+                    println!("iter {i:>6}  rss {:.0} MB", rss_mb());
+                }
+            }
+        }
+        other => anyhow::bail!("unknown mode {other}"),
+    }
+    let s = engine.stats();
+    println!(
+        "done: {} execs, {:.2}s exec wall, final rss {:.0} MB",
+        s.executions,
+        s.exec_wall_s,
+        rss_mb()
+    );
+    Ok(())
+}

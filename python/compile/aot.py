@@ -1,0 +1,219 @@
+"""AOT compile path: lower every model entry point to HLO *text* artifacts.
+
+Run once via ``make artifacts`` (``python -m compile.aot --out-dir ../artifacts``).
+Python never runs again after this — the Rust coordinator loads the text with
+``HloModuleProto::from_text_file``, compiles on the PJRT CPU client and
+executes it on the request path.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate links) rejects (``proto.id() <= INT_MAX``). The
+text parser reassigns ids, so text round-trips cleanly. Lowering goes
+stablehlo → XlaComputation with ``return_tuple=True``; the Rust side unpacks
+with ``Literal::to_tuple``.
+
+Alongside the ``.hlo.txt`` files we write ``manifest.json`` describing each
+artifact's positional argument/output shapes+dtypes — the Rust runtime
+validates its buffers against this at load time.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+BATCH_SIZE = 10  # paper Table 1: batch_size = 10
+
+# Per-client dataset sizes for the paper's fleet configs:
+#   traditional: num_clients = 100 → 600 samples; 60 → 1000 samples
+#   peer-to-peer: 20 clients → 3000 samples; 8 clients → 7500 samples
+EPOCH_VARIANTS = (600, 1000, 3000, 7500)
+EVAL_CHUNK = 1000
+PREDICT_CHUNK = 100
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation (tupled) → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs():
+    return [_spec(s) for s in model.PARAM_SHAPES]
+
+
+def _tensor_meta(name, spec):
+    return {
+        "name": name,
+        "dtype": str(spec.dtype),
+        "shape": list(spec.shape),
+    }
+
+
+def entry_points():
+    """(artifact name, fn, [(arg_name, spec)], [(out_name, spec)]) tuples."""
+    p_in = list(zip(model.PARAM_NAMES, _param_specs()))
+    p_out = [(f"{n}_new", s) for n, s in p_in]
+    eps = []
+
+    # one SGD step on a single batch
+    eps.append(
+        (
+            "train_step",
+            model.train_step,
+            p_in
+            + [
+                ("x", _spec((BATCH_SIZE, model.INPUT_DIM))),
+                ("y", _spec((BATCH_SIZE,), jnp.int32)),
+                ("lr", _spec((), jnp.float32)),
+            ],
+            p_out + [("loss", _spec((), jnp.float32))],
+        )
+    )
+
+    # one local epoch per per-client dataset size
+    for n_i in EPOCH_VARIANTS:
+        nb = n_i // BATCH_SIZE
+        eps.append(
+            (
+                f"train_epoch_{n_i}",
+                model.train_epoch,
+                p_in
+                + [
+                    ("x", _spec((nb, BATCH_SIZE, model.INPUT_DIM))),
+                    ("y", _spec((nb, BATCH_SIZE), jnp.int32)),
+                    ("lr", _spec((), jnp.float32)),
+                ],
+                p_out + [("mean_loss", _spec((), jnp.float32))],
+            )
+        )
+
+    # pure-jnp reference epoch (no Pallas) — the §Perf interpret-overhead
+    # ablation comparator (bench_runtime measures both)
+    from compile.kernels import ref as kref
+
+    def train_epoch_ref(w1, b1, w2, b2, x, y, lr):
+        params = (w1, b1, w2, b2)
+
+        def body(p, batch):
+            bx, by = batch
+            loss, grads = jax.value_and_grad(kref.mlp_loss)(p, bx, by)
+            return tuple(pi - lr * gi for pi, gi in zip(p, grads)), loss
+
+        params, losses = jax.lax.scan(body, params, (x, y))
+        return (*params, jnp.mean(losses))
+
+    nb = 600 // BATCH_SIZE
+    eps.append(
+        (
+            "train_epoch_ref_600",
+            train_epoch_ref,
+            p_in
+            + [
+                ("x", _spec((nb, BATCH_SIZE, model.INPUT_DIM))),
+                ("y", _spec((nb, BATCH_SIZE), jnp.int32)),
+                ("lr", _spec((), jnp.float32)),
+            ],
+            p_out + [("mean_loss", _spec((), jnp.float32))],
+        )
+    )
+
+    eps.append(
+        (
+            f"eval_{EVAL_CHUNK}",
+            model.eval_chunk,
+            p_in
+            + [
+                ("x", _spec((EVAL_CHUNK, model.INPUT_DIM))),
+                ("y", _spec((EVAL_CHUNK,), jnp.int32)),
+            ],
+            [("correct", _spec((), jnp.int32))],
+        )
+    )
+
+    eps.append(
+        (
+            f"predict_{PREDICT_CHUNK}",
+            model.predict,
+            p_in + [("x", _spec((PREDICT_CHUNK, model.INPUT_DIM)))],
+            [("classes", _spec((PREDICT_CHUNK,), jnp.int32))],
+        )
+    )
+    return eps
+
+
+def lower_all(out_dir: str, verbose: bool = True) -> dict:
+    """Lower every entry point; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "model": {
+            "input_dim": model.INPUT_DIM,
+            "hidden_dim": model.HIDDEN_DIM,
+            "num_classes": model.NUM_CLASSES,
+            "param_count": model.param_count(),
+            "param_names": list(model.PARAM_NAMES),
+            "param_shapes": [list(s) for s in model.PARAM_SHAPES],
+            "batch_size": BATCH_SIZE,
+        },
+        "artifacts": {},
+    }
+    for name, fn, args, outs in entry_points():
+        specs = [s for _, s in args]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "args": [_tensor_meta(n, s) for n, s in args],
+            "outputs": [_tensor_meta(n, s) for n, s in outs],
+        }
+        if verbose:
+            print(f"  {name}: {len(text)} chars -> {path}")
+    # initial global model parameters, deterministic, as raw f32 little-endian
+    params = model.init_params(seed=0)
+    import numpy as np
+
+    blob = b"".join(np.asarray(p, dtype=np.float32).tobytes() for p in params)
+    init_path = os.path.join(out_dir, "init_params.f32.bin")
+    with open(init_path, "wb") as f:
+        f.write(blob)
+    manifest["init_params"] = {
+        "file": "init_params.f32.bin",
+        "bytes": len(blob),
+        "seed": 0,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"  manifest -> {mpath}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quiet", action="store_true")
+    ns = ap.parse_args()
+    lower_all(ns.out_dir, verbose=not ns.quiet)
+
+
+if __name__ == "__main__":
+    main()

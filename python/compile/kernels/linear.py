@@ -1,0 +1,197 @@
+"""Pallas fused-linear kernels (layer 1).
+
+The compute hot-spot of local training in the paper's FL simulation is the
+dense layer: ``y = x @ W + b`` (optionally ReLU-fused) and its backward
+products ``dx = dy @ W^T``, ``dW = x^T @ dy``, ``db = sum(dy)``. These are
+written as blocked Pallas kernels and wired into the layer-2 model through
+``jax.custom_vjp`` so both the forward and backward passes of the exported
+HLO go through Pallas.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * grid tiles the (M, N) output space; each grid step owns a
+    (BM, K) x (K, BN) panel — K is kept whole per block because the model's
+    K ∈ {784, 128} fits VMEM trivially (784·128·4 B ≈ 0.4 MB ≪ 16 MB).
+  * BlockSpec expresses the HBM→VMEM schedule; the MXU consumes
+    (128, 128)-aligned tiles, fp32 accumulation via
+    ``preferred_element_type``.
+  * ``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+    custom-calls; interpret mode traces the same kernel body to plain HLO.
+
+Shapes that do not divide the tile are zero-padded in the wrappers (zero
+rows/cols are exact no-ops for matmul, bias add, ReLU and the backward
+reductions) and the result is sliced back — kernels stay mask-free.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU systolic-array edge; the M tile is
+# smaller because FL batches are small (B = 10 in the paper's Table 1).
+BM = 128
+BN = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pad2(a, rows: int, cols: int):
+    """Zero-pad a 2-D array up to (rows, cols)."""
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def _pad1(a, n: int):
+    p = n - a.shape[0]
+    return a if p == 0 else jnp.pad(a, (0, p))
+
+
+# ---------------------------------------------------------------------------
+# forward kernel: out = x @ w + b  (+ ReLU when fused)
+# ---------------------------------------------------------------------------
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """One (BM, BN) output tile: full-K panel matmul + bias (+ ReLU)."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _linear_call(x, w, b, relu: bool, bm: int = BM, bn: int = BN):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert b.shape == (n,)
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    mp, np_, = _ceil_to(m, bm), _ceil_to(n, bn)
+    xp = _pad2(x, mp, k)
+    wp = _pad2(w, k, np_)
+    bp = _pad1(b, np_)
+    out = pl.pallas_call(
+        functools.partial(_linear_kernel, relu=relu),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# backward kernels
+# ---------------------------------------------------------------------------
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Plain (BM, BN) tile of a @ b with fp32 accumulation (used for dx/dW)."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(a, b, bm: int = BM, bn: int = BN):
+    """Blocked Pallas matmul a[M,K] @ b[K,N] — building block for backward."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    ap = _pad2(a, mp, k)
+    bp = _pad2(b, k, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _colsum_kernel(a_ref, o_ref):
+    """Column sum of one (M, BN) panel → (BN,) (db = sum_rows dy)."""
+    o_ref[...] = jnp.sum(a_ref[...], axis=0)
+
+
+def colsum(a, bn: int = BN):
+    """db: column-sum of dy[M, N] via a Pallas reduction kernel."""
+    m, n = a.shape
+    bn = min(bn, _ceil_to(n, 8))
+    np_ = _ceil_to(n, bn)
+    ap = _pad2(a, m, np_)
+    out = pl.pallas_call(
+        _colsum_kernel,
+        grid=(np_ // bn,),
+        in_specs=[pl.BlockSpec((m, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((bn,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=True,
+    )(ap)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrappers — the public layer-1 API used by model.py
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def linear(x, w, b):
+    """Pallas fused linear ``x @ W + b`` with a Pallas backward pass."""
+    return _linear_call(x, w, b, relu=False)
+
+
+def _linear_fwd(x, w, b):
+    return _linear_call(x, w, b, relu=False), (x, w)
+
+
+def _linear_bwd(res, dy):
+    x, w = res
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = colsum(dy)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+@jax.custom_vjp
+def linear_relu(x, w, b):
+    """Pallas fused linear+ReLU with a Pallas backward pass."""
+    return _linear_call(x, w, b, relu=True)
+
+
+def _linear_relu_fwd(x, w, b):
+    y = _linear_call(x, w, b, relu=True)
+    # Save the *activated* output: relu'(pre) == (y > 0) except at exactly 0,
+    # where both conventions give zero gradient flow — matches ref.relu_mask.
+    return y, (x, w, y)
+
+
+def _linear_relu_bwd(res, dy):
+    x, w, y = res
+    dy = jnp.where(y > 0.0, dy, 0.0)
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = colsum(dy)
+    return dx, dw, db
+
+
+linear_relu.defvjp(_linear_relu_fwd, _linear_relu_bwd)

@@ -1,0 +1,98 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (same-math, same-dtype)
+counterpart here. pytest asserts ``assert_allclose(kernel, ref)`` over
+hypothesis-driven shape/dtype sweeps — this file is the correctness anchor
+for layer 1.
+
+All functions are pure jnp (no pallas, no custom_vjp) so they are also
+differentiable with plain ``jax.grad`` and serve as gradient oracles.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# fused linear: y = x @ W + b, optionally ReLU-activated
+# ---------------------------------------------------------------------------
+
+def linear(x, w, b):
+    """y = x @ W + b with fp32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+
+
+def linear_relu(x, w, b):
+    """y = relu(x @ W + b)."""
+    return jnp.maximum(linear(x, w, b), 0.0)
+
+
+def linear_bwd(x, w, dy):
+    """Backward of ``linear`` w.r.t. (x, w, b) given upstream dy.
+
+    Returns (dx, dw, db). For ``linear_relu`` pre-mask dy with the
+    activation mask before calling (see ``relu_mask``).
+    """
+    dx = jnp.dot(dy, w.T, preferred_element_type=jnp.float32)
+    dw = jnp.dot(x.T, dy, preferred_element_type=jnp.float32)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+def relu_mask(pre, dy):
+    """Mask upstream gradient by the ReLU activation pattern of ``pre``."""
+    return jnp.where(pre > 0.0, dy, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# fused softmax cross-entropy over integer labels
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels):
+    """Mean cross-entropy loss of ``logits`` [B, C] against int labels [B].
+
+    Numerically-stable log-softmax; returns a scalar f32.
+    """
+    shifted = logits - jnp.max(logits, axis=-1, keepdims=True)
+    log_z = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+    log_probs = shifted - log_z
+    nll = -jnp.take_along_axis(log_probs, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def softmax_xent_grad(logits, labels):
+    """d loss / d logits for ``softmax_xent``: (softmax(z) - onehot) / B."""
+    b, c = logits.shape
+    shifted = logits - jnp.max(logits, axis=-1, keepdims=True)
+    exp = jnp.exp(shifted)
+    probs = exp / jnp.sum(exp, axis=-1, keepdims=True)
+    onehot = jax.nn.one_hot(labels, c, dtype=logits.dtype)
+    return (probs - onehot) / b
+
+
+# ---------------------------------------------------------------------------
+# whole-model reference (mirrors model.py but with zero pallas involvement)
+# ---------------------------------------------------------------------------
+
+def mlp_forward(params, x):
+    """Reference 784→H→10 MLP forward. params = (w1, b1, w2, b2)."""
+    w1, b1, w2, b2 = params
+    h = linear_relu(x, w1, b1)
+    return linear(h, w2, b2)
+
+
+def mlp_loss(params, x, y):
+    return softmax_xent(mlp_forward(params, x), y)
+
+
+def mlp_sgd_step(params, x, y, lr):
+    """One SGD step on a batch; returns (new_params, loss)."""
+    loss, grads = jax.value_and_grad(mlp_loss)(params, x, y)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return new_params, loss
+
+
+def mlp_accuracy(params, x, y):
+    """Count of correct predictions (int32) over the chunk."""
+    pred = jnp.argmax(mlp_forward(params, x), axis=-1)
+    return jnp.sum((pred == y).astype(jnp.int32))

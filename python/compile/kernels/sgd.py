@@ -1,0 +1,61 @@
+"""Pallas fused SGD parameter update (layer 1).
+
+``p' = p - lr · g`` for every parameter tensor — the last remaining
+elementwise stage of the training step, fused into a single tiled Pallas
+kernel per tensor so the whole SGD step (forward, backward, update) runs
+through layer-1 kernels.
+
+1-D tiling over the flattened parameter (the update is shape-agnostic);
+tail blocks are handled by zero-padding in the wrapper, like linear.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One grid step covers the largest model tensor (w1: 784·128 = 100 352
+# elements). 3 operands × 512 KiB ≈ 1.5 MiB ≪ 16 MiB VMEM, and interpret
+# mode pays per grid step, so bigger is strictly better here (§Perf: this
+# cut the fused-epoch wall by reducing ~28 grid iterations per SGD step
+# to 4).
+BLOCK = 131072
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _sgd_kernel(p_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def sgd_update(p, g, lr):
+    """p - lr·g via the Pallas kernel; works for any tensor shape."""
+    assert p.shape == g.shape, f"shape mismatch {p.shape} vs {g.shape}"
+    flat_p = p.reshape(-1)
+    flat_g = g.reshape(-1)
+    n = flat_p.shape[0]
+    block = min(BLOCK, _ceil_to(n, 8))
+    np_ = _ceil_to(n, block)
+    if np_ != n:
+        flat_p = jnp.pad(flat_p, (0, np_ - n))
+        flat_g = jnp.pad(flat_g, (0, np_ - n))
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1)
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(np_ // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=True,
+    )(flat_p, flat_g, lr_arr)
+    return out[:n].reshape(p.shape)
+
+
+def sgd_update_tree(params, grads, lr):
+    """Apply the fused update across a parameter tuple/pytree."""
+    return jax.tree_util.tree_map(lambda p, g: sgd_update(p, g, lr), params, grads)

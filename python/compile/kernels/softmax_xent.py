@@ -1,0 +1,109 @@
+"""Pallas fused softmax-cross-entropy kernel (layer 1).
+
+Computes the mean cross-entropy of logits [B, C] against integer labels [B]
+in a single fused kernel (max, exp, sum, log, gather via iota-compare) and
+its gradient ``(softmax(z) - onehot) / B`` in a second kernel — both used by
+the layer-2 model through ``jax.custom_vjp``.
+
+Rows are tiled along the batch dimension; the class dimension C (= 10 here)
+always stays whole inside a block, which is the natural TPU layout (the
+row-reduction happens across lanes). Padded rows are written but sliced away
+by the wrapper before the mean, so kernels stay mask-free (see linear.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _nll_kernel(z_ref, y_ref, o_ref):
+    """Per-row negative log-likelihood for one (BM, C) tile of logits."""
+    z = z_ref[...]
+    y = y_ref[...]
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    shifted = z - zmax
+    log_z = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    # gather log p[y] without dynamic indexing: iota-compare one-hot dot
+    c = z.shape[-1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, z.shape, 1) == y[:, None])
+    picked = jnp.sum(jnp.where(onehot, shifted, 0.0), axis=-1)
+    o_ref[...] = log_z - picked
+
+
+def _grad_kernel(z_ref, y_ref, scale_ref, o_ref):
+    """(softmax(z) - onehot) * scale for one tile; scale = 1/B (true B)."""
+    z = z_ref[...]
+    y = y_ref[...]
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    exp = jnp.exp(z - zmax)
+    probs = exp / jnp.sum(exp, axis=-1, keepdims=True)
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, z.shape, 1) == y[:, None]
+    ).astype(jnp.float32)
+    o_ref[...] = (probs - onehot) * scale_ref[0]
+
+
+def _nll_call(logits, labels, bm: int = BM):
+    b, c = logits.shape
+    bm = min(bm, _ceil_to(b, 8))
+    bp = _ceil_to(b, bm)
+    zp = jnp.pad(logits, ((0, bp - b), (0, 0)))
+    yp = jnp.pad(labels, (0, bp - b))
+    nll = pl.pallas_call(
+        _nll_kernel,
+        grid=(bp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bp,), jnp.float32),
+        interpret=True,
+    )(zp, yp)
+    return jnp.mean(nll[:b])
+
+
+def _grad_call(logits, labels, bm: int = BM):
+    b, c = logits.shape
+    bm = min(bm, _ceil_to(b, 8))
+    bp = _ceil_to(b, bm)
+    zp = jnp.pad(logits, ((0, bp - b), (0, 0)))
+    yp = jnp.pad(labels, (0, bp - b))
+    scale = jnp.full((1,), 1.0 / b, dtype=jnp.float32)
+    g = pl.pallas_call(
+        _grad_kernel,
+        grid=(bp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, c), jnp.float32),
+        interpret=True,
+    )(zp, yp, scale)
+    return g[:b]
+
+
+@jax.custom_vjp
+def softmax_xent(logits, labels):
+    """Mean cross-entropy (scalar f32) via the fused Pallas kernel."""
+    return _nll_call(logits, labels)
+
+
+def _fwd(logits, labels):
+    return _nll_call(logits, labels), (logits, labels)
+
+
+def _bwd(res, g):
+    logits, labels = res
+    return g * _grad_call(logits, labels), None
+
+
+softmax_xent.defvjp(_fwd, _bwd)

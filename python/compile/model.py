@@ -1,0 +1,123 @@
+"""Layer-2 JAX model: the paper's "simple neural network" for MNIST-like data.
+
+A 784→HIDDEN→10 MLP whose dense layers and loss go through the layer-1
+Pallas kernels (compile.kernels.linear / softmax_xent). Entry points:
+
+  * ``train_step``   — one SGD step on a (B, 784) batch
+  * ``train_epoch``  — one full local pass: ``lax.scan`` over the client's
+                       batches (the per-client local-training unit the Rust
+                       coordinator invokes ``local_epoch`` times)
+  * ``eval_chunk``   — correct-prediction count over an eval chunk
+  * ``predict``      — argmax class predictions
+
+All are pure functions over an explicit parameter tuple
+``(w1, b1, w2, b2)`` so they AOT-lower to HLO with a flat, stable signature
+the Rust runtime can feed positionally (see aot.py / manifest.json).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import linear as klinear
+from compile.kernels import sgd as ksgd
+from compile.kernels import softmax_xent as kxent
+
+INPUT_DIM = 784
+HIDDEN_DIM = 128
+NUM_CLASSES = 10
+
+PARAM_NAMES = ("w1", "b1", "w2", "b2")
+PARAM_SHAPES = (
+    (INPUT_DIM, HIDDEN_DIM),
+    (HIDDEN_DIM,),
+    (HIDDEN_DIM, NUM_CLASSES),
+    (NUM_CLASSES,),
+)
+
+
+def param_count() -> int:
+    """Total scalar parameter count (101 770 for the default dims)."""
+    n = 0
+    for s in PARAM_SHAPES:
+        c = 1
+        for d in s:
+            c *= d
+        n += c
+    return n
+
+
+def init_params(seed: int = 0):
+    """He-initialised parameter tuple, deterministic in ``seed``."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w1 = jax.random.normal(k1, PARAM_SHAPES[0], jnp.float32) * jnp.sqrt(
+        2.0 / INPUT_DIM
+    )
+    b1 = jnp.zeros(PARAM_SHAPES[1], jnp.float32)
+    w2 = jax.random.normal(k2, PARAM_SHAPES[2], jnp.float32) * jnp.sqrt(
+        2.0 / HIDDEN_DIM
+    )
+    b2 = jnp.zeros(PARAM_SHAPES[3], jnp.float32)
+    return w1, b1, w2, b2
+
+
+def forward(params, x):
+    """Logits [B, 10] for inputs [B, 784] — both layers are Pallas calls."""
+    w1, b1, w2, b2 = params
+    h = klinear.linear_relu(x, w1, b1)
+    return klinear.linear(h, w2, b2)
+
+
+def loss_fn(params, x, y):
+    """Mean cross-entropy via the fused Pallas softmax-xent kernel."""
+    return kxent.softmax_xent(forward(params, x), y)
+
+
+def train_step(w1, b1, w2, b2, x, y, lr):
+    """One SGD step. Flat signature for AOT export.
+
+    Args:
+      w1..b2: parameter tensors.
+      x: f32[B, 784] batch inputs.
+      y: i32[B] labels.
+      lr: f32[] learning rate.
+    Returns:
+      (w1', b1', w2', b2', loss)
+    """
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new = ksgd.sgd_update_tree(params, grads, lr)
+    return (*new, loss)
+
+
+def train_epoch(w1, b1, w2, b2, x, y, lr):
+    """One local epoch: scan SGD over pre-batched data.
+
+    Args:
+      x: f32[NB, B, 784] — the client's data reshaped to NB batches of B.
+      y: i32[NB, B].
+    Returns:
+      (w1', b1', w2', b2', mean_loss)
+
+    ``lax.scan`` keeps the lowered HLO one compact loop instead of NB
+    unrolled copies of the step (see DESIGN.md §Perf L2).
+    """
+    params = (w1, b1, w2, b2)
+
+    def body(p, batch):
+        bx, by = batch
+        loss, grads = jax.value_and_grad(loss_fn)(p, bx, by)
+        return ksgd.sgd_update_tree(p, grads, lr), loss
+
+    params, losses = jax.lax.scan(body, params, (x, y))
+    return (*params, jnp.mean(losses))
+
+
+def eval_chunk(w1, b1, w2, b2, x, y):
+    """Correct-prediction count (i32[]) over an eval chunk [N, 784]."""
+    pred = jnp.argmax(forward((w1, b1, w2, b2), x), axis=-1)
+    return (jnp.sum((pred == y).astype(jnp.int32)),)
+
+
+def predict(w1, b1, w2, b2, x):
+    """Argmax class ids (i32[N]) — used by the quickstart example."""
+    return (jnp.argmax(forward((w1, b1, w2, b2), x), axis=-1).astype(jnp.int32),)

@@ -1,0 +1,56 @@
+"""Tests for the §Perf analysis tool and its structural invariants."""
+
+import os
+
+import pytest
+
+from compile import analyze, aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.lower_all(str(out), verbose=False)
+    return str(out)
+
+
+def test_report_generates_and_persists(built):
+    report = analyze.analyze(built)
+    assert "## L1 — Pallas kernel" in report
+    assert "## L2 — HLO census" in report
+    assert os.path.exists(os.path.join(built, "perf_analysis.md"))
+
+
+def test_vmem_within_budget():
+    for r in analyze.kernel_vmem_report():
+        assert r["vmem_frac"] < 0.05, r  # tiny model ≪ 16 MB VMEM
+        assert 0.0 < r["mxu_util"] <= 1.0
+
+
+def test_hlo_census_structure(built):
+    import json
+
+    manifest = json.load(open(os.path.join(built, "manifest.json")))
+    step = analyze.hlo_census(
+        os.path.join(built, manifest["artifacts"]["train_step"]["file"])
+    )
+    epoch = analyze.hlo_census(
+        os.path.join(built, manifest["artifacts"]["train_epoch_600"]["file"])
+    )
+    # the model's matmuls appear as dot ops
+    assert step["dots"] >= 4  # fwd x2 + bwd dx/dW x2 at least
+    # scan keeps the loop rolled
+    assert epoch["while_loops"] >= 1
+    assert epoch["bytes"] < 3 * step["bytes"]
+    # interpret-mode pallas must not leave custom-calls behind
+    assert step["custom_calls"] == 0
+    assert epoch["custom_calls"] == 0
+
+
+def test_entry_flops_scaling():
+    step = analyze.entry_flops("train_step")
+    epoch = analyze.entry_flops("train_epoch_600")
+    assert epoch == 60 * step
+    assert analyze.entry_flops("train_epoch_1000") == 100 * step
+    assert analyze.entry_flops("eval_1000") > 0
+    assert analyze.entry_flops("unknown") == 0

@@ -1,0 +1,167 @@
+"""L1 correctness: Pallas fused-linear kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including tile-unaligned ones that exercise the
+zero-padding path) and asserts allclose against compile.kernels.ref for the
+forward values and for all three gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linear as kl
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.integers(min_value=1, max_value=200)
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_linear_matches_ref(m, k, n, seed):
+    x = rand((m, k), seed)
+    w = rand((k, n), seed + 1, 0.1)
+    b = rand((n,), seed + 2)
+    np.testing.assert_allclose(
+        kl.linear(x, w, b), ref.linear(x, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_linear_relu_matches_ref(m, k, n, seed):
+    x = rand((m, k), seed)
+    w = rand((k, n), seed + 1, 0.1)
+    b = rand((n,), seed + 2)
+    np.testing.assert_allclose(
+        kl.linear_relu(x, w, b), ref.linear_relu(x, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_pallas_matmul_matches_jnp(m, k, n, seed):
+    a = rand((m, k), seed)
+    b = rand((k, n), seed + 1)
+    np.testing.assert_allclose(
+        kl.matmul(a, b),
+        jnp.dot(a, b, preferred_element_type=jnp.float32),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_colsum_matches_jnp(m, n, seed):
+    a = rand((m, n), seed)
+    np.testing.assert_allclose(
+        kl.colsum(a), jnp.sum(a, axis=0), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_grads_match_ref(m, k, n, seed):
+    x = rand((m, k), seed)
+    w = rand((k, n), seed + 1, 0.1)
+    b = rand((n,), seed + 2)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(jnp.sin(kl.linear(x, w, b)))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref.linear(x, w, b)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gk, gr):
+        np.testing.assert_allclose(a, e, rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_relu_grads_match_ref(m, k, n, seed):
+    x = rand((m, k), seed)
+    w = rand((k, n), seed + 1, 0.1)
+    # offset bias away from 0 so the ReLU kink never sits on a sample point
+    b = rand((n,), seed + 2) + 0.05
+
+    def f_kernel(x, w, b):
+        return jnp.sum(kl.linear_relu(x, w, b) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.linear_relu(x, w, b) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gk, gr):
+        np.testing.assert_allclose(a, e, rtol=5e-4, atol=5e-4)
+
+
+def test_relu_zero_region_gradient_is_zero():
+    """Gradient must not flow through inactive units."""
+    x = jnp.full((4, 8), -1.0, jnp.float32)
+    w = jnp.eye(8, dtype=jnp.float32)[:, :8]
+    b = jnp.zeros((8,), jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(kl.linear_relu(x, w, b)))(x)
+    np.testing.assert_array_equal(np.asarray(g), np.zeros_like(g))
+
+
+def test_exact_tile_shapes_no_padding_path():
+    """Shapes that are exact tile multiples skip padding — still correct."""
+    x = rand((128, 256), 7)
+    w = rand((256, 128), 8, 0.05)
+    b = rand((128,), 9)
+    np.testing.assert_allclose(
+        kl.linear(x, w, b), ref.linear(x, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_single_row_single_col():
+    x = rand((1, 3), 1)
+    w = rand((3, 1), 2)
+    b = rand((1,), 3)
+    np.testing.assert_allclose(
+        kl.linear(x, w, b), ref.linear(x, w, b), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_linear_under_jit_and_vmap_composition():
+    """The kernels must compose with jit (they are jitted in train_epoch)."""
+    x = rand((10, 784), 0)
+    w = rand((784, 128), 1, 0.05)
+    b = rand((128,), 2)
+    jitted = jax.jit(kl.linear_relu)
+    np.testing.assert_allclose(
+        jitted(x, w, b), ref.linear_relu(x, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_custom_tile_sizes():
+    """Non-default (bm, bn) tilings give identical results."""
+    x = rand((50, 70), 11)
+    w = rand((70, 30), 12, 0.1)
+    b = rand((30,), 13)
+    want = ref.linear(x, w, b)
+    for bm, bn in [(8, 8), (16, 32), (64, 128)]:
+        got = kl._linear_call(x, w, b, relu=False, bm=bm, bn=bn)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,78 @@
+"""L1 correctness: Pallas fused SGD update vs plain jnp arithmetic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import sgd
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 20_000),
+    lr=st.floats(1e-4, 1.0, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flat_update_matches_reference(n, lr, seed):
+    p = rand((n,), seed)
+    g = rand((n,), seed + 1)
+    got = sgd.sgd_update(p, g, lr)
+    want = p - jnp.float32(lr) * g
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    r=st.integers(1, 100),
+    c=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_2d_shapes_preserved(r, c, seed):
+    p = rand((r, c), seed)
+    g = rand((r, c), seed + 1)
+    got = sgd.sgd_update(p, g, 0.01)
+    assert got.shape == (r, c)
+    np.testing.assert_allclose(got, p - 0.01 * g, rtol=1e-6, atol=1e-6)
+
+
+def test_zero_lr_is_identity():
+    p = rand((1000,), 0)
+    g = rand((1000,), 1)
+    np.testing.assert_array_equal(
+        np.asarray(sgd.sgd_update(p, g, 0.0)), np.asarray(p)
+    )
+
+
+def test_tree_update_covers_model_params():
+    from compile import model
+
+    params = model.init_params(0)
+    grads = tuple(jnp.ones_like(p) for p in params)
+    new = sgd.sgd_update_tree(params, grads, 0.5)
+    for p, q in zip(params, new):
+        np.testing.assert_allclose(q, p - 0.5, rtol=1e-6, atol=1e-6)
+
+
+def test_block_boundary_sizes():
+    """Exactly-BLOCK and BLOCK±1 exercise the padding path."""
+    for n in [sgd.BLOCK - 1, sgd.BLOCK, sgd.BLOCK + 1, 2 * sgd.BLOCK]:
+        p = rand((n,), n)
+        g = rand((n,), n + 1)
+        np.testing.assert_allclose(
+            sgd.sgd_update(p, g, 0.1), p - 0.1 * g, rtol=1e-6, atol=1e-6
+        )
+
+
+def test_under_jit():
+    p = rand((784, 128), 3)
+    g = rand((784, 128), 4)
+    got = jax.jit(lambda p, g: sgd.sgd_update(p, g, 0.01))(p, g)
+    np.testing.assert_allclose(got, p - 0.01 * g, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,97 @@
+"""L1 correctness: Pallas fused softmax-cross-entropy vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import softmax_xent as kx
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_logits(b, c, seed, scale=3.0):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(b, c)).astype(np.float32) * scale)
+    y = jnp.asarray(rng.integers(0, c, size=(b,)).astype(np.int32))
+    return z, y
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 300),
+    c=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_loss_matches_ref(b, c, seed):
+    z, y = rand_logits(b, c, seed)
+    np.testing.assert_allclose(
+        kx.softmax_xent(z, y), ref.softmax_xent(z, y), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 128),
+    c=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grad_matches_ref(b, c, seed):
+    z, y = rand_logits(b, c, seed)
+    gk = jax.grad(lambda z: kx.softmax_xent(z, y))(z)
+    gr = ref.softmax_xent_grad(z, y)
+    np.testing.assert_allclose(gk, gr, rtol=1e-5, atol=1e-6)
+
+
+def test_loss_of_perfect_prediction_is_small():
+    """Huge correct-class logit → near-zero loss."""
+    z = jnp.full((8, 10), -20.0, jnp.float32)
+    y = jnp.arange(8, dtype=jnp.int32)
+    z = z.at[jnp.arange(8), y].set(20.0)
+    assert float(kx.softmax_xent(z, y)) < 1e-5
+
+
+def test_loss_of_uniform_logits_is_log_c():
+    z = jnp.zeros((16, 10), jnp.float32)
+    y = jnp.zeros((16,), jnp.int32)
+    np.testing.assert_allclose(
+        float(kx.softmax_xent(z, y)), float(np.log(10.0)), rtol=1e-6
+    )
+
+
+def test_numerical_stability_large_logits():
+    """Shifted log-sum-exp must not overflow at |z| = 1e4."""
+    z, y = rand_logits(32, 10, 0, scale=1e4)
+    got = float(kx.softmax_xent(z, y))
+    want = float(ref.softmax_xent(z, y))
+    assert np.isfinite(got)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_grad_rows_sum_to_zero():
+    """Each row of d loss/d z sums to 0 (softmax minus one-hot)."""
+    z, y = rand_logits(64, 10, 3)
+    g = jax.grad(lambda z: kx.softmax_xent(z, y))(z)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(g, axis=-1)), np.zeros(64), atol=1e-7
+    )
+
+
+def test_batch_larger_than_tile():
+    """B > BM exercises the multi-tile grid path."""
+    z, y = rand_logits(kx.BM * 2 + 37, 10, 5)
+    np.testing.assert_allclose(
+        kx.softmax_xent(z, y), ref.softmax_xent(z, y), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_under_jit():
+    z, y = rand_logits(10, 10, 9)
+    np.testing.assert_allclose(
+        jax.jit(kx.softmax_xent)(z, y),
+        ref.softmax_xent(z, y),
+        rtol=1e-5,
+        atol=1e-5,
+    )

@@ -1,0 +1,169 @@
+"""L2 correctness: the Pallas-backed MLP vs the pure-jnp reference model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def synth_batch(b, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, model.INPUT_DIM)).astype(np.float32))
+    y = jnp.asarray(
+        rng.integers(0, model.NUM_CLASSES, size=(b,)).astype(np.int32)
+    )
+    return x, y
+
+
+def test_param_shapes_and_count():
+    params = model.init_params(0)
+    for p, s in zip(params, model.PARAM_SHAPES):
+        assert p.shape == s
+    assert model.param_count() == 784 * 128 + 128 + 128 * 10 + 10
+
+
+def test_init_params_deterministic():
+    a = model.init_params(42)
+    b = model.init_params(42)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_init_params_differ_across_seeds():
+    a = model.init_params(0)
+    b = model.init_params(1)
+    assert not np.allclose(np.asarray(a[0]), np.asarray(b[0]))
+
+
+def test_forward_matches_ref():
+    params = model.init_params(0)
+    x, _ = synth_batch(10, 0)
+    np.testing.assert_allclose(
+        model.forward(params, x),
+        ref.mlp_forward(params, x),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_loss_matches_ref():
+    params = model.init_params(0)
+    x, y = synth_batch(10, 1)
+    np.testing.assert_allclose(
+        model.loss_fn(params, x, y),
+        ref.mlp_loss(params, x, y),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_train_step_matches_ref_step(seed):
+    params = model.init_params(0)
+    x, y = synth_batch(10, seed)
+    lr = jnp.float32(0.01)
+    got = model.train_step(*params, x, y, lr)
+    want_params, want_loss = ref.mlp_sgd_step(params, x, y, lr)
+    for g, w in zip(got[:4], want_params):
+        np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(got[4], want_loss, rtol=1e-4, atol=1e-5)
+
+
+def test_train_epoch_equals_sequential_steps():
+    """scan-based train_epoch == calling train_step per batch in order."""
+    params = model.init_params(3)
+    nb, b = 6, 10
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(
+        rng.normal(size=(nb, b, model.INPUT_DIM)).astype(np.float32)
+    )
+    y = jnp.asarray(
+        rng.integers(0, model.NUM_CLASSES, size=(nb, b)).astype(np.int32)
+    )
+    lr = jnp.float32(0.01)
+    got = model.train_epoch(*params, x, y, lr)
+
+    p = params
+    losses = []
+    for i in range(nb):
+        out = model.train_step(*p, x[i], y[i], lr)
+        p, losses = out[:4], losses + [out[4]]
+    for g, w in zip(got[:4], p):
+        np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(
+        got[4], jnp.mean(jnp.stack(losses)), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_training_reduces_loss_on_separable_data():
+    """A few epochs on clustered data must cut the loss substantially."""
+    rng = np.random.default_rng(0)
+    protos = rng.normal(size=(model.NUM_CLASSES, model.INPUT_DIM)).astype(
+        np.float32
+    )
+    n = 200
+    labels = rng.integers(0, model.NUM_CLASSES, size=n)
+    xs = protos[labels] + 0.3 * rng.normal(size=(n, model.INPUT_DIM)).astype(
+        np.float32
+    )
+    x = jnp.asarray(xs.reshape(20, 10, model.INPUT_DIM))
+    y = jnp.asarray(labels.reshape(20, 10).astype(np.int32))
+    params = model.init_params(0)
+    lr = jnp.float32(0.05)
+    first_loss = None
+    for _ in range(5):
+        out = model.train_epoch(*params, x, y, lr)
+        params = out[:4]
+        if first_loss is None:
+            first_loss = float(out[4])
+        last_loss = float(out[4])
+    assert last_loss < 0.5 * first_loss, (first_loss, last_loss)
+
+
+def test_eval_chunk_counts_correct_predictions():
+    params = model.init_params(0)
+    x, _ = synth_batch(50, 11)
+    pred = np.asarray(
+        jnp.argmax(ref.mlp_forward(params, x), axis=-1), dtype=np.int32
+    )
+    y = jnp.asarray(pred)  # use the model's own predictions as labels
+    (correct,) = model.eval_chunk(*params, x, y)
+    assert int(correct) == 50
+
+
+def test_eval_chunk_zero_when_all_wrong():
+    params = model.init_params(0)
+    x, _ = synth_batch(30, 13)
+    pred = np.asarray(
+        jnp.argmax(ref.mlp_forward(params, x), axis=-1), dtype=np.int32
+    )
+    y = jnp.asarray((pred + 1) % model.NUM_CLASSES)
+    (correct,) = model.eval_chunk(*params, x, y)
+    assert int(correct) == 0
+
+
+def test_predict_matches_forward_argmax():
+    params = model.init_params(0)
+    x, _ = synth_batch(100, 17)
+    (classes,) = model.predict(*params, x)
+    want = jnp.argmax(ref.mlp_forward(params, x), axis=-1)
+    np.testing.assert_array_equal(
+        np.asarray(classes), np.asarray(want, dtype=np.int32)
+    )
+
+
+def test_train_step_is_deterministic():
+    params = model.init_params(5)
+    x, y = synth_batch(10, 23)
+    lr = jnp.float32(0.01)
+    a = model.train_step(*params, x, y, lr)
+    b = model.train_step(*params, x, y, lr)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))

@@ -1,0 +1,98 @@
+//! Assignment & routing benchmarks + the RB-objective ablation
+//! (DESIGN.md §5): Hungarian (Eq 5) vs bottleneck (Eq 6) vs random RBs,
+//! and Algorithm 3 vs exact TSP vs nearest-neighbour path selection.
+//!
+//! Run: `cargo bench --bench bench_assign`
+
+use cnc_fl::assign::{bottleneck, hungarian, path, tsp};
+use cnc_fl::netsim::topology::TopologyGen;
+use cnc_fl::util::bench::{black_box, Bencher};
+use cnc_fl::util::rng::Pcg64;
+
+fn random_matrix(rows: usize, cols: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::seed_from(seed);
+    (0..rows * cols).map(|_| rng.uniform(0.001, 1.0)).collect()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("# bench_assign — assignment & routing kernels\n");
+
+    // Hungarian at the paper's round sizes (10/20 clients) and beyond
+    for n in [10usize, 20, 50, 100] {
+        let m = random_matrix(n, n, n as u64);
+        b.bench(&format!("hungarian {n}x{n}"), || {
+            black_box(hungarian::solve(&m, n, n))
+        });
+    }
+
+    // bottleneck assignment (Eq 6)
+    for n in [10usize, 20, 50] {
+        let m = random_matrix(n, n, 100 + n as u64);
+        b.bench(&format!("bottleneck {n}x{n}"), || {
+            black_box(bottleneck::solve(&m, n, n))
+        });
+    }
+
+    // Algorithm 3 over the paper's fleet sizes
+    for n in [8usize, 12, 20, 32] {
+        let mut rng = Pcg64::seed_from(n as u64);
+        let g = TopologyGen::full(n, 1.0, 10.0, &mut rng);
+        b.bench(&format!("algorithm3 greedy n={n}"), || {
+            black_box(path::algorithm3(&g))
+        });
+    }
+
+    // exact TSP to its tractability wall
+    for n in [8usize, 12, 14, 16] {
+        let mut rng = Pcg64::seed_from(200 + n as u64);
+        let g = TopologyGen::full(n, 1.0, 10.0, &mut rng);
+        b.bench(&format!("held-karp exact n={n}"), || {
+            black_box(tsp::held_karp(&g))
+        });
+    }
+
+    // nearest-neighbour baseline
+    {
+        let mut rng = Pcg64::seed_from(999);
+        let g = TopologyGen::full(20, 1.0, 10.0, &mut rng);
+        b.bench("nearest-neighbour n=20", || {
+            black_box(path::nearest_neighbour(&g, 0))
+        });
+    }
+
+    // ---- ablation: realised objective per strategy (20 clients, 20 RBs)
+    println!("\n# ablation — RB objective (mean over 100 draws, 20x20)\n");
+    let trials = 100;
+    let mut sum_energy = [0.0f64; 3]; // hungarian, bottleneck, random
+    let mut max_delay = [0.0f64; 3];
+    for t in 0..trials {
+        let energy = random_matrix(20, 20, 10_000 + t);
+        let delay: Vec<f64> = energy.iter().map(|e| e / 0.01).collect();
+        let (ah, _) = hungarian::solve(&energy, 20, 20);
+        let (ab, _) = bottleneck::solve(&delay, 20, 20);
+        let mut rbs: Vec<usize> = (0..20).collect();
+        Pcg64::seed_from(t).shuffle(&mut rbs);
+        for (si, assign) in [&ah, &ab, &rbs].iter().enumerate() {
+            let e: f64 = assign
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| energy[i * 20 + k])
+                .sum();
+            let d = assign
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| delay[i * 20 + k])
+                .fold(0.0f64, f64::max);
+            sum_energy[si] += e / trials as f64;
+            max_delay[si] += d / trials as f64;
+        }
+    }
+    println!("| strategy | mean Σenergy (Eq 5) | mean max-delay (Eq 6) |");
+    println!("|---|---|---|");
+    for (name, i) in [("hungarian (Eq5)", 0), ("bottleneck (Eq6)", 1), ("random", 2)] {
+        println!("| {name} | {:.4} | {:.4} |", sum_energy[i], max_delay[i]);
+    }
+
+    println!("\n{}", b.markdown_table());
+}

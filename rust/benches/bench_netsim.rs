@@ -1,0 +1,55 @@
+//! Channel-simulator benchmarks: the per-round radio modelling cost
+//! (Eq 2 Monte-Carlo fading expectation, cost-matrix construction) —
+//! the L3 hot path *outside* PJRT.
+//!
+//! Run: `cargo bench --bench bench_netsim`
+
+use cnc_fl::netsim::channel::{draw_sites, uplink_rate_bps, ChannelParams};
+use cnc_fl::netsim::rb::{build_cost_matrices, RbPool};
+use cnc_fl::netsim::topology::TopologyGen;
+use cnc_fl::util::bench::{black_box, Bencher};
+use cnc_fl::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("# bench_netsim — wireless channel & topology modelling\n");
+
+    let p = ChannelParams::default();
+    let root = Pcg64::seed_from(0);
+
+    // single-rate evaluation at different MC depths
+    for samples in [0usize, 32, 128, 512] {
+        let mut pp = p.clone();
+        pp.fading_samples = samples;
+        b.bench(&format!("uplink_rate MC={samples}"), || {
+            let mut rng = root.split("rate");
+            black_box(uplink_rate_bps(&pp, 250.0, 1.05e-8, &mut rng))
+        });
+    }
+
+    // full round cost-matrix builds at the paper's cohort sizes
+    for (n_clients, n_rb) in [(10usize, 10usize), (20, 20), (50, 50)] {
+        let mut rng = Pcg64::seed_from(n_clients as u64);
+        let sites = draw_sites(&p, n_clients, &mut rng);
+        let pool = RbPool::draw(&p, n_rb, &mut rng);
+        let clients: Vec<usize> = (0..n_clients).collect();
+        b.bench(
+            &format!("cost matrices {n_clients}x{n_rb} (MC=128)"),
+            || black_box(build_cost_matrices(&p, &sites, &clients, &pool, &root)),
+        );
+    }
+
+    // topology generation at Fig 11 scales
+    for n in [20usize, 50, 100] {
+        b.bench(&format!("TopologyGen::partial n={n}"), || {
+            let mut rng = Pcg64::seed_from(n as u64);
+            black_box(TopologyGen::partial(n, 1.0, 10.0, 0.3, &mut rng))
+        });
+    }
+    b.bench("TopologyGen::geometric n=50", || {
+        let mut rng = Pcg64::seed_from(1);
+        black_box(TopologyGen::geometric(50, 1000.0, 300.0, &mut rng))
+    });
+
+    println!("\n{}", b.markdown_table());
+}

@@ -1,0 +1,157 @@
+//! End-to-end round benchmarks — one per paper table/figure family:
+//! a full traditional round (Fig 4–8's unit of work) and a full P2P round
+//! (Fig 9–11's), on the real PJRT path, plus the coordinator-overhead
+//! breakdown (§Perf: L3 must not be the bottleneck).
+//!
+//! Skips (exit 0) when artifacts are missing.
+//!
+//! Run: `make artifacts && cargo bench --bench bench_round`
+
+use std::path::PathBuf;
+
+use cnc_fl::cnc::optimize::{
+    CohortStrategy, PartitionStrategy, PathStrategy, RbStrategy,
+};
+use cnc_fl::cnc::CncSystem;
+use cnc_fl::coordinator::p2p::{self, P2pConfig};
+use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
+use cnc_fl::coordinator::{MockTrainer, PjrtTrainer};
+use cnc_fl::data::{Partition, Split, SynthSpec};
+use cnc_fl::netsim::channel::ChannelParams;
+use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::netsim::topology::TopologyGen;
+use cnc_fl::runtime::{ArtifactStore, Engine};
+use cnc_fl::util::bench::{black_box, Bencher};
+use cnc_fl::util::rng::Pcg64;
+
+fn pjrt_trainer(num_clients: usize) -> Option<PjrtTrainer> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    let engine = Engine::new(ArtifactStore::load(&dir).unwrap()).unwrap();
+    let t = PjrtTrainer::new(
+        engine,
+        Partition::new(num_clients, Split::Iid, 0),
+        SynthSpec::default(),
+        0.01,
+        0,
+    )
+    .unwrap();
+    t.warmup().unwrap();
+    Some(t)
+}
+
+fn system(n: usize) -> CncSystem {
+    let mut ch = ChannelParams::default();
+    ch.fading_samples = 128;
+    CncSystem::bootstrap(n, 60_000 / n, 1, PowerProfile::Bimodal, ch, 0)
+}
+
+fn trad_cfg(rounds: usize) -> TraditionalConfig {
+    TraditionalConfig {
+        rounds,
+        cohort_size: 10,
+        n_rb: 10,
+        epoch_local: 1,
+        cohort_strategy: CohortStrategy::PowerGrouping { m: 10 },
+        rb_strategy: RbStrategy::HungarianEnergy,
+        eval_every: 1,
+        tx_deadline_s: None,
+        seed: 0,
+        verbose: false,
+    }
+}
+
+fn main() {
+    let Some(mut trainer) = pjrt_trainer(100) else {
+        println!("bench_round: artifacts missing — run `make artifacts` (skipping)");
+        return;
+    };
+    let mut b = Bencher::coarse();
+    println!("# bench_round — end-to-end global training rounds\n");
+
+    // full traditional round, Pr1 shape (Fig 4/5/6/7/8 unit of work)
+    let r_pjrt = b.bench("traditional round Pr1 (10 clients, PJRT)", || {
+        let mut sys = system(100);
+        black_box(
+            traditional::run(&mut sys, &mut trainer, &trad_cfg(1), "bench").unwrap(),
+        )
+    });
+
+    // coordinator-only round (mock trainer) → L3 overhead
+    let r_mock = b.bench("traditional round Pr1 (mock trainer = L3 only)", || {
+        let mut sys = system(100);
+        let mut t = MockTrainer::new(100, 600);
+        black_box(traditional::run(&mut sys, &mut t, &trad_cfg(1), "bench").unwrap())
+    });
+
+    // P2P round over the designed 20-client matrix (Fig 9 unit of work)
+    let g20 = TopologyGen::designed_20(0);
+    let mut p2p_trainer = pjrt_trainer(20).unwrap();
+    let p2p_cfg = P2pConfig {
+        rounds: 1,
+        partition_strategy: PartitionStrategy::BalancedDelay { e: 4 },
+        path_strategy: PathStrategy::Greedy,
+        epoch_local: 1,
+        eval_every: 1,
+        seed: 0,
+        verbose: false,
+    };
+    b.bench("p2p round exp-1 (20 clients E=4, PJRT)", || {
+        let mut sys = system(20);
+        black_box(p2p::run(&mut sys, &mut p2p_trainer, &g20, &p2p_cfg, "bench").unwrap())
+    });
+
+    // P2P exp-2 with exact TSP (Fig 10)
+    let g8 = TopologyGen::designed_8(0);
+    let mut p2p8 = pjrt_trainer(8).unwrap();
+    let cfg8 = P2pConfig {
+        rounds: 1,
+        partition_strategy: PartitionStrategy::All,
+        path_strategy: PathStrategy::ExactTsp,
+        epoch_local: 1,
+        eval_every: 1,
+        seed: 0,
+        verbose: false,
+    };
+    b.bench("p2p round exp-2 (8 clients TSP, PJRT)", || {
+        let mut sys = system(8);
+        black_box(p2p::run(&mut sys, &mut p2p8, &g8, &cfg8, "bench").unwrap())
+    });
+
+    // mock-backed Fig 11 latency-model round at scale
+    {
+        let mut rng = Pcg64::seed_from(0);
+        let g = TopologyGen::full(28, 1.0, 10.0, &mut rng);
+        let cfg = P2pConfig {
+            rounds: 1,
+            partition_strategy: PartitionStrategy::BalancedDelay { e: 4 },
+            path_strategy: PathStrategy::Greedy,
+            epoch_local: 1,
+            eval_every: 1,
+            seed: 0,
+            verbose: false,
+        };
+        b.bench("p2p round fig11 (28 clients, mock)", || {
+            let mut sys = system(28);
+            let mut t = MockTrainer::new(28, 60_000 / 28);
+            black_box(p2p::run(&mut sys, &mut t, &g, &cfg, "bench").unwrap())
+        });
+    }
+
+    // ---- §Perf: L3 coordinator overhead fraction
+    println!("\n# §Perf — coordinator overhead (traditional Pr1 round)\n");
+    let total_ms = r_pjrt.median_ns / 1e6;
+    let l3_ms = r_mock.median_ns / 1e6;
+    println!("| component | median wall |");
+    println!("|---|---|");
+    println!("| full round (PJRT compute + L3) | {total_ms:.2} ms |");
+    println!("| L3 coordinator alone (mock)    | {l3_ms:.2} ms |");
+    println!(
+        "| L3 overhead fraction           | {:.2}% |",
+        100.0 * l3_ms / total_ms
+    );
+
+    println!("\n{}", b.markdown_table());
+}

@@ -1,0 +1,123 @@
+//! PJRT runtime benchmarks: the L2/L1 compute path as loaded by the Rust
+//! coordinator — train_step vs train_epoch granularity (the DESIGN.md §5
+//! L2/L3-boundary ablation), eval and predict throughput.
+//!
+//! Skips (exit 0) when artifacts are missing.
+//!
+//! Run: `make artifacts && cargo bench --bench bench_runtime`
+
+use std::path::PathBuf;
+
+use cnc_fl::data::batch::{epoch_batches, eval_chunks};
+use cnc_fl::data::synth::{gen_dataset, gen_test_set, Prototypes, SynthSpec};
+use cnc_fl::runtime::{ArtifactStore, Engine};
+use cnc_fl::util::bench::{black_box, Bencher};
+use cnc_fl::util::rng::Pcg64;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: artifacts missing — run `make artifacts` (skipping)");
+        return;
+    }
+    let engine = Engine::new(ArtifactStore::load(&dir).unwrap()).unwrap();
+    let params = engine.store().init_params().unwrap();
+    let spec = SynthSpec::default();
+    let protos = Prototypes::build(&spec);
+
+    let mut b = Bencher::coarse();
+    println!("# bench_runtime — PJRT execution of the AOT artifacts\n");
+
+    // one SGD step (B=10)
+    let d10 = gen_dataset(&protos, &spec, "bench/step", 10, &[0, 1, 2]);
+    engine.train_step(&params, &d10.x, &d10.y, 0.01).unwrap(); // compile
+    let r_step = b.bench("train_step (1 batch of 10)", || {
+        black_box(engine.train_step(&params, &d10.x, &d10.y, 0.01).unwrap())
+    });
+
+    // one epoch over 600 samples via lax.scan (60 steps fused in one exec)
+    let d600 = gen_dataset(&protos, &spec, "bench/epoch", 600, &[0, 1, 2]);
+    let mut rng = Pcg64::seed_from(0);
+    let eb = epoch_batches(&d600, 10, &mut rng);
+    engine
+        .train_epoch("train_epoch_600", &params, &eb.x, &eb.y, 60, 0.01)
+        .unwrap();
+    let r_epoch = b.bench("train_epoch_600 (60 steps, one exec)", || {
+        black_box(
+            engine
+                .train_epoch("train_epoch_600", &params, &eb.x, &eb.y, 60, 0.01)
+                .unwrap(),
+        )
+    });
+
+    // §Perf ablation: same epoch through the pure-jnp reference model
+    // (no Pallas) — isolates the interpret-mode overhead on CPU PJRT
+    if engine.store().has("train_epoch_ref_600") {
+        engine
+            .train_epoch("train_epoch_ref_600", &params, &eb.x, &eb.y, 60, 0.01)
+            .unwrap();
+        let r_ref = b.bench("train_epoch_ref_600 (pure jnp, no Pallas)", || {
+            black_box(
+                engine
+                    .train_epoch("train_epoch_ref_600", &params, &eb.x, &eb.y, 60, 0.01)
+                    .unwrap(),
+            )
+        });
+        println!(
+            "\n# §Perf — Pallas interpret-mode overhead: {:.2}× vs pure-jnp\n",
+            r_epoch.median_ns / r_ref.median_ns
+        );
+    }
+
+    // the 1000-sample P2P epoch variant
+    let d1000 = gen_dataset(&protos, &spec, "bench/epoch1k", 1000, &[0, 1, 2]);
+    let eb1k = epoch_batches(&d1000, 10, &mut Pcg64::seed_from(1));
+    engine
+        .train_epoch("train_epoch_1000", &params, &eb1k.x, &eb1k.y, 100, 0.01)
+        .unwrap();
+    b.bench("train_epoch_1000 (100 steps, one exec)", || {
+        black_box(
+            engine
+                .train_epoch("train_epoch_1000", &params, &eb1k.x, &eb1k.y, 100, 0.01)
+                .unwrap(),
+        )
+    });
+
+    // eval + predict
+    let test = gen_test_set(&protos, &spec);
+    let ch = eval_chunks(&test, 1000);
+    engine
+        .eval_chunk("eval_1000", &params, &ch.chunks_x[0], &ch.chunks_y[0], 1000)
+        .unwrap();
+    let r_eval = b.bench("eval_1000 (one chunk)", || {
+        black_box(
+            engine
+                .eval_chunk("eval_1000", &params, &ch.chunks_x[0], &ch.chunks_y[0], 1000)
+                .unwrap(),
+        )
+    });
+    let d100 = gen_dataset(&protos, &spec, "bench/pred", 100, &[0, 1]);
+    engine.predict("predict_100", &params, &d100.x, 100).unwrap();
+    b.bench("predict_100", || {
+        black_box(engine.predict("predict_100", &params, &d100.x, 100).unwrap())
+    });
+
+    // ---- ablation: scan-fused epoch vs 60 separate step executions
+    println!("\n# ablation — artifact-call granularity (60 SGD steps)\n");
+    let scan_ms = r_epoch.median_ns / 1e6;
+    let step60_ms = 60.0 * r_step.median_ns / 1e6;
+    println!("| strategy | wall per local epoch |");
+    println!("|---|---|");
+    println!("| train_epoch (lax.scan, 1 exec) | {scan_ms:.2} ms |");
+    println!("| 60 × train_step (60 execs)     | {step60_ms:.2} ms |");
+    println!(
+        "| speedup | {:.2}× |",
+        step60_ms / scan_ms
+    );
+    println!(
+        "\neval throughput: {:.0} samples/s",
+        r_eval.throughput(1000.0)
+    );
+
+    println!("\n{}", b.markdown_table());
+}

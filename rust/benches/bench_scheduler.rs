@@ -1,0 +1,80 @@
+//! Scheduler benchmarks + the Algorithm 1 group-count ablation
+//! (DESIGN.md §5): how `m` trades per-round delay spread against
+//! sampling diversity.
+//!
+//! Run: `cargo bench --bench bench_scheduler`
+
+use cnc_fl::netsim::compute::{draw_powers, PowerProfile};
+use cnc_fl::scheduler::partition::{balanced_delay_parts, imbalance, random_parts};
+use cnc_fl::scheduler::power::{FleetInfo, PowerGroups};
+use cnc_fl::util::bench::{black_box, Bencher};
+use cnc_fl::util::rng::Pcg64;
+use cnc_fl::util::stats;
+
+fn fleet(u: usize, seed: u64) -> FleetInfo {
+    let mut rng = Pcg64::seed_from(seed);
+    let powers = draw_powers(PowerProfile::Bimodal, u, &mut rng);
+    FleetInfo::new(&powers, &vec![600; u], 1)
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("# bench_scheduler — Algorithm 1 & P2P partitioning\n");
+
+    for u in [100usize, 1_000, 10_000] {
+        let f = fleet(u, u as u64);
+        b.bench(&format!("PowerGroups::build U={u} m={}", u / 10), || {
+            black_box(PowerGroups::build(&f, u / 10))
+        });
+        let g = PowerGroups::build(&f, u / 10);
+        let mut rng = Pcg64::seed_from(1);
+        b.bench(&format!("Alg1 sample n={} of U={u}", u / 10), || {
+            black_box(g.sample(&f, u / 10, &mut rng))
+        });
+    }
+
+    for u in [20usize, 100, 1_000] {
+        let f = fleet(u, 7 + u as u64);
+        b.bench(&format!("LPT balanced parts U={u} E=4"), || {
+            black_box(balanced_delay_parts(&f.delays_s, 4))
+        });
+    }
+
+    // ---- ablation: group count m vs cohort delay spread (U=100, n=10)
+    println!("\n# ablation — Algorithm 1 group count m (U=100, n=10, 300 draws)\n");
+    let f = fleet(100, 42);
+    println!("| m | mean t_max−t_min (s) | p95 (s) |");
+    println!("|---|---|---|");
+    for m in [1usize, 2, 5, 10, 20] {
+        let g = PowerGroups::build(&f, m);
+        let mut rng = Pcg64::seed_from(m as u64);
+        let diffs: Vec<f64> = (0..300)
+            .map(|_| {
+                let s = g.sample(&f, 10, &mut rng);
+                let d: Vec<f64> = s.iter().map(|&i| f.delays_s[i]).collect();
+                stats::max(&d) - stats::min(&d)
+            })
+            .collect();
+        println!(
+            "| {m} | {:.3} | {:.3} |",
+            stats::mean(&diffs),
+            stats::quantile(&diffs, 0.95)
+        );
+    }
+    println!("\n(m = 1 is FedAvg-like uniform exposure; larger m tightens Eq 9)");
+
+    // ---- ablation: LPT vs random partition balance (U=20, E=4)
+    println!("\n# ablation — P2P partition balance (U=20, E=4, 200 draws)\n");
+    let f20 = fleet(20, 5);
+    let lpt_imb = imbalance(&f20.delays_s, &balanced_delay_parts(&f20.delays_s, 4));
+    let mut rng = Pcg64::seed_from(9);
+    let rnd_imb: Vec<f64> = (0..200)
+        .map(|_| imbalance(&f20.delays_s, &random_parts(20, 4, &mut rng)))
+        .collect();
+    println!("| strategy | delay-sum imbalance (s) |");
+    println!("|---|---|");
+    println!("| LPT (Alg 2 line 3) | {lpt_imb:.3} |");
+    println!("| random mean | {:.3} |", stats::mean(&rnd_imb));
+
+    println!("\n{}", b.markdown_table());
+}

@@ -1,0 +1,227 @@
+//! Bottleneck assignment — solves the paper's Eq (6):
+//! `min( max_{i∈S_t} l_i^U )`, i.e. assign clients to RBs minimising the
+//! *worst* uplink delay rather than the sum.
+//!
+//! Method: binary search over the sorted distinct costs; feasibility of a
+//! threshold is a bipartite perfect-matching question answered by Kuhn's
+//! augmenting-path algorithm. O(log E · V·E) — tiny at our sizes
+//! (≤ 20 clients × 20 RBs per round).
+
+/// Maximum bipartite matching over an adjacency list `adj[row] = cols`.
+/// Returns `match_row[row] = Some(col)`.
+fn kuhn_matching(adj: &[Vec<usize>], rows: usize, cols: usize) -> Vec<Option<usize>> {
+    let mut match_col: Vec<Option<usize>> = vec![None; cols];
+    let mut match_row: Vec<Option<usize>> = vec![None; rows];
+
+    fn try_augment(
+        r: usize,
+        adj: &[Vec<usize>],
+        visited: &mut [bool],
+        match_col: &mut [Option<usize>],
+        match_row: &mut [Option<usize>],
+    ) -> bool {
+        for &c in &adj[r] {
+            if !visited[c] {
+                visited[c] = true;
+                if match_col[c].is_none()
+                    || try_augment(
+                        match_col[c].unwrap(),
+                        adj,
+                        visited,
+                        match_col,
+                        match_row,
+                    )
+                {
+                    match_col[c] = Some(r);
+                    match_row[r] = Some(c);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    for r in 0..rows {
+        let mut visited = vec![false; cols];
+        try_augment(r, adj, &mut visited, &mut match_col, &mut match_row);
+    }
+    match_row
+}
+
+/// Solve the bottleneck assignment for a row-major `rows`×`cols` matrix
+/// (`rows <= cols`). Returns (`assignment[row] = col`, bottleneck value).
+pub fn solve(cost: &[f64], rows: usize, cols: usize) -> (Vec<usize>, f64) {
+    assert!(rows <= cols, "bottleneck: need rows <= cols");
+    assert_eq!(cost.len(), rows * cols);
+    if rows == 0 {
+        return (Vec::new(), 0.0);
+    }
+    let mut values: Vec<f64> = cost.to_vec();
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    values.dedup();
+
+    let feasible = |threshold: f64| -> Option<Vec<usize>> {
+        let adj: Vec<Vec<usize>> = (0..rows)
+            .map(|i| {
+                (0..cols)
+                    .filter(|&j| cost[i * cols + j] <= threshold)
+                    .collect()
+            })
+            .collect();
+        let m = kuhn_matching(&adj, rows, cols);
+        if m.iter().all(|x| x.is_some()) {
+            Some(m.into_iter().map(|x| x.unwrap()).collect())
+        } else {
+            None
+        }
+    };
+
+    // binary search the smallest feasible threshold
+    let (mut lo, mut hi) = (0usize, values.len() - 1);
+    // hi must be feasible: with all edges present a perfect matching exists
+    debug_assert!(feasible(values[hi]).is_some());
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if feasible(values[mid]).is_some() {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let assignment = feasible(values[lo]).expect("threshold must be feasible");
+    (assignment, values[lo])
+}
+
+/// Brute-force bottleneck optimum (test oracle, rows ≤ 8).
+pub fn brute_force(cost: &[f64], rows: usize, cols: usize) -> f64 {
+    assert!(rows <= cols);
+    fn rec(
+        cost: &[f64],
+        rows: usize,
+        cols: usize,
+        row: usize,
+        cur_max: f64,
+        chosen: &mut Vec<bool>,
+        best: &mut f64,
+    ) {
+        if cur_max >= *best {
+            return;
+        }
+        if row == rows {
+            *best = cur_max;
+            return;
+        }
+        for j in 0..cols {
+            if !chosen[j] {
+                chosen[j] = true;
+                rec(
+                    cost,
+                    rows,
+                    cols,
+                    row + 1,
+                    cur_max.max(cost[row * cols + j]),
+                    chosen,
+                    best,
+                );
+                chosen[j] = false;
+            }
+        }
+    }
+    let mut best = f64::INFINITY;
+    rec(cost, rows, cols, 0, 0.0, &mut vec![false; cols], &mut best);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, prop_assert, Gen};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn simple_2x2() {
+        // rows choose distinct cols; min-max is 2.0 (0→0:1, 1→1:2), not 3
+        let cost = [1.0, 3.0, 3.0, 2.0];
+        let (a, b) = solve(&cost, 2, 2);
+        assert_eq!(a, vec![0, 1]);
+        assert_eq!(b, 2.0);
+    }
+
+    #[test]
+    fn bottleneck_differs_from_sum_optimal() {
+        // Hungarian (sum) picks {0→0 (0.1), 1→1 (9)} total 9.1, max 9;
+        // bottleneck prefers {0→1 (5), 1→0 (5)} max 5.
+        let cost = [0.1, 5.0, 5.0, 9.0];
+        let (_, sum_total) = crate::assign::hungarian::solve(&cost, 2, 2);
+        assert!((sum_total - 9.1).abs() < 1e-12);
+        let (_, bmax) = solve(&cost, 2, 2);
+        assert_eq!(bmax, 5.0);
+    }
+
+    #[test]
+    fn rectangular_uses_spare_columns() {
+        let cost = [
+            9.0, 9.0, 1.0, //
+            9.0, 9.0, 2.0,
+        ];
+        // only col 2 is cheap but rows need distinct cols → one row eats a 9
+        let (a, b) = solve(&cost, 2, 3);
+        assert_eq!(b, 9.0);
+        assert_ne!(a[0], a[1]);
+    }
+
+    #[test]
+    fn empty_ok() {
+        let (a, b) = solve(&[], 0, 3);
+        assert!(a.is_empty());
+        assert_eq!(b, 0.0);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        struct GenInstance;
+        impl Gen for GenInstance {
+            type Value = (usize, usize, Vec<f64>);
+            fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+                let rows = 1 + rng.below(6) as usize;
+                let cols = rows + rng.below(3) as usize;
+                let m = (0..rows * cols).map(|_| rng.uniform(0.0, 10.0)).collect();
+                (rows, cols, m)
+            }
+        }
+        check(60, GenInstance, |(rows, cols, m)| {
+            let (a, got) = solve(m, *rows, *cols);
+            let want = brute_force(m, *rows, *cols);
+            // assignment realises the reported bottleneck
+            let realised = a
+                .iter()
+                .enumerate()
+                .map(|(i, &j)| m[i * cols + j])
+                .fold(0.0f64, f64::max);
+            prop_assert(
+                (got - want).abs() < 1e-9 && (realised - got).abs() < 1e-9,
+                &format!("bottleneck {got} want {want} realised {realised}"),
+            )
+        });
+    }
+
+    #[test]
+    fn assignment_injective_property() {
+        struct GenInstance;
+        impl Gen for GenInstance {
+            type Value = (usize, Vec<f64>);
+            fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+                let rows = 1 + rng.below(10) as usize;
+                let m = (0..rows * rows).map(|_| rng.uniform(0.0, 3.0)).collect();
+                (rows, m)
+            }
+        }
+        check(40, GenInstance, |(rows, m)| {
+            let (a, _) = solve(m, *rows, *rows);
+            let mut s = a.clone();
+            s.sort();
+            s.dedup();
+            prop_assert(s.len() == *rows, "distinct columns")
+        });
+    }
+}

@@ -1,0 +1,252 @@
+//! Kuhn–Munkres (Hungarian) algorithm, O(n²·m) with potentials — solves
+//! the paper's Eq (5): assign each selected client to one Resource Block
+//! minimising total transmission energy.
+//!
+//! Works on rectangular matrices with rows ≤ cols (clients ≤ RBs); every
+//! row is assigned a distinct column. Costs must be finite; the caller maps
+//! "forbidden" pairs to a large finite penalty if needed.
+
+/// Solve the min-cost assignment for a row-major `rows`×`cols` cost matrix
+/// (`rows <= cols`). Returns `assignment[row] = col` and the total cost.
+pub fn solve(cost: &[f64], rows: usize, cols: usize) -> (Vec<usize>, f64) {
+    assert!(rows <= cols, "hungarian: need rows({rows}) <= cols({cols})");
+    assert_eq!(cost.len(), rows * cols, "hungarian: bad matrix size");
+    assert!(
+        cost.iter().all(|c| c.is_finite()),
+        "hungarian: costs must be finite"
+    );
+    if rows == 0 {
+        return (Vec::new(), 0.0);
+    }
+
+    // 1-based arrays in the classic potentials formulation (e-maxx style).
+    let inf = f64::INFINITY;
+    let n = rows;
+    let m = cols;
+    let at = |i: usize, j: usize| cost[(i - 1) * m + (j - 1)];
+
+    let mut u = vec![0.0f64; n + 1]; // row potentials
+    let mut v = vec![0.0f64; m + 1]; // col potentials
+    let mut p = vec![0usize; m + 1]; // p[j] = row matched to col j (0 = none)
+    let mut way = vec![0usize; m + 1];
+
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![inf; m + 1];
+        let mut used = vec![false; m + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = inf;
+            let mut j1 = 0usize;
+            for j in 1..=m {
+                if !used[j] {
+                    let cur = at(i0, j) - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=m {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        // augment along the alternating path
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut assignment = vec![usize::MAX; n];
+    for j in 1..=m {
+        if p[j] != 0 {
+            assignment[p[j] - 1] = j - 1;
+        }
+    }
+    let total = assignment
+        .iter()
+        .enumerate()
+        .map(|(i, &j)| cost[i * m + j])
+        .sum();
+    (assignment, total)
+}
+
+/// Brute-force optimal assignment by permutation enumeration — test oracle
+/// only (rows ≤ 8 or so).
+pub fn brute_force(cost: &[f64], rows: usize, cols: usize) -> (Vec<usize>, f64) {
+    assert!(rows <= cols);
+    let mut best: (Vec<usize>, f64) = (Vec::new(), f64::INFINITY);
+    let mut chosen = vec![false; cols];
+    let mut cur = Vec::with_capacity(rows);
+    fn rec(
+        cost: &[f64],
+        rows: usize,
+        cols: usize,
+        row: usize,
+        acc: f64,
+        chosen: &mut Vec<bool>,
+        cur: &mut Vec<usize>,
+        best: &mut (Vec<usize>, f64),
+    ) {
+        if acc >= best.1 {
+            return;
+        }
+        if row == rows {
+            *best = (cur.clone(), acc);
+            return;
+        }
+        for j in 0..cols {
+            if !chosen[j] {
+                chosen[j] = true;
+                cur.push(j);
+                rec(
+                    cost,
+                    rows,
+                    cols,
+                    row + 1,
+                    acc + cost[row * cols + j],
+                    chosen,
+                    cur,
+                    best,
+                );
+                cur.pop();
+                chosen[j] = false;
+            }
+        }
+    }
+    rec(cost, rows, cols, 0, 0.0, &mut chosen, &mut cur, &mut best);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, gen_usize, prop_assert, Gen, GenPair};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn textbook_3x3() {
+        // classic example: optimal = 5 (1+2+2? verify by brute force)
+        let cost = [4.0, 1.0, 3.0, 2.0, 0.0, 5.0, 3.0, 2.0, 2.0];
+        let (a, total) = solve(&cost, 3, 3);
+        let (_, want) = brute_force(&cost, 3, 3);
+        assert_eq!(total, want);
+        // assignment is a permutation
+        let mut s = a.clone();
+        s.sort();
+        assert_eq!(s, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn identity_diagonal() {
+        // zero diagonal, expensive elsewhere → assign i→i
+        let n = 6;
+        let mut cost = vec![9.0; n * n];
+        for i in 0..n {
+            cost[i * n + i] = 0.0;
+        }
+        let (a, total) = solve(&cost, n, n);
+        assert_eq!(a, (0..n).collect::<Vec<_>>());
+        assert_eq!(total, 0.0);
+    }
+
+    #[test]
+    fn rectangular_picks_cheap_columns() {
+        // 2 rows, 4 cols; cheapest distinct cols are 3 (0.1) and 1 (0.2)
+        let cost = [
+            5.0, 5.0, 5.0, 0.1, //
+            5.0, 0.2, 5.0, 5.0,
+        ];
+        let (a, total) = solve(&cost, 2, 4);
+        assert_eq!(a, vec![3, 1]);
+        assert!((total - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let (a, t) = solve(&[], 0, 0);
+        assert!(a.is_empty());
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn single_cell() {
+        let (a, t) = solve(&[3.25], 1, 1);
+        assert_eq!(a, vec![0]);
+        assert_eq!(t, 3.25);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        // property: Hungarian total == exhaustive optimum (rows ≤ 6)
+        struct GenInstance;
+        impl Gen for GenInstance {
+            type Value = (usize, usize, Vec<f64>);
+            fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+                let rows = 1 + rng.below(6) as usize;
+                let cols = rows + rng.below(3) as usize;
+                let m = (0..rows * cols).map(|_| rng.uniform(0.0, 10.0)).collect();
+                (rows, cols, m)
+            }
+        }
+        check(60, GenInstance, |(rows, cols, m)| {
+            let (_, got) = solve(m, *rows, *cols);
+            let (_, want) = brute_force(m, *rows, *cols);
+            prop_assert(
+                (got - want).abs() < 1e-9,
+                &format!("hungarian {got} != brute {want}"),
+            )
+        });
+    }
+
+    #[test]
+    fn assignment_is_always_injective() {
+        check(
+            60,
+            GenPair(gen_usize(1..8), gen_usize(0..1000)),
+            |&(rows, seed)| {
+                let cols = rows + 4;
+                let mut rng = Pcg64::seed_from(seed as u64);
+                let m: Vec<f64> =
+                    (0..rows * cols).map(|_| rng.uniform(0.0, 5.0)).collect();
+                let (a, _) = solve(&m, rows, cols);
+                let mut s = a.clone();
+                s.sort();
+                s.dedup();
+                prop_assert(s.len() == rows, "columns must be distinct")
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn more_rows_than_cols_panics() {
+        solve(&[1.0, 2.0], 2, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_finite_cost_panics() {
+        solve(&[1.0, f64::INFINITY, 2.0, 3.0], 2, 2);
+    }
+}

@@ -1,0 +1,10 @@
+//! Assignment & routing algorithms used by the CNC scheduling-optimization
+//! layer: Hungarian (Eq 5), bottleneck assignment (Eq 6), Algorithm 3
+//! greedy path selection and exact Held–Karp TSP (Eq 7).
+
+pub mod bottleneck;
+pub mod hungarian;
+pub mod path;
+pub mod tsp;
+
+pub use path::TracePath;

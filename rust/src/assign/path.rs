@@ -1,0 +1,290 @@
+//! Transmission-path selection — the paper's **Algorithm 3**.
+//!
+//! Finds a low-cost Hamiltonian path over the clients of one subset S_te
+//! given its consumption sub-matrix G_e: from every possible starting
+//! client, greedily extend the path to the *nearest feasible* (connected,
+//! unvisited) neighbour, backtracking to the next-nearest alternative when
+//! a dead end is reached; the best complete path over all starts is
+//! returned (line 24 of the algorithm: "select the path with the shortest
+//! sum of transmission consumption").
+//!
+//! Baselines for the figures/ablations: plain nearest-neighbour (no
+//! backtracking — may fail on partial graphs) and a seeded random feasible
+//! path.
+
+use crate::netsim::topology::CostMatrix;
+use crate::util::rng::Pcg64;
+
+/// A found path with its Eq (7) cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TracePath {
+    pub order: Vec<usize>,
+    pub cost: f64,
+}
+
+/// Algorithm 3 from one fixed starting client: greedy nearest-feasible
+/// descent with backtracking. Returns the first complete path found.
+pub fn greedy_from(g: &CostMatrix, start: usize) -> Option<TracePath> {
+    let n = g.n;
+    assert!(start < n);
+    if n == 1 {
+        return Some(TracePath {
+            order: vec![start],
+            cost: 0.0,
+        });
+    }
+    // stack entry: (path, visited-mask, candidate list of next hops sorted
+    // by distance DESC so pop() yields the nearest first)
+    let mut visited = vec![false; n];
+    visited[start] = true;
+    let mut path = vec![start];
+    // per-depth iterator state: remaining candidates (nearest last)
+    let mut alts: Vec<Vec<usize>> = vec![sorted_candidates(g, start, &visited)];
+
+    loop {
+        let depth = path.len() - 1;
+        if let Some(next) = alts[depth].pop() {
+            path.push(next);
+            visited[next] = true;
+            if path.len() == n {
+                let cost = g.path_cost(&path);
+                return Some(TracePath { order: path, cost });
+            }
+            alts.push(sorted_candidates(g, next, &visited));
+        } else {
+            // dead end: backtrack ("Remove the current path")
+            alts.pop();
+            let dead = path.pop().expect("non-empty path");
+            visited[dead] = false;
+            if path.is_empty() {
+                return None; // no Hamiltonian path from this start
+            }
+        }
+    }
+}
+
+/// Unvisited, connected neighbours of `from`, sorted by cost descending
+/// (so `pop()` returns the cheapest — "select the shortest distance ...
+/// as the next client").
+fn sorted_candidates(g: &CostMatrix, from: usize, visited: &[bool]) -> Vec<usize> {
+    let mut cands: Vec<usize> = (0..g.n)
+        .filter(|&j| !visited[j] && g.connected(from, j) && j != from)
+        .collect();
+    cands.sort_by(|&a, &b| {
+        g.at(from, b)
+            .partial_cmp(&g.at(from, a))
+            .unwrap()
+            .then(b.cmp(&a)) // deterministic tie-break: lower index preferred
+    });
+    cands
+}
+
+/// Full Algorithm 3: run `greedy_from` from every start, return the best
+/// complete path (None if the graph has no Hamiltonian path at all).
+pub fn algorithm3(g: &CostMatrix) -> Option<TracePath> {
+    let mut best: Option<TracePath> = None;
+    for start in 0..g.n {
+        if let Some(p) = greedy_from(g, start) {
+            if best.as_ref().map_or(true, |b| p.cost < b.cost) {
+                best = Some(p);
+            }
+        }
+    }
+    best
+}
+
+/// Baseline: nearest-neighbour from a fixed start without backtracking.
+/// Returns None when it strands itself (possible on partial graphs).
+pub fn nearest_neighbour(g: &CostMatrix, start: usize) -> Option<TracePath> {
+    let n = g.n;
+    let mut visited = vec![false; n];
+    visited[start] = true;
+    let mut order = vec![start];
+    let mut cur = start;
+    for _ in 1..n {
+        let next = (0..n)
+            .filter(|&j| !visited[j] && g.connected(cur, j))
+            .min_by(|&a, &b| g.at(cur, a).partial_cmp(&g.at(cur, b)).unwrap())?;
+        visited[next] = true;
+        order.push(next);
+        cur = next;
+    }
+    let cost = g.path_cost(&order);
+    Some(TracePath { order, cost })
+}
+
+/// Baseline: random feasible path (retries until one is found or the
+/// attempt budget runs out) — what "no path optimisation" looks like.
+pub fn random_path(g: &CostMatrix, rng: &mut Pcg64, attempts: usize) -> Option<TracePath> {
+    let n = g.n;
+    'attempt: for _ in 0..attempts {
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for w in order.windows(2) {
+            if !g.connected(w[0], w[1]) {
+                continue 'attempt;
+            }
+        }
+        let cost = g.path_cost(&order);
+        return Some(TracePath { order, cost });
+    }
+    None
+}
+
+/// Validity check used by tests and the coordinator's debug assertions.
+pub fn is_hamiltonian_path(g: &CostMatrix, p: &TracePath) -> bool {
+    if p.order.len() != g.n {
+        return false;
+    }
+    let mut seen = vec![false; g.n];
+    for &i in &p.order {
+        if seen[i] {
+            return false;
+        }
+        seen[i] = true;
+    }
+    p.cost.is_finite()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::topology::TopologyGen;
+    use crate::util::propcheck::{check, gen_usize, prop_assert, GenPair};
+
+    fn line_graph() -> CostMatrix {
+        // 0—1—2—3 chain: only one Hamiltonian path shape exists
+        let mut g = CostMatrix::new(4);
+        g.set_sym(0, 1, 1.0);
+        g.set_sym(1, 2, 1.0);
+        g.set_sym(2, 3, 1.0);
+        g
+    }
+
+    #[test]
+    fn finds_the_only_path_in_a_line() {
+        let g = line_graph();
+        let p = algorithm3(&g).unwrap();
+        assert!(p.order == vec![0, 1, 2, 3] || p.order == vec![3, 2, 1, 0]);
+        assert_eq!(p.cost, 3.0);
+    }
+
+    #[test]
+    fn backtracking_recovers_where_nn_fails() {
+        // 0 is closest to 2, but going 0→2 strands 1 (1 only connects to 0).
+        // NN from 0 fails; Algorithm 3 backtracks to 0→1→... wait 1 is a leaf:
+        // the only Hamiltonian path is 1→0→2→3.
+        let mut g = CostMatrix::new(4);
+        g.set_sym(0, 1, 5.0);
+        g.set_sym(0, 2, 1.0);
+        g.set_sym(2, 3, 1.0);
+        assert!(nearest_neighbour(&g, 0).is_none());
+        let p = algorithm3(&g).unwrap();
+        assert!(is_hamiltonian_path(&g, &p));
+        assert_eq!(p.cost, 7.0);
+        assert!(p.order == vec![1, 0, 2, 3] || p.order == vec![3, 2, 0, 1]);
+    }
+
+    #[test]
+    fn greedy_prefers_cheap_edges() {
+        // complete graph where a clear cheap chain exists
+        let mut g = CostMatrix::new(4);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i != j {
+                    g.set(i, j, 10.0);
+                }
+            }
+        }
+        g.set_sym(0, 1, 1.0);
+        g.set_sym(1, 2, 1.0);
+        g.set_sym(2, 3, 1.0);
+        let p = algorithm3(&g).unwrap();
+        assert_eq!(p.cost, 3.0);
+    }
+
+    #[test]
+    fn single_node() {
+        let g = CostMatrix::new(1);
+        let p = algorithm3(&g).unwrap();
+        assert_eq!(p.order, vec![0]);
+        assert_eq!(p.cost, 0.0);
+    }
+
+    #[test]
+    fn no_hamiltonian_path_returns_none() {
+        // star: center 0 with 3 leaves — no Hamiltonian path over 4 nodes
+        let mut g = CostMatrix::new(4);
+        g.set_sym(0, 1, 1.0);
+        g.set_sym(0, 2, 1.0);
+        g.set_sym(0, 3, 1.0);
+        assert!(algorithm3(&g).is_none());
+    }
+
+    #[test]
+    fn random_path_only_returns_feasible() {
+        let mut rng = Pcg64::seed_from(0);
+        let g = TopologyGen::partial(10, 1.0, 5.0, 0.4, &mut rng);
+        if let Some(p) = random_path(&g, &mut rng, 500) {
+            assert!(is_hamiltonian_path(&g, &p));
+        }
+    }
+
+    #[test]
+    fn algorithm3_always_yields_valid_paths_on_full_graphs() {
+        check(
+            50,
+            GenPair(gen_usize(2..15), gen_usize(0..10_000)),
+            |&(n, seed)| {
+                let mut rng = Pcg64::seed_from(seed as u64);
+                let g = TopologyGen::full(n, 1.0, 10.0, &mut rng);
+                match algorithm3(&g) {
+                    None => Err("full graph must have a path".into()),
+                    Some(p) => prop_assert(
+                        is_hamiltonian_path(&g, &p),
+                        "path must visit every client exactly once",
+                    ),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn algorithm3_not_worse_than_single_start_nn() {
+        // property: alg3's min-over-starts beats (≤) NN from start 0 when
+        // NN succeeds
+        check(
+            40,
+            GenPair(gen_usize(2..12), gen_usize(0..10_000)),
+            |&(n, seed)| {
+                let mut rng = Pcg64::seed_from(seed as u64);
+                let g = TopologyGen::full(n, 1.0, 10.0, &mut rng);
+                let a3 = algorithm3(&g).unwrap();
+                match nearest_neighbour(&g, 0) {
+                    Some(nn) => prop_assert(
+                        a3.cost <= nn.cost + 1e-9,
+                        &format!("alg3 {} > nn {}", a3.cost, nn.cost),
+                    ),
+                    None => Ok(()),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_tie_breaking() {
+        // all-equal costs: result must still be deterministic
+        let mut g = CostMatrix::new(5);
+        for i in 0..5 {
+            for j in 0..5 {
+                if i != j {
+                    g.set(i, j, 2.0);
+                }
+            }
+        }
+        let a = algorithm3(&g).unwrap();
+        let b = algorithm3(&g).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.cost, 8.0);
+    }
+}

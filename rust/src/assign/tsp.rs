@@ -1,0 +1,201 @@
+//! Exact open-path TSP (Held–Karp) — the comparator used in the paper's
+//! second P2P experiment ("the transmission problem is transformed into a
+//! TSP problem" for the 8-client setting).
+//!
+//! We solve the *open* variant (a Hamiltonian path, not a cycle): the model
+//! starts at some client and ends at another; no return hop. O(2ⁿ·n²) time,
+//! O(2ⁿ·n) space — capped at n ≤ 20 (the biggest P2P fleet in the paper).
+
+use crate::assign::path::TracePath;
+use crate::netsim::topology::CostMatrix;
+
+/// Largest instance Held–Karp will accept (2²⁰·20 f64 ≈ 168 MB is the
+/// practical ceiling; the paper never exceeds 20 clients).
+pub const MAX_N: usize = 20;
+
+/// Exact minimum-cost Hamiltonian path over all start/end pairs.
+/// Returns None if no Hamiltonian path exists (disconnected/partial graph).
+pub fn held_karp(g: &CostMatrix) -> Option<TracePath> {
+    let n = g.n;
+    assert!(n <= MAX_N, "held_karp: n={n} exceeds MAX_N={MAX_N}");
+    if n == 0 {
+        return None;
+    }
+    if n == 1 {
+        return Some(TracePath {
+            order: vec![0],
+            cost: 0.0,
+        });
+    }
+    let full = (1usize << n) - 1;
+    let inf = f64::INFINITY;
+    // dp[mask][j] = min cost of a path visiting exactly `mask`, ending at j
+    let mut dp = vec![inf; (full + 1) * n];
+    let mut parent = vec![usize::MAX; (full + 1) * n];
+    for j in 0..n {
+        dp[(1 << j) * n + j] = 0.0; // start anywhere, free
+    }
+    for mask in 1..=full {
+        for j in 0..n {
+            let cur = dp[mask * n + j];
+            if !cur.is_finite() || mask & (1 << j) == 0 {
+                continue;
+            }
+            for k in 0..n {
+                if mask & (1 << k) != 0 {
+                    continue;
+                }
+                let w = g.at(j, k);
+                if !w.is_finite() {
+                    continue;
+                }
+                let nm = mask | (1 << k);
+                let cand = cur + w;
+                if cand < dp[nm * n + k] {
+                    dp[nm * n + k] = cand;
+                    parent[nm * n + k] = j;
+                }
+            }
+        }
+    }
+    // best endpoint over complete masks
+    let (mut best_j, mut best_cost) = (usize::MAX, inf);
+    for j in 0..n {
+        if dp[full * n + j] < best_cost {
+            best_cost = dp[full * n + j];
+            best_j = j;
+        }
+    }
+    if !best_cost.is_finite() {
+        return None;
+    }
+    // reconstruct
+    let mut order = Vec::with_capacity(n);
+    let mut mask = full;
+    let mut j = best_j;
+    while j != usize::MAX {
+        order.push(j);
+        let pj = parent[mask * n + j];
+        mask &= !(1 << j);
+        j = pj;
+    }
+    order.reverse();
+    debug_assert_eq!(order.len(), n);
+    Some(TracePath {
+        order,
+        cost: best_cost,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::path::algorithm3;
+    use crate::netsim::topology::TopologyGen;
+    use crate::util::propcheck::{check, gen_usize, prop_assert, GenPair};
+    use crate::util::rng::Pcg64;
+
+    /// exhaustive oracle over all permutations (n ≤ 7)
+    fn brute(g: &CostMatrix) -> Option<f64> {
+        fn perms(n: usize) -> Vec<Vec<usize>> {
+            if n == 1 {
+                return vec![vec![0]];
+            }
+            let mut out = Vec::new();
+            for p in perms(n - 1) {
+                for i in 0..=p.len() {
+                    let mut q = p.clone();
+                    q.insert(i, n - 1);
+                    out.push(q);
+                }
+            }
+            out
+        }
+        let mut best: Option<f64> = None;
+        for p in perms(g.n) {
+            let c = g.path_cost(&p);
+            if c.is_finite() && best.map_or(true, |b| c < b) {
+                best = Some(c);
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn line_graph_exact() {
+        let mut g = CostMatrix::new(4);
+        g.set_sym(0, 1, 1.0);
+        g.set_sym(1, 2, 1.0);
+        g.set_sym(2, 3, 1.0);
+        let p = held_karp(&g).unwrap();
+        assert_eq!(p.cost, 3.0);
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        check(
+            40,
+            GenPair(gen_usize(2..8), gen_usize(0..10_000)),
+            |&(n, seed)| {
+                let mut rng = Pcg64::seed_from(seed as u64);
+                let g = TopologyGen::full(n, 1.0, 10.0, &mut rng);
+                let hk = held_karp(&g).unwrap().cost;
+                let bf = brute(&g).unwrap();
+                prop_assert(
+                    (hk - bf).abs() < 1e-9,
+                    &format!("held-karp {hk} != brute {bf}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn lower_bounds_algorithm3() {
+        // the exact optimum can never exceed the greedy heuristic
+        check(
+            30,
+            GenPair(gen_usize(2..10), gen_usize(0..10_000)),
+            |&(n, seed)| {
+                let mut rng = Pcg64::seed_from(seed as u64);
+                let g = TopologyGen::full(n, 1.0, 10.0, &mut rng);
+                let hk = held_karp(&g).unwrap().cost;
+                let a3 = algorithm3(&g).unwrap().cost;
+                prop_assert(hk <= a3 + 1e-9, &format!("exact {hk} > greedy {a3}"))
+            },
+        );
+    }
+
+    #[test]
+    fn respects_missing_links() {
+        // star graph has no Hamiltonian path
+        let mut g = CostMatrix::new(4);
+        g.set_sym(0, 1, 1.0);
+        g.set_sym(0, 2, 1.0);
+        g.set_sym(0, 3, 1.0);
+        assert!(held_karp(&g).is_none());
+    }
+
+    #[test]
+    fn path_is_valid_permutation() {
+        let mut rng = Pcg64::seed_from(9);
+        let g = TopologyGen::full(10, 1.0, 5.0, &mut rng);
+        let p = held_karp(&g).unwrap();
+        let mut s = p.order.clone();
+        s.sort();
+        assert_eq!(s, (0..10).collect::<Vec<_>>());
+        assert!((g.path_cost(&p.order) - p.cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trivial_sizes() {
+        assert!(held_karp(&CostMatrix::new(0)).is_none());
+        let p = held_karp(&CostMatrix::new(1)).unwrap();
+        assert_eq!(p.order, vec![0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversize_panics() {
+        held_karp(&CostMatrix::new(MAX_N + 1));
+    }
+}

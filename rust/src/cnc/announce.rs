@@ -1,0 +1,159 @@
+//! CNC **resource information announcement layer**: "downwards it collects
+//! various information from the participating devices or publishes
+//! training strategies; upwards it forwards information about the clients
+//! to the scheduling optimization layer" (paper §II-B).
+//!
+//! Modelled as a typed message bus with an audit log: every resource
+//! report, decision and model broadcast that crosses between CNC layers
+//! goes through here, so tests (and the `--verbose` CLI) can assert the
+//! exact information flow of Fig 3.
+
+use std::collections::VecDeque;
+
+/// Messages the announcement layer routes between CNC layers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Announcement {
+    /// pooling → optimization: fleet resource state refreshed
+    ResourceReport {
+        round: usize,
+        num_clients: usize,
+    },
+    /// optimization → clients: the round's cohort + RB allocation
+    TraditionalDecision {
+        round: usize,
+        cohort: Vec<usize>,
+        rb_of_client: Vec<usize>,
+    },
+    /// optimization → clients: the round's P2P partition + paths
+    P2pDecision {
+        round: usize,
+        parts: Vec<Vec<usize>>,
+    },
+    /// orchestration → clients: global model broadcast (round start /
+    /// final model)
+    ModelBroadcast {
+        round: usize,
+        payload_bytes: usize,
+    },
+    /// clients → orchestration: local updates received back
+    UpdatesCollected {
+        round: usize,
+        count: usize,
+    },
+}
+
+/// The bus: FIFO delivery + a bounded audit log.
+#[derive(Debug)]
+pub struct AnnouncementBus {
+    log: VecDeque<Announcement>,
+    capacity: usize,
+    published: usize,
+}
+
+impl AnnouncementBus {
+    pub fn new(capacity: usize) -> Self {
+        AnnouncementBus {
+            log: VecDeque::new(),
+            capacity: capacity.max(1),
+            published: 0,
+        }
+    }
+
+    /// Route a message (keeps the last `capacity` for inspection).
+    pub fn publish(&mut self, msg: Announcement) {
+        if self.log.len() == self.capacity {
+            self.log.pop_front();
+        }
+        self.log.push_back(msg);
+        self.published += 1;
+    }
+
+    /// Total messages ever published.
+    pub fn published(&self) -> usize {
+        self.published
+    }
+
+    /// The retained audit log, oldest first.
+    pub fn audit(&self) -> impl Iterator<Item = &Announcement> {
+        self.log.iter()
+    }
+
+    /// Messages of the current round (for flow assertions).
+    pub fn round_messages(&self, round: usize) -> Vec<&Announcement> {
+        self.log
+            .iter()
+            .filter(|m| match m {
+                Announcement::ResourceReport { round: r, .. }
+                | Announcement::TraditionalDecision { round: r, .. }
+                | Announcement::P2pDecision { round: r, .. }
+                | Announcement::ModelBroadcast { round: r, .. }
+                | Announcement::UpdatesCollected { round: r, .. } => *r == round,
+            })
+            .collect()
+    }
+}
+
+impl Default for AnnouncementBus {
+    fn default() -> Self {
+        Self::new(4096)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_and_audit_in_order() {
+        let mut bus = AnnouncementBus::new(10);
+        bus.publish(Announcement::ResourceReport {
+            round: 0,
+            num_clients: 100,
+        });
+        bus.publish(Announcement::ModelBroadcast {
+            round: 0,
+            payload_bytes: 1,
+        });
+        let msgs: Vec<_> = bus.audit().collect();
+        assert_eq!(msgs.len(), 2);
+        assert!(matches!(msgs[0], Announcement::ResourceReport { .. }));
+        assert!(matches!(msgs[1], Announcement::ModelBroadcast { .. }));
+        assert_eq!(bus.published(), 2);
+    }
+
+    #[test]
+    fn capacity_bounds_the_log_not_the_count() {
+        let mut bus = AnnouncementBus::new(3);
+        for round in 0..10 {
+            bus.publish(Announcement::UpdatesCollected { round, count: 1 });
+        }
+        assert_eq!(bus.audit().count(), 3);
+        assert_eq!(bus.published(), 10);
+        // oldest retained is round 7
+        assert_eq!(
+            bus.audit().next(),
+            Some(&Announcement::UpdatesCollected { round: 7, count: 1 })
+        );
+    }
+
+    #[test]
+    fn round_filter() {
+        let mut bus = AnnouncementBus::default();
+        bus.publish(Announcement::ResourceReport {
+            round: 1,
+            num_clients: 5,
+        });
+        bus.publish(Announcement::TraditionalDecision {
+            round: 1,
+            cohort: vec![0, 2],
+            rb_of_client: vec![1, 0],
+        });
+        bus.publish(Announcement::ResourceReport {
+            round: 2,
+            num_clients: 5,
+        });
+        assert_eq!(bus.round_messages(1).len(), 2);
+        assert_eq!(bus.round_messages(2).len(), 1);
+        assert!(bus.round_messages(3).is_empty());
+    }
+}

@@ -1,0 +1,143 @@
+//! CNC **infrastructure layer**: the physical devices — client devices and
+//! aggregation servers — registered as node devices of the computing
+//! network (paper §II-B: "the aggregation servers and client devices
+//! involved in federated learning are scheduled and controlled by the
+//! CNC").
+
+use crate::netsim::channel::RadioSite;
+use crate::netsim::compute::ComputePower;
+
+/// Kind of node device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// FL client (holds local data, trains)
+    Client,
+    /// aggregation server cluster (traditional architecture only)
+    AggregationServer,
+}
+
+/// One registered device.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: usize,
+    pub kind: DeviceKind,
+    /// training throughput (clients only)
+    pub power: Option<ComputePower>,
+    /// radio situation w.r.t. the aggregation server (clients only)
+    pub site: Option<RadioSite>,
+    /// |D_i| (clients only)
+    pub data_size: Option<usize>,
+}
+
+/// The device registry: FL participants "register their local devices
+/// through the platform of the CNC".
+#[derive(Debug, Clone, Default)]
+pub struct DeviceRegistry {
+    devices: Vec<Device>,
+}
+
+impl DeviceRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a client device; returns its id.
+    pub fn register_client(
+        &mut self,
+        power: ComputePower,
+        site: RadioSite,
+        data_size: usize,
+    ) -> usize {
+        let id = self.devices.len();
+        self.devices.push(Device {
+            id,
+            kind: DeviceKind::Client,
+            power: Some(power),
+            site: Some(site),
+            data_size: Some(data_size),
+        });
+        id
+    }
+
+    /// Register the aggregation server cluster; returns its id.
+    pub fn register_server(&mut self) -> usize {
+        let id = self.devices.len();
+        self.devices.push(Device {
+            id,
+            kind: DeviceKind::AggregationServer,
+            power: None,
+            site: None,
+            data_size: None,
+        });
+        id
+    }
+
+    pub fn device(&self, id: usize) -> &Device {
+        &self.devices[id]
+    }
+
+    pub fn clients(&self) -> Vec<&Device> {
+        self.devices
+            .iter()
+            .filter(|d| d.kind == DeviceKind::Client)
+            .collect()
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.clients().len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn client() -> (ComputePower, RadioSite) {
+        (
+            ComputePower {
+                samples_per_sec: 150.0,
+            },
+            RadioSite { distance_m: 100.0 },
+        )
+    }
+
+    #[test]
+    fn registration_assigns_sequential_ids() {
+        let mut reg = DeviceRegistry::new();
+        let (p, s) = client();
+        let a = reg.register_client(p.clone(), s.clone(), 600);
+        let b = reg.register_client(p, s, 600);
+        let srv = reg.register_server();
+        assert_eq!((a, b, srv), (0, 1, 2));
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.num_clients(), 2);
+    }
+
+    #[test]
+    fn clients_filter_excludes_servers() {
+        let mut reg = DeviceRegistry::new();
+        reg.register_server();
+        let (p, s) = client();
+        reg.register_client(p, s, 1000);
+        let cs = reg.clients();
+        assert_eq!(cs.len(), 1);
+        assert_eq!(cs[0].data_size, Some(1000));
+        assert_eq!(reg.device(0).kind, DeviceKind::AggregationServer);
+    }
+
+    #[test]
+    fn server_has_no_client_attributes() {
+        let mut reg = DeviceRegistry::new();
+        let id = reg.register_server();
+        let d = reg.device(id);
+        assert!(d.power.is_none() && d.site.is_none() && d.data_size.is_none());
+    }
+}

@@ -1,0 +1,26 @@
+//! The CNC (Computing and Network Convergence) layered architecture of the
+//! paper's Fig 2, one module per layer:
+//!
+//! * `infrastructure` — device registry (clients + aggregation servers)
+//! * `pooling`        — heterogeneous resource modelling (Eq 8, radio)
+//! * `announce`       — resource-information announcement bus
+//! * `optimize`       — scheduling & topological decisions (Alg 1/3, Eq 5–7)
+//! * `orchestrate`    — whole-system assembly & lifecycle (Fig 3)
+//!
+//! (The paper's service and security layers have no simulation-relevant
+//! behaviour; orchestration subsumes them here.)
+
+pub mod announce;
+pub mod infrastructure;
+pub mod optimize;
+pub mod orchestrate;
+pub mod pooling;
+
+pub use announce::{Announcement, AnnouncementBus};
+pub use infrastructure::{Device, DeviceKind, DeviceRegistry};
+pub use optimize::{
+    CohortStrategy, P2pDecision, P2pPart, PartitionStrategy, PathStrategy,
+    RbStrategy, RoundDecision, SchedulingOptimizer,
+};
+pub use orchestrate::CncSystem;
+pub use pooling::ResourcePool;

@@ -1,0 +1,109 @@
+//! CNC **orchestration and management layer**: "has control of the entire
+//! system of the CNC … responsible for orchestrating and scheduling the
+//! various resources used in federated learning, as well as managing the
+//! various devices in the other layers" (paper §II-B).
+//!
+//! `CncSystem` assembles the stack — device registry (infrastructure),
+//! resource pool (pooling), announcement bus, scheduling optimizer — and
+//! is what the coordinators drive round by round (the flow of Fig 3).
+
+use crate::cnc::announce::{Announcement, AnnouncementBus};
+use crate::cnc::infrastructure::DeviceRegistry;
+use crate::cnc::optimize::SchedulingOptimizer;
+use crate::cnc::pooling::ResourcePool;
+use crate::netsim::channel::{draw_sites, ChannelParams};
+use crate::netsim::compute::{draw_powers, PowerProfile};
+use crate::util::rng::Pcg64;
+
+/// The assembled CNC stack for one experiment.
+pub struct CncSystem {
+    pub registry: DeviceRegistry,
+    pub pool: ResourcePool,
+    pub bus: AnnouncementBus,
+    pub optimizer: SchedulingOptimizer,
+}
+
+impl CncSystem {
+    /// Bring up a fleet: draw per-client compute power and radio sites
+    /// from the experiment seed, register everything, model resources.
+    pub fn bootstrap(
+        num_clients: usize,
+        samples_per_client: usize,
+        epoch_local: usize,
+        profile: PowerProfile,
+        channel: ChannelParams,
+        seed: u64,
+    ) -> Self {
+        let root = Pcg64::new(seed, 0xC14C);
+        let powers = draw_powers(profile, num_clients, &mut root.split("powers"));
+        let sites = draw_sites(&channel, num_clients, &mut root.split("sites"));
+        let mut registry = DeviceRegistry::new();
+        for (p, s) in powers.into_iter().zip(sites) {
+            registry.register_client(p, s, samples_per_client);
+        }
+        registry.register_server();
+        let pool = ResourcePool::model(&registry, channel, epoch_local);
+        CncSystem {
+            registry,
+            pool,
+            bus: AnnouncementBus::default(),
+            optimizer: SchedulingOptimizer::new(),
+        }
+    }
+
+    /// Announce the round's refreshed resource report (pooling →
+    /// optimization, Fig 3 step "obtain resource information").
+    pub fn announce_resources(&mut self, round: usize) {
+        self.bus.publish(Announcement::ResourceReport {
+            round,
+            num_clients: self.registry.num_clients(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bootstrap_builds_full_stack() {
+        let sys = CncSystem::bootstrap(
+            20,
+            600,
+            1,
+            PowerProfile::Bimodal,
+            ChannelParams::default(),
+            42,
+        );
+        assert_eq!(sys.registry.num_clients(), 20);
+        assert_eq!(sys.registry.len(), 21); // + aggregation server
+        assert_eq!(sys.pool.fleet.num_clients(), 20);
+        assert_eq!(sys.pool.sites.len(), 20);
+    }
+
+    #[test]
+    fn bootstrap_is_seed_deterministic() {
+        let a = CncSystem::bootstrap(
+            10, 600, 1, PowerProfile::Uniform, ChannelParams::default(), 7,
+        );
+        let b = CncSystem::bootstrap(
+            10, 600, 1, PowerProfile::Uniform, ChannelParams::default(), 7,
+        );
+        assert_eq!(a.pool.fleet.delays_s, b.pool.fleet.delays_s);
+        let c = CncSystem::bootstrap(
+            10, 600, 1, PowerProfile::Uniform, ChannelParams::default(), 8,
+        );
+        assert_ne!(a.pool.fleet.delays_s, c.pool.fleet.delays_s);
+    }
+
+    #[test]
+    fn resource_announcements_flow_through_the_bus() {
+        let mut sys = CncSystem::bootstrap(
+            5, 600, 1, PowerProfile::Homogeneous, ChannelParams::default(), 0,
+        );
+        sys.announce_resources(0);
+        sys.announce_resources(1);
+        assert_eq!(sys.bus.published(), 2);
+        assert_eq!(sys.bus.round_messages(1).len(), 1);
+    }
+}

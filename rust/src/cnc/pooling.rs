@@ -1,0 +1,138 @@
+//! CNC **resource pooling layer**: "equipment in the resource pooling
+//! layer model the network resources, computing power resources, etc. of
+//! the underlying devices" (paper §II-B).
+//!
+//! It turns the raw device registry into the modelled views the
+//! scheduling-optimization layer consumes: the fleet's per-client delays
+//! (Eq 8) and the per-round radio cost matrices (Eq 2–4).
+
+use crate::cnc::infrastructure::DeviceRegistry;
+use crate::netsim::channel::{ChannelParams, RadioSite};
+use crate::netsim::rb::{build_cost_matrices, RbCostMatrices, RbPool};
+use crate::scheduler::power::FleetInfo;
+use crate::util::rng::Pcg64;
+
+/// The pooled, modelled resource state of the fleet.
+#[derive(Debug, Clone)]
+pub struct ResourcePool {
+    pub fleet: FleetInfo,
+    pub sites: Vec<RadioSite>,
+    pub channel: ChannelParams,
+}
+
+impl ResourcePool {
+    /// Model the registry's heterogeneous resources (Eq 8 delays etc.).
+    pub fn model(
+        registry: &DeviceRegistry,
+        channel: ChannelParams,
+        epoch_local: usize,
+    ) -> Self {
+        let clients = registry.clients();
+        let powers: Vec<_> = clients
+            .iter()
+            .map(|d| d.power.clone().expect("client without power"))
+            .collect();
+        let sizes: Vec<_> = clients
+            .iter()
+            .map(|d| d.data_size.expect("client without data size"))
+            .collect();
+        let sites: Vec<_> = clients
+            .iter()
+            .map(|d| d.site.clone().expect("client without site"))
+            .collect();
+        ResourcePool {
+            fleet: FleetInfo::new(&powers, &sizes, epoch_local),
+            sites,
+            channel,
+        }
+    }
+
+    /// One round's radio modelling: draw the RB pool and build the
+    /// client×RB consumption matrices for the given cohort.
+    pub fn round_radio_model(
+        &self,
+        cohort: &[usize],
+        n_rb: usize,
+        round_rng: &Pcg64,
+    ) -> (RbPool, RbCostMatrices) {
+        let pool = RbPool::draw(&self.channel, n_rb, &mut round_rng.split("rb-pool"));
+        let costs = build_cost_matrices(
+            &self.channel,
+            &self.sites,
+            cohort,
+            &pool,
+            &round_rng.split("rb-costs"),
+        );
+        (pool, costs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::compute::ComputePower;
+
+    fn registry(n: usize) -> DeviceRegistry {
+        let mut reg = DeviceRegistry::new();
+        for i in 0..n {
+            reg.register_client(
+                ComputePower {
+                    samples_per_sec: 100.0 + i as f64 * 25.0,
+                },
+                RadioSite {
+                    distance_m: 50.0 + i as f64 * 40.0,
+                },
+                600,
+            );
+        }
+        reg.register_server();
+        reg
+    }
+
+    #[test]
+    fn models_only_clients() {
+        let reg = registry(5);
+        let mut ch = ChannelParams::default();
+        ch.fading_samples = 8;
+        let pool = ResourcePool::model(&reg, ch, 1);
+        assert_eq!(pool.fleet.num_clients(), 5);
+        assert_eq!(pool.sites.len(), 5);
+        // Eq 8: first client 600/100 = 6 s
+        assert!((pool.fleet.delays_s[0] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn epoch_local_scales_delays() {
+        let reg = registry(3);
+        let p1 = ResourcePool::model(&reg, ChannelParams::default(), 1);
+        let p5 = ResourcePool::model(&reg, ChannelParams::default(), 5);
+        for (a, b) in p1.fleet.delays_s.iter().zip(&p5.fleet.delays_s) {
+            assert!((b - 5.0 * a).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn round_radio_model_shapes() {
+        let reg = registry(6);
+        let mut ch = ChannelParams::default();
+        ch.fading_samples = 4;
+        let pool = ResourcePool::model(&reg, ch, 1);
+        let rng = Pcg64::seed_from(0);
+        let (rb, costs) = pool.round_radio_model(&[1, 3, 5], 4, &rng);
+        assert_eq!(rb.len(), 4);
+        assert_eq!(costs.n_clients, 3);
+        assert_eq!(costs.n_rb, 4);
+    }
+
+    #[test]
+    fn radio_model_deterministic_per_round_rng() {
+        let reg = registry(4);
+        let mut ch = ChannelParams::default();
+        ch.fading_samples = 4;
+        let pool = ResourcePool::model(&reg, ch, 1);
+        let rng = Pcg64::seed_from(7);
+        let (_, a) = pool.round_radio_model(&[0, 1], 3, &rng);
+        let (_, b) = pool.round_radio_model(&[0, 1], 3, &rng);
+        assert_eq!(a.energy_j, b.energy_j);
+    }
+}

@@ -1,0 +1,16 @@
+//! Federated-learning coordinators: the traditional (server-aggregated)
+//! round loop with CNC optimizations, the peer-to-peer chain loop
+//! (Algorithm 2), and the `Trainer` backend abstraction over the PJRT
+//! artifacts.
+//!
+//! The FedAvg [5] baseline is the same coordinators run with
+//! `CohortStrategy::Uniform` + `RbStrategy::Random` (traditional) or
+//! `PartitionStrategy::RandomSubset`/`All` (P2P) — see `exp::presets`.
+
+pub mod p2p;
+pub mod traditional;
+pub mod trainer;
+
+pub use p2p::P2pConfig;
+pub use traditional::TraditionalConfig;
+pub use trainer::{MockTrainer, PjrtTrainer, Trainer};

@@ -1,0 +1,291 @@
+//! Peer-to-peer-architecture coordinator — the paper's **Algorithm 2**.
+//!
+//! Each global round:
+//! 1. the CNC divides the fleet into E parts S_te with similar summed
+//!    local-training delay (line 3 — `PartitionStrategy`);
+//! 2. Algorithm 3 (or TSP / random, per strategy) picks each part's
+//!    transmission path over the consumption matrix G_e (line 4);
+//! 3. the model travels each chain: every client receives the running
+//!    sub-model, trains one pass over its local data (lines 6–19), and
+//!    forwards it — chains run in parallel with each other, serially
+//!    within;
+//! 4. the E sub-models are merged by the data-weighted average
+//!    w = Σ_e (N_te / ΣN) · w_Ste (line 20) and evaluated.
+//!
+//! Transmission costs are the relative `cost_{i,j}` units of the paper's
+//! designed matrices (Eq 7): each part contributes its path cost; the
+//! round's transmission delay is the max over parallel chains, energy the
+//! sum.
+
+use anyhow::Result;
+
+use crate::cnc::announce::Announcement;
+use crate::cnc::optimize::{PartitionStrategy, PathStrategy};
+use crate::cnc::CncSystem;
+use crate::coordinator::trainer::Trainer;
+use crate::metrics::{RoundRecord, RunHistory};
+use crate::model::params::{weighted_average, ModelParams};
+use crate::netsim::topology::CostMatrix;
+use crate::util::rng::Pcg64;
+
+/// P2P run settings.
+#[derive(Debug, Clone)]
+pub struct P2pConfig {
+    pub rounds: usize,
+    pub partition_strategy: PartitionStrategy,
+    pub path_strategy: PathStrategy,
+    /// local epochs per client visit (the paper uses one pass)
+    pub epoch_local: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for P2pConfig {
+    fn default() -> Self {
+        P2pConfig {
+            rounds: 30,
+            partition_strategy: PartitionStrategy::BalancedDelay { e: 4 },
+            path_strategy: PathStrategy::Greedy,
+            epoch_local: 1,
+            eval_every: 1,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// Run the full P2P training over topology `g`; returns the history only.
+/// Use [`run_with_model`] to also get the final global model.
+pub fn run(
+    sys: &mut CncSystem,
+    trainer: &mut dyn Trainer,
+    g: &CostMatrix,
+    cfg: &P2pConfig,
+    label: &str,
+) -> Result<RunHistory> {
+    Ok(run_with_model(sys, trainer, g, cfg, label)?.0)
+}
+
+/// Run the full P2P training, returning the history and the final model.
+pub fn run_with_model(
+    sys: &mut CncSystem,
+    trainer: &mut dyn Trainer,
+    g: &CostMatrix,
+    cfg: &P2pConfig,
+    label: &str,
+) -> Result<(RunHistory, ModelParams)> {
+    let mut history = RunHistory::new(label);
+    let mut global = trainer.init_params()?;
+
+    for round in 0..cfg.rounds {
+        let round_rng = Pcg64::new(cfg.seed, 0x9292).split(&format!("round/{round}"));
+
+        sys.announce_resources(round);
+        let decision = sys.optimizer.decide_p2p(
+            &sys.pool,
+            g,
+            &cfg.partition_strategy,
+            cfg.path_strategy,
+            &round_rng,
+        )?;
+        sys.bus.publish(Announcement::P2pDecision {
+            round,
+            parts: decision.parts.iter().map(|p| p.order.clone()).collect(),
+        });
+
+        // chain training: serial along each path; chains independent
+        let t0 = std::time::Instant::now();
+        let mut sub_models: Vec<(ModelParams, usize)> =
+            Vec::with_capacity(decision.parts.len());
+        let mut loss_sum = 0.0f64;
+        let mut trained = 0usize;
+        for part in &decision.parts {
+            let mut w = global.clone(); // first client receives w from CNC
+            let mut n_te = 0usize;
+            for &client in &part.order {
+                let (next, loss) =
+                    trainer.local_train(client, &w, cfg.epoch_local, round)?;
+                w = next;
+                loss_sum += loss as f64;
+                trained += 1;
+                n_te += trainer.data_size(client);
+            }
+            sub_models.push((w, n_te));
+        }
+        let compute_wall_s = t0.elapsed().as_secs_f64();
+        sys.bus.publish(Announcement::UpdatesCollected {
+            round,
+            count: sub_models.len(),
+        });
+
+        // line 20: weighted merge of the E sub-models
+        global = weighted_average(&sub_models)?;
+
+        let accuracy = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            trainer.evaluate(&global)?
+        } else {
+            history.final_accuracy()
+        };
+
+        // per-part chain delays (serial within a part) + path costs
+        let local_delays_s: Vec<f64> = decision
+            .parts
+            .iter()
+            .map(|p| p.local_delay_sum_s * cfg.epoch_local as f64)
+            .collect();
+        let tx_costs: Vec<f64> =
+            decision.parts.iter().map(|p| p.path_cost).collect();
+
+        let rec = RoundRecord {
+            round,
+            accuracy,
+            train_loss: loss_sum / trained.max(1) as f64,
+            local_delays_s,
+            tx_delays_s: tx_costs.clone(),
+            tx_energies_j: tx_costs,
+            compute_wall_s,
+            dropouts: 0,
+        };
+        if cfg.verbose {
+            eprintln!(
+                "[{label}] round {round:>4}  acc {accuracy:.4}  loss {:.4}  \
+                 chain_delay_max {:.2}s  path_cost_sum {:.2}",
+                rec.train_loss,
+                rec.local_delay_round_s(),
+                rec.tx_energy_round_j(),
+            );
+        }
+        history.push(rec);
+    }
+    Ok((history, global))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::MockTrainer;
+    use crate::netsim::channel::ChannelParams;
+    use crate::netsim::compute::PowerProfile;
+    use crate::netsim::topology::TopologyGen;
+    use crate::util::stats;
+
+    fn sys(n: usize, seed: u64) -> CncSystem {
+        let mut ch = ChannelParams::default();
+        ch.fading_samples = 4;
+        CncSystem::bootstrap(n, 3000, 1, PowerProfile::Bimodal, ch, seed)
+    }
+
+    fn topo(n: usize, seed: u64) -> CostMatrix {
+        let mut rng = Pcg64::seed_from(seed);
+        TopologyGen::full(n, 1.0, 10.0, &mut rng)
+    }
+
+    #[test]
+    fn p2p_trains_every_client_once_per_round() {
+        let mut s = sys(20, 0);
+        let g = topo(20, 1);
+        let mut t = MockTrainer::new(20, 3000);
+        let cfg = P2pConfig {
+            rounds: 4,
+            partition_strategy: PartitionStrategy::BalancedDelay { e: 4 },
+            ..Default::default()
+        };
+        let h = run(&mut s, &mut t, &g, &cfg, "p2p").unwrap();
+        assert_eq!(h.rounds.len(), 4);
+        assert_eq!(t.calls, 4 * 20);
+    }
+
+    #[test]
+    fn accuracy_improves_with_mock() {
+        let mut s = sys(12, 1);
+        let g = topo(12, 2);
+        let mut t = MockTrainer::new(12, 3000);
+        let cfg = P2pConfig {
+            rounds: 5,
+            partition_strategy: PartitionStrategy::BalancedDelay { e: 2 },
+            ..Default::default()
+        };
+        let h = run(&mut s, &mut t, &g, &cfg, "p2p").unwrap();
+        let acc = h.accuracies();
+        assert!(acc.last().unwrap() > acc.first().unwrap());
+    }
+
+    #[test]
+    fn more_parts_cut_the_straggler_chain_delay() {
+        // E=4 chains in parallel must beat E=1 serial chain on round delay
+        let g = topo(20, 3);
+        let mk = |e| {
+            let mut s = sys(20, 4);
+            let mut t = MockTrainer::new(20, 3000);
+            let cfg = P2pConfig {
+                rounds: 3,
+                partition_strategy: PartitionStrategy::BalancedDelay { e },
+                ..Default::default()
+            };
+            run(&mut s, &mut t, &g, &cfg, "e").unwrap()
+        };
+        let h4 = mk(4);
+        let h1 = mk(1);
+        let d4 = stats::mean(&h4.series(crate::metrics::Metric::LocalDelayRound));
+        let d1 = stats::mean(&h1.series(crate::metrics::Metric::LocalDelayRound));
+        assert!(d4 < 0.5 * d1, "E=4 {d4} not ≪ E=1 {d1}");
+    }
+
+    #[test]
+    fn tsp_path_cost_not_worse_than_greedy() {
+        let g = topo(8, 5);
+        let mk = |ps| {
+            let mut s = sys(8, 6);
+            let mut t = MockTrainer::new(8, 3000);
+            let cfg = P2pConfig {
+                rounds: 2,
+                partition_strategy: PartitionStrategy::All,
+                path_strategy: ps,
+                ..Default::default()
+            };
+            run(&mut s, &mut t, &g, &cfg, "x").unwrap()
+        };
+        let ht = mk(PathStrategy::ExactTsp);
+        let hg = mk(PathStrategy::Greedy);
+        assert!(
+            ht.rounds[0].tx_energy_round_j() <= hg.rounds[0].tx_energy_round_j() + 1e-9
+        );
+    }
+
+    #[test]
+    fn random_subset_trains_fewer_clients() {
+        let mut s = sys(20, 7);
+        let g = topo(20, 8);
+        let mut t = MockTrainer::new(20, 3000);
+        let cfg = P2pConfig {
+            rounds: 3,
+            partition_strategy: PartitionStrategy::RandomSubset { n: 15 },
+            ..Default::default()
+        };
+        run(&mut s, &mut t, &g, &cfg, "rs").unwrap();
+        assert_eq!(t.calls, 3 * 15);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = topo(10, 9);
+        let mk = || {
+            let mut s = sys(10, 10);
+            let mut t = MockTrainer::new(10, 3000);
+            let cfg = P2pConfig {
+                rounds: 3,
+                partition_strategy: PartitionStrategy::BalancedDelay { e: 2 },
+                seed: 5,
+                ..Default::default()
+            };
+            run(&mut s, &mut t, &g, &cfg, "det").unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.accuracy, y.accuracy);
+            assert_eq!(x.tx_energies_j, y.tx_energies_j);
+        }
+    }
+}

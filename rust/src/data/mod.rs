@@ -1,0 +1,10 @@
+//! Data substrate: synthetic MNIST-like generation (DESIGN.md §2
+//! substitution), IID/Non-IID fleet partitioning and batch layout for the
+//! AOT artifact signatures.
+
+pub mod batch;
+pub mod partition;
+pub mod synth;
+
+pub use partition::{Partition, Split};
+pub use synth::{Dataset, Prototypes, SynthSpec};

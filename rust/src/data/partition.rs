@@ -1,0 +1,180 @@
+//! Fleet data partitioning: equal split across clients, IID or Non-IID.
+//!
+//! The paper: "We cut the datasets equally based on the total number of
+//! clients" — every client gets `60000 / num_clients` samples. IID means
+//! each client draws from all 10 classes; Non-IID uses the classic
+//! label-shard construction of FedAvg [5]: sort by label, split into
+//! `2 · num_clients` shards, give each client 2 shards → each client sees
+//! at most 2 classes.
+
+use crate::data::synth::{self, Dataset, Prototypes, SynthSpec};
+use crate::util::rng::Pcg64;
+
+/// IID vs Non-IID split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Iid,
+    NonIid,
+}
+
+impl std::str::FromStr for Split {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "iid" => Ok(Split::Iid),
+            "non-iid" | "noniid" => Ok(Split::NonIid),
+            other => anyhow::bail!("unknown split `{other}` (iid|non-iid)"),
+        }
+    }
+}
+
+/// The fleet's data plan: per-client sample count and label pools.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub num_clients: usize,
+    pub samples_per_client: usize,
+    pub split: Split,
+    /// label pool per client (all classes for IID, 2 shard labels Non-IID)
+    label_pools: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Build the plan. `seed` drives the shard shuffle for Non-IID.
+    pub fn new(num_clients: usize, split: Split, seed: u64) -> Self {
+        assert!(num_clients > 0);
+        let samples_per_client = synth::TRAIN_TOTAL / num_clients;
+        let label_pools = match split {
+            Split::Iid => {
+                let all: Vec<usize> = (0..synth::NUM_CLASSES).collect();
+                vec![all; num_clients]
+            }
+            Split::NonIid => {
+                // 2·num_clients shards; shard s carries label
+                // s % NUM_CLASSES (equal shard counts per label), shuffled
+                // deterministically and dealt 2 per client.
+                let mut shards: Vec<usize> = (0..2 * num_clients)
+                    .map(|s| s % synth::NUM_CLASSES)
+                    .collect();
+                let mut rng = Pcg64::new(seed, 0x5A4D);
+                rng.shuffle(&mut shards);
+                (0..num_clients)
+                    .map(|i| {
+                        let mut pool = vec![shards[2 * i], shards[2 * i + 1]];
+                        pool.sort();
+                        pool.dedup();
+                        pool
+                    })
+                    .collect()
+            }
+        };
+        Partition {
+            num_clients,
+            samples_per_client,
+            split,
+            label_pools,
+        }
+    }
+
+    pub fn labels_for(&self, client: usize) -> &[usize] {
+        &self.label_pools[client]
+    }
+
+    /// Materialise one client's local dataset D_i.
+    pub fn client_data(
+        &self,
+        protos: &Prototypes,
+        spec: &SynthSpec,
+        client: usize,
+    ) -> Dataset {
+        synth::gen_dataset(
+            protos,
+            spec,
+            &format!("client/{client}"),
+            self.samples_per_client,
+            &self.label_pools[client],
+        )
+    }
+
+    /// |D_i| for every client — the paper's equal cut makes this constant,
+    /// but the scheduling algorithms take the general vector.
+    pub fn data_sizes(&self) -> Vec<usize> {
+        vec![self.samples_per_client; self.num_clients]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_cut_sizes() {
+        let p = Partition::new(100, Split::Iid, 0);
+        assert_eq!(p.samples_per_client, 600);
+        let p = Partition::new(60, Split::Iid, 0);
+        assert_eq!(p.samples_per_client, 1000);
+        assert_eq!(p.data_sizes(), vec![1000; 60]);
+    }
+
+    #[test]
+    fn iid_pools_have_all_classes() {
+        let p = Partition::new(10, Split::Iid, 0);
+        for c in 0..10 {
+            assert_eq!(p.labels_for(c).len(), synth::NUM_CLASSES);
+        }
+    }
+
+    #[test]
+    fn non_iid_pools_have_at_most_two_classes() {
+        let p = Partition::new(100, Split::NonIid, 1);
+        for c in 0..100 {
+            let pool = p.labels_for(c);
+            assert!((1..=2).contains(&pool.len()), "client {c}: {pool:?}");
+            assert!(pool.iter().all(|&l| l < synth::NUM_CLASSES));
+        }
+    }
+
+    #[test]
+    fn non_iid_shards_cover_all_labels_evenly() {
+        let p = Partition::new(100, Split::NonIid, 1);
+        let mut shard_count = vec![0usize; synth::NUM_CLASSES];
+        for c in 0..100 {
+            for &l in p.labels_for(c) {
+                shard_count[l] += 1;
+            }
+        }
+        // each label owns 20 of the 200 shards; dedup within a client can
+        // only merge identical labels, so counts stay in [10, 20]
+        for (l, &n) in shard_count.iter().enumerate() {
+            assert!((10..=20).contains(&n), "label {l}: {n}");
+        }
+    }
+
+    #[test]
+    fn non_iid_is_seed_deterministic() {
+        let a = Partition::new(20, Split::NonIid, 7);
+        let b = Partition::new(20, Split::NonIid, 7);
+        let c = Partition::new(20, Split::NonIid, 8);
+        for i in 0..20 {
+            assert_eq!(a.labels_for(i), b.labels_for(i));
+        }
+        assert!((0..20).any(|i| a.labels_for(i) != c.labels_for(i)));
+    }
+
+    #[test]
+    fn client_data_respects_pool_and_size() {
+        let spec = SynthSpec::default();
+        let protos = Prototypes::build(&spec);
+        let p = Partition::new(100, Split::NonIid, 3);
+        let d = p.client_data(&protos, &spec, 17);
+        assert_eq!(d.n, 600);
+        let pool = p.labels_for(17);
+        assert!(d.y.iter().all(|&y| pool.contains(&(y as usize))));
+    }
+
+    #[test]
+    fn split_parses() {
+        assert_eq!("iid".parse::<Split>().unwrap(), Split::Iid);
+        assert_eq!("non-iid".parse::<Split>().unwrap(), Split::NonIid);
+        assert!("x".parse::<Split>().is_err());
+    }
+}

@@ -1,0 +1,389 @@
+//! Figure runners for the traditional architecture: Fig 4–8 of the paper.
+//!
+//! Each runner executes the needed training runs and writes CSV series
+//! whose columns mirror the paper figure's axes into `--out` (default
+//! `results/`). Absolute numbers differ from the paper (synthetic data,
+//! simulated channel — see DESIGN.md §2); the *comparisons* are what is
+//! reproduced.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::traditional;
+use crate::data::Split;
+use crate::exp::presets::{
+    self, bootstrap_case, case, traditional_config, Backend, Case, Method,
+};
+use crate::metrics::{Metric, RunHistory};
+use crate::util::csv::CsvTable;
+use crate::util::stats;
+
+thread_local! {
+    /// In-process memo for traditional runs: several figures share the
+    /// same (case, method, split, rounds, seed, backend) training — e.g.
+    /// fig5 re-reads fig4's CNC runs, fig7 re-reads fig6's pairs. A full
+    /// PJRT run costs tens of seconds, so `cnc-fl all` would otherwise
+    /// pay ~2× for identical work. Keyed per thread because runs are
+    /// deterministic in the key.
+    static RUN_CACHE: RefCell<HashMap<String, RunHistory>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Shared figure-runner options.
+pub struct FigOpts {
+    /// override each case's global_rounds (paper-scale runs take hours of
+    /// simulated training; figures default to a shorter horizon)
+    pub rounds: Option<usize>,
+    pub backend: Backend,
+    pub seed: u64,
+    pub out_dir: PathBuf,
+    pub verbose: bool,
+}
+
+impl FigOpts {
+    pub fn quick(out_dir: &Path) -> Self {
+        FigOpts {
+            rounds: Some(40),
+            backend: Backend::Mock,
+            seed: 0,
+            out_dir: out_dir.to_path_buf(),
+            verbose: false,
+        }
+    }
+}
+
+/// Run one (case, method, split) traditional training (memoized per
+/// process — see RUN_CACHE).
+pub fn run_traditional(
+    c: &Case,
+    method: Method,
+    split: Split,
+    opts: &FigOpts,
+) -> Result<RunHistory> {
+    let backend_tag = match opts.backend {
+        Backend::Pjrt => "pjrt",
+        Backend::Mock => "mock",
+    };
+    let key = format!(
+        "{}/{}/{}/{:?}/{}/{}",
+        c.name,
+        method.label(),
+        split_tag(split),
+        opts.rounds,
+        opts.seed,
+        backend_tag
+    );
+    if let Some(h) = RUN_CACHE.with(|c| c.borrow().get(&key).cloned()) {
+        return Ok(h);
+    }
+    let mut cfg = traditional_config(c, method, opts.rounds, opts.seed);
+    cfg.verbose = opts.verbose;
+    let mut sys = bootstrap_case(c, opts.seed);
+    let mut trainer = presets::make_trainer(&opts.backend, c, split, opts.seed)?;
+    let label = format!("{}/{}/{}", c.name, method.label(), split_tag(split));
+    let h = traditional::run(&mut sys, trainer.as_mut(), &cfg, &label)?;
+    RUN_CACHE.with(|c| c.borrow_mut().insert(key, h.clone()));
+    Ok(h)
+}
+
+pub fn split_tag(s: Split) -> &'static str {
+    match s {
+        Split::Iid => "iid",
+        Split::NonIid => "noniid",
+    }
+}
+
+/// Fig 4: CNC global-model accuracy vs rounds for the Table 2 cases,
+/// IID and Non-IID. Writes `fig4_<split>.csv` with one accuracy column
+/// per case.
+pub fn fig4(opts: &FigOpts, cases: &[&str]) -> Result<Vec<PathBuf>> {
+    let mut written = Vec::new();
+    for split in [Split::Iid, Split::NonIid] {
+        let mut histories = Vec::new();
+        for name in cases {
+            let c = case(name)?;
+            histories.push((c.name, run_traditional(&c, Method::Cnc, split, opts)?));
+        }
+        let rounds = histories.iter().map(|(_, h)| h.rounds.len()).min().unwrap_or(0);
+        let mut header = vec!["round".to_string()];
+        header.extend(histories.iter().map(|(n, _)| format!("acc_{n}")));
+        let mut t = CsvTable::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for r in 0..rounds {
+            let mut row = vec![r as f64];
+            row.extend(histories.iter().map(|(_, h)| h.rounds[r].accuracy));
+            t.push_f64(&row);
+        }
+        let path = opts.out_dir.join(format!("fig4_{}.csv", split_tag(split)));
+        t.write_to(&path)?;
+        written.push(path);
+    }
+    Ok(written)
+}
+
+/// Fig 5: the CNC runs' communication metrics vs rounds, one file per
+/// split: per-round and cumulative local delay / tx delay / tx energy per
+/// case.
+pub fn fig5(opts: &FigOpts, cases: &[&str]) -> Result<Vec<PathBuf>> {
+    let mut written = Vec::new();
+    for split in [Split::Iid, Split::NonIid] {
+        for name in cases {
+            let c = case(name)?;
+            let h = run_traditional(&c, Method::Cnc, split, opts)?;
+            let path = opts
+                .out_dir
+                .join(format!("fig5_{}_{}.csv", split_tag(split), c.name));
+            h.write_csv(&path)?;
+            written.push(path);
+        }
+    }
+    Ok(written)
+}
+
+/// Fig 6: CNC vs FedAvg per-round communication metrics (Pr1–Pr3, IID).
+/// Writes `fig6_<case>.csv` with paired columns.
+pub fn fig6(opts: &FigOpts, cases: &[&str]) -> Result<Vec<PathBuf>> {
+    let mut written = Vec::new();
+    for name in cases {
+        let c = case(name)?;
+        let h_cnc = run_traditional(&c, Method::Cnc, Split::Iid, opts)?;
+        let h_avg = run_traditional(&c, Method::FedAvg, Split::Iid, opts)?;
+        let rounds = h_cnc.rounds.len().min(h_avg.rounds.len());
+        let mut t = CsvTable::new(&[
+            "round",
+            "cnc_local_delay_s",
+            "fedavg_local_delay_s",
+            "cnc_tx_delay_s",
+            "fedavg_tx_delay_s",
+            "cnc_tx_energy_j",
+            "fedavg_tx_energy_j",
+        ]);
+        for r in 0..rounds {
+            t.push_f64(&[
+                r as f64,
+                h_cnc.rounds[r].local_delay_round_s(),
+                h_avg.rounds[r].local_delay_round_s(),
+                h_cnc.rounds[r].tx_delay_round_s(),
+                h_avg.rounds[r].tx_delay_round_s(),
+                h_cnc.rounds[r].tx_energy_round_j(),
+                h_avg.rounds[r].tx_energy_round_j(),
+            ]);
+        }
+        let path = opts.out_dir.join(format!("fig6_{}.csv", c.name));
+        t.write_to(&path)?;
+        written.push(path);
+    }
+    Ok(written)
+}
+
+/// Fig 7: accuracy vs cumulative consumption, CNC vs FedAvg, both splits.
+/// One file per (split, metric): columns are interleaved
+/// (cum_metric, acc) pairs per case/method curve.
+pub fn fig7(opts: &FigOpts, cases: &[&str]) -> Result<Vec<PathBuf>> {
+    let metrics = [
+        ("energy", Metric::TxEnergyRound),
+        ("txdelay", Metric::TxDelayRound),
+        ("localdelay", Metric::LocalDelayRound),
+    ];
+    let mut written = Vec::new();
+    for split in [Split::Iid, Split::NonIid] {
+        // run each (case, method) once, reuse across the three metrics
+        let mut runs = Vec::new();
+        for name in cases {
+            let c = case(name)?;
+            for method in [Method::Cnc, Method::FedAvg] {
+                let h = run_traditional(&c, method, split, opts)?;
+                runs.push((format!("{}_{}", c.name, method.label()), h));
+            }
+        }
+        for (mname, metric) in metrics {
+            let mut header = vec!["round".to_string()];
+            for (tag, _) in &runs {
+                header.push(format!("cum_{mname}_{tag}"));
+                header.push(format!("acc_{tag}"));
+            }
+            let rounds = runs.iter().map(|(_, h)| h.rounds.len()).min().unwrap_or(0);
+            let mut t =
+                CsvTable::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+            let cums: Vec<Vec<f64>> =
+                runs.iter().map(|(_, h)| h.cumulative(metric)).collect();
+            for r in 0..rounds {
+                let mut row = vec![r as f64];
+                for (i, (_, h)) in runs.iter().enumerate() {
+                    row.push(cums[i][r]);
+                    row.push(h.rounds[r].accuracy);
+                }
+                t.push_f64(&row);
+            }
+            let path = opts
+                .out_dir
+                .join(format!("fig7_{}_{}.csv", split_tag(split), mname));
+            t.write_to(&path)?;
+            written.push(path);
+        }
+    }
+    Ok(written)
+}
+
+/// Fig 8: box-plot statistics of the per-round local-training delay
+/// differences (Pr1): CNC vs FedAvg. Writes the raw per-round samples and
+/// a five-number-summary file.
+pub fn fig8(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    let c = case("Pr1")?;
+    let h_cnc = run_traditional(&c, Method::Cnc, Split::Iid, opts)?;
+    let h_avg = run_traditional(&c, Method::FedAvg, Split::Iid, opts)?;
+    let d_cnc = h_cnc.delay_diffs();
+    let d_avg = h_avg.delay_diffs();
+
+    let mut samples = CsvTable::new(&["round", "cnc_delay_diff_s", "fedavg_delay_diff_s"]);
+    for r in 0..d_cnc.len().min(d_avg.len()) {
+        samples.push_f64(&[r as f64, d_cnc[r], d_avg[r]]);
+    }
+    let p1 = opts.out_dir.join("fig8_samples.csv");
+    samples.write_to(&p1)?;
+
+    let mut summary = CsvTable::new(&[
+        "method", "q1", "median", "q3", "whisker_lo", "whisker_hi", "mean",
+        "outliers",
+    ]);
+    for (name, d) in [("cnc", &d_cnc), ("fedavg", &d_avg)] {
+        let b = stats::box_stats(d);
+        summary.push_raw(vec![
+            name.to_string(),
+            format!("{:.6}", b.q1),
+            format!("{:.6}", b.median),
+            format!("{:.6}", b.q3),
+            format!("{:.6}", b.whisker_lo),
+            format!("{:.6}", b.whisker_hi),
+            format!("{:.6}", b.mean),
+            format!("{}", b.outliers.len()),
+        ]);
+    }
+    let p2 = opts.out_dir.join("fig8_boxstats.csv");
+    summary.write_to(&p2)?;
+    Ok(vec![p1, p2])
+}
+
+/// Headline-claims summary (paper §I-C contribution 3/4): delay-diff
+/// ratio, tx-latency and energy reductions vs FedAvg under Pr1.
+pub fn headline_summary(opts: &FigOpts) -> Result<CsvTable> {
+    let c = case("Pr1")?;
+    let h_cnc = run_traditional(&c, Method::Cnc, Split::Iid, opts)?;
+    let h_avg = run_traditional(&c, Method::FedAvg, Split::Iid, opts)?;
+    let mean = |v: &[f64]| stats::mean(v);
+    let diff_ratio = mean(&h_cnc.delay_diffs()) / mean(&h_avg.delay_diffs());
+    let max_ratio =
+        stats::max(&h_cnc.delay_diffs()) / stats::max(&h_avg.delay_diffs());
+    let tx_ratio = mean(&h_cnc.series(Metric::TxDelayRound))
+        / mean(&h_avg.series(Metric::TxDelayRound));
+    let e_ratio = mean(&h_cnc.series(Metric::TxEnergyRound))
+        / mean(&h_avg.series(Metric::TxEnergyRound));
+    let mut t = CsvTable::new(&["claim", "paper", "measured"]);
+    t.push_raw(vec![
+        "mean delay-diff ratio (cnc/fedavg)".into(),
+        "0.20".into(),
+        format!("{diff_ratio:.3}"),
+    ]);
+    t.push_raw(vec![
+        "max delay-diff ratio".into(),
+        "0.466".into(),
+        format!("{max_ratio:.3}"),
+    ]);
+    t.push_raw(vec![
+        "tx latency ratio".into(),
+        "0.531".into(),
+        format!("{tx_ratio:.3}"),
+    ]);
+    t.push_raw(vec![
+        "tx energy ratio".into(),
+        "0.806".into(),
+        format!("{e_ratio:.3}"),
+    ]);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(dir: &str) -> (FigOpts, PathBuf) {
+        let out = std::env::temp_dir().join(format!("cnc_fl_figs_{dir}"));
+        let _ = std::fs::remove_dir_all(&out);
+        let mut o = FigOpts::quick(&out);
+        o.rounds = Some(8);
+        (o, out)
+    }
+
+    #[test]
+    fn run_cache_returns_identical_history() {
+        let (o, out) = opts("cache");
+        let c = case("Pr1").unwrap();
+        let a = run_traditional(&c, Method::Cnc, Split::Iid, &o).unwrap();
+        let b = run_traditional(&c, Method::Cnc, Split::Iid, &o).unwrap();
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.accuracy, y.accuracy);
+            assert_eq!(x.tx_energies_j, y.tx_energies_j);
+        }
+        let _ = std::fs::remove_dir_all(out);
+    }
+
+    #[test]
+    fn fig4_writes_both_splits() {
+        let (o, out) = opts("f4");
+        let files = fig4(&o, &["Pr1", "Pr5"]).unwrap();
+        assert_eq!(files.len(), 2);
+        let text = std::fs::read_to_string(&files[0]).unwrap();
+        assert!(text.starts_with("round,acc_Pr1,acc_Pr5"));
+        assert_eq!(text.lines().count(), 9); // header + 8 rounds
+        let _ = std::fs::remove_dir_all(out);
+    }
+
+    #[test]
+    fn fig6_pairs_methods() {
+        let (o, out) = opts("f6");
+        let files = fig6(&o, &["Pr1"]).unwrap();
+        let text = std::fs::read_to_string(&files[0]).unwrap();
+        assert!(text.contains("cnc_tx_energy_j"));
+        assert!(text.contains("fedavg_tx_energy_j"));
+        let _ = std::fs::remove_dir_all(out);
+    }
+
+    #[test]
+    fn fig7_emits_six_files() {
+        let (o, out) = opts("f7");
+        let files = fig7(&o, &["Pr1"]).unwrap();
+        assert_eq!(files.len(), 6); // 2 splits × 3 metrics
+        let _ = std::fs::remove_dir_all(out);
+    }
+
+    #[test]
+    fn fig8_box_stats_show_cnc_tighter() {
+        let (o, out) = opts("f8");
+        let files = fig8(&o).unwrap();
+        let summary = std::fs::read_to_string(&files[1]).unwrap();
+        let lines: Vec<&str> = summary.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let med = |line: &str| {
+            line.split(',').nth(2).unwrap().parse::<f64>().unwrap()
+        };
+        // CNC's median per-round delay diff must be below FedAvg's
+        assert!(med(lines[1]) < med(lines[2]), "{summary}");
+        let _ = std::fs::remove_dir_all(out);
+    }
+
+    #[test]
+    fn headline_ratios_in_the_papers_direction() {
+        let (mut o, out) = opts("hl");
+        o.rounds = Some(30);
+        let t = headline_summary(&o).unwrap();
+        let text = t.to_string();
+        // measured mean delay-diff ratio must be < 1 (CNC wins)
+        let row: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
+        let measured: f64 = row.last().unwrap().parse().unwrap();
+        assert!(measured < 1.0, "{text}");
+        let _ = std::fs::remove_dir_all(out);
+    }
+}

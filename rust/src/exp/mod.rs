@@ -1,0 +1,10 @@
+//! Experiment harness: Table 1/2 presets and the runners that regenerate
+//! every figure of the paper's evaluation (see DESIGN.md §4 for the
+//! experiment index).
+
+pub mod figures;
+pub mod p2p_figs;
+pub mod presets;
+
+pub use figures::FigOpts;
+pub use presets::{Backend, Case, Method, CASES};

@@ -1,0 +1,335 @@
+//! Figure runners for the peer-to-peer architecture: Fig 9, 10, 11.
+//!
+//! * Fig 9 — experiment 1: 20 designed-matrix clients, four settings
+//!   (E=4, E=2, random-15, all-20), accuracy vs cumulative local delay and
+//!   vs cumulative transmission cost, IID and Non-IID.
+//! * Fig 10 — experiment 2: 8 fully-connected clients, three settings
+//!   (TSP over all 8; CNC power-tier split 6+2; random 6), same axes.
+//! * Fig 11 — qualitative scaling: mean global-round latency vs fleet
+//!   size for CNC vs chain baselines (mock backend by design — it is a
+//!   latency model study, no learning involved).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::cnc::optimize::{PartitionStrategy, PathStrategy};
+use crate::cnc::CncSystem;
+use crate::coordinator::p2p::{self, P2pConfig};
+use crate::coordinator::trainer::{MockTrainer, PjrtTrainer, Trainer};
+use crate::data::{Partition, Split, SynthSpec};
+use crate::exp::figures::{split_tag, FigOpts};
+use crate::exp::presets::{Backend, LR};
+use crate::metrics::{Metric, RunHistory};
+use crate::netsim::channel::ChannelParams;
+use crate::netsim::compute::PowerProfile;
+use crate::netsim::topology::{CostMatrix, TopologyGen};
+use crate::runtime::{ArtifactStore, Engine};
+use crate::util::csv::CsvTable;
+
+/// One P2P experimental setting (a curve in Fig 9/10).
+pub struct P2pSetting {
+    pub tag: &'static str,
+    pub partition: PartitionStrategy,
+    pub path: PathStrategy,
+}
+
+/// Experiment 1's four settings (paper §V-B-1).
+pub fn experiment1_settings() -> Vec<P2pSetting> {
+    vec![
+        P2pSetting {
+            tag: "cnc_e4",
+            partition: PartitionStrategy::BalancedDelay { e: 4 },
+            path: PathStrategy::Greedy,
+        },
+        P2pSetting {
+            tag: "cnc_e2",
+            partition: PartitionStrategy::BalancedDelay { e: 2 },
+            path: PathStrategy::Greedy,
+        },
+        P2pSetting {
+            tag: "random15",
+            partition: PartitionStrategy::RandomSubset { n: 15 },
+            path: PathStrategy::Greedy,
+        },
+        P2pSetting {
+            tag: "all20",
+            partition: PartitionStrategy::All,
+            path: PathStrategy::Greedy,
+        },
+    ]
+}
+
+/// Experiment 2's three settings (paper §V-B-1).
+pub fn experiment2_settings() -> Vec<P2pSetting> {
+    vec![
+        P2pSetting {
+            tag: "tsp_all8",
+            partition: PartitionStrategy::All,
+            path: PathStrategy::ExactTsp,
+        },
+        P2pSetting {
+            tag: "cnc_6plus2",
+            partition: PartitionStrategy::PowerTier { main_size: 6 },
+            path: PathStrategy::Greedy,
+        },
+        P2pSetting {
+            tag: "random6",
+            partition: PartitionStrategy::RandomSubset { n: 6 },
+            path: PathStrategy::Greedy,
+        },
+    ]
+}
+
+fn p2p_system(n: usize, seed: u64) -> CncSystem {
+    CncSystem::bootstrap(
+        n,
+        crate::data::synth::TRAIN_TOTAL / n,
+        1,
+        PowerProfile::Bimodal,
+        ChannelParams::default(),
+        seed,
+    )
+}
+
+fn p2p_trainer(
+    backend: &Backend,
+    n: usize,
+    split: Split,
+    seed: u64,
+) -> Result<Box<dyn Trainer>> {
+    match backend {
+        Backend::Mock => Ok(Box::new(MockTrainer::new(
+            n,
+            crate::data::synth::TRAIN_TOTAL / n,
+        ))),
+        Backend::Pjrt => {
+            let store = ArtifactStore::load(&ArtifactStore::default_dir())?;
+            let engine = Engine::new(store)?;
+            let partition = Partition::new(n, split, seed);
+            let t = PjrtTrainer::new(engine, partition, SynthSpec::default(), LR, seed)?;
+            t.warmup()?;
+            Ok(Box::new(t))
+        }
+    }
+}
+
+/// Run one P2P setting end to end.
+pub fn run_p2p_setting(
+    n: usize,
+    g: &CostMatrix,
+    setting: &P2pSetting,
+    split: Split,
+    rounds: usize,
+    opts: &FigOpts,
+) -> Result<RunHistory> {
+    let mut sys = p2p_system(n, opts.seed);
+    let mut trainer = p2p_trainer(&opts.backend, n, split, opts.seed)?;
+    let cfg = P2pConfig {
+        rounds,
+        partition_strategy: setting.partition.clone(),
+        path_strategy: setting.path,
+        epoch_local: 1,
+        eval_every: 1,
+        seed: opts.seed,
+        verbose: opts.verbose,
+    };
+    let label = format!("p2p/{}/{}", setting.tag, split_tag(split));
+    p2p::run(&mut sys, trainer.as_mut(), g, &cfg, &label)
+}
+
+fn write_acc_vs_cost(
+    histories: &[(&'static str, RunHistory)],
+    out: PathBuf,
+) -> Result<PathBuf> {
+    let mut header = vec!["round".to_string()];
+    for (tag, _) in histories {
+        header.push(format!("cum_localdelay_{tag}"));
+        header.push(format!("cum_txcost_{tag}"));
+        header.push(format!("acc_{tag}"));
+    }
+    let rounds = histories.iter().map(|(_, h)| h.rounds.len()).min().unwrap_or(0);
+    let mut t = CsvTable::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let cum_local: Vec<Vec<f64>> = histories
+        .iter()
+        // chains run serially within: local consumption is Σ per part,
+        // and parts are parallel → use the straggler chain (max)
+        .map(|(_, h)| h.cumulative(Metric::LocalDelayRound))
+        .collect();
+    let cum_tx: Vec<Vec<f64>> = histories
+        .iter()
+        .map(|(_, h)| h.cumulative(Metric::TxEnergyRound))
+        .collect();
+    for r in 0..rounds {
+        let mut row = vec![r as f64];
+        for (i, (_, h)) in histories.iter().enumerate() {
+            row.push(cum_local[i][r]);
+            row.push(cum_tx[i][r]);
+            row.push(h.rounds[r].accuracy);
+        }
+        t.push_f64(&row);
+    }
+    t.write_to(&out)?;
+    Ok(out)
+}
+
+/// Fig 9: experiment 1 over the designed 20-client matrix.
+pub fn fig9(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    let n = 20;
+    let g = TopologyGen::designed_20(opts.seed);
+    let rounds = opts.rounds.unwrap_or(30);
+    let mut written = Vec::new();
+    for split in [Split::Iid, Split::NonIid] {
+        let mut hs = Vec::new();
+        for s in experiment1_settings() {
+            let h = run_p2p_setting(n, &g, &s, split, rounds, opts)?;
+            hs.push((s.tag, h));
+        }
+        written.push(write_acc_vs_cost(
+            &hs,
+            opts.out_dir.join(format!("fig9_{}.csv", split_tag(split))),
+        )?);
+    }
+    Ok(written)
+}
+
+/// Fig 10: experiment 2 over the designed 8-client matrix.
+pub fn fig10(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    let n = 8;
+    let g = TopologyGen::designed_8(opts.seed);
+    let rounds = opts.rounds.unwrap_or(30);
+    let mut written = Vec::new();
+    for split in [Split::Iid, Split::NonIid] {
+        let mut hs = Vec::new();
+        for s in experiment2_settings() {
+            let h = run_p2p_setting(n, &g, &s, split, rounds, opts)?;
+            hs.push((s.tag, h));
+        }
+        written.push(write_acc_vs_cost(
+            &hs,
+            opts.out_dir.join(format!("fig10_{}.csv", split_tag(split))),
+        )?);
+    }
+    Ok(written)
+}
+
+/// Fig 11: mean global-round latency vs fleet size, CNC (E=4 balanced +
+/// Algorithm 3) vs all-in-one-chain greedy vs TSP (where tractable).
+/// Latency model only → always the mock backend, a handful of rounds.
+pub fn fig11(opts: &FigOpts, fleet_sizes: &[usize]) -> Result<PathBuf> {
+    let rounds = opts.rounds.unwrap_or(5).min(10);
+    let mut t = CsvTable::new(&[
+        "num_clients",
+        "cnc_e4_latency",
+        "all_chain_latency",
+        "tsp_latency",
+    ]);
+    for &n in fleet_sizes {
+        let mut rng = crate::util::rng::Pcg64::new(opts.seed, n as u64);
+        let g = TopologyGen::full(n, 1.0, 10.0, &mut rng);
+        let mut latencies = Vec::new();
+        let settings = [
+            Some(P2pSetting {
+                tag: "cnc",
+                partition: PartitionStrategy::BalancedDelay { e: 4.min(n) },
+                path: PathStrategy::Greedy,
+            }),
+            Some(P2pSetting {
+                tag: "chain",
+                partition: PartitionStrategy::All,
+                path: PathStrategy::Greedy,
+            }),
+            (n <= crate::assign::tsp::MAX_N).then_some(P2pSetting {
+                tag: "tsp",
+                partition: PartitionStrategy::All,
+                path: PathStrategy::ExactTsp,
+            }),
+        ];
+        for s in settings {
+            match s {
+                Some(s) => {
+                    let mock_opts = FigOpts {
+                        rounds: Some(rounds),
+                        backend: Backend::Mock,
+                        seed: opts.seed,
+                        out_dir: opts.out_dir.clone(),
+                        verbose: false,
+                    };
+                    let h =
+                        run_p2p_setting(n, &g, &s, Split::Iid, rounds, &mock_opts)?;
+                    latencies.push(h.mean_round_latency_s());
+                }
+                None => latencies.push(f64::NAN),
+            }
+        }
+        t.push_f64(&[
+            n as f64,
+            latencies[0],
+            latencies[1],
+            latencies[2],
+        ]);
+    }
+    let path = opts.out_dir.join("fig11.csv");
+    t.write_to(&path)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn opts(tag: &str, rounds: usize) -> (FigOpts, PathBuf) {
+        let out = std::env::temp_dir().join(format!("cnc_fl_p2p_{tag}"));
+        let _ = std::fs::remove_dir_all(&out);
+        let mut o = FigOpts::quick(Path::new(&out));
+        o.rounds = Some(rounds);
+        (o, out)
+    }
+
+    #[test]
+    fn fig9_runs_all_four_settings() {
+        let (o, out) = opts("f9", 4);
+        let files = fig9(&o).unwrap();
+        assert_eq!(files.len(), 2);
+        let text = std::fs::read_to_string(&files[0]).unwrap();
+        for tag in ["cnc_e4", "cnc_e2", "random15", "all20"] {
+            assert!(text.contains(&format!("acc_{tag}")), "{tag}");
+        }
+        let _ = std::fs::remove_dir_all(out);
+    }
+
+    #[test]
+    fn fig10_runs_all_three_settings() {
+        let (o, out) = opts("f10", 4);
+        let files = fig10(&o).unwrap();
+        let text = std::fs::read_to_string(&files[0]).unwrap();
+        for tag in ["tsp_all8", "cnc_6plus2", "random6"] {
+            assert!(text.contains(&format!("acc_{tag}")), "{tag}");
+        }
+        let _ = std::fs::remove_dir_all(out);
+    }
+
+    #[test]
+    fn fig11_latency_grows_slower_for_cnc() {
+        let (o, out) = opts("f11", 3);
+        let path = fig11(&o, &[8, 16, 24]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rows: Vec<Vec<f64>> = text
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(|c| c.parse().unwrap_or(f64::NAN)).collect())
+            .collect();
+        assert_eq!(rows.len(), 3);
+        // growth from 8 → 24 clients: CNC slope must be below the chain's
+        let cnc_growth = rows[2][1] - rows[0][1];
+        let chain_growth = rows[2][2] - rows[0][2];
+        assert!(
+            cnc_growth < chain_growth,
+            "cnc {cnc_growth} vs chain {chain_growth}\n{text}"
+        );
+        // TSP infeasible at 24 clients → NaN cell
+        assert!(rows[2][3].is_nan());
+        let _ = std::fs::remove_dir_all(out);
+    }
+}

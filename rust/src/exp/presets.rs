@@ -1,0 +1,208 @@
+//! Experiment presets: the paper's Table 1 constants and Table 2 cases
+//! (Pr1–Pr6), plus the shared run-assembly helpers the figure runners use.
+
+use anyhow::Result;
+
+use crate::cnc::optimize::{CohortStrategy, RbStrategy};
+use crate::cnc::CncSystem;
+use crate::coordinator::traditional::TraditionalConfig;
+use crate::coordinator::trainer::{MockTrainer, PjrtTrainer, Trainer};
+use crate::data::{Partition, Split, SynthSpec};
+use crate::netsim::channel::ChannelParams;
+use crate::netsim::compute::PowerProfile;
+use crate::runtime::{ArtifactStore, Engine};
+
+/// Table 1 learning constants.
+pub const LR: f32 = 0.01;
+pub const BATCH_SIZE: usize = 10;
+/// Default Algorithm 1 group count: 1/cfraction groups so one part holds
+/// exactly one cohort (the paper's Table 1 "m" row is garbled — "0.024 dB"
+/// — so we default to the value that makes step 7 exact and expose it as
+/// a CLI knob).
+pub fn default_m(num_clients: usize, cohort_size: usize) -> usize {
+    (num_clients / cohort_size).clamp(1, num_clients)
+}
+
+/// One Table 2 case.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Case {
+    pub name: &'static str,
+    pub num_clients: usize,
+    /// sampling proportion numerator: cohort = cfraction_pct·U/100
+    pub cfraction_pct: usize,
+    pub local_epoch: usize,
+    /// Table 1: global_epoch 300 for 100 clients, 250 for 60
+    pub global_rounds: usize,
+}
+
+impl Case {
+    pub fn cohort_size(&self) -> usize {
+        (self.num_clients * self.cfraction_pct / 100).max(1)
+    }
+
+    pub fn samples_per_client(&self) -> usize {
+        crate::data::synth::TRAIN_TOTAL / self.num_clients
+    }
+}
+
+/// Table 2: the six parameter cases.
+pub const CASES: [Case; 6] = [
+    Case { name: "Pr1", num_clients: 100, cfraction_pct: 10, local_epoch: 1, global_rounds: 300 },
+    Case { name: "Pr2", num_clients: 100, cfraction_pct: 10, local_epoch: 5, global_rounds: 300 },
+    Case { name: "Pr3", num_clients: 100, cfraction_pct: 20, local_epoch: 1, global_rounds: 300 },
+    Case { name: "Pr4", num_clients: 100, cfraction_pct: 20, local_epoch: 5, global_rounds: 300 },
+    Case { name: "Pr5", num_clients: 60, cfraction_pct: 10, local_epoch: 1, global_rounds: 250 },
+    Case { name: "Pr6", num_clients: 60, cfraction_pct: 10, local_epoch: 5, global_rounds: 250 },
+];
+
+pub fn case(name: &str) -> Result<Case> {
+    CASES
+        .iter()
+        .find(|c| c.name.eq_ignore_ascii_case(name))
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("unknown case `{name}` (Pr1..Pr6)"))
+}
+
+/// Which method a run uses (the paper's two curves).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// the paper's system: Algorithm 1 + Hungarian RB allocation
+    Cnc,
+    /// FedAvg [5]: uniform sampling + random RBs
+    FedAvg,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Cnc => "cnc",
+            Method::FedAvg => "fedavg",
+        }
+    }
+}
+
+/// Assemble the traditional-architecture configuration for a case+method.
+pub fn traditional_config(
+    case: &Case,
+    method: Method,
+    rounds_override: Option<usize>,
+    seed: u64,
+) -> TraditionalConfig {
+    let cohort = case.cohort_size();
+    let (cohort_strategy, rb_strategy) = match method {
+        Method::Cnc => (
+            CohortStrategy::PowerGrouping {
+                m: default_m(case.num_clients, cohort),
+            },
+            RbStrategy::HungarianEnergy,
+        ),
+        Method::FedAvg => (CohortStrategy::Uniform, RbStrategy::Random),
+    };
+    TraditionalConfig {
+        rounds: rounds_override.unwrap_or(case.global_rounds),
+        cohort_size: cohort,
+        n_rb: cohort,
+        epoch_local: case.local_epoch,
+        cohort_strategy,
+        rb_strategy,
+        eval_every: 1,
+        tx_deadline_s: None,
+        seed,
+        verbose: false,
+    }
+}
+
+/// Bootstrap the CNC stack for a case.
+pub fn bootstrap_case(case: &Case, seed: u64) -> CncSystem {
+    CncSystem::bootstrap(
+        case.num_clients,
+        case.samples_per_client(),
+        case.local_epoch,
+        PowerProfile::Bimodal,
+        ChannelParams::default(),
+        seed,
+    )
+}
+
+/// Backend selection for a run.
+pub enum Backend {
+    /// real PJRT over the AOT artifacts
+    Pjrt,
+    /// deterministic mock (scheduler-only studies / CI without artifacts)
+    Mock,
+}
+
+/// Build a trainer for a case. `split` picks IID vs Non-IID.
+pub fn make_trainer(
+    backend: &Backend,
+    case: &Case,
+    split: Split,
+    seed: u64,
+) -> Result<Box<dyn Trainer>> {
+    match backend {
+        Backend::Mock => Ok(Box::new(MockTrainer::new(
+            case.num_clients,
+            case.samples_per_client(),
+        ))),
+        Backend::Pjrt => {
+            let store = ArtifactStore::load(&ArtifactStore::default_dir())?;
+            let engine = Engine::new(store)?;
+            let partition = Partition::new(case.num_clients, split, seed);
+            let trainer =
+                PjrtTrainer::new(engine, partition, SynthSpec::default(), LR, seed)?;
+            trainer.warmup()?;
+            Ok(Box::new(trainer))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_cases_match_the_paper() {
+        assert_eq!(CASES.len(), 6);
+        let pr1 = case("Pr1").unwrap();
+        assert_eq!(pr1.cohort_size(), 10);
+        assert_eq!(pr1.samples_per_client(), 600);
+        let pr4 = case("pr4").unwrap();
+        assert_eq!(pr4.cohort_size(), 20);
+        assert_eq!(pr4.local_epoch, 5);
+        let pr5 = case("Pr5").unwrap();
+        assert_eq!(pr5.num_clients, 60);
+        assert_eq!(pr5.samples_per_client(), 1000);
+        assert_eq!(pr5.cohort_size(), 6);
+        assert_eq!(pr5.global_rounds, 250);
+        assert!(case("Pr9").is_err());
+    }
+
+    #[test]
+    fn method_configs_differ_only_in_strategies() {
+        let c = case("Pr1").unwrap();
+        let a = traditional_config(&c, Method::Cnc, Some(10), 0);
+        let b = traditional_config(&c, Method::FedAvg, Some(10), 0);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.cohort_size, b.cohort_size);
+        assert_eq!(a.epoch_local, b.epoch_local);
+        assert!(matches!(a.cohort_strategy, CohortStrategy::PowerGrouping { .. }));
+        assert!(matches!(b.cohort_strategy, CohortStrategy::Uniform));
+        assert_eq!(a.rb_strategy, RbStrategy::HungarianEnergy);
+        assert_eq!(b.rb_strategy, RbStrategy::Random);
+    }
+
+    #[test]
+    fn default_m_makes_parts_of_cohort_size() {
+        assert_eq!(default_m(100, 10), 10);
+        assert_eq!(default_m(100, 20), 5);
+        assert_eq!(default_m(60, 6), 10);
+        assert_eq!(default_m(5, 10), 1); // degenerate clamps
+    }
+
+    #[test]
+    fn mock_backend_builds_without_artifacts() {
+        let c = case("Pr1").unwrap();
+        let t = make_trainer(&Backend::Mock, &c, Split::Iid, 0).unwrap();
+        assert_eq!(t.data_size(0), 600);
+    }
+}

@@ -1,0 +1,32 @@
+//! # cnc-fl
+//!
+//! Communication-efficiency-optimized federated learning for **Computing
+//! and Network Convergence (CNC) of 6G networks** — a Rust + JAX + Pallas
+//! reproduction of Cai et al., FITEE 2023 (DOI 10.1631/FITEE.2300122).
+//!
+//! Three layers (see DESIGN.md):
+//! * **L3 (this crate)** — the CNC coordinator: client scheduling by
+//!   computing power (Algorithm 1), Hungarian/bottleneck Resource-Block
+//!   allocation (Eq 5/6), peer-to-peer chain training with Algorithm 3
+//!   path selection (Eq 7), a wireless channel simulator (Eq 2–4), the
+//!   FedAvg baseline, and the experiment harness that regenerates every
+//!   figure of the paper.
+//! * **L2** — `python/compile/model.py`: a JAX MLP AOT-lowered to HLO text
+//!   artifacts, executed here via PJRT (`runtime`).
+//! * **L1** — `python/compile/kernels/`: Pallas kernels for the dense
+//!   layers and the fused softmax-cross-entropy loss.
+//!
+//! Quick start: `cargo run --release --example quickstart` (after
+//! `make artifacts`).
+
+pub mod assign;
+pub mod cnc;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod runtime;
+pub mod scheduler;
+pub mod util;

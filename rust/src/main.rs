@@ -1,0 +1,348 @@
+//! `cnc-fl` — the leader binary: runs federated-learning experiments and
+//! regenerates every table/figure of the paper.
+//!
+//! ```text
+//! cnc-fl table1                    # print the Table 1 constants in use
+//! cnc-fl table2                    # print the Pr1–Pr6 case definitions
+//! cnc-fl run    --case Pr1 ...     # one traditional run (CNC or FedAvg)
+//! cnc-fl p2p    --clients 20 ...   # one P2P run
+//! cnc-fl fig4 … fig11              # regenerate a figure's CSVs
+//! cnc-fl all                       # everything (quick horizon)
+//! ```
+//!
+//! `--backend pjrt` (default) trains through the AOT JAX/Pallas artifacts;
+//! `--backend mock` isolates the scheduling behaviour (no artifacts
+//! needed — useful for the latency-model figures and CI).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use cnc_fl::cnc::optimize::{PartitionStrategy, PathStrategy};
+use cnc_fl::coordinator::traditional;
+use cnc_fl::data::Split;
+use cnc_fl::exp::figures::{self, FigOpts};
+use cnc_fl::exp::p2p_figs;
+use cnc_fl::exp::presets::{
+    self, case, traditional_config, Backend, Method, CASES,
+};
+use cnc_fl::netsim::channel::ChannelParams;
+use cnc_fl::netsim::topology::TopologyGen;
+use cnc_fl::util::cli::Command;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn usage() -> String {
+    "cnc-fl — communication-efficiency-optimized FL for CNC of 6G networks\n\
+     \n\
+     subcommands:\n\
+     \x20 table1           print the Table 1 simulation constants\n\
+     \x20 table2           print the Table 2 cases (Pr1–Pr6)\n\
+     \x20 run              one traditional-architecture training run\n\
+     \x20 p2p              one peer-to-peer training run\n\
+     \x20 fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11\n\
+     \x20                  regenerate that figure's CSV series\n\
+     \x20 headline         paper-vs-measured headline-claim ratios\n\
+     \x20 all              regenerate everything (quick horizon)\n\
+     \n\
+     `<sub> --help` lists each subcommand's options.\n"
+        .to_string()
+}
+
+fn fig_command(name: &'static str) -> Command {
+    Command::new(name, "regenerate this figure's CSV series")
+        .opt("rounds", Some("40"), "global rounds per run")
+        .opt("backend", Some("pjrt"), "pjrt | mock")
+        .opt("seed", Some("0"), "experiment seed")
+        .opt("out", Some("results"), "output directory")
+        .opt("cases", Some("Pr1,Pr2,Pr3"), "comma-separated Table 2 cases")
+        .switch("verbose", "per-round progress on stderr")
+}
+
+fn parse_backend(s: &str) -> Result<Backend> {
+    match s {
+        "pjrt" => Ok(Backend::Pjrt),
+        "mock" => Ok(Backend::Mock),
+        other => bail!("unknown backend `{other}` (pjrt|mock)"),
+    }
+}
+
+fn fig_opts(m: &cnc_fl::util::cli::Matches) -> Result<(FigOpts, Vec<String>)> {
+    let opts = FigOpts {
+        rounds: Some(m.usize_("rounds")?),
+        backend: parse_backend(m.str_("backend")?)?,
+        seed: m.u64_("seed")?,
+        out_dir: PathBuf::from(m.str_("out")?),
+        verbose: m.bool_("verbose")?,
+    };
+    let cases: Vec<String> = m
+        .str_("cases")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    Ok((opts, cases))
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(sub) = args.first() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "table1" => table1(),
+        "table2" => table2(),
+        "run" => run_traditional(rest),
+        "p2p" => run_p2p(rest),
+        "fig4" | "fig5" | "fig6" | "fig7" | "fig8" | "fig9" | "fig10" | "fig11" => {
+            figure(sub, rest)
+        }
+        "headline" => headline(rest),
+        "all" => all(rest),
+        "--help" | "-h" | "help" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}`\n\n{}", usage()),
+    }
+}
+
+fn table1() -> Result<()> {
+    let ch = ChannelParams::default();
+    println!("Table 1 — simulation constants (paper → this build)");
+    println!(
+        "  N0            -174 dBm/Hz   ({:.3e} W over B)",
+        ch.noise_power_w()
+    );
+    println!("  B^U           1 MHz          ({} Hz)", ch.bandwidth_hz);
+    println!("  P             0.01 W         ({} W)", ch.tx_power_w);
+    println!(
+        "  I             U({:.1e}, {:.1e}) W",
+        ch.interference_w.0, ch.interference_w.1
+    );
+    println!(
+        "  d             U({}, {}) m",
+        ch.distance_m.0, ch.distance_m.1
+    );
+    println!(
+        "  o             1              (Rayleigh scale {})",
+        ch.fading_scale
+    );
+    println!(
+        "  Z(w)          0.606 MB       ({:.3} MB raw f32 payload here)",
+        cnc_fl::model::params::param_count() as f64 * 4.0 / 1e6
+    );
+    println!("  batch_size    {}", presets::BATCH_SIZE);
+    println!("  lr            {}", presets::LR);
+    println!("  num_clients   [100, 60]");
+    println!("  cfraction     [0.1, 0.2]");
+    println!("  local_epoch   [1, 5]");
+    println!("  global_epoch  [300, 250]");
+    println!("  m (Alg 1)     1/cfraction groups (Table 1's m row is garbled; see DESIGN.md)");
+    Ok(())
+}
+
+fn table2() -> Result<()> {
+    println!("Table 2 — case definitions");
+    println!(
+        "{:<5} {:>12} {:>11} {:>12} {:>13} {:>8}",
+        "case", "num_clients", "cfraction", "local_epoch", "global_epoch", "cohort"
+    );
+    for c in CASES {
+        println!(
+            "{:<5} {:>12} {:>11} {:>12} {:>13} {:>8}",
+            c.name,
+            c.num_clients,
+            c.cfraction_pct as f64 / 100.0,
+            c.local_epoch,
+            c.global_rounds,
+            c.cohort_size()
+        );
+    }
+    Ok(())
+}
+
+fn run_traditional(args: &[String]) -> Result<()> {
+    let cmd = Command::new("run", "one traditional-architecture training run")
+        .opt("case", Some("Pr1"), "Table 2 case")
+        .opt("method", Some("cnc"), "cnc | fedavg")
+        .opt("rounds", None, "override the case's global rounds")
+        .opt("backend", Some("pjrt"), "pjrt | mock")
+        .opt("split", Some("iid"), "iid | non-iid")
+        .opt("seed", Some("0"), "experiment seed")
+        .opt("out", Some("results"), "output directory")
+        .switch("verbose", "per-round progress on stderr");
+    let m = cmd.parse(args)?;
+    let c = case(m.str_("case")?)?;
+    let method = match m.str_("method")? {
+        "cnc" => Method::Cnc,
+        "fedavg" => Method::FedAvg,
+        other => bail!("unknown method `{other}`"),
+    };
+    let rounds = m.get("rounds").map(|r| r.parse()).transpose()?;
+    let split: Split = m.str_("split")?.parse()?;
+    let seed = m.u64_("seed")?;
+    let backend = parse_backend(m.str_("backend")?)?;
+
+    let mut cfg = traditional_config(&c, method, rounds, seed);
+    cfg.verbose = m.bool_("verbose")?;
+    let mut sys = presets::bootstrap_case(&c, seed);
+    let mut trainer = presets::make_trainer(&backend, &c, split, seed)?;
+    let label = format!("{}/{}", c.name, method.label());
+    let h = traditional::run(&mut sys, trainer.as_mut(), &cfg, &label)?;
+
+    let out = PathBuf::from(m.str_("out")?).join(format!(
+        "run_{}_{}_{}.csv",
+        c.name,
+        method.label(),
+        figures::split_tag(split)
+    ));
+    h.write_csv(&out)?;
+    println!(
+        "{label}: {} rounds, final accuracy {:.4} → {}",
+        h.rounds.len(),
+        h.final_accuracy(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn run_p2p(args: &[String]) -> Result<()> {
+    let cmd = Command::new("p2p", "one peer-to-peer training run")
+        .opt("clients", Some("20"), "fleet size")
+        .opt("parts", Some("4"), "E balanced parts (0 = all in one chain)")
+        .opt("path", Some("greedy"), "greedy | tsp | random")
+        .opt("rounds", Some("30"), "global rounds")
+        .opt("backend", Some("pjrt"), "pjrt | mock")
+        .opt("split", Some("iid"), "iid | non-iid")
+        .opt("seed", Some("0"), "experiment seed")
+        .opt("out", Some("results"), "output directory")
+        .switch("verbose", "per-round progress on stderr");
+    let m = cmd.parse(args)?;
+    let n = m.usize_("clients")?;
+    let e = m.usize_("parts")?;
+    let path = match m.str_("path")? {
+        "greedy" => PathStrategy::Greedy,
+        "tsp" => PathStrategy::ExactTsp,
+        "random" => PathStrategy::Random,
+        other => bail!("unknown path strategy `{other}`"),
+    };
+    let split: Split = m.str_("split")?.parse()?;
+    let seed = m.u64_("seed")?;
+    let opts = FigOpts {
+        rounds: Some(m.usize_("rounds")?),
+        backend: parse_backend(m.str_("backend")?)?,
+        seed,
+        out_dir: PathBuf::from(m.str_("out")?),
+        verbose: m.bool_("verbose")?,
+    };
+    let mut rng = cnc_fl::util::rng::Pcg64::new(seed, 0x706);
+    let g = TopologyGen::full(n, 1.0, 10.0, &mut rng);
+    let setting = p2p_figs::P2pSetting {
+        tag: "cli",
+        partition: if e == 0 {
+            PartitionStrategy::All
+        } else {
+            PartitionStrategy::BalancedDelay { e }
+        },
+        path,
+    };
+    let h = p2p_figs::run_p2p_setting(n, &g, &setting, split, opts.rounds.unwrap(), &opts)?;
+    let out = opts.out_dir.join(format!("p2p_{n}c_{e}e.csv"));
+    h.write_csv(&out)?;
+    println!(
+        "p2p: {} rounds, final accuracy {:.4} → {}",
+        h.rounds.len(),
+        h.final_accuracy(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn figure(name: &str, args: &[String]) -> Result<()> {
+    let cmd = fig_command("fig");
+    let m = cmd.parse(args)?;
+    let (opts, cases) = fig_opts(&m)?;
+    let case_refs: Vec<&str> = cases.iter().map(|s| s.as_str()).collect();
+    let files: Vec<PathBuf> = match name {
+        "fig4" => figures::fig4(&opts, &case_refs)?,
+        "fig5" => figures::fig5(&opts, &case_refs)?,
+        "fig6" => figures::fig6(&opts, &case_refs)?,
+        "fig7" => figures::fig7(&opts, &case_refs)?,
+        "fig8" => figures::fig8(&opts)?,
+        "fig9" => p2p_figs::fig9(&opts)?,
+        "fig10" => p2p_figs::fig10(&opts)?,
+        "fig11" => vec![p2p_figs::fig11(&opts, &[8, 12, 16, 20, 24, 28])?],
+        other => bail!("not a figure: {other}"),
+    };
+    for f in files {
+        println!("wrote {}", f.display());
+    }
+    Ok(())
+}
+
+fn headline(args: &[String]) -> Result<()> {
+    let cmd = fig_command("headline");
+    let m = cmd.parse(args)?;
+    let (opts, _) = fig_opts(&m)?;
+    let t = figures::headline_summary(&opts)?;
+    print!("{}", t.to_string());
+    let path = opts.out_dir.join("headline.csv");
+    t.write_to(&path)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn all(args: &[String]) -> Result<()> {
+    let cmd = fig_command("all");
+    let m = cmd.parse(args)?;
+    let (opts, cases) = fig_opts(&m)?;
+    let case_refs: Vec<&str> = cases.iter().map(|s| s.as_str()).collect();
+    println!("== fig4 ==");
+    for f in figures::fig4(&opts, &case_refs)? {
+        println!("wrote {}", f.display());
+    }
+    println!("== fig5 ==");
+    for f in figures::fig5(&opts, &case_refs)? {
+        println!("wrote {}", f.display());
+    }
+    println!("== fig6 ==");
+    for f in figures::fig6(&opts, &case_refs)? {
+        println!("wrote {}", f.display());
+    }
+    println!("== fig7 ==");
+    for f in figures::fig7(&opts, &case_refs)? {
+        println!("wrote {}", f.display());
+    }
+    println!("== fig8 ==");
+    for f in figures::fig8(&opts)? {
+        println!("wrote {}", f.display());
+    }
+    println!("== fig9 ==");
+    for f in p2p_figs::fig9(&opts)? {
+        println!("wrote {}", f.display());
+    }
+    println!("== fig10 ==");
+    for f in p2p_figs::fig10(&opts)? {
+        println!("wrote {}", f.display());
+    }
+    println!("== fig11 ==");
+    println!(
+        "wrote {}",
+        p2p_figs::fig11(&opts, &[8, 12, 16, 20, 24, 28])?.display()
+    );
+    println!("== headline ==");
+    let t = figures::headline_summary(&opts)?;
+    print!("{}", t.to_string());
+    t.write_to(Path::new(&opts.out_dir.join("headline.csv")))?;
+    Ok(())
+}

@@ -1,0 +1,260 @@
+//! Training telemetry: per-round records of every quantity the paper
+//! plots, accumulation across rounds, and CSV/JSON export for the figure
+//! harness.
+//!
+//! Fig 4: accuracy vs round. Fig 5/6: local delay, tx delay, tx energy vs
+//! round. Fig 7: accuracy vs *cumulative* consumption. Fig 8: per-round
+//! local-delay differences (box stats). Fig 9/10: the same under P2P.
+//! Fig 11: average round latency vs fleet size.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::csv::CsvTable;
+use crate::util::stats;
+
+/// Everything measured in one global training round.
+#[derive(Debug, Clone, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// global model test accuracy after this round (0..1)
+    pub accuracy: f64,
+    /// mean training loss reported by the selected clients
+    pub train_loss: f64,
+    /// per-selected-client local training delays t_i (Eq 8), seconds
+    pub local_delays_s: Vec<f64>,
+    /// per-selected-client uplink transmission delays l_i^U (Eq 3), seconds
+    pub tx_delays_s: Vec<f64>,
+    /// per-selected-client transmission energies e_i (Eq 4), joules
+    pub tx_energies_j: Vec<f64>,
+    /// wall-clock spent in PJRT execute for this round (coordinator
+    /// overhead diagnostics, §Perf)
+    pub compute_wall_s: f64,
+    /// clients whose update missed the uplink deadline and was excluded
+    /// from aggregation (0 when no deadline is configured)
+    pub dropouts: usize,
+}
+
+impl RoundRecord {
+    /// Round local-training latency: the stragglers gate the round
+    /// (synchronous aggregation) — max over clients.
+    pub fn local_delay_round_s(&self) -> f64 {
+        stats::max(&self.local_delays_s)
+    }
+
+    /// Eq (9)'s t_max − t_min for this round.
+    pub fn local_delay_diff_s(&self) -> f64 {
+        if self.local_delays_s.is_empty() {
+            return 0.0;
+        }
+        stats::max(&self.local_delays_s) - stats::min(&self.local_delays_s)
+    }
+
+    /// Round uplink delay under per-client RBs: clients transmit in
+    /// parallel — max over clients (Eq 6's objective).
+    pub fn tx_delay_round_s(&self) -> f64 {
+        stats::max(&self.tx_delays_s)
+    }
+
+    /// Total transmission energy of the round (Eq 5's objective).
+    pub fn tx_energy_round_j(&self) -> f64 {
+        self.tx_energies_j.iter().sum()
+    }
+
+    /// Sum of local training delays (P2P chains accumulate serially).
+    pub fn local_delay_sum_s(&self) -> f64 {
+        self.local_delays_s.iter().sum()
+    }
+}
+
+/// A whole run's history plus run-level metadata.
+#[derive(Debug, Clone, Default)]
+pub struct RunHistory {
+    pub label: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunHistory {
+    pub fn new(label: &str) -> Self {
+        RunHistory {
+            label: label.to_string(),
+            rounds: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    pub fn accuracies(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.accuracy).collect()
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds.last().map(|r| r.accuracy).unwrap_or(0.0)
+    }
+
+    /// Per-round series of a metric.
+    pub fn series(&self, metric: Metric) -> Vec<f64> {
+        self.rounds.iter().map(|r| metric.of(r)).collect()
+    }
+
+    /// Cumulative consumption series (Fig 7 / 9 / 10 horizontal axes).
+    pub fn cumulative(&self, metric: Metric) -> Vec<f64> {
+        stats::cumsum(&self.series(metric))
+    }
+
+    /// Per-round delay-difference samples (Fig 8 box plot).
+    pub fn delay_diffs(&self) -> Vec<f64> {
+        self.rounds
+            .iter()
+            .map(|r| r.local_delay_diff_s())
+            .collect()
+    }
+
+    /// Average wall latency of a round: local training (straggler-gated)
+    /// plus uplink (Fig 11's vertical axis).
+    pub fn mean_round_latency_s(&self) -> f64 {
+        let v: Vec<f64> = self
+            .rounds
+            .iter()
+            .map(|r| r.local_delay_round_s() + r.tx_delay_round_s())
+            .collect();
+        stats::mean(&v)
+    }
+
+    /// Export the standard per-round CSV (one row per round).
+    pub fn to_csv(&self) -> CsvTable {
+        let mut t = CsvTable::new(&[
+            "round",
+            "accuracy",
+            "train_loss",
+            "local_delay_max_s",
+            "local_delay_diff_s",
+            "tx_delay_max_s",
+            "tx_energy_sum_j",
+            "cum_local_delay_s",
+            "cum_tx_delay_s",
+            "cum_tx_energy_j",
+        ]);
+        let cum_local = self.cumulative(Metric::LocalDelayRound);
+        let cum_tx = self.cumulative(Metric::TxDelayRound);
+        let cum_e = self.cumulative(Metric::TxEnergyRound);
+        for (i, r) in self.rounds.iter().enumerate() {
+            t.push_f64(&[
+                r.round as f64,
+                r.accuracy,
+                r.train_loss,
+                r.local_delay_round_s(),
+                r.local_delay_diff_s(),
+                r.tx_delay_round_s(),
+                r.tx_energy_round_j(),
+                cum_local[i],
+                cum_tx[i],
+                cum_e[i],
+            ]);
+        }
+        t
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        self.to_csv().write_to(path)
+    }
+}
+
+/// Selectable per-round metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    /// straggler-gated local delay (traditional) — max t_i
+    LocalDelayRound,
+    /// serial local delay (P2P chains) — Σ t_i
+    LocalDelaySum,
+    TxDelayRound,
+    TxEnergyRound,
+}
+
+impl Metric {
+    pub fn of(&self, r: &RoundRecord) -> f64 {
+        match self {
+            Metric::Accuracy => r.accuracy,
+            Metric::LocalDelayRound => r.local_delay_round_s(),
+            Metric::LocalDelaySum => r.local_delay_sum_s(),
+            Metric::TxDelayRound => r.tx_delay_round_s(),
+            Metric::TxEnergyRound => r.tx_energy_round_j(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f64, local: &[f64], tx: &[f64], e: &[f64]) -> RoundRecord {
+        RoundRecord {
+            round,
+            accuracy: acc,
+            train_loss: 1.0 / (round + 1) as f64,
+            local_delays_s: local.to_vec(),
+            tx_delays_s: tx.to_vec(),
+            tx_energies_j: e.to_vec(),
+            compute_wall_s: 0.0,
+            dropouts: 0,
+        }
+    }
+
+    #[test]
+    fn round_reductions() {
+        let r = rec(0, 0.5, &[1.0, 4.0, 2.0], &[0.5, 0.2], &[0.1, 0.3]);
+        assert_eq!(r.local_delay_round_s(), 4.0);
+        assert_eq!(r.local_delay_diff_s(), 3.0);
+        assert_eq!(r.local_delay_sum_s(), 7.0);
+        assert_eq!(r.tx_delay_round_s(), 0.5);
+        assert!((r.tx_energy_round_j() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_round_is_zeroes() {
+        let r = RoundRecord::default();
+        assert_eq!(r.local_delay_diff_s(), 0.0);
+        assert_eq!(r.tx_energy_round_j(), 0.0);
+    }
+
+    #[test]
+    fn history_series_and_cumulative() {
+        let mut h = RunHistory::new("test");
+        h.push(rec(0, 0.3, &[2.0], &[1.0], &[0.5]));
+        h.push(rec(1, 0.6, &[3.0], &[1.5], &[0.25]));
+        assert_eq!(h.accuracies(), vec![0.3, 0.6]);
+        assert_eq!(h.final_accuracy(), 0.6);
+        assert_eq!(h.series(Metric::LocalDelayRound), vec![2.0, 3.0]);
+        assert_eq!(h.cumulative(Metric::TxDelayRound), vec![1.0, 2.5]);
+        assert_eq!(h.cumulative(Metric::TxEnergyRound), vec![0.5, 0.75]);
+        assert_eq!(h.delay_diffs(), vec![0.0, 0.0]);
+        assert!((h.mean_round_latency_s() - ((2.0 + 1.0) + (3.0 + 1.5)) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_has_one_row_per_round_plus_header() {
+        let mut h = RunHistory::new("csv");
+        for i in 0..5 {
+            h.push(rec(i, 0.1 * i as f64, &[1.0, 2.0], &[0.1], &[0.2]));
+        }
+        let t = h.to_csv();
+        assert_eq!(t.len(), 5);
+        let text = t.to_string();
+        assert!(text.starts_with("round,accuracy"));
+        assert_eq!(text.lines().count(), 6);
+    }
+
+    #[test]
+    fn metric_enum_covers_record() {
+        let r = rec(0, 0.9, &[1.0, 5.0], &[2.0], &[3.0]);
+        assert_eq!(Metric::Accuracy.of(&r), 0.9);
+        assert_eq!(Metric::LocalDelayRound.of(&r), 5.0);
+        assert_eq!(Metric::LocalDelaySum.of(&r), 6.0);
+        assert_eq!(Metric::TxDelayRound.of(&r), 2.0);
+        assert_eq!(Metric::TxEnergyRound.of(&r), 3.0);
+    }
+}

@@ -1,0 +1,309 @@
+//! Model-update compression — the other lever of FL communication
+//! efficiency (paper §I-B, Konečný et al. [4]): reduce Z(w) itself.
+//!
+//! Two schemes the related work highlights, both implemented losslessly
+//! round-trippable at the protocol level:
+//! * **uniform 8-bit quantization** per tensor (min/max affine grid) —
+//!   4× payload reduction at ≈1e-2 max error on our parameter ranges;
+//! * **top-k sparsification** — keep the k largest-magnitude entries per
+//!   tensor as (index, value) pairs; the paper's family of sketch/sparse
+//!   updates.
+//!
+//! The coordinator exposes these through `PayloadCodec`; the channel
+//! simulator then charges Eq (3)/(4) for the *compressed* Z(w), so the
+//! CNC × compression interaction is measurable (ablation in
+//! `cnc-fl ablate payload`).
+
+use anyhow::{bail, Result};
+
+use crate::model::params::ModelParams;
+
+/// A codec choice for transmitting model updates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PayloadCodec {
+    /// raw f32 tensors (the paper's default)
+    Raw,
+    /// per-tensor affine u8 quantization
+    Quant8,
+    /// top-k magnitude sparsification (fraction of entries kept, 0 < f ≤ 1)
+    TopK { keep_frac: f32 },
+}
+
+impl PayloadCodec {
+    /// Transmitted bytes for a model under this codec (protocol framing
+    /// ignored — same simplification as the paper's constant Z(w)).
+    pub fn payload_bytes(&self, params: &ModelParams) -> usize {
+        let n: usize = params.tensors.iter().map(|t| t.len()).sum();
+        match self {
+            PayloadCodec::Raw => n * 4,
+            // u8 per entry + (min, max) f32 per tensor
+            PayloadCodec::Quant8 => n + params.tensors.len() * 8,
+            // u32 index + f32 value per kept entry
+            PayloadCodec::TopK { keep_frac } => {
+                let kept: usize = params
+                    .tensors
+                    .iter()
+                    .map(|t| keep_count(t.len(), *keep_frac))
+                    .sum();
+                kept * 8 + params.tensors.len() * 4
+            }
+        }
+    }
+
+    /// Encode → decode; returns the reconstructed model (what the server
+    /// aggregates) — the lossy round trip the wire would see.
+    pub fn round_trip(&self, params: &ModelParams) -> Result<ModelParams> {
+        match self {
+            PayloadCodec::Raw => Ok(params.clone()),
+            PayloadCodec::Quant8 => Ok(dequantize8(&quantize8(params))),
+            PayloadCodec::TopK { keep_frac } => {
+                if !(*keep_frac > 0.0 && *keep_frac <= 1.0) {
+                    bail!("keep_frac must be in (0, 1], got {keep_frac}");
+                }
+                Ok(sparsify_topk(params, *keep_frac).densify(params))
+            }
+        }
+    }
+}
+
+fn keep_count(len: usize, frac: f32) -> usize {
+    // small epsilon guards against f32→f64 representation excess
+    // (e.g. 0.3f32 as f64 = 0.30000001 → ceil(10×·) would give 4, not 3)
+    (((len as f64 * frac as f64) - 1e-6).ceil() as usize).clamp(1, len)
+}
+
+// ---------------------------------------------------------------------------
+// 8-bit affine quantization
+// ---------------------------------------------------------------------------
+
+/// Quantized tensors: u8 codes + per-tensor (min, scale).
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    pub codes: Vec<Vec<u8>>,
+    pub mins: Vec<f32>,
+    pub scales: Vec<f32>,
+}
+
+pub fn quantize8(params: &ModelParams) -> Quantized {
+    let mut codes = Vec::with_capacity(params.tensors.len());
+    let mut mins = Vec::new();
+    let mut scales = Vec::new();
+    for t in &params.tensors {
+        let lo = t.iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = t.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let scale = if hi > lo { (hi - lo) / 255.0 } else { 1.0 };
+        codes.push(
+            t.iter()
+                .map(|&v| (((v - lo) / scale).round() as i32).clamp(0, 255) as u8)
+                .collect(),
+        );
+        mins.push(lo);
+        scales.push(scale);
+    }
+    Quantized {
+        codes,
+        mins,
+        scales,
+    }
+}
+
+pub fn dequantize8(q: &Quantized) -> ModelParams {
+    ModelParams {
+        tensors: q
+            .codes
+            .iter()
+            .zip(q.mins.iter().zip(&q.scales))
+            .map(|(codes, (&lo, &scale))| {
+                codes.iter().map(|&c| lo + c as f32 * scale).collect()
+            })
+            .collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// top-k sparsification
+// ---------------------------------------------------------------------------
+
+/// Sparse update: kept (index, value) pairs per tensor.
+#[derive(Debug, Clone)]
+pub struct SparseUpdate {
+    pub entries: Vec<Vec<(u32, f32)>>,
+}
+
+/// Keep the `frac` largest-|v| entries of each tensor.
+pub fn sparsify_topk(params: &ModelParams, frac: f32) -> SparseUpdate {
+    let entries = params
+        .tensors
+        .iter()
+        .map(|t| {
+            let k = keep_count(t.len(), frac);
+            let mut idx: Vec<u32> = (0..t.len() as u32).collect();
+            // partial selection of the top-k by |value|
+            idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                t[b as usize]
+                    .abs()
+                    .partial_cmp(&t[a as usize].abs())
+                    .unwrap()
+            });
+            let mut kept: Vec<(u32, f32)> =
+                idx[..k].iter().map(|&i| (i, t[i as usize])).collect();
+            kept.sort_by_key(|&(i, _)| i);
+            kept
+        })
+        .collect();
+    SparseUpdate { entries }
+}
+
+impl SparseUpdate {
+    /// Reconstruct a dense model: kept entries from the update, zeros
+    /// elsewhere (`reference` only supplies the tensor shapes).
+    pub fn densify(&self, reference: &ModelParams) -> ModelParams {
+        let tensors = self
+            .entries
+            .iter()
+            .zip(&reference.tensors)
+            .map(|(kept, r)| {
+                let mut t = vec![0.0f32; r.len()];
+                for &(i, v) in kept {
+                    t[i as usize] = v;
+                }
+                t
+            })
+            .collect();
+        ModelParams { tensors }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.iter().map(|e| e.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_params(seed: u64) -> ModelParams {
+        let mut m = ModelParams::zeros();
+        let mut rng = Pcg64::seed_from(seed);
+        for t in &mut m.tensors {
+            for v in t.iter_mut() {
+                *v = rng.normal_scaled(0.0, 0.05) as f32;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn raw_codec_is_identity() {
+        let m = random_params(0);
+        let r = PayloadCodec::Raw.round_trip(&m).unwrap();
+        assert_eq!(m, r);
+        assert_eq!(
+            PayloadCodec::Raw.payload_bytes(&m),
+            crate::model::params::param_count() * 4
+        );
+    }
+
+    #[test]
+    fn quant8_payload_is_about_4x_smaller() {
+        let m = random_params(1);
+        let raw = PayloadCodec::Raw.payload_bytes(&m);
+        let q = PayloadCodec::Quant8.payload_bytes(&m);
+        let ratio = raw as f64 / q as f64;
+        assert!((3.9..4.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn quant8_error_bounded_by_half_step() {
+        let m = random_params(2);
+        let r = PayloadCodec::Quant8.round_trip(&m).unwrap();
+        for (t, rt) in m.tensors.iter().zip(&r.tensors) {
+            let lo = t.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = t.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let half_step = (hi - lo) / 255.0 / 2.0 + 1e-6;
+            for (a, b) in t.iter().zip(rt) {
+                assert!((a - b).abs() <= half_step, "{a} vs {b} (±{half_step})");
+            }
+        }
+    }
+
+    #[test]
+    fn quant8_constant_tensor_safe() {
+        let mut m = ModelParams::zeros();
+        for t in &mut m.tensors {
+            for v in t.iter_mut() {
+                *v = 0.7;
+            }
+        }
+        let r = PayloadCodec::Quant8.round_trip(&m).unwrap();
+        assert!(m.max_abs_diff(&r) < 1e-6);
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes() {
+        let mut m = ModelParams::zeros();
+        // tensor 3 is b2 with 10 entries — craft known values
+        m.tensors[3] = vec![0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -2.0, 0.3, 0.01];
+        let s = sparsify_topk(&m, 0.3); // k = 3 for len 10
+        let kept: Vec<u32> = s.entries[3].iter().map(|&(i, _)| i).collect();
+        assert_eq!(kept, vec![1, 3, 7]); // |-5|, |3|, |-2|
+        let d = s.densify(&m);
+        assert_eq!(d.tensors[3][1], -5.0);
+        assert_eq!(d.tensors[3][0], 0.0); // dropped → zero
+    }
+
+    #[test]
+    fn topk_payload_scales_with_fraction() {
+        let m = random_params(3);
+        let p10 = PayloadCodec::TopK { keep_frac: 0.1 }.payload_bytes(&m);
+        let p30 = PayloadCodec::TopK { keep_frac: 0.3 }.payload_bytes(&m);
+        let raw = PayloadCodec::Raw.payload_bytes(&m);
+        // (index, value) pairs cost 8 B/entry vs 4 B dense — top-k only
+        // pays below the 50 % break-even, which is exactly its use case
+        assert!(p10 < p30 && p30 < raw);
+        // 10% keep at 8 B/entry ≈ 20% of raw
+        let frac = p10 as f64 / raw as f64;
+        assert!((0.15..0.25).contains(&frac), "{frac}");
+    }
+
+    #[test]
+    fn topk_full_fraction_round_trips_exactly() {
+        let m = random_params(4);
+        let r = PayloadCodec::TopK { keep_frac: 1.0 }.round_trip(&m).unwrap();
+        assert_eq!(m, r);
+    }
+
+    #[test]
+    fn topk_rejects_bad_fraction() {
+        let m = random_params(5);
+        assert!(PayloadCodec::TopK { keep_frac: 0.0 }.round_trip(&m).is_err());
+        assert!(PayloadCodec::TopK { keep_frac: 1.5 }.round_trip(&m).is_err());
+    }
+
+    #[test]
+    fn topk_preserves_most_energy() {
+        // gaussian tensors: top 20% of magnitudes carry the bulk of the L2
+        let m = random_params(6);
+        let r = PayloadCodec::TopK { keep_frac: 0.2 }.round_trip(&m).unwrap();
+        let norm =
+            |p: &ModelParams| -> f64 {
+                p.tensors
+                    .iter()
+                    .flat_map(|t| t.iter().map(|&v| (v as f64).powi(2)))
+                    .sum::<f64>()
+            };
+        assert!(norm(&r) > 0.4 * norm(&m));
+    }
+
+    #[test]
+    fn quantize_dequantize_shapes_preserved() {
+        let m = random_params(7);
+        let q = quantize8(&m);
+        assert_eq!(q.codes.len(), m.tensors.len());
+        let d = dequantize8(&q);
+        for (a, b) in m.tensors.iter().zip(&d.tensors) {
+            assert_eq!(a.len(), b.len());
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Rust-side model state: parameter tensors, FedAvg aggregation, and the
+//! update-compression codecs of the paper's related work [4].
+
+pub mod compress;
+pub mod params;
+
+pub use compress::PayloadCodec;
+pub use params::{weighted_average, ModelParams};

@@ -1,0 +1,217 @@
+//! Model parameters on the Rust side: a flat view of (w1, b1, w2, b2)
+//! matching `python/compile/model.py`'s PARAM_SHAPES, plus the FedAvg
+//! weighted-average aggregation (paper Eq (1) / Algorithm 2 line 20).
+//!
+//! Parameters live as one contiguous `Vec<f32>` per tensor so they convert
+//! to/from PJRT literals without reshuffling.
+
+use anyhow::{bail, Context, Result};
+
+/// Shapes of the exported model's parameters, in artifact argument order.
+/// Kept in sync with the manifest (validated by `runtime::artifacts`).
+pub const PARAM_SHAPES: [(&str, &[usize]); 4] = [
+    ("w1", &[784, 128]),
+    ("b1", &[128]),
+    ("w2", &[128, 10]),
+    ("b2", &[10]),
+];
+
+/// Total scalar count across all tensors.
+pub fn param_count() -> usize {
+    PARAM_SHAPES
+        .iter()
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum()
+}
+
+/// The model parameters as four tensors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelParams {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl ModelParams {
+    /// All-zero parameters (aggregation accumulator).
+    pub fn zeros() -> Self {
+        ModelParams {
+            tensors: PARAM_SHAPES
+                .iter()
+                .map(|(_, s)| vec![0.0; s.iter().product()])
+                .collect(),
+        }
+    }
+
+    /// Load from the AOT `init_params.f32.bin` blob (little-endian f32,
+    /// tensors concatenated in PARAM_SHAPES order).
+    pub fn from_blob(blob: &[u8]) -> Result<Self> {
+        let want = param_count() * 4;
+        if blob.len() != want {
+            bail!(
+                "init params blob is {} bytes, expected {want}",
+                blob.len()
+            );
+        }
+        let mut tensors = Vec::with_capacity(PARAM_SHAPES.len());
+        let mut off = 0usize;
+        for (_, shape) in PARAM_SHAPES {
+            let n: usize = shape.iter().product();
+            let mut t = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &blob[off + i * 4..off + i * 4 + 4];
+                t.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n * 4;
+            tensors.push(t);
+        }
+        Ok(ModelParams { tensors })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let blob = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_blob(&blob)
+    }
+
+    /// Serialize back to the blob format (round-trips `from_blob`).
+    pub fn to_blob(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(param_count() * 4);
+        for t in &self.tensors {
+            for &v in t {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// The payload size Z(w) in bytes if transmitted raw — compare with
+    /// Table 1's 0.606 MB (their model + framing; ours is 0.407 MB raw).
+    pub fn payload_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.len() * 4).sum::<usize>()
+    }
+
+    /// accumulate `weight * other` into self (fused multiply-add per
+    /// element) — the hot loop of aggregation.
+    pub fn add_scaled(&mut self, other: &ModelParams, weight: f32) {
+        for (dst, src) in self.tensors.iter_mut().zip(&other.tensors) {
+            debug_assert_eq!(dst.len(), src.len());
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += weight * s;
+            }
+        }
+    }
+
+    /// Max |a - b| across all tensors (test / convergence diagnostics).
+    pub fn max_abs_diff(&self, other: &ModelParams) -> f32 {
+        self.tensors
+            .iter()
+            .zip(&other.tensors)
+            .flat_map(|(a, b)| a.iter().zip(b).map(|(x, y)| (x - y).abs()))
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Data-weighted FedAvg aggregation:
+/// `w = Σ_i (n_i / Σn) · w_i` (paper Eq (1) solved by weighted averaging;
+/// Algorithm 2 line 20 uses the same form over subset models).
+pub fn weighted_average(models: &[(ModelParams, usize)]) -> Result<ModelParams> {
+    if models.is_empty() {
+        bail!("weighted_average of zero models");
+    }
+    let total: usize = models.iter().map(|(_, n)| n).sum();
+    if total == 0 {
+        bail!("weighted_average with zero total weight");
+    }
+    let mut acc = ModelParams::zeros();
+    for (m, n) in models {
+        acc.add_scaled(m, *n as f32 / total as f32);
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(v: f32) -> ModelParams {
+        let mut m = ModelParams::zeros();
+        for t in &mut m.tensors {
+            for x in t.iter_mut() {
+                *x = v;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn param_count_matches_python() {
+        assert_eq!(param_count(), 784 * 128 + 128 + 128 * 10 + 10);
+    }
+
+    #[test]
+    fn blob_round_trip() {
+        let mut m = filled(0.0);
+        // make it non-trivial
+        let mut v = 0.0f32;
+        for t in &mut m.tensors {
+            for x in t.iter_mut() {
+                *x = v;
+                v += 0.001;
+            }
+        }
+        let blob = m.to_blob();
+        assert_eq!(blob.len(), param_count() * 4);
+        let m2 = ModelParams::from_blob(&blob).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn from_blob_rejects_bad_size() {
+        assert!(ModelParams::from_blob(&[0u8; 16]).is_err());
+    }
+
+    #[test]
+    fn weighted_average_of_identical_models_is_identity() {
+        let m = filled(2.5);
+        let avg = weighted_average(&[(m.clone(), 600), (m.clone(), 600)]).unwrap();
+        assert!(avg.max_abs_diff(&m) < 1e-6);
+    }
+
+    #[test]
+    fn weighted_average_respects_weights() {
+        let a = filled(0.0);
+        let b = filled(4.0);
+        // weights 1:3 → 3.0
+        let avg = weighted_average(&[(a, 100), (b, 300)]).unwrap();
+        assert!((avg.tensors[0][0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equal_weights_is_plain_mean() {
+        let a = filled(1.0);
+        let b = filled(3.0);
+        let avg = weighted_average(&[(a, 600), (b, 600)]).unwrap();
+        assert!((avg.tensors[2][5] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_aggregation_errors() {
+        assert!(weighted_average(&[]).is_err());
+        assert!(weighted_average(&[(filled(1.0), 0)]).is_err());
+    }
+
+    #[test]
+    fn payload_matches_param_count() {
+        assert_eq!(filled(0.0).payload_bytes(), param_count() * 4);
+        // ballpark of the paper's Z(w) = 0.606 MB
+        let mb = filled(0.0).payload_bytes() as f64 / 1e6;
+        assert!((0.2..0.7).contains(&mb), "{mb} MB");
+    }
+
+    #[test]
+    fn add_scaled_accumulates() {
+        let mut acc = ModelParams::zeros();
+        acc.add_scaled(&filled(2.0), 0.5);
+        acc.add_scaled(&filled(4.0), 0.25);
+        assert!((acc.tensors[1][7] - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,164 @@
+//! Client compute-power heterogeneity model — paper Eq (8):
+//!
+//! ```text
+//! t_i = α · epoch_local · |D_i| / c_i
+//! ```
+//!
+//! The paper measured "about 4 s" of local training per client on its
+//! homogeneous testbed, then synthesised heterogeneous c_i. We model c_i
+//! as samples/second of training throughput and calibrate α so that the
+//! *median* client of the default profile lands at the same ≈4 s per local
+//! epoch over 600 samples.
+
+use crate::util::rng::Pcg64;
+
+/// Heterogeneity profile for drawing per-client computing power.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PowerProfile {
+    /// All clients identical (ablation; scheduling should be a no-op).
+    Homogeneous,
+    /// c ~ U(0.5, 2.0)× base — mild spread.
+    Uniform,
+    /// 75 % fast clients U(0.8, 1.6)×, 25 % stragglers U(0.15, 0.4)× —
+    /// the regime where Algorithm 1's grouping pays off (default).
+    Bimodal,
+    /// log-normal with σ = 0.6 — long straggler tail.
+    LogNormal,
+}
+
+/// Base training throughput, samples/s: 600 samples / 4 s (paper's ≈4 s
+/// per local epoch at num_clients = 100).
+pub const BASE_SAMPLES_PER_SEC: f64 = 150.0;
+
+/// Eq (8)'s α with c_i expressed in samples/s (absorbed conversion).
+pub const ALPHA: f64 = 1.0;
+
+/// One client's compute capability.
+#[derive(Debug, Clone)]
+pub struct ComputePower {
+    /// c_i — max training throughput, samples/s.
+    pub samples_per_sec: f64,
+}
+
+impl ComputePower {
+    /// Local training delay t_i (Eq 8) for `epoch_local` epochs over
+    /// `n_samples` local samples.
+    pub fn local_delay_s(&self, epoch_local: usize, n_samples: usize) -> f64 {
+        ALPHA * epoch_local as f64 * n_samples as f64 / self.samples_per_sec
+    }
+}
+
+/// Draw the fleet's compute powers for an experiment.
+pub fn draw_powers(
+    profile: PowerProfile,
+    n: usize,
+    rng: &mut Pcg64,
+) -> Vec<ComputePower> {
+    (0..n)
+        .map(|_| {
+            let rel = match profile {
+                PowerProfile::Homogeneous => 1.0,
+                PowerProfile::Uniform => rng.uniform(0.5, 2.0),
+                PowerProfile::Bimodal => {
+                    if rng.next_f64() < 0.25 {
+                        rng.uniform(0.15, 0.4)
+                    } else {
+                        rng.uniform(0.8, 1.6)
+                    }
+                }
+                PowerProfile::LogNormal => (0.6 * rng.normal()).exp(),
+            };
+            ComputePower {
+                samples_per_sec: BASE_SAMPLES_PER_SEC * rel,
+            }
+        })
+        .collect()
+}
+
+impl std::str::FromStr for PowerProfile {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "homogeneous" => Ok(PowerProfile::Homogeneous),
+            "uniform" => Ok(PowerProfile::Uniform),
+            "bimodal" => Ok(PowerProfile::Bimodal),
+            "lognormal" => Ok(PowerProfile::LogNormal),
+            other => anyhow::bail!(
+                "unknown power profile `{other}` (homogeneous|uniform|bimodal|lognormal)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn eq8_matches_paper_calibration() {
+        // median client of the homogeneous profile: 600 samples, 1 epoch ≈ 4 s
+        let c = ComputePower {
+            samples_per_sec: BASE_SAMPLES_PER_SEC,
+        };
+        assert!((c.local_delay_s(1, 600) - 4.0).abs() < 1e-12);
+        // Eq 8 scales linearly in epochs and data
+        assert_eq!(c.local_delay_s(5, 600), 5.0 * c.local_delay_s(1, 600));
+        assert_eq!(c.local_delay_s(1, 1200), 2.0 * c.local_delay_s(1, 600));
+    }
+
+    #[test]
+    fn homogeneous_profile_is_constant() {
+        let mut rng = Pcg64::seed_from(0);
+        let ps = draw_powers(PowerProfile::Homogeneous, 50, &mut rng);
+        assert!(ps
+            .iter()
+            .all(|p| p.samples_per_sec == BASE_SAMPLES_PER_SEC));
+    }
+
+    #[test]
+    fn bimodal_has_stragglers() {
+        let mut rng = Pcg64::seed_from(1);
+        let ps = draw_powers(PowerProfile::Bimodal, 400, &mut rng);
+        let slow = ps
+            .iter()
+            .filter(|p| p.samples_per_sec < 0.5 * BASE_SAMPLES_PER_SEC)
+            .count();
+        // ~25 % stragglers
+        assert!((60..140).contains(&slow), "slow={slow}");
+        let delays: Vec<f64> = ps.iter().map(|p| p.local_delay_s(1, 600)).collect();
+        // the straggler tail must dominate: max delay ≫ median delay
+        assert!(stats::max(&delays) > 2.5 * stats::median(&delays));
+    }
+
+    #[test]
+    fn profiles_are_deterministic() {
+        let a = draw_powers(PowerProfile::LogNormal, 30, &mut Pcg64::seed_from(7));
+        let b = draw_powers(PowerProfile::LogNormal, 30, &mut Pcg64::seed_from(7));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.samples_per_sec, y.samples_per_sec);
+        }
+    }
+
+    #[test]
+    fn profile_parses_from_str() {
+        assert_eq!(
+            "bimodal".parse::<PowerProfile>().unwrap(),
+            PowerProfile::Bimodal
+        );
+        assert!("nope".parse::<PowerProfile>().is_err());
+    }
+
+    #[test]
+    fn all_powers_positive() {
+        for profile in [
+            PowerProfile::Homogeneous,
+            PowerProfile::Uniform,
+            PowerProfile::Bimodal,
+            PowerProfile::LogNormal,
+        ] {
+            let ps = draw_powers(profile, 100, &mut Pcg64::seed_from(3));
+            assert!(ps.iter().all(|p| p.samples_per_sec > 0.0));
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Network & device simulation substrate: the wireless uplink channel
+//! (Eq 2–4), the OFDMA Resource-Block pool, P2P topologies/cost matrices
+//! (Eq 7) and the client compute-power model (Eq 8).
+//!
+//! The paper evaluates on a simulated 6G environment; this module is that
+//! simulator, parameterised exactly by Table 1 (see `ChannelParams`).
+
+pub mod channel;
+pub mod compute;
+pub mod rb;
+pub mod topology;
+
+pub use channel::{ChannelParams, RadioSite};
+pub use compute::{ComputePower, PowerProfile};
+pub use rb::{RbCostMatrices, RbPool};
+pub use topology::{CostMatrix, TopologyGen};

@@ -1,0 +1,215 @@
+//! OFDMA Resource-Block pool and the client×RB consumption matrices that
+//! feed the RB-allocation problem (paper Eq (5)/(6)).
+//!
+//! Every global round the CNC draws the per-RB interference I_k
+//! (~ U(1e-8, 1.1e-8) W, Table 1), evaluates each selected client's rate on
+//! each RB via Eq (2), and builds two matrices:
+//!   * `energy[i][k]` — e_i when client i transmits on RB k (Eq 4/5)
+//!   * `delay[i][k]`  — l_i^U when client i transmits on RB k (Eq 3/6)
+//! The scheduling-optimization layer then solves Eq (5) with the Hungarian
+//! algorithm or Eq (6) with bottleneck assignment (see `assign`).
+
+use crate::netsim::channel::{
+    instantaneous_rate_bps, tx_delay_s, tx_energy_j, uplink_rate_bps,
+    ChannelParams, RadioSite,
+};
+use crate::util::rng::Pcg64;
+
+/// One round's Resource-Block pool: per-RB interference draws.
+#[derive(Debug, Clone)]
+pub struct RbPool {
+    pub interference_w: Vec<f64>,
+}
+
+impl RbPool {
+    /// Draw `n_rb` interference values for this round.
+    pub fn draw(p: &ChannelParams, n_rb: usize, rng: &mut Pcg64) -> Self {
+        RbPool {
+            interference_w: (0..n_rb)
+                .map(|_| rng.uniform(p.interference_w.0, p.interference_w.1))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.interference_w.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.interference_w.is_empty()
+    }
+}
+
+/// Client×RB consumption matrices for one round.
+#[derive(Debug, Clone)]
+pub struct RbCostMatrices {
+    /// number of clients (rows)
+    pub n_clients: usize,
+    /// number of RBs (cols)
+    pub n_rb: usize,
+    /// row-major energy consumption, J
+    pub energy_j: Vec<f64>,
+    /// row-major transmission delay, s
+    pub delay_s: Vec<f64>,
+    /// row-major rate, bit/s (kept for diagnostics)
+    pub rate_bps: Vec<f64>,
+}
+
+impl RbCostMatrices {
+    pub fn energy(&self, client: usize, rb: usize) -> f64 {
+        self.energy_j[client * self.n_rb + rb]
+    }
+
+    pub fn delay(&self, client: usize, rb: usize) -> f64 {
+        self.delay_s[client * self.n_rb + rb]
+    }
+
+    pub fn rate(&self, client: usize, rb: usize) -> f64 {
+        self.rate_bps[client * self.n_rb + rb]
+    }
+}
+
+/// Build the consumption matrices for the given clients and RB pool.
+///
+/// `rng` is a per-round root; each (client, RB) pair gets its own split so
+/// the Monte-Carlo fading expectation is order-independent.
+pub fn build_cost_matrices(
+    p: &ChannelParams,
+    sites: &[RadioSite],
+    clients: &[usize],
+    pool: &RbPool,
+    rng: &Pcg64,
+) -> RbCostMatrices {
+    let n_clients = clients.len();
+    let n_rb = pool.len();
+    let mut energy = vec![0.0; n_clients * n_rb];
+    let mut delay = vec![0.0; n_clients * n_rb];
+    let mut rate = vec![0.0; n_clients * n_rb];
+    for (row, &ci) in clients.iter().enumerate() {
+        let d = sites[ci].distance_m;
+        for k in 0..n_rb {
+            let mut r = rng.split(&format!("fade/{ci}/{k}"));
+            // frequency-selective block fading: one realization per
+            // (client, RB) this round — what makes RB allocation matter
+            // (see ChannelParams::selective_fading)
+            let bps = if p.selective_fading {
+                instantaneous_rate_bps(p, d, pool.interference_w[k], &mut r)
+            } else {
+                uplink_rate_bps(p, d, pool.interference_w[k], &mut r)
+            };
+            let l = tx_delay_s(p, bps);
+            let idx = row * n_rb + k;
+            rate[idx] = bps;
+            delay[idx] = l;
+            energy[idx] = tx_energy_j(p, l);
+        }
+    }
+    RbCostMatrices {
+        n_clients,
+        n_rb,
+        energy_j: energy,
+        delay_s: delay,
+        rate_bps: rate,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::channel::draw_sites;
+
+    fn setup(n_clients: usize, n_rb: usize) -> (ChannelParams, Vec<RadioSite>, RbPool, Pcg64) {
+        let mut p = ChannelParams::default();
+        p.fading_samples = 16; // keep tests fast
+        let rng = Pcg64::seed_from(42);
+        let sites = draw_sites(&p, n_clients, &mut rng.split("sites"));
+        let pool = RbPool::draw(&p, n_rb, &mut rng.split("pool"));
+        (p, sites, pool, rng)
+    }
+
+    #[test]
+    fn pool_interference_in_range() {
+        let (_, _, pool, _) = setup(5, 10);
+        assert_eq!(pool.len(), 10);
+        for &i in &pool.interference_w {
+            assert!((1e-8..1.1e-8).contains(&i), "{i}");
+        }
+    }
+
+    #[test]
+    fn matrices_have_expected_dims_and_consistency() {
+        let (p, sites, pool, rng) = setup(6, 8);
+        let clients: Vec<usize> = (0..6).collect();
+        let m = build_cost_matrices(&p, &sites, &clients, &pool, &rng);
+        assert_eq!(m.n_clients, 6);
+        assert_eq!(m.n_rb, 8);
+        for i in 0..6 {
+            for k in 0..8 {
+                // e = P · l  and  l = Z / r  must hold element-wise
+                assert!(
+                    (m.energy(i, k) - p.tx_power_w * m.delay(i, k)).abs() < 1e-12
+                );
+                assert!(
+                    (m.delay(i, k) - p.payload_bits() / m.rate(i, k)).abs()
+                        / m.delay(i, k)
+                        < 1e-9
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn selective_fading_spreads_per_rb_costs() {
+        // with one Rayleigh realization per (client, RB), a client's
+        // best/worst RB differ substantially — the multi-user-diversity
+        // headroom the Hungarian assignment exploits (Fig 6's effect size)
+        let (p, sites, pool, rng) = setup(1, 10);
+        assert!(p.selective_fading);
+        let m = build_cost_matrices(&p, &sites, &[0], &pool, &rng);
+        let delays: Vec<f64> = (0..10).map(|k| m.delay(0, k)).collect();
+        let best = delays.iter().cloned().fold(f64::INFINITY, f64::min);
+        let worst = delays.iter().cloned().fold(0.0, f64::max);
+        assert!(worst > 1.5 * best, "spread {best}..{worst} too small");
+
+        // the smoothed-expectation mode collapses that spread to ~±5 %
+        let mut ps = p.clone();
+        ps.selective_fading = false;
+        ps.fading_samples = 256;
+        let ms = build_cost_matrices(&ps, &sites, &[0], &pool, &rng);
+        let d2: Vec<f64> = (0..10).map(|k| ms.delay(0, k)).collect();
+        let b2 = d2.iter().cloned().fold(f64::INFINITY, f64::min);
+        let w2 = d2.iter().cloned().fold(0.0, f64::max);
+        assert!(w2 < 1.2 * b2, "expectation mode should be flat: {b2}..{w2}");
+    }
+
+    #[test]
+    fn build_is_order_independent() {
+        let (p, sites, pool, rng) = setup(4, 4);
+        let a = build_cost_matrices(&p, &sites, &[0, 1, 2, 3], &pool, &rng);
+        let b = build_cost_matrices(&p, &sites, &[3, 2, 1, 0], &pool, &rng);
+        for (row_a, &ci) in [0usize, 1, 2, 3].iter().enumerate() {
+            let row_b = [3usize, 2, 1, 0].iter().position(|&x| x == ci).unwrap();
+            for k in 0..4 {
+                assert_eq!(a.rate(row_a, k), b.rate(row_b, k), "client {ci} rb {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn closer_clients_get_better_rows() {
+        let mut p = ChannelParams::default();
+        p.fading_samples = 0; // deterministic for a clean comparison
+        p.selective_fading = false;
+        let sites = vec![
+            RadioSite { distance_m: 50.0 },
+            RadioSite { distance_m: 400.0 },
+        ];
+        let mut rng = Pcg64::seed_from(1);
+        let pool = RbPool::draw(&p, 2, &mut rng);
+        let m = build_cost_matrices(&p, &sites, &[0, 1], &pool, &rng);
+        for k in 0..2 {
+            assert!(m.delay(0, k) < m.delay(1, k));
+            assert!(m.energy(0, k) < m.energy(1, k));
+        }
+    }
+}

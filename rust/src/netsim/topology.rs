@@ -1,0 +1,308 @@
+//! Peer-to-peer network topologies and transmission-consumption matrices —
+//! paper §III-B-2, Eq (7).
+//!
+//! In the peer-to-peer architecture there is no central server; the model
+//! travels client-to-client along a `trace_path`, and each hop (i, j) costs
+//! `cost_{i,j}` (delay or energy; the paper's matrices encode "relative
+//! size"). `f64::INFINITY` encodes a missing link — Algorithm 3 must route
+//! around it.
+
+use crate::util::rng::Pcg64;
+
+/// Dense symmetric cost matrix over `n` clients; `INFINITY` = no link,
+/// diagonal = 0.
+#[derive(Debug, Clone)]
+pub struct CostMatrix {
+    pub n: usize,
+    data: Vec<f64>,
+}
+
+impl CostMatrix {
+    pub fn new(n: usize) -> Self {
+        let mut data = vec![f64::INFINITY; n * n];
+        for i in 0..n {
+            data[i * n + i] = 0.0;
+        }
+        CostMatrix { n, data }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let n = rows.len();
+        let mut m = CostMatrix::new(n);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), n, "row {i} has wrong width");
+            for (j, &v) in row.iter().enumerate() {
+                m.set(i, j, v);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] = v;
+    }
+
+    pub fn set_sym(&mut self, i: usize, j: usize, v: f64) {
+        self.set(i, j, v);
+        self.set(j, i, v);
+    }
+
+    pub fn connected(&self, i: usize, j: usize) -> bool {
+        self.at(i, j).is_finite()
+    }
+
+    /// Sub-matrix over `subset` (re-indexed 0..subset.len()), the G_e the
+    /// CNC hands to Algorithm 3 for each part S_te.
+    pub fn submatrix(&self, subset: &[usize]) -> CostMatrix {
+        let k = subset.len();
+        let mut m = CostMatrix::new(k);
+        for (a, &i) in subset.iter().enumerate() {
+            for (b, &j) in subset.iter().enumerate() {
+                m.set(a, b, self.at(i, j));
+            }
+        }
+        m
+    }
+
+    /// Total cost of a path (sum over consecutive hops), Eq (7)'s objective.
+    pub fn path_cost(&self, path: &[usize]) -> f64 {
+        path.windows(2).map(|w| self.at(w[0], w[1])).sum()
+    }
+
+    /// Is the graph (finite edges) connected?
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(i) = stack.pop() {
+            for j in 0..self.n {
+                if !seen[j] && i != j && self.connected(i, j) {
+                    seen[j] = true;
+                    stack.push(j);
+                }
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+}
+
+/// Topology generators for the P2P experiments.
+pub struct TopologyGen;
+
+impl TopologyGen {
+    /// Fully-connected with costs ~ U(lo, hi), symmetric — experiment 2's
+    /// 8-client setting ("all clients are connected to each other").
+    pub fn full(n: usize, lo: f64, hi: f64, rng: &mut Pcg64) -> CostMatrix {
+        let mut m = CostMatrix::new(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                m.set_sym(i, j, rng.uniform(lo, hi));
+            }
+        }
+        m
+    }
+
+    /// Random partial connectivity: each edge kept with probability
+    /// `p_edge`; a random Hamiltonian cycle is forced in first so the
+    /// graph stays connected (paths must exist for Algorithm 3).
+    pub fn partial(
+        n: usize,
+        lo: f64,
+        hi: f64,
+        p_edge: f64,
+        rng: &mut Pcg64,
+    ) -> CostMatrix {
+        let mut m = CostMatrix::new(n);
+        // backbone ring over a random permutation keeps it connected
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for w in 0..n {
+            let (i, j) = (order[w], order[(w + 1) % n]);
+            if i != j {
+                m.set_sym(i, j, rng.uniform(lo, hi));
+            }
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if !m.connected(i, j) && rng.next_f64() < p_edge {
+                    m.set_sym(i, j, rng.uniform(lo, hi));
+                }
+            }
+        }
+        m
+    }
+
+    /// Geometric topology: clients placed uniformly in a square of side
+    /// `side_m`; cost = Euclidean distance, links longer than `range_m`
+    /// removed (but the backbone ring in distance order is kept). Used by
+    /// the Fig 11 scaling study so cost correlates with geometry.
+    pub fn geometric(n: usize, side_m: f64, range_m: f64, rng: &mut Pcg64) -> CostMatrix {
+        let pts: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.uniform(0.0, side_m), rng.uniform(0.0, side_m)))
+            .collect();
+        let mut m = CostMatrix::new(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d = ((pts[i].0 - pts[j].0).powi(2)
+                    + (pts[i].1 - pts[j].1).powi(2))
+                .sqrt();
+                if d <= range_m {
+                    m.set_sym(i, j, d);
+                }
+            }
+        }
+        if !m.is_connected() {
+            // add nearest-neighbour links until connected
+            let mut extra: Vec<(f64, usize, usize)> = Vec::new();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if !m.connected(i, j) {
+                        let d = ((pts[i].0 - pts[j].0).powi(2)
+                            + (pts[i].1 - pts[j].1).powi(2))
+                        .sqrt();
+                        extra.push((d, i, j));
+                    }
+                }
+            }
+            extra.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for (d, i, j) in extra {
+                if m.is_connected() {
+                    break;
+                }
+                m.set_sym(i, j, d);
+            }
+        }
+        m
+    }
+
+    /// The paper's experiment-1 style designed matrix for 20 clients:
+    /// "the numerical value represents the relative size". We reproduce a
+    /// designed matrix deterministically from a seed with relative costs
+    /// in [1, 10] and ~15 % missing links.
+    pub fn designed_20(seed: u64) -> CostMatrix {
+        let mut rng = Pcg64::new(seed, 0x20);
+        Self::partial(20, 1.0, 10.0, 0.85, &mut rng)
+    }
+
+    /// Experiment-2 style designed matrix for 8 clients, fully connected.
+    pub fn designed_8(seed: u64) -> CostMatrix {
+        let mut rng = Pcg64::new(seed, 0x8);
+        Self::full(8, 1.0, 10.0, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_matrix_diag_zero_rest_inf() {
+        let m = CostMatrix::new(3);
+        for i in 0..3 {
+            for j in 0..3 {
+                if i == j {
+                    assert_eq!(m.at(i, j), 0.0);
+                } else {
+                    assert!(m.at(i, j).is_infinite());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_topology_connected_and_symmetric() {
+        let mut rng = Pcg64::seed_from(0);
+        let m = TopologyGen::full(10, 1.0, 10.0, &mut rng);
+        assert!(m.is_connected());
+        for i in 0..10 {
+            for j in 0..10 {
+                assert_eq!(m.at(i, j), m.at(j, i));
+                if i != j {
+                    assert!((1.0..10.0).contains(&m.at(i, j)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partial_topology_stays_connected() {
+        for seed in 0..20 {
+            let mut rng = Pcg64::seed_from(seed);
+            let m = TopologyGen::partial(15, 1.0, 5.0, 0.1, &mut rng);
+            assert!(m.is_connected(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn partial_topology_has_missing_links() {
+        let mut rng = Pcg64::seed_from(3);
+        let m = TopologyGen::partial(20, 1.0, 5.0, 0.1, &mut rng);
+        let missing = (0..20)
+            .flat_map(|i| (0..20).map(move |j| (i, j)))
+            .filter(|&(i, j)| i != j && !m.connected(i, j))
+            .count();
+        assert!(missing > 0);
+    }
+
+    #[test]
+    fn geometric_topology_connected() {
+        for seed in 0..10 {
+            let mut rng = Pcg64::seed_from(seed);
+            let m = TopologyGen::geometric(25, 1000.0, 300.0, &mut rng);
+            assert!(m.is_connected(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn submatrix_reindexes() {
+        let mut m = CostMatrix::new(4);
+        m.set_sym(1, 3, 7.0);
+        let s = m.submatrix(&[1, 3]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.at(0, 1), 7.0);
+        assert_eq!(s.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn path_cost_sums_hops() {
+        let mut m = CostMatrix::new(3);
+        m.set(0, 1, 2.0);
+        m.set(1, 2, 3.5);
+        assert_eq!(m.path_cost(&[0, 1, 2]), 5.5);
+        assert_eq!(m.path_cost(&[0]), 0.0);
+        assert!(m.path_cost(&[0, 2]).is_infinite());
+    }
+
+    #[test]
+    fn designed_matrices_deterministic() {
+        let a = TopologyGen::designed_20(5);
+        let b = TopologyGen::designed_20(5);
+        for i in 0..20 {
+            for j in 0..20 {
+                assert!(
+                    a.at(i, j) == b.at(i, j)
+                        || (a.at(i, j).is_infinite() && b.at(i, j).is_infinite())
+                );
+            }
+        }
+        assert!(a.is_connected());
+        assert!(TopologyGen::designed_8(1).is_connected());
+    }
+
+    #[test]
+    fn disconnected_graph_detected() {
+        let m = CostMatrix::new(4); // no edges at all
+        assert!(!m.is_connected());
+        let empty = CostMatrix::new(0);
+        assert!(empty.is_connected());
+    }
+}

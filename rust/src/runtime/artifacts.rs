@@ -1,0 +1,255 @@
+//! Artifact manifest: metadata for the AOT-compiled HLO modules produced
+//! by `python/compile/aot.py` (`make artifacts`).
+//!
+//! The manifest (`artifacts/manifest.json`) records each entry point's
+//! positional argument and output tensors (name, dtype, shape). The
+//! runtime validates every buffer it feeds against this — a shape drift
+//! between the Python model and the Rust coordinator fails loudly at load
+//! time instead of producing garbage.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::params::{ModelParams, PARAM_SHAPES};
+use crate::util::json::Json;
+
+/// Supported element types of artifact tensors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype `{other}` in manifest"),
+        }
+    }
+}
+
+/// One tensor's metadata.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        Ok(TensorMeta {
+            name: j.req("name")?.as_str()?.to_string(),
+            dtype: DType::parse(j.req("dtype")?.as_str()?)?,
+            shape: j.req("shape")?.as_usize_vec()?,
+        })
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// The loaded artifact store.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub batch_size: usize,
+    pub param_count: usize,
+    init_params_file: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Json::parse_file(&dir.join("manifest.json"))
+            .context("loading artifact manifest (run `make artifacts`?)")?;
+        let model = manifest.req("model")?;
+        let batch_size = model.req("batch_size")?.as_usize()?;
+        let param_count = model.req("param_count")?.as_usize()?;
+
+        // cross-check the Python model's parameter shapes against ours
+        let shapes = model.req("param_shapes")?.as_arr()?;
+        if shapes.len() != PARAM_SHAPES.len() {
+            bail!("manifest has {} param tensors, crate expects {}",
+                shapes.len(), PARAM_SHAPES.len());
+        }
+        for (j, (name, want)) in shapes.iter().zip(PARAM_SHAPES) {
+            let got = j.as_usize_vec()?;
+            if got != want {
+                bail!("param `{name}` shape mismatch: manifest {got:?}, crate {want:?}");
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in manifest.req("artifacts")?.as_obj()? {
+            let file = dir.join(meta.req("file")?.as_str()?);
+            if !file.exists() {
+                bail!("artifact file missing: {}", file.display());
+            }
+            let args = meta
+                .req("args")?
+                .as_arr()?
+                .iter()
+                .map(TensorMeta::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = meta
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorMeta::parse)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file,
+                    args,
+                    outputs,
+                },
+            );
+        }
+
+        let init_params_file =
+            dir.join(manifest.req("init_params")?.req("file")?.as_str()?);
+        if !init_params_file.exists() {
+            bail!("init params blob missing: {}", init_params_file.display());
+        }
+
+        Ok(ArtifactStore {
+            dir: dir.to_path_buf(),
+            artifacts,
+            batch_size,
+            param_count,
+            init_params_file,
+        })
+    }
+
+    /// Default location relative to the repo root / cwd, overridable via
+    /// `CNC_FL_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CNC_FL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact `{name}`"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    /// The deterministic initial global model (seed 0 on the Python side).
+    pub fn init_params(&self) -> Result<ModelParams> {
+        ModelParams::load(&self.init_params_file)
+    }
+
+    /// The `train_epoch_{n}` variant for a per-client dataset size, if
+    /// exported.
+    pub fn train_epoch_name(&self, samples_per_client: usize) -> Result<String> {
+        let name = format!("train_epoch_{samples_per_client}");
+        if !self.has(&name) {
+            bail!(
+                "no train_epoch artifact for {samples_per_client} samples/client \
+                 (exported: {:?}); adjust python/compile/aot.py EPOCH_VARIANTS",
+                self.artifacts.keys().collect::<Vec<_>>()
+            );
+        }
+        Ok(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let store = ArtifactStore::load(&dir).unwrap();
+        assert_eq!(store.batch_size, 10);
+        assert_eq!(store.param_count, crate::model::params::param_count());
+        for name in ["train_step", "train_epoch_600", "eval_1000"] {
+            assert!(store.has(name), "{name} missing");
+        }
+        let ts = store.meta("train_step").unwrap();
+        assert_eq!(ts.args.len(), 7);
+        assert_eq!(ts.args[4].shape, vec![10, 784]);
+        assert_eq!(ts.args[5].dtype, DType::I32);
+        assert_eq!(ts.outputs.len(), 5);
+    }
+
+    #[test]
+    fn init_params_load() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let store = ArtifactStore::load(&dir).unwrap();
+        let p = store.init_params().unwrap();
+        assert_eq!(p.tensors[0].len(), 784 * 128);
+        // He init: w1 std ≈ sqrt(2/784) ≈ 0.0505
+        let std: f32 = {
+            let t = &p.tensors[0];
+            let mean: f32 = t.iter().sum::<f32>() / t.len() as f32;
+            (t.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / t.len() as f32)
+                .sqrt()
+        };
+        assert!((std - 0.0505).abs() < 0.01, "std={std}");
+    }
+
+    #[test]
+    fn train_epoch_name_resolution() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let store = ArtifactStore::load(&dir).unwrap();
+        assert_eq!(
+            store.train_epoch_name(600).unwrap(),
+            "train_epoch_600"
+        );
+        assert!(store.train_epoch_name(123).is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactStore::load(Path::new("/nonexistent/xyz")).is_err());
+    }
+
+    #[test]
+    fn tensor_meta_parses_and_validates() {
+        let j = Json::parse(
+            r#"{"name": "x", "dtype": "float32", "shape": [10, 784]}"#,
+        )
+        .unwrap();
+        let t = TensorMeta::parse(&j).unwrap();
+        assert_eq!(t.elements(), 7840);
+        let bad = Json::parse(r#"{"name": "x", "dtype": "f64", "shape": []}"#).unwrap();
+        assert!(TensorMeta::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,382 @@
+//! PJRT execution engine: loads `artifacts/*.hlo.txt`, compiles each once
+//! on the CPU PJRT client, caches the executables, and runs them from the
+//! coordinator's hot path.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` for why), parsed
+//! with `HloModuleProto::from_text_file`. Outputs are 1-tuples-or-more
+//! (lowered with `return_tuple=True`) and unpacked with
+//! `Literal::to_tuple`.
+//!
+//! Threading: `PjRtClient` is `Rc`-based (not `Send`), so the engine is
+//! confined to the coordinator thread. That is sound for this system —
+//! client "parallelism" in the simulation is *simulated time* (Eq 8 /
+//! Eq 3), not wall time, and XLA's CPU backend already multithreads each
+//! execution internally.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::params::{ModelParams, PARAM_SHAPES};
+use crate::runtime::artifacts::{ArtifactStore, DType, TensorMeta};
+
+/// A typed host-side tensor heading into PJRT.
+#[derive(Debug, Clone)]
+pub enum HostTensor<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl<'a> HostTensor<'a> {
+    fn matches(&self, meta: &TensorMeta) -> bool {
+        match self {
+            HostTensor::F32(data, shape) => {
+                meta.dtype == DType::F32
+                    && *shape == meta.shape.as_slice()
+                    && data.len() == meta.elements()
+            }
+            HostTensor::I32(data, shape) => {
+                meta.dtype == DType::I32
+                    && *shape == meta.shape.as_slice()
+                    && data.len() == meta.elements()
+            }
+            HostTensor::ScalarF32(_) => {
+                meta.dtype == DType::F32 && meta.shape.is_empty()
+            }
+            HostTensor::ScalarI32(_) => {
+                meta.dtype == DType::I32 && meta.shape.is_empty()
+            }
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            HostTensor::F32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            HostTensor::I32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            HostTensor::ScalarF32(v) => xla::Literal::scalar(*v),
+            HostTensor::ScalarI32(v) => xla::Literal::scalar(*v),
+        })
+    }
+
+    /// Upload straight to a Rust-owned device buffer.
+    ///
+    /// The engine executes via `execute_b` over these, NOT via
+    /// `execute::<Literal>`: the vendored crate's C++ `execute` shim
+    /// creates its input device buffers with `.release()` and never frees
+    /// them — every call leaks its full input size (≈ 7 MB/exec here,
+    /// tens of GB over a figure sweep; found via OOM, see EXPERIMENTS.md
+    /// §Perf). `execute_b` borrows caller-owned `PjRtBuffer`s, which this
+    /// wrapper frees on drop. Bonus: skips the host-literal intermediate
+    /// copy entirely.
+    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        Ok(match self {
+            HostTensor::F32(data, shape) => {
+                client.buffer_from_host_buffer(data, shape, None)?
+            }
+            HostTensor::I32(data, shape) => {
+                client.buffer_from_host_buffer(data, shape, None)?
+            }
+            HostTensor::ScalarF32(v) => {
+                client.buffer_from_host_buffer(&[*v], &[], None)?
+            }
+            HostTensor::ScalarI32(v) => {
+                client.buffer_from_host_buffer(&[*v], &[], None)?
+            }
+        })
+    }
+}
+
+/// Execution statistics (perf diagnostics, §Perf).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub executions: usize,
+    pub compile_count: usize,
+    pub exec_wall_s: f64,
+    pub compile_wall_s: f64,
+}
+
+/// The PJRT engine. One per process (CPU client); executables are compiled
+/// lazily per artifact and cached.
+pub struct Engine {
+    client: xla::PjRtClient,
+    store: ArtifactStore,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    pub fn new(store: ArtifactStore) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            store,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    /// Open the default artifact directory and build an engine.
+    pub fn from_default_dir() -> Result<Self> {
+        let dir = ArtifactStore::default_dir();
+        Self::new(ArtifactStore::load(&dir)?)
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let meta = self.store.meta(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", meta.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact `{name}`"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compile_count += 1;
+            s.compile_wall_s += dt;
+        }
+        let exe = Rc::new(exe);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (avoids first-use latency inside the
+    /// training loop).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with shape-validated inputs; returns the output
+    /// tuple as literals.
+    pub fn exec(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<xla::Literal>> {
+        let meta = self.store.meta(name)?;
+        if inputs.len() != meta.args.len() {
+            bail!(
+                "artifact `{name}` takes {} args, got {}",
+                meta.args.len(),
+                inputs.len()
+            );
+        }
+        for (i, (input, am)) in inputs.iter().zip(&meta.args).enumerate() {
+            if !input.matches(am) {
+                bail!(
+                    "artifact `{name}` arg {i} (`{}`) expects {:?}{:?}, got {:?}",
+                    am.name,
+                    am.dtype,
+                    am.shape,
+                    input
+                        .to_literal()
+                        .ok()
+                        .and_then(|l| l.shape().ok())
+                );
+            }
+        }
+        let exe = self.executable(name)?;
+        // Rust-owned device buffers + execute_b — see HostTensor::to_buffer
+        // for why execute::<Literal> must not be used (input-buffer leak in
+        // the crate's C++ shim).
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| t.to_buffer(&self.client))
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .with_context(|| format!("executing `{name}`"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let outs = tuple.to_tuple().context("unpacking output tuple")?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.exec_wall_s += t0.elapsed().as_secs_f64();
+        }
+        if outs.len() != meta.outputs.len() {
+            bail!(
+                "artifact `{name}` declared {} outputs, produced {}",
+                meta.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    // -- typed convenience wrappers over the model entry points ----------
+
+    /// One local epoch on pre-batched data; returns updated params and the
+    /// mean loss.
+    pub fn train_epoch(
+        &self,
+        artifact: &str,
+        params: &ModelParams,
+        x: &[f32],
+        y: &[i32],
+        nb: usize,
+        lr: f32,
+    ) -> Result<(ModelParams, f32)> {
+        let b = self.store.batch_size;
+        let xs = [nb, b, 784];
+        let ys = [nb, b];
+        let mut inputs = param_inputs(params);
+        inputs.push(HostTensor::F32(x, &xs));
+        inputs.push(HostTensor::I32(y, &ys));
+        inputs.push(HostTensor::ScalarF32(lr));
+        let outs = self.exec(artifact, &inputs)?;
+        unpack_params_and_scalar(outs)
+    }
+
+    /// One SGD step on a single batch.
+    pub fn train_step(
+        &self,
+        params: &ModelParams,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(ModelParams, f32)> {
+        let b = self.store.batch_size;
+        let xs = [b, 784];
+        let ys = [b];
+        let mut inputs = param_inputs(params);
+        inputs.push(HostTensor::F32(x, &xs));
+        inputs.push(HostTensor::I32(y, &ys));
+        inputs.push(HostTensor::ScalarF32(lr));
+        let outs = self.exec("train_step", &inputs)?;
+        unpack_params_and_scalar(outs)
+    }
+
+    /// Correct-prediction count on one eval chunk.
+    pub fn eval_chunk(
+        &self,
+        artifact: &str,
+        params: &ModelParams,
+        x: &[f32],
+        y: &[i32],
+        chunk: usize,
+    ) -> Result<i32> {
+        let xs = [chunk, 784];
+        let ys = [chunk];
+        let mut inputs = param_inputs(params);
+        inputs.push(HostTensor::F32(x, &xs));
+        inputs.push(HostTensor::I32(y, &ys));
+        let outs = self.exec(artifact, &inputs)?;
+        outs[0]
+            .to_vec::<i32>()?
+            .first()
+            .copied()
+            .context("empty eval output")
+    }
+
+    /// Argmax predictions for a chunk (quickstart example).
+    pub fn predict(
+        &self,
+        artifact: &str,
+        params: &ModelParams,
+        x: &[f32],
+        chunk: usize,
+    ) -> Result<Vec<i32>> {
+        let xs = [chunk, 784];
+        let mut inputs = param_inputs(params);
+        inputs.push(HostTensor::F32(x, &xs));
+        let outs = self.exec(artifact, &inputs)?;
+        Ok(outs[0].to_vec::<i32>()?)
+    }
+}
+
+fn param_inputs(params: &ModelParams) -> Vec<HostTensor<'_>> {
+    params
+        .tensors
+        .iter()
+        .zip(PARAM_SHAPES)
+        .map(|(t, (_, shape))| HostTensor::F32(t, shape))
+        .collect()
+}
+
+fn unpack_params_and_scalar(outs: Vec<xla::Literal>) -> Result<(ModelParams, f32)> {
+    if outs.len() != PARAM_SHAPES.len() + 1 {
+        bail!("expected {} outputs, got {}", PARAM_SHAPES.len() + 1, outs.len());
+    }
+    let mut tensors = Vec::with_capacity(PARAM_SHAPES.len());
+    for (lit, (name, shape)) in outs.iter().zip(PARAM_SHAPES) {
+        let v = lit
+            .to_vec::<f32>()
+            .with_context(|| format!("reading output `{name}`"))?;
+        let want: usize = shape.iter().product();
+        if v.len() != want {
+            bail!("output `{name}` has {} elements, expected {want}", v.len());
+        }
+        tensors.push(v);
+    }
+    let loss = outs[PARAM_SHAPES.len()].get_first_element::<f32>()?;
+    Ok((ModelParams { tensors }, loss))
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests that don't need artifacts; integration tests with real
+    //! PJRT execution live in `rust/tests/runtime_integration.rs`.
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_validation() {
+        let meta = TensorMeta {
+            name: "x".into(),
+            dtype: DType::F32,
+            shape: vec![2, 3],
+        };
+        let data = [0.0f32; 6];
+        assert!(HostTensor::F32(&data, &[2, 3]).matches(&meta));
+        assert!(!HostTensor::F32(&data, &[3, 2]).matches(&meta));
+        assert!(!HostTensor::F32(&data[..4], &[2, 3]).matches(&meta));
+        let idata = [0i32; 6];
+        assert!(!HostTensor::I32(&idata, &[2, 3]).matches(&meta));
+        let smeta = TensorMeta {
+            name: "lr".into(),
+            dtype: DType::F32,
+            shape: vec![],
+        };
+        assert!(HostTensor::ScalarF32(0.1).matches(&smeta));
+        assert!(!HostTensor::ScalarI32(1).matches(&smeta));
+    }
+
+    #[test]
+    fn literal_conversion_round_trip() {
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = HostTensor::F32(&data, &[2, 3]).to_literal().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data.to_vec());
+        let s = HostTensor::ScalarI32(42).to_literal().unwrap();
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 42);
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: artifact manifest loading (`artifacts`) and the cached
+//! compile-and-execute engine (`executor`). Python never runs here — only
+//! the HLO text it produced at build time.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactStore, DType, TensorMeta};
+pub use executor::{Engine, HostTensor};

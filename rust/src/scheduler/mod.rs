@@ -1,0 +1,10 @@
+//! Client scheduling: Algorithm 1 power grouping (traditional), P2P
+//! balanced-delay partitioning (Algorithm 2 line 3), and the FedAvg
+//! uniform-sampling baseline.
+
+pub mod fair;
+pub mod partition;
+pub mod power;
+pub mod random;
+
+pub use power::{algorithm1, FleetInfo, PowerGroups};

@@ -1,0 +1,183 @@
+//! P2P subset partitioning — Algorithm 2 line 3: "devices in each layer of
+//! the CNC collaborate to divide the E parts S_te", such that "for each
+//! S_te, the sum of local training delay is similar".
+//!
+//! Implemented as LPT (Longest-Processing-Time-first) makespan balancing:
+//! clients sorted by delay descending, each assigned to the part with the
+//! smallest current delay sum — the classic 4/3-approximation, plenty for
+//! the ≤ 20-client fleets of the paper's P2P experiments.
+//!
+//! The second P2P experiment instead splits by *power tier* ("the
+//! computing power resources of the main part are superior") —
+//! `power_tier_split` reproduces that.
+
+use crate::util::rng::Pcg64;
+
+/// Balance `delays` into `e` parts with similar delay sums (LPT).
+/// Returns part → client ids. Every part is non-empty when `e ≤ n`.
+pub fn balanced_delay_parts(delays: &[f64], e: usize) -> Vec<Vec<usize>> {
+    let n = delays.len();
+    assert!(e >= 1 && e <= n, "need 1 <= E({e}) <= n({n})");
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        delays[b]
+            .partial_cmp(&delays[a])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); e];
+    let mut sums = vec![0.0f64; e];
+    // seed each part with one of the e largest jobs so none stays empty
+    for (k, &i) in order.iter().take(e).enumerate() {
+        parts[k].push(i);
+        sums[k] += delays[i];
+    }
+    for &i in order.iter().skip(e) {
+        let k = (0..e)
+            .min_by(|&a, &b| sums[a].partial_cmp(&sums[b]).unwrap())
+            .unwrap();
+        parts[k].push(i);
+        sums[k] += delays[i];
+    }
+    parts
+}
+
+/// Experiment-2 style split: the `main_size` *fastest* clients form the
+/// main part, the rest the secondary part.
+pub fn power_tier_split(delays: &[f64], main_size: usize) -> (Vec<usize>, Vec<usize>) {
+    let n = delays.len();
+    assert!(main_size >= 1 && main_size < n);
+    let mut order: Vec<usize> = (0..n).collect();
+    // ascending delay = descending power
+    order.sort_by(|&a, &b| {
+        delays[a]
+            .partial_cmp(&delays[b])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let main = order[..main_size].to_vec();
+    let rest = order[main_size..].to_vec();
+    (main, rest)
+}
+
+/// Baseline: random parts of equal size (what "divide on average" without
+/// power awareness looks like).
+pub fn random_parts(n: usize, e: usize, rng: &mut Pcg64) -> Vec<Vec<usize>> {
+    assert!(e >= 1 && e <= n);
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let base = n / e;
+    let extra = n % e;
+    let mut parts = Vec::with_capacity(e);
+    let mut off = 0;
+    for k in 0..e {
+        let len = base + usize::from(k < extra);
+        parts.push(order[off..off + len].to_vec());
+        off += len;
+    }
+    parts
+}
+
+/// Max part-delay-sum minus min part-delay-sum (balance quality metric).
+pub fn imbalance(delays: &[f64], parts: &[Vec<usize>]) -> f64 {
+    let sums: Vec<f64> = parts
+        .iter()
+        .map(|p| p.iter().map(|&i| delays[i]).sum())
+        .collect();
+    crate::util::stats::max(&sums) - crate::util::stats::min(&sums)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, gen_usize, prop_assert, GenPair};
+    use crate::util::stats;
+
+    fn delays(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::seed_from(seed);
+        (0..n).map(|_| rng.uniform(1.0, 20.0)).collect()
+    }
+
+    #[test]
+    fn parts_cover_everyone_exactly_once() {
+        let d = delays(20, 0);
+        let parts = balanced_delay_parts(&d, 4);
+        assert_eq!(parts.len(), 4);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, (0..20).collect::<Vec<_>>());
+        assert!(parts.iter().all(|p| !p.is_empty()));
+    }
+
+    #[test]
+    fn lpt_beats_random_balance() {
+        let d = delays(20, 1);
+        let lpt = balanced_delay_parts(&d, 4);
+        let mut rng = Pcg64::seed_from(2);
+        let rnd = random_parts(20, 4, &mut rng);
+        assert!(imbalance(&d, &lpt) <= imbalance(&d, &rnd) + 1e-9);
+    }
+
+    #[test]
+    fn lpt_imbalance_bounded_by_largest_job() {
+        check(
+            50,
+            GenPair(gen_usize(4..40), gen_usize(0..10_000)),
+            |&(n, seed)| {
+                let d = delays(n, seed as u64);
+                let e = (n / 4).max(1);
+                let parts = balanced_delay_parts(&d, e);
+                // classic LPT property: imbalance ≤ max job
+                prop_assert(
+                    imbalance(&d, &parts) <= stats::max(&d) + 1e-9,
+                    "imbalance bounded by the largest delay",
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn single_part_gets_everything() {
+        let d = delays(7, 3);
+        let parts = balanced_delay_parts(&d, 1);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].len(), 7);
+    }
+
+    #[test]
+    fn e_equals_n_gives_singletons() {
+        let d = delays(6, 4);
+        let parts = balanced_delay_parts(&d, 6);
+        assert!(parts.iter().all(|p| p.len() == 1));
+    }
+
+    #[test]
+    fn power_tier_split_puts_fastest_in_main() {
+        let d = vec![5.0, 1.0, 3.0, 9.0, 2.0, 4.0, 8.0, 7.0];
+        let (main, rest) = power_tier_split(&d, 6);
+        assert_eq!(main.len(), 6);
+        assert_eq!(rest.len(), 2);
+        let worst_main = main.iter().map(|&i| d[i]).fold(0.0f64, f64::max);
+        let best_rest = rest.iter().map(|&i| d[i]).fold(f64::INFINITY, f64::min);
+        assert!(worst_main <= best_rest);
+        // experiment 2: main = 6 of 8, rest must be the two stragglers
+        assert_eq!({ let mut r = rest.clone(); r.sort(); r }, vec![3, 6]);
+    }
+
+    #[test]
+    fn random_parts_partition_everything() {
+        let mut rng = Pcg64::seed_from(5);
+        let parts = random_parts(15, 4, &mut rng);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, (0..15).collect::<Vec<_>>());
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 4, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_parts_panics() {
+        balanced_delay_parts(&[1.0, 2.0], 3);
+    }
+}

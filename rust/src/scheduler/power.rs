@@ -1,0 +1,284 @@
+//! **Algorithm 1** — client scheduling strategy based on computing power
+//! (traditional architecture).
+//!
+//! ```text
+//! 1. t_i = α · epoch_local · |D_i| / c_i            for every client
+//! 2. sort {t_i} in descending order
+//! 3. divide the U clients into m parts U_k
+//! 4. pick part k with probability P_k = N_k / Σ N_k   (N_k = Σ_{i∈U_k} |D_i|)
+//! 5. sample n clients from U_k with P_i = |D_i| / N_k  (w/o replacement)
+//! ```
+//!
+//! Because each part holds clients of *similar training delay* (they are
+//! adjacent in the sorted order), every round's cohort S_t satisfies
+//! Eq (9): t_max − t_min < ε, and nobody waits long for a straggler.
+
+use crate::netsim::compute::ComputePower;
+use crate::util::rng::Pcg64;
+
+/// Precomputed per-client scheduling inputs.
+#[derive(Debug, Clone)]
+pub struct FleetInfo {
+    /// t_i, seconds (Eq 8)
+    pub delays_s: Vec<f64>,
+    /// |D_i|
+    pub data_sizes: Vec<usize>,
+}
+
+impl FleetInfo {
+    pub fn new(
+        powers: &[ComputePower],
+        data_sizes: &[usize],
+        epoch_local: usize,
+    ) -> Self {
+        assert_eq!(powers.len(), data_sizes.len());
+        let delays_s = powers
+            .iter()
+            .zip(data_sizes)
+            .map(|(p, &n)| p.local_delay_s(epoch_local, n))
+            .collect();
+        FleetInfo {
+            delays_s,
+            data_sizes: data_sizes.to_vec(),
+        }
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.delays_s.len()
+    }
+}
+
+/// The power-grouping state: client ids sorted by delay (descending) and
+/// cut into `m` contiguous parts — built once per experiment (computing
+/// power is static in the paper's simulation; rebuild if it drifts).
+#[derive(Debug, Clone)]
+pub struct PowerGroups {
+    /// parts[k] = client ids, adjacent in sorted-delay order
+    pub parts: Vec<Vec<usize>>,
+}
+
+impl PowerGroups {
+    /// Steps 1–5 of Algorithm 1 (the static part).
+    pub fn build(fleet: &FleetInfo, m: usize) -> Self {
+        let u = fleet.num_clients();
+        assert!(m >= 1 && m <= u, "need 1 <= m({m}) <= U({u})");
+        let mut order: Vec<usize> = (0..u).collect();
+        // descending delay; index tie-break keeps it deterministic
+        order.sort_by(|&a, &b| {
+            fleet.delays_s[b]
+                .partial_cmp(&fleet.delays_s[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        // contiguous cut into m parts, sizes as equal as possible
+        let base = u / m;
+        let extra = u % m;
+        let mut parts = Vec::with_capacity(m);
+        let mut off = 0;
+        for k in 0..m {
+            let len = base + usize::from(k < extra);
+            parts.push(order[off..off + len].to_vec());
+            off += len;
+        }
+        PowerGroups { parts }
+    }
+
+    /// Steps 6–8: draw one round's cohort S_t of size `n`.
+    ///
+    /// Part k is chosen ∝ its data volume N_k; clients within the part are
+    /// drawn without replacement ∝ |D_i|. If the chosen part has fewer
+    /// than `n` clients, neighbouring parts (next in sorted order, i.e.
+    /// closest delay) top the cohort up — keeps Eq (9) as tight as the
+    /// grouping allows while honouring the requested cohort size.
+    pub fn sample(&self, fleet: &FleetInfo, n: usize, rng: &mut Pcg64) -> Vec<usize> {
+        assert!(n >= 1 && n <= fleet.num_clients());
+        let part_weights: Vec<f64> = self
+            .parts
+            .iter()
+            .map(|p| p.iter().map(|&i| fleet.data_sizes[i] as f64).sum())
+            .collect();
+        let k = rng.weighted_index(&part_weights);
+        // consume parts in a window [lo, hi] that grows outward from k,
+        // preferring the forward (faster-clients) direction, so we never
+        // revisit a part
+        let mut cohort = Vec::with_capacity(n);
+        let (mut lo, mut hi) = (k, k);
+        let mut part_cursor = k;
+        loop {
+            let part = &self.parts[part_cursor];
+            let take = (n - cohort.len()).min(part.len());
+            if take == part.len() {
+                cohort.extend_from_slice(part);
+            } else {
+                let weights: Vec<f64> =
+                    part.iter().map(|&i| fleet.data_sizes[i] as f64).collect();
+                let picks = rng.weighted_sample_distinct(&weights, take);
+                cohort.extend(picks.into_iter().map(|j| part[j]));
+            }
+            if cohort.len() == n {
+                return cohort;
+            }
+            // expand to the nearest-delay unconsumed neighbouring part
+            if hi + 1 < self.parts.len() {
+                hi += 1;
+                part_cursor = hi;
+            } else {
+                lo = lo.checked_sub(1).expect("cohort larger than fleet");
+                part_cursor = lo;
+            }
+        }
+    }
+}
+
+/// One-call convenience: Algorithm 1 end-to-end.
+pub fn algorithm1(
+    fleet: &FleetInfo,
+    m: usize,
+    n: usize,
+    rng: &mut Pcg64,
+) -> Vec<usize> {
+    PowerGroups::build(fleet, m).sample(fleet, n, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::compute::{draw_powers, PowerProfile};
+    use crate::util::propcheck::{check, gen_usize, prop_assert, GenPair};
+    use crate::util::stats;
+
+    fn fleet(u: usize, seed: u64) -> FleetInfo {
+        let mut rng = Pcg64::seed_from(seed);
+        let powers = draw_powers(PowerProfile::Bimodal, u, &mut rng);
+        FleetInfo::new(&powers, &vec![600; u], 1)
+    }
+
+    #[test]
+    fn groups_are_contiguous_in_delay_order() {
+        let f = fleet(100, 0);
+        let g = PowerGroups::build(&f, 10);
+        assert_eq!(g.parts.len(), 10);
+        assert_eq!(g.parts.iter().map(|p| p.len()).sum::<usize>(), 100);
+        // every client appears exactly once
+        let mut all: Vec<usize> = g.parts.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+        // part k's slowest member is ≥ part k+1's fastest member
+        for k in 0..9 {
+            let min_k = stats::min(
+                &g.parts[k].iter().map(|&i| f.delays_s[i]).collect::<Vec<_>>(),
+            );
+            let max_next = stats::max(
+                &g.parts[k + 1]
+                    .iter()
+                    .map(|&i| f.delays_s[i])
+                    .collect::<Vec<_>>(),
+            );
+            assert!(min_k >= max_next - 1e-12, "part {k}");
+        }
+    }
+
+    #[test]
+    fn cohort_has_requested_size_and_distinct_members() {
+        let f = fleet(100, 1);
+        let g = PowerGroups::build(&f, 10);
+        let mut rng = Pcg64::seed_from(2);
+        for _ in 0..50 {
+            let s = g.sample(&f, 10, &mut rng);
+            assert_eq!(s.len(), 10);
+            let mut d = s.clone();
+            d.sort();
+            d.dedup();
+            assert_eq!(d.len(), 10);
+        }
+    }
+
+    #[test]
+    fn cohort_delay_spread_beats_uniform_sampling() {
+        // the point of Algorithm 1: per-round t_max − t_min much smaller
+        // than uniform sampling on a heterogeneous fleet
+        let f = fleet(100, 3);
+        let g = PowerGroups::build(&f, 10);
+        let mut rng = Pcg64::seed_from(4);
+        let mut alg1_diffs = Vec::new();
+        let mut unif_diffs = Vec::new();
+        for _ in 0..200 {
+            let s = g.sample(&f, 10, &mut rng);
+            let d: Vec<f64> = s.iter().map(|&i| f.delays_s[i]).collect();
+            alg1_diffs.push(stats::max(&d) - stats::min(&d));
+            let s = rng.sample_indices(100, 10);
+            let d: Vec<f64> = s.iter().map(|&i| f.delays_s[i]).collect();
+            unif_diffs.push(stats::max(&d) - stats::min(&d));
+        }
+        let a = stats::mean(&alg1_diffs);
+        let u = stats::mean(&unif_diffs);
+        assert!(
+            a < 0.4 * u,
+            "algorithm 1 diff {a:.3}s not ≪ uniform {u:.3}s"
+        );
+    }
+
+    #[test]
+    fn oversized_part_request_tops_up_from_neighbours() {
+        let f = fleet(20, 5);
+        let g = PowerGroups::build(&f, 10); // parts of 2
+        let mut rng = Pcg64::seed_from(6);
+        let s = g.sample(&f, 7, &mut rng); // needs 4 parts
+        assert_eq!(s.len(), 7);
+        let mut d = s.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), 7);
+    }
+
+    #[test]
+    fn homogeneous_fleet_grouping_is_harmless() {
+        let mut rng = Pcg64::seed_from(7);
+        let powers = draw_powers(PowerProfile::Homogeneous, 30, &mut rng);
+        let f = FleetInfo::new(&powers, &vec![600; 30], 1);
+        let g = PowerGroups::build(&f, 5);
+        let s = g.sample(&f, 6, &mut rng);
+        let d: Vec<f64> = s.iter().map(|&i| f.delays_s[i]).collect();
+        assert!(stats::max(&d) - stats::min(&d) < 1e-12);
+    }
+
+    #[test]
+    fn eq8_inputs_respected() {
+        let powers = vec![
+            ComputePower { samples_per_sec: 150.0 },
+            ComputePower { samples_per_sec: 300.0 },
+        ];
+        let f = FleetInfo::new(&powers, &[600, 600], 5);
+        assert_eq!(f.delays_s[0], 20.0); // 5·600/150
+        assert_eq!(f.delays_s[1], 10.0);
+    }
+
+    #[test]
+    fn property_cohorts_always_valid() {
+        check(
+            40,
+            GenPair(gen_usize(2..80), gen_usize(0..10_000)),
+            |&(u, seed)| {
+                let f = fleet(u, seed as u64);
+                let m = (u / 4).max(1);
+                let n = (u / 5).max(1);
+                let mut rng = Pcg64::seed_from(seed as u64 + 1);
+                let s = algorithm1(&f, m, n, &mut rng);
+                let mut d = s.clone();
+                d.sort();
+                d.dedup();
+                prop_assert(
+                    s.len() == n && d.len() == n && s.iter().all(|&i| i < u),
+                    "valid cohort",
+                )
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn m_larger_than_fleet_panics() {
+        let f = fleet(5, 0);
+        PowerGroups::build(&f, 6);
+    }
+}

@@ -1,0 +1,61 @@
+//! FedAvg [5] baseline client sampling: uniform without replacement —
+//! power- and data-agnostic, the comparator in Figs 6–8.
+
+use crate::util::rng::Pcg64;
+
+/// Uniformly sample `n` distinct clients from `u`.
+pub fn uniform_sample(u: usize, n: usize, rng: &mut Pcg64) -> Vec<usize> {
+    assert!(n >= 1 && n <= u, "sample {n} of {u}");
+    rng.sample_indices(u, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_distinctness() {
+        let mut rng = Pcg64::seed_from(0);
+        let s = uniform_sample(100, 10, &mut rng);
+        assert_eq!(s.len(), 10);
+        let mut d = s.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), 10);
+    }
+
+    #[test]
+    fn covers_the_whole_fleet_over_time() {
+        let mut rng = Pcg64::seed_from(1);
+        let mut seen = vec![false; 30];
+        for _ in 0..100 {
+            for i in uniform_sample(30, 5, &mut rng) {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.into_iter().all(|s| s));
+    }
+
+    #[test]
+    fn full_sample_is_a_permutation() {
+        let mut rng = Pcg64::seed_from(2);
+        let mut s = uniform_sample(12, 12, &mut rng);
+        s.sort();
+        assert_eq!(s, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn roughly_uniform_marginals() {
+        let mut rng = Pcg64::seed_from(3);
+        let mut counts = vec![0u32; 20];
+        for _ in 0..10_000 {
+            for i in uniform_sample(20, 4, &mut rng) {
+                counts[i] += 1;
+            }
+        }
+        // expectation = 10000 · 4/20 = 2000 per client
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((1700..2300).contains(&c), "client {i}: {c}");
+        }
+    }
+}

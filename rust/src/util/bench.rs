@@ -1,0 +1,209 @@
+//! Micro-benchmark substrate (criterion is not vendored in this offline
+//! environment — see DESIGN.md §2). Used by the `cargo bench` targets
+//! (`[[bench]] harness = false`).
+//!
+//! Method: warmup runs, then timed iterations until both a minimum
+//! iteration count and a minimum wall-time are reached; reports median /
+//! mean / p95 per-iteration latency and derived throughput. A `black_box`
+//! shim prevents the optimizer from deleting the measured work.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` under the name bench code expects.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark's collected numbers (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} it  mean {:>12}  median {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+
+    /// items/sec given the number of logical items one iteration processes.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with shared settings.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub min_time: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            min_time: Duration::from_millis(500),
+            min_iters: 10,
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick settings for expensive end-to-end benches (PJRT rounds).
+    pub fn coarse() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            min_time: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; returns and records the result.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // measure
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < self.min_time || samples_ns.len() < self.min_iters)
+            && samples_ns.len() < self.max_iters
+        {
+            let s = Instant::now();
+            black_box(f());
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+        }
+        let res = summarize(name, &samples_ns);
+        println!("{}", res.report());
+        self.results.push(res.clone());
+        res
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render all collected results as a markdown table (for EXPERIMENTS.md).
+    pub fn markdown_table(&self) -> String {
+        let mut s = String::from("| bench | iters | median | mean | p95 |\n|---|---|---|---|---|\n");
+        for r in &self.results {
+            s.push_str(&format!(
+                "| {} | {} | {} | {} | {} |\n",
+                r.name,
+                r.iters,
+                fmt_ns(r.median_ns),
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p95_ns)
+            ));
+        }
+        s
+    }
+}
+
+fn summarize(name: &str, samples_ns: &[f64]) -> BenchResult {
+    use crate::util::stats;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples_ns.len(),
+        mean_ns: stats::mean(samples_ns),
+        median_ns: stats::median(samples_ns),
+        p95_ns: stats::quantile(samples_ns, 0.95),
+        min_ns: stats::min(samples_ns),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(1),
+            min_time: Duration::from_millis(5),
+            min_iters: 5,
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = tiny();
+        let r = b.bench("noop-sum", || (0..100u64).sum::<u64>());
+        assert!(r.iters >= 5);
+        assert!(r.median_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.median_ns <= r.p95_ns + 1e-9);
+    }
+
+    #[test]
+    fn results_accumulate_and_render() {
+        let mut b = tiny();
+        b.bench("a", || 1 + 1);
+        b.bench("b", || 2 + 2);
+        assert_eq!(b.results().len(), 2);
+        let md = b.markdown_table();
+        assert!(md.contains("| a |"));
+        assert!(md.contains("| b |"));
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(1.2e10).contains("s"));
+    }
+
+    #[test]
+    fn throughput_is_items_over_median() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e6,
+            median_ns: 1e6,
+            p95_ns: 1e6,
+            min_ns: 1e6,
+        };
+        // 10 items in 1 ms → 10_000 items/s
+        assert!((r.throughput(10.0) - 10_000.0).abs() < 1e-6);
+    }
+}

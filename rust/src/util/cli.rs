@@ -1,0 +1,247 @@
+//! Declarative command-line parsing substrate (clap is not vendored in
+//! this offline environment — see DESIGN.md §2).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! defaults, and auto-generated `--help`. Deliberately small: exactly what
+//! the `cnc-fl` binary and the examples need.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// One option specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// A declarative command: name, docs, options.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// `--name <value>` option with an optional default.
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default,
+            is_switch: false,
+        });
+        self
+    }
+
+    /// Boolean `--name` switch (defaults to false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_switch: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let left = if o.is_switch {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = match o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            s.push_str(&format!("{left:<28}{}{def}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse `args` (without argv[0] / the subcommand name).
+    pub fn parse(&self, args: &[String]) -> Result<Matches> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+            if o.is_switch {
+                values.insert(o.name.to_string(), "false".to_string());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            let Some(body) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument `{a}`\n{}", self.usage());
+            };
+            let (name, inline_val) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let Some(spec) = self.opts.iter().find(|o| o.name == name) else {
+                bail!("unknown option `--{name}`\n{}", self.usage());
+            };
+            let val = if spec.is_switch {
+                match inline_val {
+                    Some(v) => v,
+                    None => "true".to_string(),
+                }
+            } else {
+                match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        if i >= args.len() {
+                            bail!("option `--{name}` expects a value");
+                        }
+                        args[i].clone()
+                    }
+                }
+            };
+            values.insert(name.to_string(), val);
+            i += 1;
+        }
+        Ok(Matches { values })
+    }
+}
+
+/// Parsed option values with typed getters.
+#[derive(Debug, Clone)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_(&self, name: &str) -> Result<&str> {
+        match self.get(name) {
+            Some(s) => Ok(s),
+            None => bail!("missing required option `--{name}`"),
+        }
+    }
+
+    pub fn usize_(&self, name: &str) -> Result<usize> {
+        Ok(self.str_(name)?.parse::<usize>()?)
+    }
+
+    pub fn u64_(&self, name: &str) -> Result<u64> {
+        Ok(self.str_(name)?.parse::<u64>()?)
+    }
+
+    pub fn f64_(&self, name: &str) -> Result<f64> {
+        Ok(self.str_(name)?.parse::<f64>()?)
+    }
+
+    pub fn bool_(&self, name: &str) -> Result<bool> {
+        Ok(self.str_(name)?.parse::<bool>()?)
+    }
+
+    /// Comma-separated list of usizes, e.g. `--clients 8,20,40`.
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>> {
+        self.str_(name)?
+            .split(',')
+            .map(|t| Ok(t.trim().parse::<usize>()?))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "run an experiment")
+            .opt("rounds", Some("10"), "number of global rounds")
+            .opt("seed", Some("0"), "rng seed")
+            .opt("out", None, "output file")
+            .switch("non-iid", "use the non-IID split")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(m.usize_("rounds").unwrap(), 10);
+        assert!(!m.bool_("non-iid").unwrap());
+        assert!(m.get("out").is_none());
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let m = cmd()
+            .parse(&argv(&["--rounds", "30", "--seed=7", "--non-iid"]))
+            .unwrap();
+        assert_eq!(m.usize_("rounds").unwrap(), 30);
+        assert_eq!(m.u64_("seed").unwrap(), 7);
+        assert!(m.bool_("non-iid").unwrap());
+    }
+
+    #[test]
+    fn unknown_flag_errors_with_usage() {
+        let err = cmd().parse(&argv(&["--nope"])).unwrap_err().to_string();
+        assert!(err.contains("unknown option"));
+        assert!(err.contains("--rounds"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cmd().parse(&argv(&["--rounds"])).is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(cmd().parse(&argv(&["stray"])).is_err());
+    }
+
+    #[test]
+    fn help_flag_produces_usage() {
+        let err = cmd().parse(&argv(&["--help"])).unwrap_err().to_string();
+        assert!(err.contains("run an experiment"));
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let c = Command::new("x", "y").opt("clients", Some("8,20"), "list");
+        let m = c.parse(&argv(&[])).unwrap();
+        assert_eq!(m.usize_list("clients").unwrap(), vec![8, 20]);
+        let m = c.parse(&argv(&["--clients", "1, 2 ,3"])).unwrap();
+        assert_eq!(m.usize_list("clients").unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn missing_required_option_errors() {
+        let m = cmd().parse(&argv(&[])).unwrap();
+        assert!(m.str_("out").is_err());
+    }
+}

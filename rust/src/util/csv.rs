@@ -1,0 +1,143 @@
+//! Tiny CSV writer for the figure/series outputs under `results/`.
+//!
+//! Each figure runner emits one or more CSV files whose columns mirror the
+//! axes of the corresponding paper figure, so they can be plotted directly.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// An in-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        CsvTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Push a row of already-formatted cells; panics on column mismatch
+    /// (programming error, not data error).
+    pub fn push_raw(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "CSV row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+    }
+
+    /// Push a row of f64s formatted with enough precision to round-trip.
+    pub fn push_f64(&mut self, cells: &[f64]) {
+        self.push_raw(cells.iter().map(|x| format_num(*x)).collect());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.header.join(","));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(
+                &row.iter()
+                    .map(|c| escape(c))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            );
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("mkdir -p {}", dir.display()))?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(self.to_string().as_bytes())?;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Format an f64 compactly but losslessly enough for plotting (9 sig figs).
+pub fn format_num(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        let s = format!("{x:.9}");
+        let s = s.trim_end_matches('0').trim_end_matches('.');
+        s.to_string()
+    }
+}
+
+fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = CsvTable::new(&["round", "acc"]);
+        t.push_f64(&[1.0, 0.53]);
+        t.push_f64(&[2.0, 0.71]);
+        assert_eq!(t.to_string(), "round,acc\n1,0.53\n2,0.71\n");
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn escapes_commas_and_quotes() {
+        let mut t = CsvTable::new(&["name", "v"]);
+        t.push_raw(vec!["a,b".into(), "say \"hi\"".into()]);
+        assert_eq!(t.to_string(), "name,v\n\"a,b\",\"say \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.push_f64(&[1.0]);
+    }
+
+    #[test]
+    fn format_num_trims() {
+        assert_eq!(format_num(3.0), "3");
+        assert_eq!(format_num(0.25), "0.25");
+        assert_eq!(format_num(1.0 / 3.0), "0.333333333");
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("cnc_fl_csv_test");
+        let path = dir.join("t.csv");
+        let mut t = CsvTable::new(&["x"]);
+        t.push_f64(&[7.0]);
+        t.write_to(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n7\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,12 @@
+//! Infrastructure substrates built from scratch for the offline
+//! environment (see DESIGN.md §2): RNG, JSON, CSV, CLI parsing, thread
+//! pool, statistics, property testing and micro-benchmarking.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod pool;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;

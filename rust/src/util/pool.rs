@@ -1,0 +1,210 @@
+//! Fixed-size thread pool with a scoped `parallel_map` — the concurrency
+//! substrate for "clients train in parallel" (tokio is not vendored in this
+//! offline environment; std threads + channels are all the coordinator
+//! needs, since per-client work units are coarse PJRT executions).
+//!
+//! Design: a work-stealing-free, strict FIFO pool. Jobs are `FnOnce`
+//! closures; `scope_map` blocks until all results are back and preserves
+//! input order. Panics inside a job are caught and surfaced as `Err` so one
+//! bad client cannot poison the whole training round.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (clamped to ≥ 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("cnc-fl-worker-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx, workers, size }
+    }
+
+    /// Pool sized to the machine (#cpus, min 1).
+    pub fn with_default_size() -> Self {
+        Self::new(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        )
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget submission.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool closed");
+    }
+
+    /// Apply `f` to every item, in parallel, returning results in input
+    /// order. Panics in `f` become `Err(description)` for that item only.
+    pub fn scope_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<Result<R, String>>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx): (
+            Sender<(usize, Result<R, String>)>,
+            Receiver<(usize, Result<R, String>)>,
+        ) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(item)))
+                    .map_err(|e| panic_msg(&*e));
+                // receiver may be gone if the caller panicked; ignore
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut results: Vec<Option<Result<R, String>>> =
+            (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker result channel closed");
+            results[i] = Some(r);
+        }
+        results.into_iter().map(|r| r.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
+    loop {
+        let msg = {
+            let guard = rx.lock().expect("pool receiver poisoned");
+            guard.recv()
+        };
+        match msg {
+            Ok(Msg::Run(job)) => {
+                // job-level panics are caught in scope_map's wrapper; a bare
+                // submit() panic would abort this worker, so guard here too.
+                let _ = catch_unwind(AssertUnwindSafe(job));
+            }
+            Ok(Msg::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        format!("worker panicked: {s}")
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        format!("worker panicked: {s}")
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.scope_map((0..100).collect(), |x: i32| x * x);
+        let got: Vec<i32> = out.into_iter().map(|r| r.unwrap()).collect();
+        let want: Vec<i32> = (0..100).map(|x| x * x).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn runs_in_parallel() {
+        // with 4 workers, 4 sleeps of 50ms take ~50ms, not 200ms
+        let pool = ThreadPool::new(4);
+        let t0 = std::time::Instant::now();
+        pool.scope_map(vec![(); 4], |_| {
+            std::thread::sleep(std::time::Duration::from_millis(50))
+        });
+        assert!(t0.elapsed() < std::time::Duration::from_millis(150));
+    }
+
+    #[test]
+    fn panic_in_one_item_does_not_poison_others() {
+        let pool = ThreadPool::new(2);
+        let out = pool.scope_map(vec![1, 2, 3, 4], |x| {
+            if x == 3 {
+                panic!("boom {x}");
+            }
+            x * 10
+        });
+        assert_eq!(out[0], Ok(10));
+        assert_eq!(out[1], Ok(20));
+        assert!(out[2].as_ref().unwrap_err().contains("boom"));
+        assert_eq!(out[3], Ok(40));
+        // pool still usable afterwards
+        let again = pool.scope_map(vec![5], |x| x + 1);
+        assert_eq!(again[0], Ok(6));
+    }
+
+    #[test]
+    fn submit_runs_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // drop joins workers → all jobs done
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn zero_size_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.scope_map(vec![7], |x| x);
+        assert_eq!(out[0], Ok(7));
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<Result<i32, String>> = pool.scope_map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,192 @@
+//! Descriptive statistics used by the metrics layer and the figure
+//! harness: means, quantiles, box-plot five-number summaries (Fig 8) and
+//! simple confidence intervals.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0.0 for fewer than two samples.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+/// Linear-interpolated quantile (q in [0, 1]) of an unsorted slice.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q), "q={q} out of range");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Box-plot five-number summary + whiskers + outliers (Tukey 1.5·IQR),
+/// matching what Fig 8 of the paper plots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoxStats {
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    /// lowest sample ≥ q1 − 1.5·IQR
+    pub whisker_lo: f64,
+    /// highest sample ≤ q3 + 1.5·IQR
+    pub whisker_hi: f64,
+    pub outliers: Vec<f64>,
+    pub mean: f64,
+    pub n: usize,
+}
+
+pub fn box_stats(xs: &[f64]) -> BoxStats {
+    assert!(!xs.is_empty(), "box_stats of empty slice");
+    let q1 = quantile(xs, 0.25);
+    let q3 = quantile(xs, 0.75);
+    let iqr = q3 - q1;
+    let lo_fence = q1 - 1.5 * iqr;
+    let hi_fence = q3 + 1.5 * iqr;
+    let mut whisker_lo = f64::INFINITY;
+    let mut whisker_hi = f64::NEG_INFINITY;
+    let mut outliers = Vec::new();
+    for &x in xs {
+        if x < lo_fence || x > hi_fence {
+            outliers.push(x);
+        } else {
+            whisker_lo = whisker_lo.min(x);
+            whisker_hi = whisker_hi.max(x);
+        }
+    }
+    outliers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BoxStats {
+        q1,
+        median: median(xs),
+        q3,
+        whisker_lo,
+        whisker_hi,
+        outliers,
+        mean: mean(xs),
+        n: xs.len(),
+    }
+}
+
+/// Half-width of a 95% normal-approximation confidence interval.
+pub fn ci95_half_width(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    1.96 * std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Cumulative sum (used for "accuracy vs cumulative consumption" figures).
+pub fn cumsum(xs: &[f64]) -> Vec<f64> {
+    let mut acc = 0.0;
+    xs.iter()
+        .map(|x| {
+            acc += x;
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert_eq!(mean(&xs), 5.0);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_mean_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(quantile(&xs, 0.25), 1.75);
+    }
+
+    #[test]
+    fn quantile_unsorted_input() {
+        let xs = [9.0, 1.0, 5.0];
+        assert_eq!(median(&xs), 5.0);
+        assert_eq!(min(&xs), 1.0);
+        assert_eq!(max(&xs), 9.0);
+    }
+
+    #[test]
+    fn box_stats_basic() {
+        let xs: Vec<f64> = (1..=11).map(|x| x as f64).collect();
+        let b = box_stats(&xs);
+        assert_eq!(b.median, 6.0);
+        assert_eq!(b.q1, 3.5);
+        assert_eq!(b.q3, 8.5);
+        assert!(b.outliers.is_empty());
+        assert_eq!(b.whisker_lo, 1.0);
+        assert_eq!(b.whisker_hi, 11.0);
+        assert_eq!(b.n, 11);
+    }
+
+    #[test]
+    fn box_stats_flags_outliers() {
+        let mut xs: Vec<f64> = (1..=20).map(|x| x as f64).collect();
+        xs.push(1000.0);
+        let b = box_stats(&xs);
+        assert_eq!(b.outliers, vec![1000.0]);
+        assert!(b.whisker_hi <= 20.0);
+    }
+
+    #[test]
+    fn cumsum_works() {
+        assert_eq!(cumsum(&[1.0, 2.0, 3.0]), vec![1.0, 3.0, 6.0]);
+        assert!(cumsum(&[]).is_empty());
+    }
+
+    #[test]
+    fn ci95_shrinks_with_n() {
+        let a: Vec<f64> = (0..10).map(|i| (i % 3) as f64).collect();
+        let b: Vec<f64> = (0..1000).map(|i| (i % 3) as f64).collect();
+        assert!(ci95_half_width(&b) < ci95_half_width(&a));
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantile_empty_panics() {
+        quantile(&[], 0.5);
+    }
+}

@@ -1,0 +1,135 @@
+//! CLI integration: drive the `cnc-fl` binary end to end (mock backend —
+//! fast) and check that the figure harness produces well-formed CSVs.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> PathBuf {
+    // target/<profile>/cnc-fl next to the test executable
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("cnc-fl");
+    p
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn cnc-fl");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cnc_fl_cli_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, stdout, _) = run(&[]);
+    assert!(ok);
+    assert!(stdout.contains("subcommands"));
+    assert!(stdout.contains("fig11"));
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let (ok, _, stderr) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn table1_and_table2_print_constants() {
+    let (ok, stdout, _) = run(&["table1"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("-174 dBm/Hz"));
+    assert!(stdout.contains("0.606 MB"));
+    let (ok, stdout, _) = run(&["table2"]);
+    assert!(ok);
+    for case in ["Pr1", "Pr6"] {
+        assert!(stdout.contains(case));
+    }
+}
+
+#[test]
+fn run_subcommand_mock_writes_csv() {
+    let out = tmpdir("run");
+    let (ok, stdout, stderr) = run(&[
+        "run",
+        "--case",
+        "Pr1",
+        "--method",
+        "cnc",
+        "--rounds",
+        "5",
+        "--backend",
+        "mock",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    let csv = std::fs::read_to_string(out.join("run_Pr1_cnc_iid.csv")).unwrap();
+    assert!(csv.starts_with("round,accuracy"));
+    assert_eq!(csv.lines().count(), 6);
+    let _ = std::fs::remove_dir_all(out);
+}
+
+#[test]
+fn fig11_mock_writes_csv_with_nan_for_big_tsp() {
+    let out = tmpdir("fig11");
+    let (ok, stdout, stderr) = run(&[
+        "fig11",
+        "--rounds",
+        "3",
+        "--backend",
+        "mock",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    let csv = std::fs::read_to_string(out.join("fig11.csv")).unwrap();
+    assert!(csv.starts_with("num_clients,"));
+    // 6 fleet sizes
+    assert_eq!(csv.lines().count(), 7);
+    // n=24/28 rows carry NaN in the TSP column
+    assert!(csv.contains("NaN"));
+    let _ = std::fs::remove_dir_all(out);
+}
+
+#[test]
+fn p2p_subcommand_mock() {
+    let out = tmpdir("p2p");
+    let (ok, stdout, stderr) = run(&[
+        "p2p",
+        "--clients",
+        "12",
+        "--parts",
+        "3",
+        "--rounds",
+        "4",
+        "--backend",
+        "mock",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("final accuracy"));
+    assert!(out.join("p2p_12c_3e.csv").exists());
+    let _ = std::fs::remove_dir_all(out);
+}
+
+#[test]
+fn bad_flag_value_reports_error() {
+    let (ok, _, stderr) = run(&["run", "--method", "nonsense", "--backend", "mock"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown method"));
+}

@@ -1,0 +1,179 @@
+//! End-to-end integration: full federated training through all three
+//! layers (Rust CNC coordinator → PJRT → AOT-lowered JAX model → Pallas
+//! kernels) on the synthetic workload.
+//!
+//! This is the "does the whole system actually learn?" test — a short
+//! Pr1-style run whose accuracy must climb well above chance, plus the
+//! CNC-vs-FedAvg comparisons on the real compute path.
+//!
+//! Skips when artifacts are missing (`make artifacts`).
+
+use std::path::PathBuf;
+
+use cnc_fl::coordinator::{p2p, traditional, PjrtTrainer};
+use cnc_fl::cnc::optimize::{
+    CohortStrategy, PartitionStrategy, PathStrategy, RbStrategy,
+};
+use cnc_fl::cnc::CncSystem;
+use cnc_fl::coordinator::p2p::P2pConfig;
+use cnc_fl::coordinator::traditional::TraditionalConfig;
+use cnc_fl::data::{Partition, Split, SynthSpec};
+use cnc_fl::netsim::channel::ChannelParams;
+use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::netsim::topology::TopologyGen;
+use cnc_fl::runtime::{ArtifactStore, Engine};
+use cnc_fl::util::rng::Pcg64;
+
+fn trainer(num_clients: usize, split: Split) -> Option<PjrtTrainer> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let engine = Engine::new(ArtifactStore::load(&dir).unwrap()).unwrap();
+    let partition = Partition::new(num_clients, split, 0);
+    Some(PjrtTrainer::new(engine, partition, SynthSpec::default(), 0.01, 0).unwrap())
+}
+
+fn system(num_clients: usize, epoch_local: usize) -> CncSystem {
+    let mut ch = ChannelParams::default();
+    ch.fading_samples = 16;
+    CncSystem::bootstrap(
+        num_clients,
+        cnc_fl::data::synth::TRAIN_TOTAL / num_clients,
+        epoch_local,
+        PowerProfile::Bimodal,
+        ch,
+        0,
+    )
+}
+
+#[test]
+fn traditional_cnc_learns_iid() {
+    let Some(mut t) = trainer(100, Split::Iid) else { return };
+    let mut sys = system(100, 1);
+    let cfg = TraditionalConfig {
+        rounds: 15,
+        cohort_size: 10,
+        n_rb: 10,
+        epoch_local: 1,
+        cohort_strategy: CohortStrategy::PowerGrouping { m: 10 },
+        rb_strategy: RbStrategy::HungarianEnergy,
+        eval_every: 5,
+        tx_deadline_s: None,
+        seed: 0,
+        verbose: false,
+    };
+    let h = traditional::run(&mut sys, &mut t, &cfg, "e2e/iid").unwrap();
+    assert_eq!(h.rounds.len(), 15);
+    let acc = h.final_accuracy();
+    assert!(acc > 0.5, "15 rounds should clear 50% on IID, got {acc}");
+    // training loss must fall
+    assert!(h.rounds.last().unwrap().train_loss < h.rounds[0].train_loss);
+}
+
+#[test]
+fn traditional_cnc_learns_non_iid() {
+    let Some(mut t) = trainer(100, Split::NonIid) else { return };
+    let mut sys = system(100, 1);
+    let cfg = TraditionalConfig {
+        rounds: 15,
+        cohort_size: 10,
+        n_rb: 10,
+        epoch_local: 1,
+        cohort_strategy: CohortStrategy::PowerGrouping { m: 10 },
+        rb_strategy: RbStrategy::HungarianEnergy,
+        eval_every: 5,
+        tx_deadline_s: None,
+        seed: 0,
+        verbose: false,
+    };
+    let h = traditional::run(&mut sys, &mut t, &cfg, "e2e/noniid").unwrap();
+    let acc = h.final_accuracy();
+    // Non-IID converges slower (paper Fig 4) but must beat chance
+    assert!(acc > 0.25, "non-IID after 15 rounds: {acc}");
+}
+
+#[test]
+fn p2p_chain_learns() {
+    let Some(mut t) = trainer(20, Split::Iid) else { return };
+    let mut sys = system(20, 1);
+    let mut rng = Pcg64::seed_from(3);
+    let g = TopologyGen::full(20, 1.0, 10.0, &mut rng);
+    let cfg = P2pConfig {
+        rounds: 3,
+        partition_strategy: PartitionStrategy::BalancedDelay { e: 4 },
+        path_strategy: PathStrategy::Greedy,
+        epoch_local: 1,
+        eval_every: 1,
+        seed: 0,
+        verbose: false,
+    };
+    let h = p2p::run(&mut sys, &mut t, &g, &cfg, "e2e/p2p").unwrap();
+    // every client trains each round → 3 rounds of 20 chains is plenty
+    let acc = h.final_accuracy();
+    assert!(acc > 0.6, "P2P after 3 full-fleet rounds: {acc}");
+    assert!(h.accuracies().windows(2).all(|w| w[1] >= w[0] - 0.05));
+}
+
+#[test]
+fn cnc_and_fedavg_reach_similar_accuracy_but_cnc_cheaper() {
+    let Some(mut t1) = trainer(100, Split::Iid) else { return };
+    let base = TraditionalConfig {
+        rounds: 8,
+        cohort_size: 10,
+        n_rb: 10,
+        epoch_local: 1,
+        cohort_strategy: CohortStrategy::PowerGrouping { m: 10 },
+        rb_strategy: RbStrategy::HungarianEnergy,
+        eval_every: 4,
+        tx_deadline_s: None,
+        seed: 0,
+        verbose: false,
+    };
+    let mut sys1 = system(100, 1);
+    let h_cnc = traditional::run(&mut sys1, &mut t1, &base, "cnc").unwrap();
+
+    let mut t2 = trainer(100, Split::Iid).unwrap();
+    let mut sys2 = system(100, 1);
+    let mut avg = base.clone();
+    avg.cohort_strategy = CohortStrategy::Uniform;
+    avg.rb_strategy = RbStrategy::Random;
+    let h_avg = traditional::run(&mut sys2, &mut t2, &avg, "fedavg").unwrap();
+
+    // both learn
+    assert!(h_cnc.final_accuracy() > 0.35);
+    assert!(h_avg.final_accuracy() > 0.35);
+    // CNC pays less for transmission (Eq 5 optimum ≤ random)
+    let e_cnc: f64 = h_cnc.rounds.iter().map(|r| r.tx_energy_round_j()).sum();
+    let e_avg: f64 = h_avg.rounds.iter().map(|r| r.tx_energy_round_j()).sum();
+    assert!(e_cnc < e_avg, "cnc {e_cnc} !< fedavg {e_avg}");
+    // and balances local delay (mean per-round diff smaller)
+    let d = |h: &cnc_fl::metrics::RunHistory| {
+        let v = h.delay_diffs();
+        v.iter().sum::<f64>() / v.len() as f64
+    };
+    assert!(d(&h_cnc) < d(&h_avg));
+}
+
+#[test]
+fn local_epochs_scale_compute_not_crash() {
+    let Some(mut t) = trainer(100, Split::Iid) else { return };
+    let mut sys = system(100, 5);
+    let cfg = TraditionalConfig {
+        rounds: 2,
+        cohort_size: 5,
+        n_rb: 5,
+        epoch_local: 5, // Pr2-style
+        cohort_strategy: CohortStrategy::PowerGrouping { m: 20 },
+        rb_strategy: RbStrategy::BottleneckDelay,
+        eval_every: 1,
+        tx_deadline_s: None,
+        seed: 0,
+        verbose: false,
+    };
+    let h = traditional::run(&mut sys, &mut t, &cfg, "e2e/5ep").unwrap();
+    assert_eq!(h.rounds.len(), 2);
+    // 5 local epochs → local delays 5× the 1-epoch Eq 8 values
+    assert!(h.rounds[0].local_delay_round_s() > 5.0);
+}

@@ -1,0 +1,197 @@
+//! Failure-injection tests: the coordinator must surface backend errors
+//! cleanly (no partial aggregation, no poisoned state) and the CNC
+//! decision layer must reject impossible topologies rather than hang.
+
+use anyhow::{bail, Result};
+
+use cnc_fl::cnc::optimize::{
+    CohortStrategy, PartitionStrategy, PathStrategy, RbStrategy,
+};
+use cnc_fl::cnc::CncSystem;
+use cnc_fl::coordinator::p2p::{self, P2pConfig};
+use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
+use cnc_fl::coordinator::{MockTrainer, Trainer};
+use cnc_fl::model::params::ModelParams;
+use cnc_fl::netsim::channel::ChannelParams;
+use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::netsim::topology::CostMatrix;
+
+/// A trainer that fails on a chosen client or after N calls.
+struct FlakyTrainer {
+    inner: MockTrainer,
+    fail_on_client: Option<usize>,
+    fail_after_calls: Option<usize>,
+    calls: usize,
+}
+
+impl FlakyTrainer {
+    fn new(n: usize, fail_on_client: Option<usize>, fail_after_calls: Option<usize>) -> Self {
+        FlakyTrainer {
+            inner: MockTrainer::new(n, 600),
+            fail_on_client,
+            fail_after_calls,
+            calls: 0,
+        }
+    }
+}
+
+impl Trainer for FlakyTrainer {
+    fn local_train(
+        &mut self,
+        client: usize,
+        params: &ModelParams,
+        epochs: usize,
+        round: usize,
+    ) -> Result<(ModelParams, f32)> {
+        self.calls += 1;
+        if Some(client) == self.fail_on_client {
+            bail!("client {client} dropped out mid-training");
+        }
+        if let Some(n) = self.fail_after_calls {
+            if self.calls > n {
+                bail!("backend exhausted after {n} calls");
+            }
+        }
+        self.inner.local_train(client, params, epochs, round)
+    }
+
+    fn evaluate(&mut self, params: &ModelParams) -> Result<f64> {
+        self.inner.evaluate(params)
+    }
+
+    fn init_params(&self) -> Result<ModelParams> {
+        self.inner.init_params()
+    }
+
+    fn data_size(&self, client: usize) -> usize {
+        self.inner.data_size(client)
+    }
+}
+
+fn system(n: usize) -> CncSystem {
+    let mut ch = ChannelParams::default();
+    ch.fading_samples = 2;
+    CncSystem::bootstrap(n, 600, 1, PowerProfile::Bimodal, ch, 0)
+}
+
+fn trad_cfg(rounds: usize, cohort: usize) -> TraditionalConfig {
+    TraditionalConfig {
+        rounds,
+        cohort_size: cohort,
+        n_rb: cohort,
+        epoch_local: 1,
+        cohort_strategy: CohortStrategy::Uniform,
+        rb_strategy: RbStrategy::Random,
+        eval_every: 1,
+        tx_deadline_s: None,
+        seed: 0,
+        verbose: false,
+    }
+}
+
+#[test]
+fn client_dropout_surfaces_as_error() {
+    let mut sys = system(10);
+    // cohort = whole fleet → client 3 is guaranteed to be hit
+    let mut t = FlakyTrainer::new(10, Some(3), None);
+    let err = traditional::run(&mut sys, &mut t, &trad_cfg(3, 10), "flaky")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("dropped out"), "{err}");
+}
+
+#[test]
+fn backend_exhaustion_mid_run_is_propagated() {
+    let mut sys = system(10);
+    let mut t = FlakyTrainer::new(10, None, Some(12));
+    // 5 clients/round → fails during round 3
+    let res = traditional::run(&mut sys, &mut t, &trad_cfg(5, 5), "exhaust");
+    assert!(res.is_err());
+    assert!(res.unwrap_err().to_string().contains("exhausted"));
+}
+
+#[test]
+fn p2p_chain_failure_propagates() {
+    let mut sys = system(6);
+    let mut t = FlakyTrainer::new(6, Some(2), None);
+    let mut g = CostMatrix::new(6);
+    for i in 0..6 {
+        for j in 0..6 {
+            if i != j {
+                g.set(i, j, 1.0);
+            }
+        }
+    }
+    let cfg = P2pConfig {
+        rounds: 2,
+        partition_strategy: PartitionStrategy::All,
+        path_strategy: PathStrategy::Greedy,
+        epoch_local: 1,
+        eval_every: 1,
+        seed: 0,
+        verbose: false,
+    };
+    assert!(p2p::run(&mut sys, &mut t, &g, &cfg, "flaky").is_err());
+}
+
+#[test]
+fn p2p_on_disconnected_topology_errors_not_hangs() {
+    let mut sys = system(4);
+    let mut t = MockTrainer::new(4, 600);
+    // star graph: no Hamiltonian path over all 4
+    let mut g = CostMatrix::new(4);
+    g.set_sym(0, 1, 1.0);
+    g.set_sym(0, 2, 1.0);
+    g.set_sym(0, 3, 1.0);
+    let cfg = P2pConfig {
+        rounds: 1,
+        partition_strategy: PartitionStrategy::All,
+        path_strategy: PathStrategy::Greedy,
+        epoch_local: 1,
+        eval_every: 1,
+        seed: 0,
+        verbose: false,
+    };
+    let err = p2p::run(&mut sys, &mut t, &g, &cfg, "star").unwrap_err();
+    assert!(err.to_string().contains("no feasible path"), "{err}");
+}
+
+#[test]
+fn p2p_wrong_topology_size_rejected() {
+    let mut sys = system(5);
+    let mut t = MockTrainer::new(5, 600);
+    let g = CostMatrix::new(9); // wrong fleet size
+    let cfg = P2pConfig {
+        rounds: 1,
+        partition_strategy: PartitionStrategy::All,
+        path_strategy: PathStrategy::Greedy,
+        epoch_local: 1,
+        eval_every: 1,
+        seed: 0,
+        verbose: false,
+    };
+    assert!(p2p::run(&mut sys, &mut t, &g, &cfg, "size").is_err());
+}
+
+#[test]
+fn cohort_larger_than_fleet_rejected() {
+    let mut sys = system(5);
+    let mut t = MockTrainer::new(5, 600);
+    let res = traditional::run(&mut sys, &mut t, &trad_cfg(1, 6), "big");
+    assert!(res.is_err());
+}
+
+#[test]
+fn failed_round_leaves_no_partial_bus_round() {
+    // error during local training: the decision + broadcast were already
+    // announced (that matches reality: the CNC published a strategy) but
+    // the UpdatesCollected message must be absent
+    let mut sys = system(10);
+    let mut t = FlakyTrainer::new(10, Some(0), None);
+    let _ = traditional::run(&mut sys, &mut t, &trad_cfg(1, 10), "partial");
+    let msgs = sys.bus.round_messages(0);
+    assert!(msgs.iter().all(|m| !matches!(
+        m,
+        cnc_fl::cnc::Announcement::UpdatesCollected { .. }
+    )));
+}
