@@ -63,6 +63,7 @@ fn main() -> Result<()> {
         rb_strategy: RbStrategy::HungarianEnergy,
         eval_every: 1,
         tx_deadline_s: None,
+        threads: 0,
         seed: 0,
         verbose: false,
     };

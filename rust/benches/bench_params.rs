@@ -1,0 +1,195 @@
+//! Parameter hot-path benchmarks: blob ⇄ params conversion, the
+//! `add_scaled` aggregation kernel, and N-client round aggregation —
+//! flat-arena `ModelParams` + streaming `Aggregator` versus the seed's
+//! nested `Vec<Vec<f32>>` + clone-then-average implementation
+//! (reproduced inline below as `Legacy*` so the speedup is measured, not
+//! asserted).
+//!
+//! Run: `cargo bench --bench bench_params`
+
+use cnc_fl::model::aggregate::{weighted_average, Aggregator};
+use cnc_fl::model::params::{param_count, ModelParams, PARAM_SHAPES};
+use cnc_fl::util::bench::{black_box, fmt_ns, Bencher};
+use cnc_fl::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// the seed implementation, verbatim: nested per-tensor vectors,
+// per-scalar byte conversion, normalize-then-accumulate averaging
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct LegacyParams {
+    tensors: Vec<Vec<f32>>,
+}
+
+impl LegacyParams {
+    fn zeros() -> Self {
+        LegacyParams {
+            tensors: PARAM_SHAPES
+                .iter()
+                .map(|(_, s)| vec![0.0; s.iter().product()])
+                .collect(),
+        }
+    }
+
+    fn from_blob(blob: &[u8]) -> Self {
+        let mut tensors = Vec::with_capacity(PARAM_SHAPES.len());
+        let mut off = 0usize;
+        for (_, shape) in PARAM_SHAPES {
+            let n: usize = shape.iter().product();
+            let mut t = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &blob[off + i * 4..off + i * 4 + 4];
+                t.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n * 4;
+            tensors.push(t);
+        }
+        LegacyParams { tensors }
+    }
+
+    fn to_blob(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(param_count() * 4);
+        for t in &self.tensors {
+            for &v in t {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    fn add_scaled(&mut self, other: &LegacyParams, weight: f32) {
+        for (dst, src) in self.tensors.iter_mut().zip(&other.tensors) {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += weight * s;
+            }
+        }
+    }
+}
+
+fn legacy_weighted_average(models: &[(LegacyParams, usize)]) -> LegacyParams {
+    let total: usize = models.iter().map(|(_, n)| n).sum();
+    let mut acc = LegacyParams::zeros();
+    for (m, n) in models {
+        acc.add_scaled(m, *n as f32 / total as f32);
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+
+fn random_blob(seed: u64) -> Vec<u8> {
+    let mut rng = Pcg64::seed_from(seed);
+    let mut m = ModelParams::zeros();
+    for v in m.as_mut_slice() {
+        *v = rng.normal_scaled(0.0, 0.05) as f32;
+    }
+    m.to_blob()
+}
+
+fn speedup_row(name: &str, legacy_ns: f64, arena_ns: f64) -> String {
+    format!(
+        "| {name} | {} | {} | {:.1}× |\n",
+        fmt_ns(legacy_ns),
+        fmt_ns(arena_ns),
+        legacy_ns / arena_ns
+    )
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("# bench_params — flat-arena params vs seed Vec<Vec<f32>>\n");
+
+    let blob = random_blob(0);
+    let arena = ModelParams::from_blob(&blob).unwrap();
+    let legacy = LegacyParams::from_blob(&blob);
+
+    // --- blob load ---------------------------------------------------------
+    let l_load = b.bench("blob load  (legacy per-scalar)", || {
+        black_box(LegacyParams::from_blob(black_box(&blob)))
+    });
+    let a_load = b.bench("blob load  (arena memcpy)", || {
+        black_box(ModelParams::from_blob(black_box(&blob)).unwrap())
+    });
+
+    // --- blob store --------------------------------------------------------
+    let l_store = b.bench("blob store (legacy per-scalar)", || {
+        black_box(legacy.to_blob())
+    });
+    let a_store = b.bench("blob store (arena memcpy)", || {
+        black_box(arena.to_blob())
+    });
+
+    // --- add_scaled kernel -------------------------------------------------
+    let mut l_acc = LegacyParams::zeros();
+    let l_fma = b.bench("add_scaled (legacy nested loops)", || {
+        l_acc.add_scaled(black_box(&legacy), 0.1);
+    });
+    let mut a_acc = ModelParams::zeros();
+    let a_fma = b.bench("add_scaled (arena unrolled)", || {
+        a_acc.add_scaled(black_box(&arena), 0.1);
+    });
+
+    // --- 10-client round aggregation --------------------------------------
+    // legacy coordinators cloned every update into a Vec before averaging;
+    // the streaming Aggregator folds borrowed updates in place
+    const CLIENTS: usize = 10;
+    let arena_updates: Vec<ModelParams> = (0..CLIENTS)
+        .map(|i| ModelParams::from_blob(&random_blob(i as u64)).unwrap())
+        .collect();
+    let legacy_updates: Vec<LegacyParams> = (0..CLIENTS)
+        .map(|i| LegacyParams::from_blob(&random_blob(i as u64)))
+        .collect();
+
+    let l_agg = b.bench("aggregate 10 clients (legacy clone+avg)", || {
+        let collected: Vec<(LegacyParams, usize)> = legacy_updates
+            .iter()
+            .map(|m| (m.clone(), 600))
+            .collect();
+        black_box(legacy_weighted_average(&collected))
+    });
+    let a_agg = b.bench("aggregate 10 clients (streaming arena)", || {
+        let mut agg = Aggregator::new();
+        for m in &arena_updates {
+            agg.push(m, 600);
+        }
+        black_box(agg.finish().unwrap())
+    });
+
+    // sanity: the two paths agree numerically
+    let collected: Vec<(ModelParams, usize)> = arena_updates
+        .iter()
+        .map(|m| (m.clone(), 600))
+        .collect();
+    let batch = weighted_average(&collected).unwrap();
+    let l_ref = legacy_weighted_average(
+        &legacy_updates.iter().map(|m| (m.clone(), 600)).collect::<Vec<_>>(),
+    );
+    let max_diff = batch
+        .as_slice()
+        .iter()
+        .zip(l_ref.tensors.iter().flatten())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-6, "legacy vs arena aggregation drift {max_diff}");
+
+    // --- before/after table -----------------------------------------------
+    let mut table = String::from(
+        "\n## before/after (median)\n\n| op | legacy | arena | speedup |\n|---|---|---|---|\n",
+    );
+    table.push_str(&speedup_row("blob load", l_load.median_ns, a_load.median_ns));
+    table.push_str(&speedup_row("blob store", l_store.median_ns, a_store.median_ns));
+    table.push_str(&speedup_row("add_scaled", l_fma.median_ns, a_fma.median_ns));
+    table.push_str(&speedup_row(
+        "10-client aggregation",
+        l_agg.median_ns,
+        a_agg.median_ns,
+    ));
+    println!("{table}");
+    println!(
+        "throughput: streaming aggregation {:.1} clients/ms, blob load {:.1} MB/s",
+        a_agg.throughput(CLIENTS as f64) / 1e3,
+        a_load.throughput((param_count() * 4) as f64) / 1e6,
+    );
+    println!("\n{}", b.markdown_table());
+}

@@ -58,6 +58,7 @@ fn trad_cfg(rounds: usize) -> TraditionalConfig {
         rb_strategy: RbStrategy::HungarianEnergy,
         eval_every: 1,
         tx_deadline_s: None,
+        threads: 0,
         seed: 0,
         verbose: false,
     }
@@ -95,6 +96,7 @@ fn main() {
         path_strategy: PathStrategy::Greedy,
         epoch_local: 1,
         eval_every: 1,
+        threads: 0,
         seed: 0,
         verbose: false,
     };
@@ -112,6 +114,7 @@ fn main() {
         path_strategy: PathStrategy::ExactTsp,
         epoch_local: 1,
         eval_every: 1,
+        threads: 0,
         seed: 0,
         verbose: false,
     };
@@ -130,6 +133,7 @@ fn main() {
             path_strategy: PathStrategy::Greedy,
             epoch_local: 1,
             eval_every: 1,
+            threads: 0,
             seed: 0,
             verbose: false,
         };

@@ -13,4 +13,4 @@ pub mod trainer;
 
 pub use p2p::P2pConfig;
 pub use traditional::TraditionalConfig;
-pub use trainer::{MockTrainer, PjrtTrainer, Trainer};
+pub use trainer::{MockTrainer, PjrtTrainer, SharedTrainer, Trainer};

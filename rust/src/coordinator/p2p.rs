@@ -7,10 +7,14 @@
 //!    transmission path over the consumption matrix G_e (line 4);
 //! 3. the model travels each chain: every client receives the running
 //!    sub-model, trains one pass over its local data (lines 6–19), and
-//!    forwards it — chains run in parallel with each other, serially
-//!    within;
+//!    forwards it — chains are serial within but independent of each
+//!    other, so they run **in parallel across worker threads** when the
+//!    backend is thread-safe (`Trainer::as_shared`), matching the
+//!    paper's simulated-parallel chains with real wall-clock parallelism;
 //! 4. the E sub-models are merged by the data-weighted average
-//!    w = Σ_e (N_te / ΣN) · w_Ste (line 20) and evaluated.
+//!    w = Σ_e (N_te / ΣN) · w_Ste (line 20), streamed into the
+//!    `Aggregator` in fixed part order — bit-identical for any worker
+//!    count — and evaluated.
 //!
 //! Transmission costs are the relative `cost_{i,j}` units of the paper's
 //! designed matrices (Eq 7): each part contributes its path cost; the
@@ -22,10 +26,12 @@ use anyhow::Result;
 use crate::cnc::announce::Announcement;
 use crate::cnc::optimize::{PartitionStrategy, PathStrategy};
 use crate::cnc::CncSystem;
-use crate::coordinator::trainer::Trainer;
+use crate::coordinator::trainer::{SharedTrainer, Trainer};
 use crate::metrics::{RoundRecord, RunHistory};
-use crate::model::params::{weighted_average, ModelParams};
+use crate::model::aggregate::Aggregator;
+use crate::model::params::ModelParams;
 use crate::netsim::topology::CostMatrix;
+use crate::runtime::ParallelExecutor;
 use crate::util::rng::Pcg64;
 
 /// P2P run settings.
@@ -37,6 +43,10 @@ pub struct P2pConfig {
     /// local epochs per client visit (the paper uses one pass)
     pub epoch_local: usize,
     pub eval_every: usize,
+    /// worker threads for chain-parallel training: 0 = one per core,
+    /// 1 = serial. Only takes effect for `Trainer::as_shared` backends;
+    /// results are bit-identical either way.
+    pub threads: usize,
     pub seed: u64,
     pub verbose: bool,
 }
@@ -49,10 +59,49 @@ impl Default for P2pConfig {
             path_strategy: PathStrategy::Greedy,
             epoch_local: 1,
             eval_every: 1,
+            threads: 0,
             seed: 0,
             verbose: false,
         }
     }
+}
+
+/// One chain's outcome: final sub-model, summed data size N_te, summed
+/// loss, and visit count.
+struct ChainResult {
+    sub_model: ModelParams,
+    n_te: usize,
+    loss_sum: f64,
+    trained: usize,
+}
+
+/// Walk one part's chain serially through `train` (both the serial
+/// `&mut Trainer` path and the parallel `&dyn SharedTrainer` path wrap
+/// their backend in this, so loss accounting and chain seeding can
+/// never drift between them — the bit-identity contract depends on it).
+/// `n_te` is the part's summed data size (precomputed by the caller).
+fn run_chain<F>(
+    mut train: F,
+    order: &[usize],
+    n_te: usize,
+    global: &ModelParams,
+) -> Result<ChainResult>
+where
+    F: FnMut(usize, &ModelParams) -> Result<(ModelParams, f32)>,
+{
+    let mut w = global.clone(); // first client receives w from CNC
+    let mut loss_sum = 0.0f64;
+    for &client in order {
+        let (next, loss) = train(client, &w)?;
+        w = next;
+        loss_sum += loss as f64;
+    }
+    Ok(ChainResult {
+        sub_model: w,
+        n_te,
+        loss_sum,
+        trained: order.len(),
+    })
 }
 
 /// Run the full P2P training over topology `g`; returns the history only.
@@ -77,6 +126,7 @@ pub fn run_with_model(
 ) -> Result<(RunHistory, ModelParams)> {
     let mut history = RunHistory::new(label);
     let mut global = trainer.init_params()?;
+    let executor = ParallelExecutor::new(cfg.threads);
 
     for round in 0..cfg.rounds {
         let round_rng = Pcg64::new(cfg.seed, 0x9292).split(&format!("round/{round}"));
@@ -94,33 +144,63 @@ pub fn run_with_model(
             parts: decision.parts.iter().map(|p| p.order.clone()).collect(),
         });
 
-        // chain training: serial along each path; chains independent
+        // summed data size N_te per chain, gathered up front so the
+        // training fan-out only needs the shared trainer view
+        let part_sizes: Vec<usize> = decision
+            .parts
+            .iter()
+            .map(|p| p.order.iter().map(|&c| trainer.data_size(c)).sum())
+            .collect();
+
+        // chain training: serial along each path; chains independent.
+        // Sub-models stream into the aggregator in part order on both
+        // the serial and parallel paths (identical fold order).
         let t0 = std::time::Instant::now();
-        let mut sub_models: Vec<(ModelParams, usize)> =
-            Vec::with_capacity(decision.parts.len());
+        let n_parts = decision.parts.len();
+        let mut agg = Aggregator::new();
         let mut loss_sum = 0.0f64;
         let mut trained = 0usize;
-        for part in &decision.parts {
-            let mut w = global.clone(); // first client receives w from CNC
-            let mut n_te = 0usize;
-            for &client in &part.order {
-                let (next, loss) =
-                    trainer.local_train(client, &w, cfg.epoch_local, round)?;
-                w = next;
-                loss_sum += loss as f64;
-                trained += 1;
-                n_te += trainer.data_size(client);
+        let mut reduce = |chain: ChainResult| -> Result<()> {
+            loss_sum += chain.loss_sum;
+            trained += chain.trained;
+            agg.push(&chain.sub_model, chain.n_te);
+            Ok(())
+        };
+        let parallel =
+            executor.threads() > 1 && n_parts > 1 && trainer.as_shared().is_some();
+        if parallel {
+            let shared = trainer.as_shared().expect("checked above");
+            executor.run_ordered(
+                n_parts,
+                |e| {
+                    run_chain(
+                        |c, w| shared.local_train_shared(c, w, cfg.epoch_local, round),
+                        &decision.parts[e].order,
+                        part_sizes[e],
+                        &global,
+                    )
+                },
+                |_, chain| reduce(chain),
+            )?;
+        } else {
+            for (part, &n_te) in decision.parts.iter().zip(&part_sizes) {
+                let chain = run_chain(
+                    |c, w| trainer.local_train(c, w, cfg.epoch_local, round),
+                    &part.order,
+                    n_te,
+                    &global,
+                )?;
+                reduce(chain)?;
             }
-            sub_models.push((w, n_te));
         }
         let compute_wall_s = t0.elapsed().as_secs_f64();
         sys.bus.publish(Announcement::UpdatesCollected {
             round,
-            count: sub_models.len(),
+            count: agg.count(),
         });
 
-        // line 20: weighted merge of the E sub-models
-        global = weighted_average(&sub_models)?;
+        // line 20: streamed weighted merge of the E sub-models
+        global = agg.finish()?;
 
         let accuracy = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
             trainer.evaluate(&global)?
@@ -193,7 +273,7 @@ mod tests {
         };
         let h = run(&mut s, &mut t, &g, &cfg, "p2p").unwrap();
         assert_eq!(h.rounds.len(), 4);
-        assert_eq!(t.calls, 4 * 20);
+        assert_eq!(t.calls(), 4 * 20);
     }
 
     #[test]
@@ -264,7 +344,7 @@ mod tests {
             ..Default::default()
         };
         run(&mut s, &mut t, &g, &cfg, "rs").unwrap();
-        assert_eq!(t.calls, 3 * 15);
+        assert_eq!(t.calls(), 3 * 15);
     }
 
     #[test]
@@ -286,6 +366,31 @@ mod tests {
         for (x, y) in a.rounds.iter().zip(&b.rounds) {
             assert_eq!(x.accuracy, y.accuracy);
             assert_eq!(x.tx_energies_j, y.tx_energies_j);
+        }
+    }
+
+    #[test]
+    fn parallel_and_serial_chains_are_bit_identical() {
+        let g = topo(16, 12);
+        let run_width = |threads: usize| {
+            let mut s = sys(16, 13);
+            let mut t = MockTrainer::new(16, 3000);
+            let cfg = P2pConfig {
+                rounds: 3,
+                partition_strategy: PartitionStrategy::BalancedDelay { e: 4 },
+                threads,
+                ..Default::default()
+            };
+            run(&mut s, &mut t, &g, &cfg, "width").unwrap()
+        };
+        let serial = run_width(1);
+        for threads in [2, 4] {
+            let parallel = run_width(threads);
+            for (a, b) in serial.rounds.iter().zip(&parallel.rounds) {
+                assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+                assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+                assert_eq!(a.tx_energies_j, b.tx_energies_j);
+            }
         }
     }
 }

@@ -6,8 +6,23 @@
 //!   artifacts through the PJRT engine (the production path);
 //! * `MockTrainer` provides a fast deterministic stand-in for unit tests
 //!   and scheduler-only ablations (no artifacts needed).
+//!
+//! # The parallel split
+//!
+//! Local training is the only part of a round that parallelizes across
+//! cohort members, so it is split out as [`SharedTrainer`]: a `Sync`
+//! trait whose `local_train_shared(&self, …)` may be called from many
+//! threads at once. A backend that supports it advertises through
+//! [`Trainer::as_shared`]; the coordinators then fan training out over
+//! `runtime::ParallelExecutor` and reduce in slot order (bit-identical
+//! to the serial path — see `model::aggregate`). Backends that are
+//! thread-confined (`PjrtTrainer`: the PJRT client is `Rc`-based) keep
+//! the default `None` and run serially, losing nothing — their
+//! "parallelism" is simulated time, and XLA already multithreads each
+//! execution internally.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::Result;
 
@@ -17,6 +32,21 @@ use crate::data::{Partition, Prototypes, SynthSpec};
 use crate::model::params::ModelParams;
 use crate::runtime::Engine;
 use crate::util::rng::Pcg64;
+
+/// The thread-safe half of a training backend: local training callable
+/// concurrently from a worker pool. Implementations must give results
+/// that depend only on the arguments (not on call interleaving) so that
+/// slot-ordered reduction stays deterministic.
+pub trait SharedTrainer: Sync {
+    /// Same contract as [`Trainer::local_train`], through `&self`.
+    fn local_train_shared(
+        &self,
+        client: usize,
+        params: &ModelParams,
+        epochs: usize,
+        round: usize,
+    ) -> Result<(ModelParams, f32)>;
+}
 
 /// Local-training + evaluation backend.
 pub trait Trainer {
@@ -39,6 +69,12 @@ pub trait Trainer {
 
     /// |D_i| for aggregation weights.
     fn data_size(&self, client: usize) -> usize;
+
+    /// The concurrently-callable view of this backend, if it has one.
+    /// `None` (the default) keeps the coordinators on the serial path.
+    fn as_shared(&self) -> Option<&dyn SharedTrainer> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -46,6 +82,7 @@ pub trait Trainer {
 // ---------------------------------------------------------------------------
 
 /// Production backend: JAX/Pallas AOT artifacts through PJRT.
+/// Thread-confined (no `as_shared`): the PJRT client is `Rc`-based.
 pub struct PjrtTrainer {
     engine: Engine,
     partition: Partition,
@@ -156,15 +193,13 @@ impl Trainer for PjrtTrainer {
                 &self.test.chunks_x[c],
                 &self.test.chunks_y[c],
                 self.eval_chunk_size,
-            )?;
-            // padded slots may be credited by the artifact; only real ones
-            // count. Padding wraps to the dataset start, so recompute the
-            // credit cap: got counts over chunk_size rows, real rows are
-            // the first `real_counts[c]` — the artifact cannot distinguish
-            // them, so for exactness all chunks here are full (10 000
-            // divides by 1000) and real == chunk_size.
-            debug_assert_eq!(self.test.real_counts[c], self.eval_chunk_size);
-            correct += got as i64;
+            )? as i64;
+            // Partial chunks are padded with the sentinel label -1 (see
+            // `eval_chunks`), which never matches an argmax in 0..10 —
+            // `got` therefore counts real rows only, for any test-set
+            // size. Cap at the chunk's real-row count anyway so a
+            // foreign artifact can never credit padding.
+            correct += got.min(self.test.real_counts[c] as i64);
         }
         Ok(correct as f64 / self.test.total_real() as f64)
     }
@@ -186,12 +221,15 @@ impl Trainer for PjrtTrainer {
 /// constant, "accuracy" is a saturating function of how close the global
 /// model is to the target. Captures the monotone-improvement property the
 /// coordinator logic relies on without touching PJRT.
+///
+/// Fully thread-safe (call counting is atomic), so it exercises the
+/// coordinators' parallel path in tests.
 pub struct MockTrainer {
     pub data_sizes: Vec<usize>,
     pub target: f32,
     /// per-epoch movement toward the target (0..1)
     pub rate: f32,
-    pub calls: usize,
+    calls: AtomicUsize,
 }
 
 impl MockTrainer {
@@ -200,41 +238,53 @@ impl MockTrainer {
             data_sizes: vec![samples_per_client; num_clients],
             target: 1.0,
             rate: 0.3,
-            calls: 0,
+            calls: AtomicUsize::new(0),
         }
     }
 
+    /// Total `local_train` invocations (across all threads).
+    pub fn calls(&self) -> usize {
+        self.calls.load(Ordering::Relaxed)
+    }
+
     fn distance(&self, params: &ModelParams) -> f64 {
-        let mut sum = 0.0;
-        let mut n = 0usize;
-        for t in &params.tensors {
-            for &v in t {
-                sum += (v - self.target).abs() as f64;
-                n += 1;
+        let sum: f64 = params
+            .as_slice()
+            .iter()
+            .map(|&v| (v - self.target).abs() as f64)
+            .sum();
+        sum / params.as_slice().len() as f64
+    }
+}
+
+impl SharedTrainer for MockTrainer {
+    fn local_train_shared(
+        &self,
+        _client: usize,
+        params: &ModelParams,
+        epochs: usize,
+        _round: usize,
+    ) -> Result<(ModelParams, f32)> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut out = params.clone();
+        for _ in 0..epochs {
+            for v in out.as_mut_slice() {
+                *v += self.rate * (self.target - *v);
             }
         }
-        sum / n as f64
+        Ok((out, self.distance(params) as f32))
     }
 }
 
 impl Trainer for MockTrainer {
     fn local_train(
         &mut self,
-        _client: usize,
+        client: usize,
         params: &ModelParams,
         epochs: usize,
-        _round: usize,
+        round: usize,
     ) -> Result<(ModelParams, f32)> {
-        self.calls += 1;
-        let mut out = params.clone();
-        for _ in 0..epochs {
-            for t in &mut out.tensors {
-                for v in t.iter_mut() {
-                    *v += self.rate * (self.target - *v);
-                }
-            }
-        }
-        Ok((out, self.distance(params) as f32))
+        self.local_train_shared(client, params, epochs, round)
     }
 
     fn evaluate(&mut self, params: &ModelParams) -> Result<f64> {
@@ -249,6 +299,10 @@ impl Trainer for MockTrainer {
 
     fn data_size(&self, client: usize) -> usize {
         self.data_sizes[client]
+    }
+
+    fn as_shared(&self) -> Option<&dyn SharedTrainer> {
+        Some(self)
     }
 }
 
@@ -266,7 +320,7 @@ mod tests {
         let (p2, _) = t.local_train(1, &p1, 1, 1).unwrap();
         let a2 = t.evaluate(&p2).unwrap();
         assert!(a0 < a1 && a1 < a2, "{a0} {a1} {a2}");
-        assert_eq!(t.calls, 2);
+        assert_eq!(t.calls(), 2);
     }
 
     #[test]
@@ -287,5 +341,32 @@ mod tests {
         let (p1, l1) = t.local_train(0, &p0, 1, 0).unwrap();
         let (_, l2) = t.local_train(0, &p1, 1, 1).unwrap();
         assert!(l2 < l1);
+    }
+
+    #[test]
+    fn shared_path_matches_serial_path_bitwise() {
+        let mut t = MockTrainer::new(2, 600);
+        let p0 = t.init_params().unwrap();
+        let (serial, l_serial) = t.local_train(0, &p0, 3, 0).unwrap();
+        let shared = t.as_shared().expect("mock is shared");
+        let (parallel, l_parallel) = shared.local_train_shared(0, &p0, 3, 0).unwrap();
+        assert_eq!(serial, parallel);
+        assert_eq!(l_serial.to_bits(), l_parallel.to_bits());
+    }
+
+    #[test]
+    fn call_counting_is_thread_safe() {
+        let t = MockTrainer::new(4, 600);
+        let p0 = ModelParams::zeros();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..25 {
+                        t.local_train_shared(0, &p0, 1, 0).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(t.calls(), 100);
     }
 }

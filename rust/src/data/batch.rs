@@ -47,9 +47,13 @@ pub fn epoch_batches(data: &Dataset, batch_size: usize, rng: &mut Pcg64) -> Epoc
 }
 
 /// Split a dataset into fixed-size eval chunks (the `eval_1000` artifact
-/// signature). The last partial chunk, if any, is padded by *wrapping*
-/// (repeating from the start); the caller corrects the correct-count by
-/// only crediting real samples — see `EvalChunks::total_real`.
+/// signature). The last partial chunk, if any, pads its **features** by
+/// wrapping (repeating from the start — the artifact needs valid rows)
+/// but pads its **labels** with the sentinel `-1`, which can never equal
+/// an argmax in `0..10`: the artifact's correct-count is therefore exact
+/// for any test-set size, divisible by the chunk size or not. Real-row
+/// counts are still tracked per chunk (`real_counts` /
+/// `EvalChunks::total_real`) so callers can cap credit defensively.
 #[derive(Debug, Clone)]
 pub struct EvalChunks {
     pub chunks_x: Vec<Vec<f32>>,
@@ -71,12 +75,12 @@ pub fn eval_chunks(data: &Dataset, chunk_size: usize) -> EvalChunks {
         let mut x = vec![0.0f32; chunk_size * INPUT_DIM];
         let mut y = vec![0i32; chunk_size];
         for i in 0..chunk_size {
-            // wrap padding re-evaluates early samples; harmless because
-            // only `real` slots are credited
             let src = (start + i) % data.n;
             let (xs, label) = data.sample(src);
             x[i * INPUT_DIM..(i + 1) * INPUT_DIM].copy_from_slice(xs);
-            y[i] = label;
+            // padded slots carry the impossible label -1 so the eval
+            // artifact's `pred == y` comparison never credits them
+            y[i] = if i < real { label } else { -1 };
         }
         chunks_x.push(x);
         chunks_y.push(y);
@@ -159,15 +163,19 @@ mod tests {
     }
 
     #[test]
-    fn eval_chunks_pad_by_wrapping() {
+    fn eval_chunks_pad_features_and_sentinel_labels() {
         let d = data(30);
         let e = eval_chunks(&d, 25);
         assert_eq!(e.num_chunks(), 2);
         assert_eq!(e.real_counts, vec![25, 5]);
-        // padded slots repeat from the start of the dataset
+        // padded feature rows repeat from the start of the dataset…
         let (x0, y0) = d.sample(0);
-        assert_eq!(e.chunks_y[1][5], y0);
         assert_eq!(&e.chunks_x[1][5 * INPUT_DIM..6 * INPUT_DIM], x0);
+        // …but padded labels are the impossible sentinel, never credited
+        assert!(y0 >= 0);
+        assert!(e.chunks_y[1][5..].iter().all(|&y| y == -1));
+        // real labels in the partial chunk are untouched
+        assert_eq!(e.chunks_y[1][4], d.sample(29).1);
     }
 
     #[test]

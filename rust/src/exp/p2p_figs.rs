@@ -131,6 +131,7 @@ pub fn run_p2p_setting(
         path_strategy: setting.path,
         epoch_local: 1,
         eval_every: 1,
+        threads: 0,
         seed: opts.seed,
         verbose: opts.verbose,
     };

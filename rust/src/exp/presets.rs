@@ -107,6 +107,7 @@ pub fn traditional_config(
         rb_strategy,
         eval_every: 1,
         tx_deadline_s: None,
+        threads: 0,
         seed,
         verbose: false,
     }

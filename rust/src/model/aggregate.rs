@@ -1,0 +1,164 @@
+//! Streaming FedAvg aggregation (paper Eq (1) / Algorithm 2 line 20).
+//!
+//! The coordinators used to buffer `Vec<(ModelParams, usize)>` — one full
+//! model clone per cohort member — and average at the end of the round.
+//! [`Aggregator`] folds each update into a single accumulator arena as it
+//! arrives (`push`), so a round holds **O(1) models in memory instead of
+//! O(cohort)**: the accumulator keeps `Σ wᵢ·xᵢ` (one fused
+//! multiply-accumulate pass per update over the flat arena) and `finish`
+//! normalizes by `Σ wᵢ` in one final pass.
+//!
+//! # Determinism contract
+//!
+//! `push` is a floating-point fold, so the result depends on push
+//! *order*. Every caller — serial or parallel — must push updates in a
+//! fixed canonical order (the coordinators use cohort **slot order**;
+//! `runtime::ParallelExecutor::run_ordered` guarantees slot-ordered
+//! reduction regardless of thread scheduling). Under that contract,
+//! parallel and serial rounds produce bit-identical global models.
+//!
+//! [`weighted_average`] remains as a thin compatibility wrapper for
+//! callers that already hold all updates.
+
+use anyhow::{bail, Result};
+
+use crate::model::params::ModelParams;
+
+/// Streaming data-weighted model average: `w = Σᵢ (nᵢ / Σn) · wᵢ`.
+#[derive(Debug, Clone)]
+pub struct Aggregator {
+    /// running `Σ wᵢ·xᵢ` over the flat arena
+    acc: ModelParams,
+    /// running `Σ wᵢ` (f64: exact for integer data-size weights)
+    weight_sum: f64,
+    count: usize,
+}
+
+impl Aggregator {
+    pub fn new() -> Self {
+        Aggregator {
+            acc: ModelParams::zeros(),
+            weight_sum: 0.0,
+            count: 0,
+        }
+    }
+
+    /// Fold one update in with data-size weight `n_i`. Updates must be
+    /// pushed in the caller's canonical (slot) order — see the module
+    /// docs' determinism contract.
+    pub fn push(&mut self, update: &ModelParams, weight: usize) {
+        self.acc.add_scaled(update, weight as f32);
+        self.weight_sum += weight as f64;
+        self.count += 1;
+    }
+
+    /// Number of updates folded so far.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Sum of the weights folded so far.
+    pub fn total_weight(&self) -> f64 {
+        self.weight_sum
+    }
+
+    /// Normalize and return the aggregate. Errors when nothing (or only
+    /// zero-weight updates) was pushed, matching `weighted_average`.
+    pub fn finish(self) -> Result<ModelParams> {
+        if self.count == 0 {
+            bail!("weighted_average of zero models");
+        }
+        if self.weight_sum <= 0.0 {
+            bail!("weighted_average with zero total weight");
+        }
+        let mut m = self.acc;
+        m.scale((1.0 / self.weight_sum) as f32);
+        Ok(m)
+    }
+}
+
+impl Default for Aggregator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Data-weighted FedAvg aggregation over a pre-collected batch —
+/// compatibility wrapper over [`Aggregator`] for callers that already
+/// hold every update.
+pub fn weighted_average(models: &[(ModelParams, usize)]) -> Result<ModelParams> {
+    let mut agg = Aggregator::new();
+    for (m, n) in models {
+        agg.push(m, *n);
+    }
+    agg.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(v: f32) -> ModelParams {
+        let mut m = ModelParams::zeros();
+        for x in m.as_mut_slice() {
+            *x = v;
+        }
+        m
+    }
+
+    #[test]
+    fn weighted_average_of_identical_models_is_identity() {
+        let m = filled(2.5);
+        let avg = weighted_average(&[(m.clone(), 600), (m.clone(), 600)]).unwrap();
+        assert!(avg.max_abs_diff(&m) < 1e-6);
+    }
+
+    #[test]
+    fn weighted_average_respects_weights() {
+        let a = filled(0.0);
+        let b = filled(4.0);
+        // weights 1:3 → 3.0
+        let avg = weighted_average(&[(a, 100), (b, 300)]).unwrap();
+        assert!((avg.tensor(0)[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equal_weights_is_plain_mean() {
+        let a = filled(1.0);
+        let b = filled(3.0);
+        let avg = weighted_average(&[(a, 600), (b, 600)]).unwrap();
+        assert!((avg.tensor(2)[5] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_aggregation_errors() {
+        assert!(weighted_average(&[]).is_err());
+        assert!(weighted_average(&[(filled(1.0), 0)]).is_err());
+        assert!(Aggregator::new().finish().is_err());
+    }
+
+    #[test]
+    fn streaming_matches_batch_exactly() {
+        // same fold order → bit-identical result
+        let updates = [(filled(0.25), 100), (filled(-1.5), 600), (filled(3.0), 47)];
+        let batch = weighted_average(&updates).unwrap();
+        let mut agg = Aggregator::new();
+        for (m, n) in &updates {
+            agg.push(m, *n);
+        }
+        let streamed = agg.finish().unwrap();
+        assert_eq!(batch, streamed);
+    }
+
+    #[test]
+    fn count_and_total_weight_track_pushes() {
+        let mut agg = Aggregator::new();
+        agg.push(&filled(1.0), 10);
+        agg.push(&filled(2.0), 30);
+        assert_eq!(agg.count(), 2);
+        assert_eq!(agg.total_weight(), 40.0);
+        let m = agg.finish().unwrap();
+        // (10·1 + 30·2) / 40 = 1.75
+        assert!((m.tensor(3)[0] - 1.75).abs() < 1e-6);
+    }
+}

@@ -13,10 +13,14 @@
 //! simulator then charges Eq (3)/(4) for the *compressed* Z(w), so the
 //! CNC × compression interaction is measurable (ablation in
 //! `cnc-fl ablate payload`).
+//!
+//! Codecs operate on the flat-arena `ModelParams` through its per-tensor
+//! views (`tensor(i)` / `tensor_mut(i)`), so quantization grids stay
+//! per-tensor while the storage stays contiguous.
 
 use anyhow::{bail, Result};
 
-use crate::model::params::ModelParams;
+use crate::model::params::{ModelParams, NUM_TENSORS, PARAM_COUNT};
 
 /// A codec choice for transmitting model updates.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -33,19 +37,18 @@ impl PayloadCodec {
     /// Transmitted bytes for a model under this codec (protocol framing
     /// ignored — same simplification as the paper's constant Z(w)).
     pub fn payload_bytes(&self, params: &ModelParams) -> usize {
-        let n: usize = params.tensors.iter().map(|t| t.len()).sum();
+        let n = PARAM_COUNT;
         match self {
             PayloadCodec::Raw => n * 4,
             // u8 per entry + (min, max) f32 per tensor
-            PayloadCodec::Quant8 => n + params.tensors.len() * 8,
+            PayloadCodec::Quant8 => n + NUM_TENSORS * 8,
             // u32 index + f32 value per kept entry
             PayloadCodec::TopK { keep_frac } => {
                 let kept: usize = params
-                    .tensors
-                    .iter()
+                    .tensors()
                     .map(|t| keep_count(t.len(), *keep_frac))
                     .sum();
-                kept * 8 + params.tensors.len() * 4
+                kept * 8 + NUM_TENSORS * 4
             }
         }
     }
@@ -60,7 +63,7 @@ impl PayloadCodec {
                 if !(*keep_frac > 0.0 && *keep_frac <= 1.0) {
                     bail!("keep_frac must be in (0, 1], got {keep_frac}");
                 }
-                Ok(sparsify_topk(params, *keep_frac).densify(params))
+                Ok(sparsify_topk(params, *keep_frac).densify())
             }
         }
     }
@@ -85,10 +88,10 @@ pub struct Quantized {
 }
 
 pub fn quantize8(params: &ModelParams) -> Quantized {
-    let mut codes = Vec::with_capacity(params.tensors.len());
+    let mut codes = Vec::with_capacity(NUM_TENSORS);
     let mut mins = Vec::new();
     let mut scales = Vec::new();
-    for t in &params.tensors {
+    for t in params.tensors() {
         let lo = t.iter().copied().fold(f32::INFINITY, f32::min);
         let hi = t.iter().copied().fold(f32::NEG_INFINITY, f32::max);
         let scale = if hi > lo { (hi - lo) / 255.0 } else { 1.0 };
@@ -108,16 +111,15 @@ pub fn quantize8(params: &ModelParams) -> Quantized {
 }
 
 pub fn dequantize8(q: &Quantized) -> ModelParams {
-    ModelParams {
-        tensors: q
-            .codes
-            .iter()
-            .zip(q.mins.iter().zip(&q.scales))
-            .map(|(codes, (&lo, &scale))| {
-                codes.iter().map(|&c| lo + c as f32 * scale).collect()
-            })
-            .collect(),
+    let mut m = ModelParams::zeros();
+    for (i, (codes, (&lo, &scale))) in
+        q.codes.iter().zip(q.mins.iter().zip(&q.scales)).enumerate()
+    {
+        for (dst, &c) in m.tensor_mut(i).iter_mut().zip(codes) {
+            *dst = lo + c as f32 * scale;
+        }
     }
+    m
 }
 
 // ---------------------------------------------------------------------------
@@ -133,8 +135,7 @@ pub struct SparseUpdate {
 /// Keep the `frac` largest-|v| entries of each tensor.
 pub fn sparsify_topk(params: &ModelParams, frac: f32) -> SparseUpdate {
     let entries = params
-        .tensors
-        .iter()
+        .tensors()
         .map(|t| {
             let k = keep_count(t.len(), frac);
             let mut idx: Vec<u32> = (0..t.len() as u32).collect();
@@ -156,21 +157,16 @@ pub fn sparsify_topk(params: &ModelParams, frac: f32) -> SparseUpdate {
 
 impl SparseUpdate {
     /// Reconstruct a dense model: kept entries from the update, zeros
-    /// elsewhere (`reference` only supplies the tensor shapes).
-    pub fn densify(&self, reference: &ModelParams) -> ModelParams {
-        let tensors = self
-            .entries
-            .iter()
-            .zip(&reference.tensors)
-            .map(|(kept, r)| {
-                let mut t = vec![0.0f32; r.len()];
-                for &(i, v) in kept {
-                    t[i as usize] = v;
-                }
-                t
-            })
-            .collect();
-        ModelParams { tensors }
+    /// elsewhere (the arena layout fixes the shapes statically).
+    pub fn densify(&self) -> ModelParams {
+        let mut m = ModelParams::zeros();
+        for (i, kept) in self.entries.iter().enumerate() {
+            let t = m.tensor_mut(i);
+            for &(idx, v) in kept {
+                t[idx as usize] = v;
+            }
+        }
+        m
     }
 
     pub fn nnz(&self) -> usize {
@@ -186,10 +182,8 @@ mod tests {
     fn random_params(seed: u64) -> ModelParams {
         let mut m = ModelParams::zeros();
         let mut rng = Pcg64::seed_from(seed);
-        for t in &mut m.tensors {
-            for v in t.iter_mut() {
-                *v = rng.normal_scaled(0.0, 0.05) as f32;
-            }
+        for v in m.as_mut_slice() {
+            *v = rng.normal_scaled(0.0, 0.05) as f32;
         }
         m
     }
@@ -218,7 +212,7 @@ mod tests {
     fn quant8_error_bounded_by_half_step() {
         let m = random_params(2);
         let r = PayloadCodec::Quant8.round_trip(&m).unwrap();
-        for (t, rt) in m.tensors.iter().zip(&r.tensors) {
+        for (t, rt) in m.tensors().zip(r.tensors()) {
             let lo = t.iter().copied().fold(f32::INFINITY, f32::min);
             let hi = t.iter().copied().fold(f32::NEG_INFINITY, f32::max);
             let half_step = (hi - lo) / 255.0 / 2.0 + 1e-6;
@@ -231,10 +225,8 @@ mod tests {
     #[test]
     fn quant8_constant_tensor_safe() {
         let mut m = ModelParams::zeros();
-        for t in &mut m.tensors {
-            for v in t.iter_mut() {
-                *v = 0.7;
-            }
+        for v in m.as_mut_slice() {
+            *v = 0.7;
         }
         let r = PayloadCodec::Quant8.round_trip(&m).unwrap();
         assert!(m.max_abs_diff(&r) < 1e-6);
@@ -244,13 +236,15 @@ mod tests {
     fn topk_keeps_largest_magnitudes() {
         let mut m = ModelParams::zeros();
         // tensor 3 is b2 with 10 entries — craft known values
-        m.tensors[3] = vec![0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -2.0, 0.3, 0.01];
+        m.tensor_mut(3).copy_from_slice(&[
+            0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -2.0, 0.3, 0.01,
+        ]);
         let s = sparsify_topk(&m, 0.3); // k = 3 for len 10
         let kept: Vec<u32> = s.entries[3].iter().map(|&(i, _)| i).collect();
         assert_eq!(kept, vec![1, 3, 7]); // |-5|, |3|, |-2|
-        let d = s.densify(&m);
-        assert_eq!(d.tensors[3][1], -5.0);
-        assert_eq!(d.tensors[3][0], 0.0); // dropped → zero
+        let d = s.densify();
+        assert_eq!(d.tensor(3)[1], -5.0);
+        assert_eq!(d.tensor(3)[0], 0.0); // dropped → zero
     }
 
     #[test]
@@ -286,13 +280,9 @@ mod tests {
         // gaussian tensors: top 20% of magnitudes carry the bulk of the L2
         let m = random_params(6);
         let r = PayloadCodec::TopK { keep_frac: 0.2 }.round_trip(&m).unwrap();
-        let norm =
-            |p: &ModelParams| -> f64 {
-                p.tensors
-                    .iter()
-                    .flat_map(|t| t.iter().map(|&v| (v as f64).powi(2)))
-                    .sum::<f64>()
-            };
+        let norm = |p: &ModelParams| -> f64 {
+            p.as_slice().iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+        };
         assert!(norm(&r) > 0.4 * norm(&m));
     }
 
@@ -300,9 +290,9 @@ mod tests {
     fn quantize_dequantize_shapes_preserved() {
         let m = random_params(7);
         let q = quantize8(&m);
-        assert_eq!(q.codes.len(), m.tensors.len());
+        assert_eq!(q.codes.len(), NUM_TENSORS);
         let d = dequantize8(&q);
-        for (a, b) in m.tensors.iter().zip(&d.tensors) {
+        for (a, b) in m.tensors().zip(d.tensors()) {
             assert_eq!(a.len(), b.len());
         }
     }

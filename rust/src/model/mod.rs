@@ -1,8 +1,11 @@
-//! Rust-side model state: parameter tensors, FedAvg aggregation, and the
-//! update-compression codecs of the paper's related work [4].
+//! Rust-side model state: the flat-arena parameter store, streaming
+//! FedAvg aggregation, and the update-compression codecs of the paper's
+//! related work [4].
 
+pub mod aggregate;
 pub mod compress;
 pub mod params;
 
+pub use aggregate::{weighted_average, Aggregator};
 pub use compress::PayloadCodec;
-pub use params::{weighted_average, ModelParams};
+pub use params::ModelParams;

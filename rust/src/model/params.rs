@@ -1,9 +1,26 @@
-//! Model parameters on the Rust side: a flat view of (w1, b1, w2, b2)
-//! matching `python/compile/model.py`'s PARAM_SHAPES, plus the FedAvg
-//! weighted-average aggregation (paper Eq (1) / Algorithm 2 line 20).
+//! Model parameters on the Rust side: a **flat arena** over (w1, b1, w2,
+//! b2) matching `python/compile/model.py`'s PARAM_SHAPES.
 //!
-//! Parameters live as one contiguous `Vec<f32>` per tensor so they convert
-//! to/from PJRT literals without reshuffling.
+//! # Arena layout
+//!
+//! All scalars live in one contiguous `Vec<f32>`, tensors concatenated in
+//! `PARAM_SHAPES` order at the compile-time offsets `TENSOR_OFFSETS`
+//! (exclusive prefix sums of the tensor lengths). Per-tensor views are
+//! zero-copy slices of the arena:
+//!
+//! ```text
+//! data: [ w1 (784·128) | b1 (128) | w2 (128·10) | b2 (10) ]
+//!        ^offset 0      ^100352    ^100480       ^101760     len 101770
+//! ```
+//!
+//! This layout is exactly the AOT `init_params.f32.bin` blob layout, so
+//! `from_blob`/`to_blob` are single chunked byte copies (a `memcpy` on
+//! little-endian hosts) instead of per-scalar `from_le_bytes` loops, and
+//! the aggregation hot loops (`add_scaled`, `scale`, `max_abs_diff`) are
+//! one pass over the whole arena, unrolled 8-wide so LLVM auto-vectorizes.
+//!
+//! The FedAvg aggregation built on these primitives lives in
+//! [`crate::model::aggregate`].
 
 use anyhow::{bail, Context, Result};
 
@@ -16,54 +33,93 @@ pub const PARAM_SHAPES: [(&str, &[usize]); 4] = [
     ("b2", &[10]),
 ];
 
-/// Total scalar count across all tensors.
-pub fn param_count() -> usize {
-    PARAM_SHAPES
-        .iter()
-        .map(|(_, s)| s.iter().product::<usize>())
-        .sum()
+/// Number of parameter tensors.
+pub const NUM_TENSORS: usize = PARAM_SHAPES.len();
+
+const fn shape_elems(shape: &[usize]) -> usize {
+    let mut p = 1;
+    let mut i = 0;
+    while i < shape.len() {
+        p *= shape[i];
+        i += 1;
+    }
+    p
 }
 
-/// The model parameters as four tensors.
+/// Exclusive prefix sums of tensor lengths; `TENSOR_OFFSETS[i]..
+/// TENSOR_OFFSETS[i + 1]` is tensor `i`'s arena range, and the final
+/// entry is the total scalar count.
+pub const TENSOR_OFFSETS: [usize; NUM_TENSORS + 1] = {
+    let mut offsets = [0usize; NUM_TENSORS + 1];
+    let mut i = 0;
+    while i < NUM_TENSORS {
+        offsets[i + 1] = offsets[i] + shape_elems(PARAM_SHAPES[i].1);
+        i += 1;
+    }
+    offsets
+};
+
+/// Total scalar count across all tensors (compile-time constant).
+pub const PARAM_COUNT: usize = TENSOR_OFFSETS[NUM_TENSORS];
+
+/// Total scalar count across all tensors.
+pub fn param_count() -> usize {
+    PARAM_COUNT
+}
+
+/// The model parameters as one contiguous arena (see module docs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelParams {
-    pub tensors: Vec<Vec<f32>>,
+    data: Vec<f32>,
 }
 
 impl ModelParams {
     /// All-zero parameters (aggregation accumulator).
     pub fn zeros() -> Self {
         ModelParams {
-            tensors: PARAM_SHAPES
-                .iter()
-                .map(|(_, s)| vec![0.0; s.iter().product()])
-                .collect(),
+            data: vec![0.0; PARAM_COUNT],
         }
     }
 
+    /// Adopt a pre-laid-out arena (must be exactly `PARAM_COUNT` long).
+    pub fn from_vec(data: Vec<f32>) -> Result<Self> {
+        if data.len() != PARAM_COUNT {
+            bail!(
+                "arena has {} scalars, expected {PARAM_COUNT}",
+                data.len()
+            );
+        }
+        Ok(ModelParams { data })
+    }
+
     /// Load from the AOT `init_params.f32.bin` blob (little-endian f32,
-    /// tensors concatenated in PARAM_SHAPES order).
+    /// tensors concatenated in PARAM_SHAPES order — i.e. exactly the
+    /// arena layout). One byte copy on little-endian hosts.
     pub fn from_blob(blob: &[u8]) -> Result<Self> {
-        let want = param_count() * 4;
+        let want = PARAM_COUNT * 4;
         if blob.len() != want {
             bail!(
                 "init params blob is {} bytes, expected {want}",
                 blob.len()
             );
         }
-        let mut tensors = Vec::with_capacity(PARAM_SHAPES.len());
-        let mut off = 0usize;
-        for (_, shape) in PARAM_SHAPES {
-            let n: usize = shape.iter().product();
-            let mut t = Vec::with_capacity(n);
-            for i in 0..n {
-                let b = &blob[off + i * 4..off + i * 4 + 4];
-                t.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
-            }
-            off += n * 4;
-            tensors.push(t);
+        let mut data = vec![0.0f32; PARAM_COUNT];
+        #[cfg(target_endian = "little")]
+        // SAFETY: `blob` holds exactly PARAM_COUNT * 4 bytes (checked
+        // above), `data` owns PARAM_COUNT f32s, the ranges cannot
+        // overlap, and every bit pattern is a valid f32.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                blob.as_ptr(),
+                data.as_mut_ptr().cast::<u8>(),
+                want,
+            );
         }
-        Ok(ModelParams { tensors })
+        #[cfg(not(target_endian = "little"))]
+        for (dst, src) in data.iter_mut().zip(blob.chunks_exact(4)) {
+            *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+        }
+        Ok(ModelParams { data })
     }
 
     pub fn load(path: &std::path::Path) -> Result<Self> {
@@ -72,60 +128,110 @@ impl ModelParams {
         Self::from_blob(&blob)
     }
 
-    /// Serialize back to the blob format (round-trips `from_blob`).
+    /// Serialize back to the blob format (round-trips `from_blob`
+    /// byte-identically). One byte copy on little-endian hosts.
     pub fn to_blob(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(param_count() * 4);
-        for t in &self.tensors {
-            for &v in t {
+        let want = PARAM_COUNT * 4;
+        #[cfg(target_endian = "little")]
+        {
+            let mut out = vec![0u8; want];
+            // SAFETY: symmetric to `from_blob` — sizes match, no overlap,
+            // u8 has no invalid bit patterns.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    self.data.as_ptr().cast::<u8>(),
+                    out.as_mut_ptr(),
+                    want,
+                );
+            }
+            out
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            let mut out = Vec::with_capacity(want);
+            for &v in &self.data {
                 out.extend_from_slice(&v.to_le_bytes());
             }
+            out
         }
-        out
+    }
+
+    /// The whole arena.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// The whole arena, mutable.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Zero-copy view of tensor `i` (PARAM_SHAPES order).
+    pub fn tensor(&self, i: usize) -> &[f32] {
+        &self.data[TENSOR_OFFSETS[i]..TENSOR_OFFSETS[i + 1]]
+    }
+
+    /// Mutable view of tensor `i`.
+    pub fn tensor_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[TENSOR_OFFSETS[i]..TENSOR_OFFSETS[i + 1]]
+    }
+
+    /// Iterate the per-tensor views in PARAM_SHAPES order.
+    pub fn tensors(&self) -> impl Iterator<Item = &[f32]> {
+        (0..NUM_TENSORS).map(|i| self.tensor(i))
     }
 
     /// The payload size Z(w) in bytes if transmitted raw — compare with
     /// Table 1's 0.606 MB (their model + framing; ours is 0.407 MB raw).
     pub fn payload_bytes(&self) -> usize {
-        self.tensors.iter().map(|t| t.len() * 4).sum::<usize>()
+        self.data.len() * 4
     }
 
-    /// accumulate `weight * other` into self (fused multiply-add per
-    /// element) — the hot loop of aggregation.
+    /// Accumulate `weight * other` into self — the hot loop of
+    /// aggregation. One pass over the arena, unrolled 8-wide.
     pub fn add_scaled(&mut self, other: &ModelParams, weight: f32) {
-        for (dst, src) in self.tensors.iter_mut().zip(&other.tensors) {
-            debug_assert_eq!(dst.len(), src.len());
-            for (d, &s) in dst.iter_mut().zip(src) {
-                *d += weight * s;
-            }
+        debug_assert_eq!(self.data.len(), other.data.len());
+        let mut dst = self.data.chunks_exact_mut(8);
+        let mut src = other.data.chunks_exact(8);
+        for (d, s) in dst.by_ref().zip(src.by_ref()) {
+            d[0] += weight * s[0];
+            d[1] += weight * s[1];
+            d[2] += weight * s[2];
+            d[3] += weight * s[3];
+            d[4] += weight * s[4];
+            d[5] += weight * s[5];
+            d[6] += weight * s[6];
+            d[7] += weight * s[7];
+        }
+        for (d, &s) in dst.into_remainder().iter_mut().zip(src.remainder()) {
+            *d += weight * s;
         }
     }
 
-    /// Max |a - b| across all tensors (test / convergence diagnostics).
-    pub fn max_abs_diff(&self, other: &ModelParams) -> f32 {
-        self.tensors
-            .iter()
-            .zip(&other.tensors)
-            .flat_map(|(a, b)| a.iter().zip(b).map(|(x, y)| (x - y).abs()))
-            .fold(0.0, f32::max)
+    /// Multiply every scalar by `factor` (aggregation normalization).
+    pub fn scale(&mut self, factor: f32) {
+        for v in &mut self.data {
+            *v *= factor;
+        }
     }
-}
 
-/// Data-weighted FedAvg aggregation:
-/// `w = Σ_i (n_i / Σn) · w_i` (paper Eq (1) solved by weighted averaging;
-/// Algorithm 2 line 20 uses the same form over subset models).
-pub fn weighted_average(models: &[(ModelParams, usize)]) -> Result<ModelParams> {
-    if models.is_empty() {
-        bail!("weighted_average of zero models");
+    /// Max |a - b| across the arena (test / convergence diagnostics).
+    pub fn max_abs_diff(&self, other: &ModelParams) -> f32 {
+        debug_assert_eq!(self.data.len(), other.data.len());
+        let mut acc = [0.0f32; 8];
+        let mut a = self.data.chunks_exact(8);
+        let mut b = other.data.chunks_exact(8);
+        for (x, y) in a.by_ref().zip(b.by_ref()) {
+            for l in 0..8 {
+                acc[l] = acc[l].max((x[l] - y[l]).abs());
+            }
+        }
+        let mut m = acc.iter().fold(0.0f32, |m, &v| m.max(v));
+        for (x, y) in a.remainder().iter().zip(b.remainder()) {
+            m = m.max((x - y).abs());
+        }
+        m
     }
-    let total: usize = models.iter().map(|(_, n)| n).sum();
-    if total == 0 {
-        bail!("weighted_average with zero total weight");
-    }
-    let mut acc = ModelParams::zeros();
-    for (m, n) in models {
-        acc.add_scaled(m, *n as f32 / total as f32);
-    }
-    Ok(acc)
 }
 
 #[cfg(test)]
@@ -134,10 +240,8 @@ mod tests {
 
     fn filled(v: f32) -> ModelParams {
         let mut m = ModelParams::zeros();
-        for t in &mut m.tensors {
-            for x in t.iter_mut() {
-                *x = v;
-            }
+        for x in m.as_mut_slice() {
+            *x = v;
         }
         m
     }
@@ -145,58 +249,60 @@ mod tests {
     #[test]
     fn param_count_matches_python() {
         assert_eq!(param_count(), 784 * 128 + 128 + 128 * 10 + 10);
+        assert_eq!(PARAM_COUNT, param_count());
+    }
+
+    #[test]
+    fn offsets_are_prefix_sums_of_shapes() {
+        assert_eq!(TENSOR_OFFSETS[0], 0);
+        assert_eq!(TENSOR_OFFSETS[1], 784 * 128);
+        assert_eq!(TENSOR_OFFSETS[2], 784 * 128 + 128);
+        assert_eq!(TENSOR_OFFSETS[3], 784 * 128 + 128 + 128 * 10);
+        assert_eq!(TENSOR_OFFSETS[4], PARAM_COUNT);
+        let m = ModelParams::zeros();
+        for (i, (name, shape)) in PARAM_SHAPES.iter().enumerate() {
+            let want: usize = shape.iter().product();
+            assert_eq!(m.tensor(i).len(), want, "tensor {name}");
+        }
+    }
+
+    #[test]
+    fn tensor_views_alias_the_arena() {
+        let mut m = ModelParams::zeros();
+        m.tensor_mut(2)[5] = 7.5;
+        assert_eq!(m.as_slice()[TENSOR_OFFSETS[2] + 5], 7.5);
+        assert_eq!(m.tensors().count(), NUM_TENSORS);
     }
 
     #[test]
     fn blob_round_trip() {
-        let mut m = filled(0.0);
+        let mut m = ModelParams::zeros();
         // make it non-trivial
         let mut v = 0.0f32;
-        for t in &mut m.tensors {
-            for x in t.iter_mut() {
-                *x = v;
-                v += 0.001;
-            }
+        for x in m.as_mut_slice() {
+            *x = v;
+            v += 0.001;
         }
         let blob = m.to_blob();
         assert_eq!(blob.len(), param_count() * 4);
         let m2 = ModelParams::from_blob(&blob).unwrap();
         assert_eq!(m, m2);
+        // byte-identical the other way too
+        assert_eq!(m2.to_blob(), blob);
+    }
+
+    #[test]
+    fn blob_is_little_endian_per_scalar() {
+        let mut m = ModelParams::zeros();
+        m.as_mut_slice()[0] = 1.5f32;
+        let blob = m.to_blob();
+        assert_eq!(&blob[0..4], &1.5f32.to_le_bytes());
     }
 
     #[test]
     fn from_blob_rejects_bad_size() {
         assert!(ModelParams::from_blob(&[0u8; 16]).is_err());
-    }
-
-    #[test]
-    fn weighted_average_of_identical_models_is_identity() {
-        let m = filled(2.5);
-        let avg = weighted_average(&[(m.clone(), 600), (m.clone(), 600)]).unwrap();
-        assert!(avg.max_abs_diff(&m) < 1e-6);
-    }
-
-    #[test]
-    fn weighted_average_respects_weights() {
-        let a = filled(0.0);
-        let b = filled(4.0);
-        // weights 1:3 → 3.0
-        let avg = weighted_average(&[(a, 100), (b, 300)]).unwrap();
-        assert!((avg.tensors[0][0] - 3.0).abs() < 1e-6);
-    }
-
-    #[test]
-    fn equal_weights_is_plain_mean() {
-        let a = filled(1.0);
-        let b = filled(3.0);
-        let avg = weighted_average(&[(a, 600), (b, 600)]).unwrap();
-        assert!((avg.tensors[2][5] - 2.0).abs() < 1e-6);
-    }
-
-    #[test]
-    fn empty_aggregation_errors() {
-        assert!(weighted_average(&[]).is_err());
-        assert!(weighted_average(&[(filled(1.0), 0)]).is_err());
+        assert!(ModelParams::from_vec(vec![0.0; 3]).is_err());
     }
 
     #[test]
@@ -212,6 +318,28 @@ mod tests {
         let mut acc = ModelParams::zeros();
         acc.add_scaled(&filled(2.0), 0.5);
         acc.add_scaled(&filled(4.0), 0.25);
-        assert!((acc.tensors[1][7] - 2.0).abs() < 1e-6);
+        assert!((acc.tensor(1)[7] - 2.0).abs() < 1e-6);
+        // the unroll remainder (arena length is not a multiple of 8) is
+        // covered too
+        let last = *acc.as_slice().last().unwrap();
+        assert!((last - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scale_hits_every_scalar() {
+        let mut m = filled(2.0);
+        m.scale(0.25);
+        assert!(m.as_slice().iter().all(|&v| (v - 0.5).abs() < 1e-7));
+    }
+
+    #[test]
+    fn max_abs_diff_covers_remainder_lanes() {
+        let a = ModelParams::zeros();
+        let mut b = ModelParams::zeros();
+        // place the max difference in the final (remainder) scalar
+        *b.as_mut_slice().last_mut().unwrap() = -3.0;
+        assert_eq!(a.max_abs_diff(&b), 3.0);
+        b.as_mut_slice()[1] = 9.0; // now in the unrolled body
+        assert_eq!(a.max_abs_diff(&b), 9.0);
     }
 }

@@ -212,10 +212,10 @@ mod tests {
         };
         let store = ArtifactStore::load(&dir).unwrap();
         let p = store.init_params().unwrap();
-        assert_eq!(p.tensors[0].len(), 784 * 128);
+        assert_eq!(p.tensor(0).len(), 784 * 128);
         // He init: w1 std ≈ sqrt(2/784) ≈ 0.0505
         let std: f32 = {
-            let t = &p.tensors[0];
+            let t = p.tensor(0);
             let mean: f32 = t.iter().sum::<f32>() / t.len() as f32;
             (t.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / t.len() as f32)
                 .sqrt()

@@ -316,11 +316,9 @@ impl Engine {
 }
 
 fn param_inputs(params: &ModelParams) -> Vec<HostTensor<'_>> {
-    params
-        .tensors
-        .iter()
-        .zip(PARAM_SHAPES)
-        .map(|(t, (_, shape))| HostTensor::F32(t, shape))
+    // zero-copy views straight out of the flat arena, one per tensor
+    (0..PARAM_SHAPES.len())
+        .map(|i| HostTensor::F32(params.tensor(i), PARAM_SHAPES[i].1))
         .collect()
 }
 
@@ -328,8 +326,9 @@ fn unpack_params_and_scalar(outs: Vec<xla::Literal>) -> Result<(ModelParams, f32
     if outs.len() != PARAM_SHAPES.len() + 1 {
         bail!("expected {} outputs, got {}", PARAM_SHAPES.len() + 1, outs.len());
     }
-    let mut tensors = Vec::with_capacity(PARAM_SHAPES.len());
-    for (lit, (name, shape)) in outs.iter().zip(PARAM_SHAPES) {
+    // copy each output literal into its arena segment
+    let mut params = ModelParams::zeros();
+    for (i, (lit, (name, shape))) in outs.iter().zip(PARAM_SHAPES).enumerate() {
         let v = lit
             .to_vec::<f32>()
             .with_context(|| format!("reading output `{name}`"))?;
@@ -337,10 +336,10 @@ fn unpack_params_and_scalar(outs: Vec<xla::Literal>) -> Result<(ModelParams, f32
         if v.len() != want {
             bail!("output `{name}` has {} elements, expected {want}", v.len());
         }
-        tensors.push(v);
+        params.tensor_mut(i).copy_from_slice(&v);
     }
     let loss = outs[PARAM_SHAPES.len()].get_first_element::<f32>()?;
-    Ok((ModelParams { tensors }, loss))
+    Ok((params, loss))
 }
 
 #[cfg(test)]

@@ -1,9 +1,12 @@
-//! PJRT runtime: artifact manifest loading (`artifacts`) and the cached
-//! compile-and-execute engine (`executor`). Python never runs here — only
-//! the HLO text it produced at build time.
+//! PJRT runtime: artifact manifest loading (`artifacts`), the cached
+//! compile-and-execute engine (`executor`), and the deterministic
+//! fan-out substrate for parallel cohort execution (`parallel`).
+//! Python never runs here — only the HLO text it produced at build time.
 
 pub mod artifacts;
 pub mod executor;
+pub mod parallel;
 
 pub use artifacts::{ArtifactStore, DType, TensorMeta};
 pub use executor::{Engine, HostTensor};
+pub use parallel::ParallelExecutor;

@@ -1,0 +1,364 @@
+//! Scoped-thread fan-out with **deterministic slot-ordered reduction** —
+//! the execution substrate for "cohort members train in parallel".
+//!
+//! `ParallelExecutor::run_ordered(n, work, reduce)` runs `work(i)` for
+//! every slot `i in 0..n` across a scoped worker pool, then delivers the
+//! results to `reduce` strictly in slot order, buffering out-of-order
+//! arrivals. Because the reduction order is fixed regardless of thread
+//! scheduling, a floating-point fold (e.g. `model::Aggregator`) produces
+//! **bit-identical results for any thread count** — the determinism
+//! contract the coordinators' same-seed guarantee rests on.
+//!
+//! Error semantics match a serial loop: the error of the lowest-indexed
+//! failing slot is returned and no later slot is reduced (workers stop
+//! claiming new slots as soon as any failure is seen, so wasted work is
+//! bounded by the in-flight window).
+//!
+//! Scoped threads (not `util::pool::ThreadPool`) because the work
+//! closures borrow round-local state — the global model and the cohort
+//! decision — which a `'static` job queue cannot.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+
+use anyhow::Result;
+
+use crate::util::pool::panic_payload_msg;
+
+/// A fixed-width fan-out executor. Cheap to construct; holds no threads
+/// between calls (workers are scoped per `run_ordered`).
+#[derive(Debug, Clone)]
+pub struct ParallelExecutor {
+    threads: usize,
+}
+
+impl ParallelExecutor {
+    /// `threads = 0` means "one per available core"; any other value is
+    /// used as-is (clamped to ≥ 1). `threads = 1` forces serial
+    /// execution — useful for A/B-ing the determinism contract.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        ParallelExecutor { threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `work(i)` for every slot in `0..n`, reducing results in slot
+    /// order. Serial fallback when the pool is width-1 or there is at
+    /// most one slot.
+    pub fn run_ordered<R, W, C>(&self, n: usize, work: W, mut reduce: C) -> Result<()>
+    where
+        R: Send,
+        W: Fn(usize) -> Result<R> + Sync,
+        C: FnMut(usize, R) -> Result<()>,
+    {
+        if n == 0 {
+            return Ok(());
+        }
+        if self.threads == 1 || n == 1 {
+            for i in 0..n {
+                reduce(i, work(i)?)?;
+            }
+            return Ok(());
+        }
+
+        let next = AtomicUsize::new(0);
+        let stop = AtomicBool::new(false);
+        // Backpressure: workers claim at most `window` slots past the
+        // reducer's progress, so buffered out-of-order results stay
+        // O(threads) — not O(n) — even under a straggler slot. Claims
+        // are sequential and the worker holding the lowest un-reduced
+        // slot is never gated, so progress is guaranteed. Gated workers
+        // block on the condvar (no busy-wait); the timeout is a backstop
+        // for the stop flag, which is set outside the lock.
+        let window = 2 * self.threads.min(n);
+        let progress = std::sync::Mutex::new(0usize);
+        let advanced = std::sync::Condvar::new();
+        let (tx, rx) = channel::<(usize, Result<R>)>();
+        let workers = self.threads.min(n);
+
+        // Unwind guard: if the reducer (or anything else in the scope
+        // body) panics, gated workers must still be released — otherwise
+        // `thread::scope` blocks joining them forever during the unwind.
+        // Firing on normal exit too is harmless: workers are done by then.
+        struct AbortGuard<'a> {
+            stop: &'a AtomicBool,
+            advanced: &'a std::sync::Condvar,
+        }
+        impl Drop for AbortGuard<'_> {
+            fn drop(&mut self) {
+                self.stop.store(true, Ordering::Relaxed);
+                self.advanced.notify_all();
+            }
+        }
+
+        std::thread::scope(|scope| {
+            let _abort = AbortGuard {
+                stop: &stop,
+                advanced: &advanced,
+            };
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                let stop = &stop;
+                let work = &work;
+                let progress = &progress;
+                let advanced = &advanced;
+                scope.spawn(move || loop {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        return;
+                    }
+                    let mut gated_abort = false;
+                    {
+                        let mut done = progress.lock().expect("gate poisoned");
+                        while i >= *done + window {
+                            if stop.load(Ordering::Relaxed) {
+                                gated_abort = true;
+                                break;
+                            }
+                            done = advanced
+                                .wait_timeout(done, std::time::Duration::from_millis(100))
+                                .expect("gate poisoned")
+                                .0;
+                        }
+                    }
+                    // The in-order drain below relies on EVERY claimed
+                    // slot arriving (a gap would strand later results,
+                    // including the Err that set `stop`, and leave gated
+                    // peers waiting forever). A worker that observed
+                    // `stop` while still gated skips the work but sends a
+                    // synthetic Err for its slot — sound for the
+                    // lowest-indexed-error contract because `done` only
+                    // advances, so while slot i is over the window no
+                    // slot above i can have run (or failed) yet.
+                    if gated_abort {
+                        let _ = tx.send((
+                            i,
+                            Err(anyhow::anyhow!("slot {i} aborted after earlier failure")),
+                        ));
+                        return;
+                    }
+                    // Even when `work` panics, the slot's result must
+                    // still be sent (same no-gap requirement).
+                    let r = catch_unwind(AssertUnwindSafe(|| work(i))).unwrap_or_else(
+                        |payload| {
+                            Err(anyhow::anyhow!(
+                                "worker panicked at slot {i}: {}",
+                                panic_payload_msg(&*payload)
+                            ))
+                        },
+                    );
+                    if r.is_err() {
+                        stop.store(true, Ordering::Relaxed);
+                    }
+                    if tx.send((i, r)).is_err() {
+                        return;
+                    }
+                });
+            }
+            drop(tx); // rx drains until every worker is done
+
+            // slot-ordered reduction: buffer out-of-order arrivals
+            let mut pending: BTreeMap<usize, Result<R>> = BTreeMap::new();
+            let mut next_slot = 0usize;
+            let mut first_err: Option<anyhow::Error> = None;
+            for (i, r) in rx {
+                pending.insert(i, r);
+                let mut moved = false;
+                while let Some(r) = pending.remove(&next_slot) {
+                    next_slot += 1;
+                    moved = true;
+                    match r {
+                        Ok(v) => {
+                            if first_err.is_none() {
+                                if let Err(e) = reduce(next_slot - 1, v) {
+                                    stop.store(true, Ordering::Relaxed);
+                                    first_err = Some(e);
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            stop.store(true, Ordering::Relaxed);
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                        }
+                    }
+                }
+                if moved {
+                    *progress.lock().expect("gate poisoned") = next_slot;
+                    advanced.notify_all();
+                }
+            }
+            // Belt-and-braces: every claimed slot sends, so a drain that
+            // stops short can only mean an abort — surface the stranded
+            // error rather than returning Ok with missing slots.
+            if first_err.is_none() && next_slot < n {
+                first_err = pending
+                    .into_values()
+                    .find_map(|r| r.err())
+                    .or_else(|| Some(anyhow::anyhow!("parallel execution aborted")));
+            }
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })
+    }
+}
+
+impl Default for ParallelExecutor {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+    use std::sync::Mutex;
+
+    #[test]
+    fn reduces_in_slot_order_for_any_width() {
+        for threads in [1, 2, 4, 8] {
+            let ex = ParallelExecutor::new(threads);
+            let mut seen = Vec::new();
+            ex.run_ordered(
+                100,
+                |i| Ok(i * i),
+                |i, v| {
+                    assert_eq!(v, i * i);
+                    seen.push(i);
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(seen, (0..100).collect::<Vec<_>>(), "width {threads}");
+        }
+    }
+
+    #[test]
+    fn ordered_float_fold_is_bit_identical_across_widths() {
+        // a fold whose result depends on order — must not vary with width
+        let fold = |threads: usize| -> f32 {
+            let ex = ParallelExecutor::new(threads);
+            let mut acc = 0.0f32;
+            ex.run_ordered(
+                1000,
+                |i| Ok((i as f32).sin() * 1e-3),
+                |_, v| {
+                    acc += v;
+                    Ok(())
+                },
+            )
+            .unwrap();
+            acc
+        };
+        let serial = fold(1);
+        for threads in [2, 3, 7] {
+            assert_eq!(serial.to_bits(), fold(threads).to_bits());
+        }
+    }
+
+    #[test]
+    fn lowest_indexed_error_wins() {
+        let ex = ParallelExecutor::new(4);
+        let reduced = Mutex::new(Vec::new());
+        let err = ex
+            .run_ordered(
+                50,
+                |i| {
+                    if i == 7 || i == 31 {
+                        bail!("slot {i} failed");
+                    }
+                    Ok(i)
+                },
+                |i, _| {
+                    reduced.lock().unwrap().push(i);
+                    Ok(())
+                },
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("slot 7"), "{err}");
+        // nothing at or after the failing slot was reduced
+        assert!(reduced.lock().unwrap().iter().all(|&i| i < 7));
+    }
+
+    #[test]
+    fn reduce_error_propagates() {
+        let ex = ParallelExecutor::new(4);
+        let err = ex
+            .run_ordered(
+                10,
+                |i| Ok(i),
+                |i, _| {
+                    if i == 3 {
+                        bail!("reduce rejected {i}");
+                    }
+                    Ok(())
+                },
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("reduce rejected 3"), "{err}");
+    }
+
+    #[test]
+    fn panic_in_work_surfaces_as_error_not_hang() {
+        // a panicking slot must not strand gated peers (n ≫ window) or
+        // swallow the failure — it becomes that slot's Err
+        let ex = ParallelExecutor::new(2);
+        let err = ex
+            .run_ordered(
+                50,
+                |i| {
+                    if i == 1 {
+                        panic!("boom {i}");
+                    }
+                    Ok(i)
+                },
+                |_, _| Ok(()),
+            )
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("panicked") && msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn zero_and_one_slots() {
+        let ex = ParallelExecutor::new(4);
+        ex.run_ordered(0, |_| Ok(()), |_, _| Ok(())).unwrap();
+        let mut hits = 0;
+        ex.run_ordered(
+            1,
+            |i| Ok(i),
+            |i, v| {
+                assert_eq!((i, v), (0, 0));
+                hits += 1;
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn zero_width_resolves_to_cores() {
+        assert!(ParallelExecutor::new(0).threads() >= 1);
+        assert_eq!(ParallelExecutor::new(3).threads(), 3);
+    }
+}

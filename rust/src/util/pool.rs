@@ -127,12 +127,18 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
 }
 
 fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+    format!("worker panicked: {}", panic_payload_msg(e))
+}
+
+/// Best-effort human-readable panic payload (also used by
+/// `runtime::parallel` to convert caught unwinds into slot errors).
+pub(crate) fn panic_payload_msg(e: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = e.downcast_ref::<&str>() {
-        format!("worker panicked: {s}")
+        (*s).to_string()
     } else if let Some(s) = e.downcast_ref::<String>() {
-        format!("worker panicked: {s}")
+        s.clone()
     } else {
-        "worker panicked".to_string()
+        "non-string panic payload".to_string()
     }
 }
 

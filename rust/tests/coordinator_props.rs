@@ -42,6 +42,7 @@ fn traditional_rounds_always_complete_with_valid_metrics() {
                 rb_strategy: RbStrategy::HungarianEnergy,
                 eval_every: 1,
                 tx_deadline_s: None,
+                threads: 0,
                 seed: seed as u64,
                 verbose: false,
             };
@@ -82,13 +83,14 @@ fn p2p_every_client_visited_exactly_once_per_round() {
                 path_strategy: PathStrategy::Greedy,
                 epoch_local: 1,
                 eval_every: 1,
+                threads: 0,
                 seed: seed as u64,
                 verbose: false,
             };
             p2p::run(&mut sys, &mut t, &g, &cfg, "prop").unwrap();
             prop_assert(
-                t.calls == 2 * u,
-                &format!("expected {} training calls, got {}", 2 * u, t.calls),
+                t.calls() == 2 * u,
+                &format!("expected {} training calls, got {}", 2 * u, t.calls()),
             )
         },
     );
@@ -111,6 +113,7 @@ fn cnc_delay_spread_dominates_fedavg_across_seeds() {
                 rb_strategy: rb,
                 eval_every: 15,
                 tx_deadline_s: None,
+                threads: 0,
                 seed,
                 verbose: false,
             };
@@ -149,6 +152,7 @@ fn p2p_partition_count_bounds_round_chain_delay() {
                 path_strategy: PathStrategy::Greedy,
                 epoch_local: 1,
                 eval_every: 2,
+                threads: 0,
                 seed,
                 verbose: false,
             };
@@ -183,6 +187,7 @@ fn aggregation_weights_are_conserved() {
                 rb_strategy: RbStrategy::Random,
                 eval_every: 1,
                 tx_deadline_s: None,
+                threads: 0,
                 seed: seed as u64,
                 verbose: false,
             };
@@ -215,6 +220,7 @@ fn bus_message_flow_is_exactly_four_per_traditional_round() {
                 rb_strategy: RbStrategy::Random,
                 eval_every: 1,
                 tx_deadline_s: None,
+                threads: 0,
                 seed: seed as u64,
                 verbose: false,
             };

@@ -61,6 +61,7 @@ fn traditional_cnc_learns_iid() {
         rb_strategy: RbStrategy::HungarianEnergy,
         eval_every: 5,
         tx_deadline_s: None,
+        threads: 0,
         seed: 0,
         verbose: false,
     };
@@ -85,6 +86,7 @@ fn traditional_cnc_learns_non_iid() {
         rb_strategy: RbStrategy::HungarianEnergy,
         eval_every: 5,
         tx_deadline_s: None,
+        threads: 0,
         seed: 0,
         verbose: false,
     };
@@ -106,6 +108,7 @@ fn p2p_chain_learns() {
         path_strategy: PathStrategy::Greedy,
         epoch_local: 1,
         eval_every: 1,
+        threads: 0,
         seed: 0,
         verbose: false,
     };
@@ -128,6 +131,7 @@ fn cnc_and_fedavg_reach_similar_accuracy_but_cnc_cheaper() {
         rb_strategy: RbStrategy::HungarianEnergy,
         eval_every: 4,
         tx_deadline_s: None,
+        threads: 0,
         seed: 0,
         verbose: false,
     };
@@ -169,6 +173,7 @@ fn local_epochs_scale_compute_not_crash() {
         rb_strategy: RbStrategy::BottleneckDelay,
         eval_every: 1,
         tx_deadline_s: None,
+        threads: 0,
         seed: 0,
         verbose: false,
     };

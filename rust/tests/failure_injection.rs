@@ -84,6 +84,7 @@ fn trad_cfg(rounds: usize, cohort: usize) -> TraditionalConfig {
         rb_strategy: RbStrategy::Random,
         eval_every: 1,
         tx_deadline_s: None,
+        threads: 0,
         seed: 0,
         verbose: false,
     }
@@ -128,6 +129,7 @@ fn p2p_chain_failure_propagates() {
         path_strategy: PathStrategy::Greedy,
         epoch_local: 1,
         eval_every: 1,
+        threads: 0,
         seed: 0,
         verbose: false,
     };
@@ -149,6 +151,7 @@ fn p2p_on_disconnected_topology_errors_not_hangs() {
         path_strategy: PathStrategy::Greedy,
         epoch_local: 1,
         eval_every: 1,
+        threads: 0,
         seed: 0,
         verbose: false,
     };
@@ -167,6 +170,7 @@ fn p2p_wrong_topology_size_rejected() {
         path_strategy: PathStrategy::Greedy,
         epoch_local: 1,
         eval_every: 1,
+        threads: 0,
         seed: 0,
         verbose: false,
     };

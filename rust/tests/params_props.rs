@@ -1,0 +1,248 @@
+//! Property tests for the flat-arena parameter store, the streaming
+//! aggregator, and the parallel-coordinator determinism contract
+//! (mock backend — no artifacts needed).
+
+use cnc_fl::cnc::optimize::{
+    CohortStrategy, PartitionStrategy, PathStrategy, RbStrategy,
+};
+use cnc_fl::cnc::CncSystem;
+use cnc_fl::coordinator::p2p::{self, P2pConfig};
+use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
+use cnc_fl::coordinator::MockTrainer;
+use cnc_fl::metrics::RunHistory;
+use cnc_fl::model::aggregate::{weighted_average, Aggregator};
+use cnc_fl::model::params::{
+    param_count, ModelParams, NUM_TENSORS, PARAM_SHAPES, TENSOR_OFFSETS,
+};
+use cnc_fl::netsim::channel::ChannelParams;
+use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::netsim::topology::TopologyGen;
+use cnc_fl::util::propcheck::{check, gen_usize, prop_assert, GenPair};
+use cnc_fl::util::rng::Pcg64;
+
+fn random_params(seed: u64) -> ModelParams {
+    let mut rng = Pcg64::seed_from(seed);
+    let mut m = ModelParams::zeros();
+    for v in m.as_mut_slice() {
+        *v = rng.normal_scaled(0.0, 1.0) as f32;
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// flat arena ⇄ blob
+// ---------------------------------------------------------------------------
+
+#[test]
+fn blob_round_trips_byte_identically() {
+    check(25, gen_usize(0..1_000_000), |&seed| {
+        let m = random_params(seed as u64);
+        let blob = m.to_blob();
+        let back = ModelParams::from_blob(&blob)
+            .map_err(|e| format!("from_blob failed: {e}"))?;
+        prop_assert(back.to_blob() == blob, "blob → params → blob must be identity")?;
+        prop_assert(back == m, "params → blob → params must be identity")
+    });
+}
+
+#[test]
+fn blob_layout_matches_seed_tensor_concatenation() {
+    // the seed laid tensors out as per-tensor little-endian segments in
+    // PARAM_SHAPES order; the arena blob must be bit-compatible
+    let m = random_params(7);
+    let blob = m.to_blob();
+    let mut off = 0usize;
+    for i in 0..NUM_TENSORS {
+        let view = m.tensor(i);
+        assert_eq!(off, TENSOR_OFFSETS[i] * 4);
+        for &v in view {
+            assert_eq!(&blob[off..off + 4], &v.to_le_bytes(), "offset {off}");
+            off += 4;
+        }
+    }
+    assert_eq!(off, param_count() * 4);
+    let total: usize = PARAM_SHAPES
+        .iter()
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum();
+    assert_eq!(total, param_count());
+}
+
+// ---------------------------------------------------------------------------
+// streaming aggregator ≡ batch weighted average
+// ---------------------------------------------------------------------------
+
+#[test]
+fn aggregator_matches_weighted_average_for_random_weights() {
+    check(
+        20,
+        GenPair(gen_usize(1..12), gen_usize(0..1_000_000)),
+        |&(n, seed)| {
+            let mut rng = Pcg64::seed_from(seed as u64 ^ 0xA66);
+            let updates: Vec<(ModelParams, usize)> = (0..n)
+                .map(|i| {
+                    let m = random_params(seed as u64 * 31 + i as u64);
+                    let w = rng.below(2000) as usize + 1;
+                    (m, w)
+                })
+                .collect();
+            let batch = weighted_average(&updates)
+                .map_err(|e| format!("weighted_average: {e}"))?;
+            let mut agg = Aggregator::new();
+            for (m, w) in &updates {
+                agg.push(m, *w);
+            }
+            let streamed = agg.finish().map_err(|e| format!("finish: {e}"))?;
+            let diff = batch.max_abs_diff(&streamed);
+            prop_assert(diff <= 1e-6, &format!("streamed vs batch diff {diff}"))?;
+
+            // independent f64 reference at sampled arena positions
+            let total: f64 = updates.iter().map(|(_, w)| *w as f64).sum();
+            for pos in [0usize, 1, 999, param_count() - 1] {
+                let want: f64 = updates
+                    .iter()
+                    .map(|(m, w)| *w as f64 * m.as_slice()[pos] as f64)
+                    .sum::<f64>()
+                    / total;
+                let got = streamed.as_slice()[pos] as f64;
+                prop_assert(
+                    (got - want).abs() <= 1e-4,
+                    &format!("pos {pos}: streamed {got} vs f64 reference {want}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn aggregator_of_equal_models_is_identity_for_any_weights() {
+    check(
+        20,
+        GenPair(gen_usize(1..10), gen_usize(0..1_000_000)),
+        |&(n, seed)| {
+            let m = random_params(seed as u64);
+            let mut rng = Pcg64::seed_from(seed as u64 ^ 0xBEE);
+            let mut agg = Aggregator::new();
+            for _ in 0..n {
+                agg.push(&m, rng.below(5000) as usize + 1);
+            }
+            let out = agg.finish().map_err(|e| format!("finish: {e}"))?;
+            let diff = out.max_abs_diff(&m);
+            prop_assert(diff <= 1e-5, &format!("identity aggregation drift {diff}"))
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// parallel ≡ serial coordinator runs
+// ---------------------------------------------------------------------------
+
+fn assert_histories_identical(a: &RunHistory, b: &RunHistory) -> Result<(), String> {
+    if a.rounds.len() != b.rounds.len() {
+        return Err(format!(
+            "round counts differ: {} vs {}",
+            a.rounds.len(),
+            b.rounds.len()
+        ));
+    }
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        if x.accuracy.to_bits() != y.accuracy.to_bits() {
+            return Err(format!(
+                "round {}: accuracy {} vs {}",
+                x.round, x.accuracy, y.accuracy
+            ));
+        }
+        if x.train_loss.to_bits() != y.train_loss.to_bits() {
+            return Err(format!(
+                "round {}: loss {} vs {}",
+                x.round, x.train_loss, y.train_loss
+            ));
+        }
+        if x.local_delays_s != y.local_delays_s
+            || x.tx_delays_s != y.tx_delays_s
+            || x.tx_energies_j != y.tx_energies_j
+            || x.dropouts != y.dropouts
+        {
+            return Err(format!("round {}: decision telemetry differs", x.round));
+        }
+    }
+    Ok(())
+}
+
+fn system(n: usize, seed: u64) -> CncSystem {
+    let mut ch = ChannelParams::default();
+    ch.fading_samples = 2;
+    CncSystem::bootstrap(n, 600, 1, PowerProfile::Bimodal, ch, seed)
+}
+
+#[test]
+fn traditional_parallel_runs_equal_serial_for_any_seed() {
+    check(
+        8,
+        GenPair(gen_usize(15..40), gen_usize(0..10_000)),
+        |&(u, seed)| {
+            let cohort = (u / 3).max(2);
+            let run_width = |threads: usize| {
+                let mut sys = system(u, seed as u64);
+                let mut t = MockTrainer::new(u, 600);
+                let cfg = TraditionalConfig {
+                    rounds: 3,
+                    cohort_size: cohort,
+                    n_rb: cohort,
+                    epoch_local: 2,
+                    cohort_strategy: CohortStrategy::PowerGrouping {
+                        m: (u / cohort).clamp(1, u),
+                    },
+                    rb_strategy: RbStrategy::HungarianEnergy,
+                    eval_every: 1,
+                    tx_deadline_s: None,
+                    threads,
+                    seed: seed as u64,
+                    verbose: false,
+                };
+                traditional::run(&mut sys, &mut t, &cfg, "det").unwrap()
+            };
+            let serial = run_width(1);
+            for threads in [2, 5] {
+                assert_histories_identical(&serial, &run_width(threads))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p2p_parallel_runs_equal_serial_for_any_seed() {
+    check(
+        6,
+        GenPair(gen_usize(8..24), gen_usize(0..10_000)),
+        |&(u, seed)| {
+            let e = (u / 4).max(2);
+            let g = {
+                let mut rng = Pcg64::seed_from(seed as u64);
+                TopologyGen::full(u, 1.0, 10.0, &mut rng)
+            };
+            let run_width = |threads: usize| {
+                let mut sys = system(u, seed as u64);
+                let mut t = MockTrainer::new(u, 600);
+                let cfg = P2pConfig {
+                    rounds: 2,
+                    partition_strategy: PartitionStrategy::BalancedDelay { e },
+                    path_strategy: PathStrategy::Greedy,
+                    epoch_local: 1,
+                    eval_every: 1,
+                    threads,
+                    seed: seed as u64,
+                    verbose: false,
+                };
+                p2p::run(&mut sys, &mut t, &g, &cfg, "det").unwrap()
+            };
+            let serial = run_width(1);
+            for threads in [3, 8] {
+                assert_histories_identical(&serial, &run_width(threads))?;
+            }
+            Ok(())
+        },
+    );
+}

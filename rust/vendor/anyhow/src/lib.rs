@@ -1,0 +1,263 @@
+//! Offline shim of the `anyhow` crate.
+//!
+//! The real crate is not vendorable in this network-less build
+//! environment, so this implements the exact subset the workspace uses:
+//! `Result<T>`, a context-carrying `Error`, the `Context` extension trait
+//! for `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics mirror upstream where it matters to callers:
+//! * `Display` shows the outermost message; `{:#}` shows the whole
+//!   context chain joined by `": "`; `Debug` (what `unwrap()` prints)
+//!   shows the chain as a `Caused by:` list.
+//! * Any `std::error::Error + Send + Sync + 'static` converts via `?`,
+//!   capturing its `source()` chain.
+//! * Like upstream, `Error` deliberately does NOT implement
+//!   `std::error::Error` — that is what keeps the blanket `From` and
+//!   `Context` impls coherent.
+
+use std::fmt;
+
+/// `Result` defaulted to [`Error`], as in upstream anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: a root message plus the stack of contexts wrapped
+/// around it. `stack[0]` is the outermost (most recently attached)
+/// message, `stack[last]` the root cause.
+pub struct Error {
+    stack: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            stack: vec![message.to_string()],
+        }
+    }
+
+    /// Build from a standard error, capturing its `source()` chain.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut stack = vec![error.to_string()];
+        let mut src = error.source();
+        while let Some(s) = src {
+            stack.push(s.to_string());
+            src = s.source();
+        }
+        Error { stack }
+    }
+
+    /// Wrap one more layer of context around the error.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.stack.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.stack.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.stack.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain on one line
+            write!(f, "{}", self.stack.join(": "))
+        } else {
+            write!(f, "{}", self.stack.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.stack.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.stack.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.stack[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Internal: anything that can collapse into [`Error`]. Mirrors anyhow's
+/// private `ext::StdError` trick — the blanket impl covers real
+/// `std::error::Error` types, the concrete impl covers `Error` itself
+/// (coherent because `Error` does not implement `std::error::Error`).
+#[doc(hidden)]
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl<E> IntoError for E
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn into_error(self) -> Error {
+        Error::new(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+/// Extension trait attaching context to `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap with a lazily-built context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoError> Context<T> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_shows_outermost_only() {
+        let e: Error = anyhow!("top {}", "level");
+        assert_eq!(e.to_string(), "top level");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_joins() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading config").unwrap_err();
+        assert_eq!(e.to_string(), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: missing file");
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn option_context_works() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("no value {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "no value 7");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here/xyz")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("missing file"));
+    }
+}
