@@ -1,0 +1,141 @@
+//! Decision-layer latency: flat `SchedulingOptimizer` over the whole
+//! fleet versus K sharded optimizers fanned out over the
+//! `ParallelExecutor` — at 10³ / 10⁴ / 10⁵ clients (decisions only, no
+//! training; `MockTrainer` scale presets use exactly this path).
+//!
+//! The flat path pays O(cohort³) in the Hungarian RB assignment plus
+//! O(cohort·n_rb) channel modelling per round; sharding cuts both to K
+//! independent O((cohort/K)³)-ish problems. Prints a before/after table
+//! like `bench_params` — the ISSUE-2 acceptance bar is ≥ 5× at 10⁴.
+//!
+//! Run: `cargo bench --bench bench_fleet`
+
+use std::sync::Mutex;
+
+use cnc_fl::cnc::optimize::{CohortStrategy, RbStrategy, SchedulingOptimizer};
+use cnc_fl::cnc::CncSystem;
+use cnc_fl::exp::presets::default_m;
+use cnc_fl::fleet::{decide_traditional_sharded, FleetShards, ShardBy};
+use cnc_fl::netsim::channel::ChannelParams;
+use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::runtime::ParallelExecutor;
+use cnc_fl::util::bench::{black_box, fmt_ns, Bencher};
+use cnc_fl::util::rng::Pcg64;
+
+/// Cohort sizing for the decision benchmark: 1 % of the fleet, capped so
+/// the flat Hungarian stays runnable at 10⁵ (the cap favours the flat
+/// baseline — uncapped it would be thousands of times slower).
+fn cohort_for(u: usize) -> usize {
+    (u / 100).clamp(8, 500)
+}
+
+fn shards_for(u: usize) -> usize {
+    (u / 625).clamp(2, 64)
+}
+
+struct Row {
+    clients: usize,
+    flat_ns: f64,
+    sharded_ns: f64,
+}
+
+fn main() {
+    let mut b = Bencher::coarse();
+    println!("# bench_fleet — flat vs sharded decision latency\n");
+    let mut rows = Vec::new();
+
+    for &u in &[1_000usize, 10_000, 100_000] {
+        let cohort = cohort_for(u);
+        let k = shards_for(u);
+        let mut channel = ChannelParams::default();
+        channel.fading_samples = 4; // channel modelling is per-entry; keep
+                                    // the benchmark decision-bound
+        let sys = CncSystem::bootstrap(
+            u,
+            600,
+            1,
+            PowerProfile::Bimodal,
+            channel,
+            0xBEEF,
+        );
+
+        // --- flat: one optimizer over the whole fleet -------------------
+        let mut flat_opt = SchedulingOptimizer::new();
+        let strategy = CohortStrategy::PowerGrouping {
+            m: default_m(u, cohort),
+        };
+        let mut round = 0u64;
+        let flat = b.bench(&format!("decide flat     {u:>6} clients"), || {
+            round += 1;
+            let rng = Pcg64::new(1, round);
+            black_box(
+                flat_opt
+                    .decide_traditional(
+                        &sys.pool,
+                        strategy,
+                        RbStrategy::HungarianEnergy,
+                        cohort,
+                        cohort,
+                        &rng,
+                    )
+                    .unwrap(),
+            )
+        });
+
+        // --- sharded: K optimizers fanned out over the executor ---------
+        let fleet = FleetShards::build(&sys.pool, k, ShardBy::Power).unwrap();
+        let shard_len = u / k;
+        let shard_strategy = CohortStrategy::PowerGrouping {
+            m: default_m(shard_len, (cohort / k).max(1)),
+        };
+        let optimizers: Vec<Mutex<SchedulingOptimizer>> =
+            (0..k).map(|_| Mutex::new(SchedulingOptimizer::new())).collect();
+        let shard_ids: Vec<usize> = (0..k).collect();
+        let cohorts = cnc_fl::fleet::split_proportional(cohort, &fleet.sizes());
+        let executor = ParallelExecutor::new(0);
+        let mut round = 0u64;
+        let sharded = b.bench(
+            &format!("decide sharded  {u:>6} clients ({k:>2} shards)"),
+            || {
+                round += 1;
+                let rngs: Vec<Pcg64> =
+                    (0..k).map(|s| Pcg64::new(round, s as u64)).collect();
+                black_box(
+                    decide_traditional_sharded(
+                        &fleet,
+                        &optimizers,
+                        &shard_ids,
+                        shard_strategy,
+                        RbStrategy::HungarianEnergy,
+                        &cohorts,
+                        &cohorts,
+                        &rngs,
+                        &executor,
+                    )
+                    .unwrap(),
+                )
+            },
+        );
+        rows.push(Row {
+            clients: u,
+            flat_ns: flat.median_ns,
+            sharded_ns: sharded.median_ns,
+        });
+    }
+
+    let mut table = String::from(
+        "\n## before/after (median decision latency per round)\n\n\
+         | clients | flat | sharded | speedup |\n|---|---|---|---|\n",
+    );
+    for r in &rows {
+        table.push_str(&format!(
+            "| {} | {} | {} | {:.1}× |\n",
+            r.clients,
+            fmt_ns(r.flat_ns),
+            fmt_ns(r.sharded_ns),
+            r.flat_ns / r.sharded_ns
+        ));
+    }
+    println!("{table}");
+    println!("{}", b.markdown_table());
+}

@@ -40,6 +40,21 @@ pub enum Announcement {
         round: usize,
         count: usize,
     },
+    /// fleet optimization → clients: one shard's cohort + RB allocation
+    /// (the sharded analogue of `TraditionalDecision`; cohort ids are
+    /// fleet-global)
+    ShardDecision {
+        round: usize,
+        shard: usize,
+        cohort: Vec<usize>,
+    },
+    /// shard → root aggregation tier: a shard update was folded into the
+    /// global model, `staleness` rounds after the model it trained on
+    ShardCommit {
+        round: usize,
+        shard: usize,
+        staleness: usize,
+    },
 }
 
 /// The bus: FIFO delivery + a bounded audit log.
@@ -87,7 +102,9 @@ impl AnnouncementBus {
                 | Announcement::TraditionalDecision { round: r, .. }
                 | Announcement::P2pDecision { round: r, .. }
                 | Announcement::ModelBroadcast { round: r, .. }
-                | Announcement::UpdatesCollected { round: r, .. } => *r == round,
+                | Announcement::UpdatesCollected { round: r, .. }
+                | Announcement::ShardDecision { round: r, .. }
+                | Announcement::ShardCommit { round: r, .. } => *r == round,
             })
             .collect()
     }

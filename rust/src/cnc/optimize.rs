@@ -134,6 +134,11 @@ impl SchedulingOptimizer {
         // 1. cohort
         let cohort = match cohort_strategy {
             CohortStrategy::PowerGrouping { m } => {
+                // Shard-local pools can be smaller than the fleet-derived
+                // group count (the `fleet` registry hands us a slice of
+                // the fleet); clamp instead of tripping
+                // `PowerGroups::build`'s m ≤ U assertion.
+                let m = m.clamp(1, u);
                 if self.groups.is_none() {
                     self.groups = Some(PowerGroups::build(&pool.fleet, m));
                 }

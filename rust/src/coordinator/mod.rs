@@ -14,3 +14,79 @@ pub mod trainer;
 pub use p2p::P2pConfig;
 pub use traditional::TraditionalConfig;
 pub use trainer::{MockTrainer, PjrtTrainer, SharedTrainer, Trainer};
+
+use anyhow::Result;
+
+use crate::model::params::ModelParams;
+use crate::runtime::ParallelExecutor;
+
+/// Apply the uplink-deadline dropout model to a decided cohort: a
+/// client whose slot-aligned `tx_delays_s` entry exceeds the deadline
+/// never reaches the server (it still trained and spent energy — the
+/// decision telemetry stays recorded). Returns the surviving
+/// `(client id, data size)` pairs in cohort slot order plus the dropout
+/// count. `deadline = None` keeps everyone (the paper default).
+///
+/// Shared by the flat coordinator and the fleet engine — see
+/// [`train_cohort`]'s note on why neither duplicates round logic.
+pub(crate) fn cohort_survivors(
+    trainer: &dyn Trainer,
+    cohort: &[usize],
+    tx_delays_s: &[f64],
+    deadline: Option<f64>,
+) -> (Vec<(usize, usize)>, usize) {
+    let mut active = Vec::with_capacity(cohort.len());
+    let mut dropouts = 0usize;
+    for (slot, &client) in cohort.iter().enumerate() {
+        if let Some(deadline) = deadline {
+            if tx_delays_s[slot] > deadline {
+                dropouts += 1;
+                continue;
+            }
+        }
+        active.push((client, trainer.data_size(client)));
+    }
+    (active, dropouts)
+}
+
+/// Train the `active` cohort — `(client id, data size)` pairs in slot
+/// order — against `global`, folding every update through `fold` in slot
+/// order (the `model::aggregate` determinism contract), in parallel when
+/// the executor is wider than one thread and the backend is shared.
+/// Returns the summed training loss.
+///
+/// The single training path of both the flat coordinator and the fleet
+/// engine: their bit-identity contract (`tests/fleet_props.rs`) rests on
+/// the two never diverging, so neither duplicates this logic.
+pub(crate) fn train_cohort(
+    trainer: &mut dyn Trainer,
+    executor: &ParallelExecutor,
+    active: &[(usize, usize)],
+    global: &ModelParams,
+    epochs: usize,
+    round: usize,
+    mut fold: impl FnMut(&ModelParams, usize),
+) -> Result<f64> {
+    let mut loss_sum = 0.0f64;
+    let parallel =
+        executor.threads() > 1 && active.len() > 1 && trainer.as_shared().is_some();
+    if parallel {
+        let shared = trainer.as_shared().expect("checked above");
+        executor.run_ordered(
+            active.len(),
+            |i| shared.local_train_shared(active[i].0, global, epochs, round),
+            |i, (upd, loss)| {
+                loss_sum += loss as f64;
+                fold(&upd, active[i].1);
+                Ok(())
+            },
+        )?;
+    } else {
+        for &(client, data_size) in active {
+            let (upd, loss) = trainer.local_train(client, global, epochs, round)?;
+            loss_sum += loss as f64;
+            fold(&upd, data_size);
+        }
+    }
+    Ok(loss_sum)
+}

@@ -225,7 +225,7 @@ pub fn run_with_model(
             tx_delays_s: tx_costs.clone(),
             tx_energies_j: tx_costs,
             compute_wall_s,
-            dropouts: 0,
+            ..Default::default()
         };
         if cfg.verbose {
             eprintln!(

@@ -73,8 +73,10 @@ impl Default for TraditionalConfig {
 }
 
 /// Per-round decision RNG — the single derivation shared by the run
-/// loop and the tests' scheduling probe, so they can never drift.
-fn round_rng(seed: u64, round: usize) -> Pcg64 {
+/// loop, the tests' scheduling probe, and the `fleet` engine's
+/// single-shard degenerate mode (which must reproduce this coordinator
+/// bit-for-bit), so they can never drift.
+pub(crate) fn round_rng(seed: u64, round: usize) -> Pcg64 {
     Pcg64::new(seed, 0xF00D).split(&format!("round/{round}"))
 }
 
@@ -125,20 +127,14 @@ pub fn run_with_model(
             payload_bytes: payload,
         });
 
-        // dropout model: an update whose uplink misses the deadline never
-        // reaches the server (the client still trained & spent energy —
-        // costs stay recorded). Survivors keep their cohort slot order.
-        let mut active: Vec<(usize, usize)> = Vec::with_capacity(decision.cohort.len());
-        let mut dropouts = 0usize;
-        for (slot, &client) in decision.cohort.iter().enumerate() {
-            if let Some(deadline) = cfg.tx_deadline_s {
-                if decision.tx_delays_s[slot] > deadline {
-                    dropouts += 1;
-                    continue;
-                }
-            }
-            active.push((client, trainer.data_size(client)));
-        }
+        // dropout model: shared `coordinator::cohort_survivors` filter
+        // (survivors keep their cohort slot order)
+        let (active, dropouts) = crate::coordinator::cohort_survivors(
+            &*trainer,
+            &decision.cohort,
+            &decision.tx_delays_s,
+            cfg.tx_deadline_s,
+        );
         if active.is_empty() {
             anyhow::bail!(
                 "round {round}: every cohort member missed the {}s uplink deadline",
@@ -147,31 +143,20 @@ pub fn run_with_model(
         }
 
         // local training, streamed into the aggregator in slot order
-        // (identical fold order on the serial and parallel paths)
+        // (identical fold order on the serial and parallel paths) — the
+        // shared `coordinator::train_cohort` path, same as the fleet
+        // engine's
         let t0 = std::time::Instant::now();
         let mut agg = Aggregator::new();
-        let mut loss_sum = 0.0f64;
-        let parallel =
-            executor.threads() > 1 && active.len() > 1 && trainer.as_shared().is_some();
-        if parallel {
-            let shared = trainer.as_shared().expect("checked above");
-            executor.run_ordered(
-                active.len(),
-                |i| shared.local_train_shared(active[i].0, &global, cfg.epoch_local, round),
-                |i, (upd, loss)| {
-                    loss_sum += loss as f64;
-                    agg.push(&upd, active[i].1);
-                    Ok(())
-                },
-            )?;
-        } else {
-            for &(client, data_size) in &active {
-                let (upd, loss) =
-                    trainer.local_train(client, &global, cfg.epoch_local, round)?;
-                loss_sum += loss as f64;
-                agg.push(&upd, data_size);
-            }
-        }
+        let loss_sum = crate::coordinator::train_cohort(
+            trainer,
+            &executor,
+            &active,
+            &global,
+            cfg.epoch_local,
+            round,
+            |upd, weight| agg.push(upd, weight),
+        )?;
         let compute_wall_s = t0.elapsed().as_secs_f64();
         let collected = agg.count();
         sys.bus.publish(Announcement::UpdatesCollected {
@@ -198,6 +183,7 @@ pub fn run_with_model(
             tx_energies_j: decision.tx_energies_j.clone(),
             compute_wall_s,
             dropouts,
+            ..Default::default()
         };
         if cfg.verbose {
             eprintln!(

@@ -7,4 +7,4 @@ pub mod p2p_figs;
 pub mod presets;
 
 pub use figures::FigOpts;
-pub use presets::{Backend, Case, Method, CASES};
+pub use presets::{Backend, Case, FleetCase, Method, CASES, FLEET_CASES};

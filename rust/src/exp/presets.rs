@@ -8,6 +8,7 @@ use crate::cnc::CncSystem;
 use crate::coordinator::traditional::TraditionalConfig;
 use crate::coordinator::trainer::{MockTrainer, PjrtTrainer, Trainer};
 use crate::data::{Partition, Split, SynthSpec};
+use crate::fleet::{FleetConfig, ShardBy};
 use crate::netsim::channel::ChannelParams;
 use crate::netsim::compute::PowerProfile;
 use crate::runtime::{ArtifactStore, Engine};
@@ -19,8 +20,15 @@ pub const BATCH_SIZE: usize = 10;
 /// exactly one cohort (the paper's Table 1 "m" row is garbled — "0.024 dB"
 /// — so we default to the value that makes step 7 exact and expose it as
 /// a CLI knob).
+///
+/// `num_clients` is the population the grouping runs over — the whole
+/// fleet for the flat coordinators, **one shard's client count** under
+/// the `fleet` registry. The result is always within `[1, num_clients]`
+/// (so a small shard can never receive a group count larger than its
+/// population, which `PowerGroups::build` guards against) and tolerates
+/// a degenerate `cohort_size = 0`.
 pub fn default_m(num_clients: usize, cohort_size: usize) -> usize {
-    (num_clients / cohort_size).clamp(1, num_clients)
+    (num_clients / cohort_size.max(1)).clamp(1, num_clients.max(1))
 }
 
 /// One Table 2 case.
@@ -61,6 +69,116 @@ pub fn case(name: &str) -> Result<Case> {
         .find(|c| c.name.eq_ignore_ascii_case(name))
         .copied()
         .ok_or_else(|| anyhow::anyhow!("unknown case `{name}` (Pr1..Pr6)"))
+}
+
+/// One fleet-scale case: the `fleet` engine's sharded/async analogue of
+/// Table 2, sized far past the paper's 100 clients (ROADMAP north-star).
+/// Mock-backend only — these probe the decision/aggregation layers, not
+/// PJRT throughput.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetCase {
+    pub name: &'static str,
+    pub num_clients: usize,
+    /// registry shard count K
+    pub shards: usize,
+    /// fleet-global cohort per round (split across shards ∝ size)
+    pub cohort_size: usize,
+    /// staleness bound for async commits (0 = synchronous)
+    pub max_staleness: usize,
+    pub global_rounds: usize,
+}
+
+impl FleetCase {
+    /// |D_i| used for every client (aggregation weights only under mock).
+    pub fn samples_per_client(&self) -> usize {
+        600
+    }
+}
+
+/// The fleet-scale cases: 10⁴ and 10⁵ clients.
+pub const FLEET_CASES: [FleetCase; 2] = [
+    FleetCase {
+        name: "Fleet10k",
+        num_clients: 10_000,
+        shards: 16,
+        cohort_size: 160,
+        max_staleness: 2,
+        global_rounds: 5,
+    },
+    FleetCase {
+        name: "Fleet100k",
+        num_clients: 100_000,
+        shards: 64,
+        cohort_size: 640,
+        max_staleness: 3,
+        global_rounds: 3,
+    },
+];
+
+pub fn fleet_case(name: &str) -> Result<FleetCase> {
+    FLEET_CASES
+        .iter()
+        .find(|c| c.name.eq_ignore_ascii_case(name))
+        .copied()
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown fleet case `{name}` (Fleet10k|Fleet100k)")
+        })
+}
+
+/// Assemble the fleet-engine configuration for a case.
+/// `shards_override` replaces the case's shard count (the CLI's
+/// `--shards` knob) — the per-shard power-grouping `m` is always derived
+/// from the *effective* shard population here, in one place (see
+/// `default_m`'s shard note); the optimizer clamps further for uneven
+/// shards.
+pub fn fleet_config(
+    case: &FleetCase,
+    shards_override: Option<usize>,
+    seed: u64,
+) -> FleetConfig {
+    let shards = shards_override.unwrap_or(case.shards).max(1);
+    let shard_clients = (case.num_clients / shards).max(1);
+    let shard_cohort = (case.cohort_size / shards).max(1);
+    FleetConfig {
+        rounds: case.global_rounds,
+        shards,
+        shard_by: ShardBy::Power,
+        max_staleness: case.max_staleness,
+        staleness_decay: 0.5,
+        cohort_size: case.cohort_size,
+        n_rb: case.cohort_size,
+        epoch_local: 1,
+        cohort_strategy: CohortStrategy::PowerGrouping {
+            m: default_m(shard_clients, shard_cohort),
+        },
+        rb_strategy: RbStrategy::HungarianEnergy,
+        eval_every: 1,
+        tx_deadline_s: None,
+        threads: 0,
+        seed,
+        verbose: false,
+    }
+}
+
+/// Bootstrap the CNC stack for a fleet-scale case. Fading sampling is
+/// dialled down: at 10⁴–10⁵ clients the Monte-Carlo channel expectation
+/// would dominate wall time without changing the scheduling behaviour.
+pub fn bootstrap_fleet_case(case: &FleetCase, seed: u64) -> CncSystem {
+    let mut channel = ChannelParams::default();
+    channel.fading_samples = 8;
+    CncSystem::bootstrap(
+        case.num_clients,
+        case.samples_per_client(),
+        1,
+        PowerProfile::Bimodal,
+        channel,
+        seed,
+    )
+}
+
+/// Build the mock trainer a fleet-scale case runs with.
+pub fn make_fleet_trainer(case: &FleetCase) -> Box<dyn Trainer> {
+    Box::new(MockTrainer::new(case.num_clients, case.samples_per_client()))
 }
 
 /// Which method a run uses (the paper's two curves).
@@ -198,6 +316,52 @@ mod tests {
         assert_eq!(default_m(100, 20), 5);
         assert_eq!(default_m(60, 6), 10);
         assert_eq!(default_m(5, 10), 1); // degenerate clamps
+    }
+
+    #[test]
+    fn default_m_never_exceeds_a_shards_client_count() {
+        // the sharded regression: a fleet-sized ratio applied to a small
+        // shard must clamp to the shard population, not the fleet's
+        for shard_size in 1..40 {
+            for cohort in 0..15 {
+                let m = default_m(shard_size, cohort);
+                assert!(m >= 1 && m <= shard_size, "U={shard_size} n={cohort} m={m}");
+            }
+        }
+        assert_eq!(default_m(3, 1), 3);
+        assert_eq!(default_m(0, 5), 1); // never zero even on empty shards
+    }
+
+    #[test]
+    fn fleet_cases_resolve_and_config_is_consistent() {
+        let c = fleet_case("fleet10k").unwrap();
+        assert_eq!(c.num_clients, 10_000);
+        assert_eq!(c.shards, 16);
+        let cfg = fleet_config(&c, None, 7);
+        assert_eq!(cfg.rounds, c.global_rounds);
+        assert_eq!(cfg.cohort_size, c.cohort_size);
+        assert!(cfg.n_rb >= cfg.cohort_size);
+        assert_eq!(cfg.max_staleness, c.max_staleness);
+        // per-shard grouping fits a shard's population
+        if let CohortStrategy::PowerGrouping { m } = cfg.cohort_strategy {
+            assert!(m <= c.num_clients / c.shards);
+        } else {
+            panic!("fleet preset must power-group");
+        }
+        // a shard-count override re-derives the grouping for the new
+        // shard population (the CLI's --shards path)
+        let two = fleet_config(&c, Some(2), 7);
+        assert_eq!(two.shards, 2);
+        if let CohortStrategy::PowerGrouping { m } = two.cohort_strategy {
+            assert_eq!(m, default_m(c.num_clients / 2, c.cohort_size / 2));
+        } else {
+            panic!("override must keep power-grouping");
+        }
+        let big = fleet_case("Fleet100k").unwrap();
+        assert_eq!(big.num_clients, 100_000);
+        assert!(fleet_case("Fleet1M").is_err());
+        let t = make_fleet_trainer(&c);
+        assert_eq!(t.data_size(0), 600);
     }
 
     #[test]

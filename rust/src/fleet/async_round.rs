@@ -1,0 +1,545 @@
+//! Async bounded-staleness round engine over the sharded registry.
+//!
+//! Each shard runs at its **own cadence**: a shard whose stratum is
+//! `p×` slower than the fastest (Eq 8 mean delay) starts a job and
+//! commits it `p − 1` rounds later, training against the global model it
+//! fetched at start. Committed updates carry their start-round tag; the
+//! root accepts updates up to [`FleetConfig::max_staleness`] rounds old,
+//! discounting their aggregation weight by `staleness_decay^staleness`
+//! (`fleet::hierarchy`). Periods are clamped to `max_staleness + 1`, so
+//! no in-flight update can ever exceed the bound; the final round
+//! flushes all in-flight jobs (at a staleness no larger than their
+//! period's), so trained work is never discarded at run end.
+//!
+//! # Degenerate (synchronous) mode
+//!
+//! With `max_staleness = 0` every shard's period is 1 — decide, train,
+//! commit within the round — and with `shards = 1` on top, the engine
+//! reproduces `coordinator::traditional::run` **bit-for-bit** for the
+//! same seed (same per-round RNG derivation, same slot-ordered fold,
+//! single-shard root merge is a bitwise copy). `tests/fleet_props.rs`
+//! pins this for serial and parallel executors.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::cnc::announce::Announcement;
+use crate::cnc::optimize::{CohortStrategy, RbStrategy, SchedulingOptimizer};
+use crate::cnc::CncSystem;
+use crate::coordinator::trainer::Trainer;
+use crate::fleet::hierarchy::{RootAggregator, ShardUpdate};
+use crate::fleet::registry::{
+    decide_traditional_sharded, split_proportional, FleetShards, ShardBy,
+};
+use crate::metrics::{RoundRecord, RunHistory};
+use crate::model::params::ModelParams;
+use crate::runtime::ParallelExecutor;
+use crate::util::rng::Pcg64;
+
+/// Fleet-engine run settings. The flat-coordinator knobs keep their
+/// `TraditionalConfig` meaning; `shards`/`max_staleness` are the two new
+/// scaling axes (1 / 0 = the flat synchronous engine, bit-identical).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub rounds: usize,
+    /// registry shard count K (1 = flat fleet)
+    pub shards: usize,
+    /// what static attribute strata shards are cut along
+    pub shard_by: ShardBy,
+    /// accept shard updates up to this many rounds old (0 = synchronous)
+    pub max_staleness: usize,
+    /// per-round multiplicative weight discount for stale updates, in
+    /// (0, 1]; 1.0 = no discount
+    pub staleness_decay: f64,
+    /// fleet-global cohort size, split across shards ∝ shard size
+    pub cohort_size: usize,
+    /// fleet-global RB budget, split the same way (per-shard floor: its
+    /// cohort share)
+    pub n_rb: usize,
+    pub epoch_local: usize,
+    pub cohort_strategy: CohortStrategy,
+    pub rb_strategy: RbStrategy,
+    pub eval_every: usize,
+    pub tx_deadline_s: Option<f64>,
+    /// worker threads for decision fan-out and cohort-parallel training
+    /// (0 = one per core, 1 = serial); bit-identical either way
+    pub threads: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            rounds: 50,
+            shards: 4,
+            shard_by: ShardBy::Power,
+            max_staleness: 0,
+            staleness_decay: 0.5,
+            cohort_size: 10,
+            n_rb: 10,
+            epoch_local: 1,
+            cohort_strategy: CohortStrategy::PowerGrouping { m: 10 },
+            rb_strategy: RbStrategy::HungarianEnergy,
+            eval_every: 1,
+            tx_deadline_s: None,
+            threads: 0,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// Per-(round, shard) decision RNG. The single-shard registry reuses the
+/// flat coordinator's exact derivation so the degenerate mode cannot
+/// drift from it; sharded registries get an independent stream per shard.
+pub(crate) fn shard_round_rng(
+    seed: u64,
+    round: usize,
+    shard: usize,
+    num_shards: usize,
+) -> Pcg64 {
+    if num_shards == 1 {
+        crate::coordinator::traditional::round_rng(seed, round)
+    } else {
+        Pcg64::new(seed, 0xF1EE).split(&format!("round/{round}/shard/{shard}"))
+    }
+}
+
+/// Shard cadences: a shard `r×` slower than the fastest stratum commits
+/// every `round(r)` rounds, clamped to `max_staleness + 1` so its updates
+/// always clear the root's staleness bound.
+pub fn shard_periods(fleet: &FleetShards, max_staleness: usize) -> Vec<usize> {
+    if max_staleness == 0 {
+        return vec![1; fleet.num_shards()];
+    }
+    let means: Vec<f64> = fleet.shards.iter().map(|s| s.mean_delay_s()).collect();
+    let fastest = means.iter().copied().fold(f64::INFINITY, f64::min).max(1e-12);
+    means
+        .iter()
+        .map(|m| ((m / fastest).round() as usize).clamp(1, max_staleness + 1))
+        .collect()
+}
+
+/// One shard's in-flight job: trained at `started`, committing at
+/// `commit_round`, with the decision telemetry to record on commit.
+struct PendingJob {
+    started: usize,
+    commit_round: usize,
+    update: ShardUpdate,
+    loss_sum: f64,
+    dropouts: usize,
+    local_delays_s: Vec<f64>,
+    tx_delays_s: Vec<f64>,
+    tx_energies_j: Vec<f64>,
+    spread_s: f64,
+    /// wall-clock spent training this job (recorded on commit, so a
+    /// round's compute_wall_s describes the same cohorts as its other
+    /// telemetry)
+    wall_s: f64,
+}
+
+/// Run the sharded/async fleet engine; returns the history only.
+pub fn run(
+    sys: &mut CncSystem,
+    trainer: &mut dyn Trainer,
+    cfg: &FleetConfig,
+    label: &str,
+) -> Result<RunHistory> {
+    Ok(run_with_model(sys, trainer, cfg, label)?.0)
+}
+
+/// Run the sharded/async fleet engine, returning the history and the
+/// final global model.
+pub fn run_with_model(
+    sys: &mut CncSystem,
+    trainer: &mut dyn Trainer,
+    cfg: &FleetConfig,
+    label: &str,
+) -> Result<(RunHistory, ModelParams)> {
+    let u = sys.pool.fleet.num_clients();
+    if cfg.cohort_size < cfg.shards.max(1) || cfg.cohort_size > u {
+        bail!(
+            "cohort size {} must be within [shards = {}, fleet = {u}]",
+            cfg.cohort_size,
+            cfg.shards
+        );
+    }
+    if cfg.n_rb < cfg.cohort_size {
+        bail!(
+            "need at least as many RBs ({}) as cohort members ({})",
+            cfg.n_rb,
+            cfg.cohort_size
+        );
+    }
+    if !(cfg.staleness_decay > 0.0 && cfg.staleness_decay <= 1.0) {
+        bail!("staleness decay {} outside (0, 1]", cfg.staleness_decay);
+    }
+
+    let fleet = FleetShards::build(&sys.pool, cfg.shards, cfg.shard_by)?;
+    let k = fleet.num_shards();
+    let sizes = fleet.sizes();
+    let cohorts = split_proportional(cfg.cohort_size, &sizes);
+    // RBs are radio resources, not clients: split ∝ cohort share (no
+    // shard-size cap), floored at the shard's cohort so every shard's
+    // assignment stays feasible. shards = 1 receives cfg.n_rb exactly.
+    let n_rbs: Vec<usize> = cohorts
+        .iter()
+        .map(|&c| (cfg.n_rb * c / cfg.cohort_size).max(c))
+        .collect();
+    let periods = shard_periods(&fleet, cfg.max_staleness);
+    let optimizers: Vec<Mutex<SchedulingOptimizer>> =
+        (0..k).map(|_| Mutex::new(SchedulingOptimizer::new())).collect();
+    let executor = ParallelExecutor::new(cfg.threads);
+
+    let mut history = RunHistory::new(label);
+    let mut global = trainer.init_params()?;
+    let payload = global.payload_bytes();
+    let mut pending: Vec<Option<PendingJob>> = Vec::new();
+    pending.resize_with(k, || None);
+
+    for round in 0..cfg.rounds {
+        sys.announce_resources(round);
+
+        // 1. idle shards fetch the current global model and start a job:
+        //    per-shard decisions fanned out over the executor
+        let idle: Vec<usize> =
+            (0..k).filter(|&s| pending[s].is_none()).collect();
+        let rngs: Vec<Pcg64> = idle
+            .iter()
+            .map(|&s| shard_round_rng(cfg.seed, round, s, k))
+            .collect();
+        let decisions = decide_traditional_sharded(
+            &fleet,
+            &optimizers,
+            &idle,
+            cfg.cohort_strategy,
+            cfg.rb_strategy,
+            &cohorts,
+            &n_rbs,
+            &rngs,
+            &executor,
+        )?;
+        if !idle.is_empty() {
+            sys.bus.publish(Announcement::ModelBroadcast {
+                round,
+                payload_bytes: payload,
+            });
+        }
+
+        // 2. train every started job now, against the current global —
+        //    the shared `coordinator::train_cohort` path (slot-ordered
+        //    fold per shard, identical to the flat coordinator's)
+        for d in decisions {
+            sys.bus.publish(Announcement::ShardDecision {
+                round,
+                shard: d.shard,
+                cohort: d.cohort_global.clone(),
+            });
+            let (active, dropouts) = crate::coordinator::cohort_survivors(
+                &*trainer,
+                &d.cohort_global,
+                &d.decision.tx_delays_s,
+                cfg.tx_deadline_s,
+            );
+            if active.is_empty() {
+                bail!(
+                    "round {round}: shard {}: every cohort member missed the \
+                     {}s uplink deadline",
+                    d.shard,
+                    cfg.tx_deadline_s.unwrap_or(f64::NAN)
+                );
+            }
+            let t0 = std::time::Instant::now();
+            let mut update = ShardUpdate::new(d.shard, round);
+            let loss_sum = crate::coordinator::train_cohort(
+                trainer,
+                &executor,
+                &active,
+                &global,
+                cfg.epoch_local,
+                round,
+                |upd, weight| update.push(upd, weight),
+            )?;
+            let wall_s = t0.elapsed().as_secs_f64();
+            let spread_s = fleet.shards[d.shard].delay_spread_s(&d.decision.cohort);
+            pending[d.shard] = Some(PendingJob {
+                started: round,
+                commit_round: round + periods[d.shard] - 1,
+                update,
+                loss_sum,
+                dropouts,
+                local_delays_s: d.decision.local_delays_s,
+                tx_delays_s: d.decision.tx_delays_s,
+                tx_energies_j: d.decision.tx_energies_j,
+                spread_s,
+                wall_s,
+            });
+        }
+
+        // 3. commits: fold due shard updates through the root tier in
+        //    shard order (deterministic), staleness-bounded + decayed.
+        //    The final round flushes every in-flight job — work already
+        //    trained is never discarded at run end, and a flushed
+        //    update's staleness can only be *smaller* than its period's,
+        //    so it always clears the bound.
+        let flush = round + 1 == cfg.rounds;
+        let mut root = RootAggregator::new(cfg.max_staleness, cfg.staleness_decay);
+        let mut loss_sum = 0.0f64;
+        let mut collected = 0usize;
+        let mut dropouts = 0usize;
+        let mut compute_wall_s = 0.0f64;
+        let mut local_delays_s = Vec::new();
+        let mut tx_delays_s = Vec::new();
+        let mut tx_energies_j = Vec::new();
+        let mut shard_spreads_s = Vec::new();
+        for s in 0..k {
+            let due = pending[s]
+                .as_ref()
+                .is_some_and(|p| flush || p.commit_round <= round);
+            if !due {
+                continue;
+            }
+            let job = pending[s].take().expect("checked above");
+            if let Some(staleness) = root.offer(&job.update, round) {
+                sys.bus.publish(Announcement::ShardCommit {
+                    round,
+                    shard: s,
+                    staleness,
+                });
+                loss_sum += job.loss_sum;
+                collected += job.update.count();
+                dropouts += job.dropouts;
+                compute_wall_s += job.wall_s;
+                local_delays_s.extend(job.local_delays_s);
+                tx_delays_s.extend(job.tx_delays_s);
+                tx_energies_j.extend(job.tx_energies_j);
+                shard_spreads_s.push(job.spread_s);
+            }
+        }
+        let shards_committed = root.accepted();
+        let staleness_mean = root.mean_staleness();
+        if shards_committed > 0 {
+            sys.bus.publish(Announcement::UpdatesCollected {
+                round,
+                count: collected,
+            });
+            global = root.finish()?;
+        }
+
+        // 4. evaluate + record (a commit-free round keeps the previous
+        //    global, so its accuracy/loss carry over)
+        let accuracy = if shards_committed > 0
+            && (round % cfg.eval_every == 0 || round + 1 == cfg.rounds)
+        {
+            trainer.evaluate(&global)?
+        } else {
+            history.final_accuracy()
+        };
+        let train_loss = if shards_committed > 0 {
+            loss_sum / collected as f64
+        } else {
+            history.rounds.last().map(|r| r.train_loss).unwrap_or(0.0)
+        };
+        let rec = RoundRecord {
+            round,
+            accuracy,
+            train_loss,
+            local_delays_s,
+            tx_delays_s,
+            tx_energies_j,
+            compute_wall_s,
+            dropouts,
+            shards_committed,
+            staleness_mean,
+            shard_spreads_s,
+        };
+        if cfg.verbose {
+            eprintln!(
+                "[{label}] round {round:>4}  acc {accuracy:.4}  loss {:.4}  \
+                 shards {shards_committed}/{k}  stale {staleness_mean:.2}  \
+                 spread_max {:.2}s",
+                rec.train_loss,
+                rec.shard_spread_max_s(),
+            );
+        }
+        history.push(rec);
+    }
+    Ok((history, global))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::MockTrainer;
+    use crate::netsim::channel::ChannelParams;
+    use crate::netsim::compute::PowerProfile;
+
+    fn sys(n: usize, seed: u64) -> CncSystem {
+        let mut ch = ChannelParams::default();
+        ch.fading_samples = 4;
+        CncSystem::bootstrap(n, 600, 1, PowerProfile::Bimodal, ch, seed)
+    }
+
+    fn cfg(rounds: usize, shards: usize, max_staleness: usize) -> FleetConfig {
+        FleetConfig {
+            rounds,
+            shards,
+            max_staleness,
+            cohort_size: 8,
+            n_rb: 8,
+            cohort_strategy: CohortStrategy::PowerGrouping { m: 5 },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn synchronous_sharded_run_commits_every_shard_every_round() {
+        let mut s = sys(40, 0);
+        let mut t = MockTrainer::new(40, 600);
+        let h = run(&mut s, &mut t, &cfg(6, 4, 0), "sync4").unwrap();
+        assert_eq!(h.rounds.len(), 6);
+        for r in &h.rounds {
+            assert_eq!(r.shards_committed, 4);
+            assert_eq!(r.staleness_mean, 0.0);
+            assert_eq!(r.shard_spreads_s.len(), 4);
+            assert_eq!(r.local_delays_s.len(), 8);
+        }
+        // every round trained the full global cohort
+        assert_eq!(t.calls(), 6 * 8);
+        let acc = h.accuracies();
+        assert!(acc.last().unwrap() > acc.first().unwrap());
+    }
+
+    #[test]
+    fn async_run_respects_the_staleness_bound() {
+        let mut s = sys(60, 1);
+        let mut t = MockTrainer::new(60, 600);
+        let h = run(&mut s, &mut t, &cfg(12, 4, 2), "async").unwrap();
+        assert_eq!(h.rounds.len(), 12);
+        let mut total_commits = 0usize;
+        for r in &h.rounds {
+            assert!(r.staleness_mean <= 2.0, "round {}: {}", r.round, r.staleness_mean);
+            assert!(r.shards_committed <= 4);
+            total_commits += r.shards_committed;
+        }
+        assert!(total_commits > 0);
+        assert!(h.final_accuracy() > h.rounds[0].accuracy.min(0.2));
+    }
+
+    #[test]
+    fn fleet_run_is_seed_deterministic() {
+        let run_once = || {
+            let mut s = sys(30, 2);
+            let mut t = MockTrainer::new(30, 600);
+            run(&mut s, &mut t, &cfg(5, 3, 1), "det").unwrap()
+        };
+        let a = run_once();
+        let b = run_once();
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits());
+            assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+            assert_eq!(x.local_delays_s, y.local_delays_s);
+            assert_eq!(x.shards_committed, y.shards_committed);
+            assert_eq!(x.staleness_mean, y.staleness_mean);
+        }
+    }
+
+    #[test]
+    fn parallel_fleet_matches_serial_bitwise() {
+        let run_width = |threads: usize| {
+            let mut s = sys(36, 3);
+            let mut t = MockTrainer::new(36, 600);
+            let mut c = cfg(5, 3, 1);
+            c.threads = threads;
+            run(&mut s, &mut t, &c, "width").unwrap()
+        };
+        let serial = run_width(1);
+        for threads in [2, 4] {
+            let parallel = run_width(threads);
+            for (a, b) in serial.rounds.iter().zip(&parallel.rounds) {
+                assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+                assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+                assert_eq!(a.local_delays_s, b.local_delays_s);
+                assert_eq!(a.tx_delays_s, b.tx_delays_s);
+                assert_eq!(a.tx_energies_j, b.tx_energies_j);
+                assert_eq!(a.shards_committed, b.shards_committed);
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_configs_error() {
+        let mut s = sys(10, 4);
+        let mut t = MockTrainer::new(10, 600);
+        // cohort smaller than shard count
+        let mut c = cfg(2, 4, 0);
+        c.cohort_size = 3;
+        c.n_rb = 3;
+        assert!(run(&mut s, &mut t, &c, "bad").is_err());
+        // RB budget under the cohort
+        let mut c = cfg(2, 2, 0);
+        c.n_rb = 4;
+        assert!(run(&mut s, &mut t, &c, "bad").is_err());
+        // decay out of range
+        let mut c = cfg(2, 2, 1);
+        c.staleness_decay = 0.0;
+        assert!(run(&mut s, &mut t, &c, "bad").is_err());
+    }
+
+    #[test]
+    fn periods_collapse_to_one_when_synchronous() {
+        let s = sys(24, 5);
+        let fleet = FleetShards::build(&s.pool, 4, ShardBy::Power).unwrap();
+        assert_eq!(shard_periods(&fleet, 0), vec![1; 4]);
+        let p = shard_periods(&fleet, 3);
+        assert!(p.iter().all(|&x| (1..=4).contains(&x)));
+        // power sharding sorts ascending delay → later shards never faster
+        for w in p.windows(2) {
+            assert!(w[0] <= w[1], "{p:?}");
+        }
+    }
+
+    #[test]
+    fn bus_sees_shard_flow() {
+        let mut s = sys(20, 6);
+        let mut t = MockTrainer::new(20, 600);
+        run(&mut s, &mut t, &cfg(2, 2, 0), "bus").unwrap();
+        let mut decisions = 0;
+        let mut commits = 0;
+        for m in s.bus.audit() {
+            match m {
+                Announcement::ShardDecision { .. } => decisions += 1,
+                Announcement::ShardCommit { .. } => commits += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(decisions, 2 * 2);
+        assert_eq!(commits, 2 * 2);
+    }
+
+    #[test]
+    fn final_round_flushes_every_inflight_job() {
+        // async cadences leave slow shards' jobs in flight; the last
+        // round must fold them in rather than discard trained work, so
+        // every started job commits exactly once
+        let mut s = sys(60, 7);
+        let mut t = MockTrainer::new(60, 600);
+        let h = run(&mut s, &mut t, &cfg(7, 4, 3), "flush").unwrap();
+        let mut decisions = 0usize;
+        let mut commits = 0usize;
+        for m in s.bus.audit() {
+            match m {
+                Announcement::ShardDecision { .. } => decisions += 1,
+                Announcement::ShardCommit { .. } => commits += 1,
+                _ => {}
+            }
+        }
+        assert!(decisions > 0);
+        assert_eq!(decisions, commits, "in-flight work was dropped at run end");
+        // ... and the trained slots all surface in the telemetry
+        let slots: usize = h.rounds.iter().map(|r| r.local_delays_s.len()).sum();
+        assert_eq!(t.calls() + h.rounds.iter().map(|r| r.dropouts).sum::<usize>(), slots);
+    }
+}

@@ -1,0 +1,224 @@
+//! Hierarchical (two-level) aggregation tier — shard-local streaming
+//! folds plus a root fold over shard summaries.
+//!
+//! Each shard folds its cohort's updates with a local streaming
+//! [`Aggregator`] exactly as the flat coordinator does (Eq 1, slot
+//! order), producing a [`ShardUpdate`]: the unnormalized partial sums
+//! `Σ wᵢ·xᵢ` / `Σ wᵢ` tagged with the round whose global model the shard
+//! trained on. The [`RootAggregator`] then folds shard summaries —
+//! **weighted-average semantics are preserved exactly** because partials
+//! are merged unnormalized and divided by the grand total only once at
+//! `finish` (for a single shard the result is bit-identical to the flat
+//! fold; for several shards it is exact whenever the partial sums are,
+//! e.g. integer-valued updates — see `tests/fleet_props.rs`).
+//!
+//! The root is also where the **bounded-staleness policy** lives: an
+//! update `staleness = round − round_tag` rounds old is accepted iff
+//! `staleness ≤ max_staleness`, its weight multiplied by
+//! `decay^staleness` (decay 1.0 = no discount; staleness 0 takes the
+//! exact unscaled merge path).
+
+use anyhow::Result;
+
+use crate::model::aggregate::Aggregator;
+use crate::model::params::ModelParams;
+
+/// One shard's in-flight round contribution: a streaming fold of its
+/// cohort updates, tagged with the global-model round it trained from.
+#[derive(Debug, Clone)]
+pub struct ShardUpdate {
+    pub shard: usize,
+    /// round of the global model this update was computed against
+    pub round_tag: usize,
+    agg: Aggregator,
+}
+
+impl ShardUpdate {
+    pub fn new(shard: usize, round_tag: usize) -> Self {
+        ShardUpdate {
+            shard,
+            round_tag,
+            agg: Aggregator::new(),
+        }
+    }
+
+    /// Fold one cohort member's update in (shard-local slot order — the
+    /// same determinism contract as the flat coordinator).
+    pub fn push(&mut self, update: &ModelParams, weight: usize) {
+        self.agg.push(update, weight);
+    }
+
+    pub fn count(&self) -> usize {
+        self.agg.count()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.agg.total_weight()
+    }
+}
+
+/// The root of the aggregation hierarchy for one commit round.
+#[derive(Debug, Clone)]
+pub struct RootAggregator {
+    root: Aggregator,
+    max_staleness: usize,
+    decay: f64,
+    accepted: usize,
+    rejected: usize,
+    staleness_sum: usize,
+}
+
+impl RootAggregator {
+    /// `decay` is the per-round multiplicative weight discount for stale
+    /// updates (must be in (0, 1]); `max_staleness = 0` accepts only
+    /// current-round updates — the synchronous degenerate mode.
+    pub fn new(max_staleness: usize, decay: f64) -> Self {
+        assert!(
+            decay > 0.0 && decay <= 1.0,
+            "staleness decay {decay} outside (0, 1]"
+        );
+        RootAggregator {
+            root: Aggregator::new(),
+            max_staleness,
+            decay,
+            accepted: 0,
+            rejected: 0,
+            staleness_sum: 0,
+        }
+    }
+
+    /// Offer a shard update at root round `round`. Returns the staleness
+    /// if accepted, `None` if the update is over the staleness bound (or
+    /// empty) and was dropped.
+    pub fn offer(&mut self, update: &ShardUpdate, round: usize) -> Option<usize> {
+        assert!(
+            update.round_tag <= round,
+            "update from future round {} offered at round {round}",
+            update.round_tag
+        );
+        let staleness = round - update.round_tag;
+        if staleness > self.max_staleness || update.count() == 0 {
+            self.rejected += 1;
+            return None;
+        }
+        let factor = self.decay.powi(staleness as i32);
+        self.root.merge_scaled(&update.agg, factor);
+        self.accepted += 1;
+        self.staleness_sum += staleness;
+        Some(staleness)
+    }
+
+    /// Shard updates folded in so far.
+    pub fn accepted(&self) -> usize {
+        self.accepted
+    }
+
+    /// Shard updates dropped for exceeding the staleness bound.
+    pub fn rejected(&self) -> usize {
+        self.rejected
+    }
+
+    /// Mean staleness over accepted updates (0.0 when none).
+    pub fn mean_staleness(&self) -> f64 {
+        if self.accepted == 0 {
+            return 0.0;
+        }
+        self.staleness_sum as f64 / self.accepted as f64
+    }
+
+    /// Normalize and return the new global model. Errors when nothing was
+    /// accepted (callers should keep the previous global instead).
+    pub fn finish(self) -> Result<ModelParams> {
+        self.root.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::aggregate::weighted_average;
+
+    fn filled(v: f32) -> ModelParams {
+        let mut m = ModelParams::zeros();
+        for x in m.as_mut_slice() {
+            *x = v;
+        }
+        m
+    }
+
+    #[test]
+    fn single_shard_root_is_bitwise_flat_fold() {
+        let updates = [(filled(0.25), 100), (filled(-1.5), 600), (filled(3.0), 47)];
+        let flat = weighted_average(&updates).unwrap();
+        let mut shard = ShardUpdate::new(0, 4);
+        for (m, w) in &updates {
+            shard.push(m, *w);
+        }
+        let mut root = RootAggregator::new(0, 1.0);
+        assert_eq!(root.offer(&shard, 4), Some(0));
+        assert_eq!(root.accepted(), 1);
+        let hier = root.finish().unwrap();
+        assert_eq!(flat, hier);
+    }
+
+    #[test]
+    fn two_level_fold_matches_flat_on_integer_inputs() {
+        // exact-arithmetic inputs: regrouping cannot round
+        let updates = [(filled(2.0), 3), (filled(6.0), 1), (filled(-4.0), 2)];
+        let flat = weighted_average(&updates).unwrap();
+        let mut a = ShardUpdate::new(0, 0);
+        a.push(&updates[0].0, updates[0].1);
+        a.push(&updates[1].0, updates[1].1);
+        let mut b = ShardUpdate::new(1, 0);
+        b.push(&updates[2].0, updates[2].1);
+        let mut root = RootAggregator::new(0, 1.0);
+        root.offer(&a, 0);
+        root.offer(&b, 0);
+        let hier = root.finish().unwrap();
+        assert_eq!(flat, hier);
+    }
+
+    #[test]
+    fn staleness_bound_drops_old_updates() {
+        let mut fresh = ShardUpdate::new(0, 10);
+        fresh.push(&filled(1.0), 10);
+        let mut stale = ShardUpdate::new(1, 7);
+        stale.push(&filled(9.0), 10);
+        let mut root = RootAggregator::new(2, 1.0);
+        assert_eq!(root.offer(&fresh, 10), Some(0));
+        assert_eq!(root.offer(&stale, 10), None); // 3 > 2
+        assert_eq!(root.accepted(), 1);
+        assert_eq!(root.rejected(), 1);
+        let m = root.finish().unwrap();
+        assert!((m.tensor(0)[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn staleness_decay_discounts_weight() {
+        let mut fresh = ShardUpdate::new(0, 5);
+        fresh.push(&filled(0.0), 100);
+        let mut stale = ShardUpdate::new(1, 4);
+        stale.push(&filled(4.0), 100);
+        let mut root = RootAggregator::new(2, 0.5);
+        assert_eq!(root.offer(&fresh, 5), Some(0));
+        assert_eq!(root.offer(&stale, 5), Some(1));
+        assert!((root.mean_staleness() - 0.5).abs() < 1e-12);
+        let m = root.finish().unwrap();
+        // (100·0 + 0.5·100·4) / 150
+        assert!((m.tensor(0)[0] - 200.0 / 150.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_updates_are_rejected_and_empty_root_errors() {
+        let empty = ShardUpdate::new(0, 0);
+        let mut root = RootAggregator::new(3, 1.0);
+        assert_eq!(root.offer(&empty, 0), None);
+        assert!(root.finish().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_decay_panics() {
+        RootAggregator::new(1, 0.0);
+    }
+}

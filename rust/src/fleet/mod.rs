@@ -1,0 +1,37 @@
+//! The **fleet layer**: sharded client registry, hierarchical
+//! aggregation, and the async bounded-staleness round engine — the
+//! scaling tier that takes the CNC decision layer past ~10⁴ clients per
+//! round (ROADMAP "sharded fleets / async rounds").
+//!
+//! ```text
+//!               ┌──────────────────────────────┐
+//!               │     fleet::async_round       │  round engine
+//!               │ per-shard cadence, staleness │
+//!               └──────┬──────────────┬────────┘
+//!        decisions     │              │   updates
+//!  ┌───────────────────▼──┐   ┌───────▼───────────────┐
+//!  │   fleet::registry    │   │   fleet::hierarchy    │
+//!  │ K shards × O(shard²) │   │ shard folds → root    │
+//!  │ SchedulingOptimizer  │   │ fold (exact Eq 1)     │
+//!  └──────────────────────┘   └───────────────────────┘
+//! ```
+//!
+//! Every shard-local decision still solves the paper's problems — cohort
+//! selection is Algorithm 1 over the shard's stratum (Eq 8/9), RB
+//! allocation is Hungarian (Eq 5) or bottleneck (Eq 6) on the shard's
+//! client×RB matrices, P2P paths are Algorithm 3 over the shard's
+//! sub-topology (Eq 7) — just on K small strata instead of one flat
+//! fleet. The hierarchy preserves Eq 1's weighted average exactly, and
+//! `shards = 1, max_staleness = 0` reproduces the flat coordinator
+//! bit-for-bit (`tests/fleet_props.rs`).
+
+pub mod async_round;
+pub mod hierarchy;
+pub mod registry;
+
+pub use async_round::{run, run_with_model, shard_periods, FleetConfig};
+pub use hierarchy::{RootAggregator, ShardUpdate};
+pub use registry::{
+    decide_p2p_sharded, decide_traditional_sharded, split_proportional,
+    FleetShards, Shard, ShardBy, ShardRoundDecision,
+};

@@ -1,0 +1,478 @@
+//! Sharded client registry — the piece that takes the CNC decision layer
+//! past ~10⁴ clients per round.
+//!
+//! The paper's CNC "arranges devices to participate in training based on
+//! arithmetic power" over one flat fleet, which makes every scheduling
+//! decision O(fleet²) or worse (the Hungarian RB assignment is cubic in
+//! the cohort). [`FleetShards`] partitions the pooled fleet into K shards
+//! by **locality** (radio distance — a geography proxy) or **power
+//! stratum** (Eq 8 delay), hands each shard its own [`ResourcePool`] view
+//! (and `CostMatrix` sub-view for P2P), and fans per-shard
+//! `SchedulingOptimizer` decisions out over `runtime::ParallelExecutor` —
+//! K independent O(shard²) problems instead of one O(fleet²) one.
+//!
+//! # Determinism
+//!
+//! Shard membership is a pure function of the pooled fleet state: clients
+//! are sorted by the shard key (ties broken by id) and cut contiguously,
+//! and every shard's member list is then re-sorted by **global id**, so a
+//! 1-shard registry is the identity view of the fleet — the foundation of
+//! the engine's bit-exact degenerate mode (`shards = 1`).
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::cnc::optimize::{
+    CohortStrategy, P2pDecision, PathStrategy, RbStrategy, RoundDecision,
+    SchedulingOptimizer,
+};
+use crate::cnc::pooling::ResourcePool;
+use crate::netsim::topology::CostMatrix;
+use crate::runtime::ParallelExecutor;
+use crate::scheduler::power::FleetInfo;
+use crate::util::rng::Pcg64;
+
+/// Which static client attribute keys the shard partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardBy {
+    /// radio distance to the aggregation site (geography/topology proxy)
+    Locality,
+    /// Eq 8 local-training delay (computing-power stratum)
+    Power,
+}
+
+/// One shard: a contiguous stratum of the fleet with its own modelled
+/// resource view.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub id: usize,
+    /// fleet-global client ids, ascending
+    pub members: Vec<usize>,
+    /// shard-local resource view (delays/data sizes/sites re-indexed
+    /// 0..members.len(), same channel model)
+    pub pool: ResourcePool,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Map a shard-local client index back to its fleet-global id.
+    pub fn to_global(&self, local: usize) -> usize {
+        self.members[local]
+    }
+
+    /// Mean Eq 8 local delay of the shard (drives the async cadence).
+    pub fn mean_delay_s(&self) -> f64 {
+        crate::util::stats::mean(&self.pool.fleet.delays_s)
+    }
+
+    /// Shard-local t_max − t_min over a shard-local cohort.
+    pub fn delay_spread_s(&self, cohort_local: &[usize]) -> f64 {
+        if cohort_local.is_empty() {
+            return 0.0;
+        }
+        let d: Vec<f64> = cohort_local
+            .iter()
+            .map(|&i| self.pool.fleet.delays_s[i])
+            .collect();
+        crate::util::stats::max(&d) - crate::util::stats::min(&d)
+    }
+}
+
+/// The sharded registry over one experiment's pooled fleet.
+#[derive(Debug, Clone)]
+pub struct FleetShards {
+    pub shards: Vec<Shard>,
+    /// shard id of every fleet-global client
+    pub shard_of_client: Vec<usize>,
+}
+
+impl FleetShards {
+    /// Partition `pool` into `k` shards. `k = 1` yields the identity view.
+    pub fn build(pool: &ResourcePool, k: usize, by: ShardBy) -> Result<Self> {
+        let u = pool.fleet.num_clients();
+        if k == 0 || k > u {
+            bail!("need 1 <= shards({k}) <= fleet({u})");
+        }
+        let key = |i: usize| -> f64 {
+            match by {
+                ShardBy::Locality => pool.sites[i].distance_m,
+                ShardBy::Power => pool.fleet.delays_s[i],
+            }
+        };
+        let mut order: Vec<usize> = (0..u).collect();
+        order.sort_by(|&a, &b| {
+            key(a).partial_cmp(&key(b)).unwrap().then(a.cmp(&b))
+        });
+        // contiguous cut into k parts, sizes as equal as possible — the
+        // same `util::chunk_even` scheme PowerGroups strata use
+        let mut shards = Vec::with_capacity(k);
+        let mut shard_of_client = vec![0usize; u];
+        for (id, mut members) in
+            crate::util::chunk_even(&order, k).into_iter().enumerate()
+        {
+            // global-id order inside the shard keeps shard-local views
+            // stable and makes k = 1 the exact identity view
+            members.sort_unstable();
+            for &c in &members {
+                shard_of_client[c] = id;
+            }
+            let fleet = FleetInfo {
+                delays_s: members.iter().map(|&c| pool.fleet.delays_s[c]).collect(),
+                data_sizes: members
+                    .iter()
+                    .map(|&c| pool.fleet.data_sizes[c])
+                    .collect(),
+            };
+            let sites = members.iter().map(|&c| pool.sites[c].clone()).collect();
+            shards.push(Shard {
+                id,
+                members,
+                pool: ResourcePool {
+                    fleet,
+                    sites,
+                    channel: pool.channel.clone(),
+                },
+            });
+        }
+        Ok(FleetShards {
+            shards,
+            shard_of_client,
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total clients across all shards.
+    pub fn num_clients(&self) -> usize {
+        self.shard_of_client.len()
+    }
+
+    /// Per-shard sizes (for proportional cohort splits).
+    pub fn sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.len()).collect()
+    }
+
+    /// The shard-local view of a fleet-global P2P cost matrix — what each
+    /// shard's Algorithm 3 run operates on (O(shard²) storage).
+    pub fn shard_cost_matrix(&self, g: &CostMatrix, shard: usize) -> CostMatrix {
+        g.submatrix(&self.shards[shard].members)
+    }
+}
+
+/// Split `total` across shards proportionally to their sizes (largest
+/// remainder), guaranteeing every nonzero share ≤ the shard size and —
+/// when `total ≥ #shards` — every shard at least one. Deterministic.
+pub fn split_proportional(total: usize, sizes: &[usize]) -> Vec<usize> {
+    let k = sizes.len();
+    let sum: usize = sizes.iter().sum();
+    assert!(sum > 0, "split over an empty fleet");
+    assert!(total <= sum, "cannot place {total} across {sum} clients");
+    let mut shares: Vec<usize> = Vec::with_capacity(k);
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(k);
+    let mut placed = 0usize;
+    for (i, &sz) in sizes.iter().enumerate() {
+        let exact = total as f64 * sz as f64 / sum as f64;
+        let fl = exact.floor() as usize;
+        let fl = fl.min(sz);
+        shares.push(fl);
+        placed += fl;
+        fracs.push((exact - fl as f64, i));
+    }
+    // hand the remainder to the largest fractional parts (ties → lower id)
+    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut rest = total - placed;
+    let mut fi = 0usize;
+    while rest > 0 {
+        let (_, i) = fracs[fi % k];
+        if shares[i] < sizes[i] {
+            shares[i] += 1;
+            rest -= 1;
+        }
+        fi += 1;
+    }
+    // when the budget allows, make sure no nonzero-size shard is starved:
+    // steal from the largest share (keeps per-round coverage of every
+    // stratum, which the engine's telemetry assumes)
+    if total >= k {
+        loop {
+            let Some(empty) = (0..k).find(|&i| shares[i] == 0 && sizes[i] > 0)
+            else {
+                break;
+            };
+            let donor = (0..k)
+                .max_by_key(|&i| shares[i])
+                .expect("nonempty shares");
+            if shares[donor] <= 1 {
+                break;
+            }
+            shares[donor] -= 1;
+            shares[empty] += 1;
+        }
+    }
+    debug_assert_eq!(shares.iter().sum::<usize>(), total);
+    shares
+}
+
+/// One shard's traditional-architecture decision, with the cohort lifted
+/// back to fleet-global ids (shard-local slot order preserved).
+#[derive(Debug, Clone)]
+pub struct ShardRoundDecision {
+    pub shard: usize,
+    /// fleet-global cohort ids, in shard-local slot order
+    pub cohort_global: Vec<usize>,
+    /// the raw shard-local decision (delays/energies aligned with slots)
+    pub decision: RoundDecision,
+}
+
+/// Run `decide_traditional` on every listed shard, fanned out over the
+/// executor (slot-ordered results: output index i corresponds to
+/// `shard_ids[i]`). Each shard keeps its own long-lived optimizer in a
+/// `Mutex` so grouping/PF state persists across rounds without the
+/// closure needing `&mut` access.
+#[allow(clippy::too_many_arguments)]
+pub fn decide_traditional_sharded(
+    fleet: &FleetShards,
+    optimizers: &[Mutex<SchedulingOptimizer>],
+    shard_ids: &[usize],
+    cohort_strategy: CohortStrategy,
+    rb_strategy: RbStrategy,
+    cohorts: &[usize],
+    n_rbs: &[usize],
+    rngs: &[Pcg64],
+    executor: &ParallelExecutor,
+) -> Result<Vec<ShardRoundDecision>> {
+    assert_eq!(shard_ids.len(), rngs.len());
+    let mut out: Vec<Option<ShardRoundDecision>> = Vec::new();
+    out.resize_with(shard_ids.len(), || None);
+    executor.run_ordered(
+        shard_ids.len(),
+        |i| {
+            let s = shard_ids[i];
+            let shard = &fleet.shards[s];
+            let mut opt = optimizers[s].lock().expect("optimizer poisoned");
+            let decision = opt.decide_traditional(
+                &shard.pool,
+                cohort_strategy,
+                rb_strategy,
+                cohorts[s],
+                n_rbs[s],
+                &rngs[i],
+            )?;
+            let cohort_global: Vec<usize> =
+                decision.cohort.iter().map(|&c| shard.members[c]).collect();
+            Ok(ShardRoundDecision {
+                shard: s,
+                cohort_global,
+                decision,
+            })
+        },
+        |i, d| {
+            out[i] = Some(d);
+            Ok(())
+        },
+    )?;
+    Ok(out.into_iter().map(|d| d.expect("slot reduced")).collect())
+}
+
+/// Run `decide_p2p` per shard over the shard-local sub-topologies, fanned
+/// out over the executor. Part orders come back in fleet-global ids.
+pub fn decide_p2p_sharded(
+    fleet: &FleetShards,
+    optimizers: &[Mutex<SchedulingOptimizer>],
+    g: &CostMatrix,
+    path_strategy: PathStrategy,
+    rngs: &[Pcg64],
+    executor: &ParallelExecutor,
+) -> Result<Vec<P2pDecision>> {
+    let k = fleet.num_shards();
+    assert_eq!(rngs.len(), k);
+    let mut out: Vec<Option<P2pDecision>> = Vec::new();
+    out.resize_with(k, || None);
+    executor.run_ordered(
+        k,
+        |s| {
+            let shard = &fleet.shards[s];
+            let sub = fleet.shard_cost_matrix(g, s);
+            let mut opt = optimizers[s].lock().expect("optimizer poisoned");
+            let mut d = opt.decide_p2p(
+                &shard.pool,
+                &sub,
+                &crate::cnc::optimize::PartitionStrategy::All,
+                path_strategy,
+                &rngs[s],
+            )?;
+            for part in &mut d.parts {
+                for c in &mut part.order {
+                    *c = shard.members[*c];
+                }
+            }
+            Ok(d)
+        },
+        |s, d| {
+            out[s] = Some(d);
+            Ok(())
+        },
+    )?;
+    Ok(out.into_iter().map(|d| d.expect("slot reduced")).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnc::infrastructure::DeviceRegistry;
+    use crate::netsim::channel::{ChannelParams, RadioSite};
+    use crate::netsim::compute::{draw_powers, PowerProfile};
+    use crate::netsim::topology::TopologyGen;
+
+    fn pool(n: usize, seed: u64) -> ResourcePool {
+        let mut rng = Pcg64::seed_from(seed);
+        let powers = draw_powers(PowerProfile::Bimodal, n, &mut rng.split("p"));
+        let mut reg = DeviceRegistry::new();
+        for p in powers {
+            let d = rng.uniform(10.0, 490.0);
+            reg.register_client(p, RadioSite { distance_m: d }, 600);
+        }
+        let mut ch = ChannelParams::default();
+        ch.fading_samples = 4;
+        ResourcePool::model(&reg, ch, 1)
+    }
+
+    #[test]
+    fn shards_partition_the_fleet_exactly() {
+        let p = pool(53, 0);
+        for by in [ShardBy::Locality, ShardBy::Power] {
+            let f = FleetShards::build(&p, 7, by).unwrap();
+            assert_eq!(f.num_shards(), 7);
+            let mut all: Vec<usize> = f
+                .shards
+                .iter()
+                .flat_map(|s| s.members.clone())
+                .collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..53).collect::<Vec<_>>());
+            for s in &f.shards {
+                for (local, &c) in s.members.iter().enumerate() {
+                    assert_eq!(f.shard_of_client[c], s.id);
+                    assert_eq!(s.to_global(local), c);
+                    // shard-local views mirror the global pool
+                    assert_eq!(s.pool.fleet.delays_s[local], p.fleet.delays_s[c]);
+                    assert_eq!(
+                        s.pool.sites[local].distance_m,
+                        p.sites[c].distance_m
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_shard_is_the_identity_view() {
+        let p = pool(20, 1);
+        let f = FleetShards::build(&p, 1, ShardBy::Power).unwrap();
+        assert_eq!(f.shards[0].members, (0..20).collect::<Vec<_>>());
+        assert_eq!(f.shards[0].pool.fleet.delays_s, p.fleet.delays_s);
+        assert_eq!(f.shards[0].pool.fleet.data_sizes, p.fleet.data_sizes);
+    }
+
+    #[test]
+    fn power_sharding_stratifies_delay() {
+        let p = pool(60, 2);
+        let f = FleetShards::build(&p, 4, ShardBy::Power).unwrap();
+        // shard s's slowest member is ≤ shard s+1's fastest member
+        for w in f.shards.windows(2) {
+            let max_lo = crate::util::stats::max(&w[0].pool.fleet.delays_s);
+            let min_hi = crate::util::stats::min(&w[1].pool.fleet.delays_s);
+            assert!(max_lo <= min_hi + 1e-12);
+        }
+    }
+
+    #[test]
+    fn bad_shard_counts_error() {
+        let p = pool(5, 3);
+        assert!(FleetShards::build(&p, 0, ShardBy::Power).is_err());
+        assert!(FleetShards::build(&p, 6, ShardBy::Power).is_err());
+    }
+
+    #[test]
+    fn split_proportional_conserves_and_bounds() {
+        let shares = split_proportional(10, &[30, 30, 40]);
+        assert_eq!(shares.iter().sum::<usize>(), 10);
+        assert_eq!(shares, vec![3, 3, 4]);
+        // tiny totals still conserve
+        let shares = split_proportional(2, &[10, 10, 10, 10]);
+        assert_eq!(shares.iter().sum::<usize>(), 2);
+        // every shard served when the budget allows
+        let shares = split_proportional(5, &[100, 1, 1, 1, 1]);
+        assert_eq!(shares.iter().sum::<usize>(), 5);
+        assert!(shares.iter().all(|&s| s >= 1), "{shares:?}");
+        // shares never exceed shard sizes
+        let shares = split_proportional(9, &[1, 1, 8]);
+        assert_eq!(shares.iter().sum::<usize>(), 9);
+        for (s, z) in shares.iter().zip([1usize, 1, 8]) {
+            assert!(*s <= z);
+        }
+    }
+
+    #[test]
+    fn sharded_traditional_decisions_stay_in_shard() {
+        let p = pool(40, 4);
+        let f = FleetShards::build(&p, 4, ShardBy::Power).unwrap();
+        let optimizers: Vec<Mutex<SchedulingOptimizer>> =
+            (0..4).map(|_| Mutex::new(SchedulingOptimizer::new())).collect();
+        let shard_ids: Vec<usize> = (0..4).collect();
+        let rngs: Vec<Pcg64> =
+            (0..4).map(|s| Pcg64::new(9, s as u64)).collect();
+        let ex = ParallelExecutor::new(2);
+        let ds = decide_traditional_sharded(
+            &f,
+            &optimizers,
+            &shard_ids,
+            CohortStrategy::PowerGrouping { m: 100 }, // over-large m: clamped
+            RbStrategy::HungarianEnergy,
+            &[3, 3, 3, 3],
+            &[3, 3, 3, 3],
+            &rngs,
+            &ex,
+        )
+        .unwrap();
+        assert_eq!(ds.len(), 4);
+        for d in &ds {
+            assert_eq!(d.cohort_global.len(), 3);
+            for &c in &d.cohort_global {
+                assert_eq!(f.shard_of_client[c], d.shard);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_p2p_chains_cover_each_shard() {
+        let p = pool(24, 5);
+        let f = FleetShards::build(&p, 3, ShardBy::Locality).unwrap();
+        let optimizers: Vec<Mutex<SchedulingOptimizer>> =
+            (0..3).map(|_| Mutex::new(SchedulingOptimizer::new())).collect();
+        let mut rng = Pcg64::seed_from(6);
+        let g = TopologyGen::full(24, 1.0, 10.0, &mut rng);
+        let rngs: Vec<Pcg64> = (0..3).map(|s| Pcg64::new(7, s as u64)).collect();
+        let ex = ParallelExecutor::new(2);
+        let ds =
+            decide_p2p_sharded(&f, &optimizers, &g, PathStrategy::Greedy, &rngs, &ex)
+                .unwrap();
+        assert_eq!(ds.len(), 3);
+        for (s, d) in ds.iter().enumerate() {
+            let mut covered: Vec<usize> =
+                d.parts.iter().flat_map(|p| p.order.clone()).collect();
+            covered.sort_unstable();
+            assert_eq!(covered, f.shards[s].members);
+        }
+    }
+}

@@ -24,6 +24,7 @@ pub mod cnc;
 pub mod coordinator;
 pub mod data;
 pub mod exp;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod netsim;

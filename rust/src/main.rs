@@ -5,6 +5,7 @@
 //! cnc-fl table1                    # print the Table 1 constants in use
 //! cnc-fl table2                    # print the Pr1–Pr6 case definitions
 //! cnc-fl run    --case Pr1 ...     # one traditional run (CNC or FedAvg)
+//! cnc-fl fleet  --case Fleet10k .. # sharded/async fleet-engine run
 //! cnc-fl p2p    --clients 20 ...   # one P2P run
 //! cnc-fl fig4 … fig11              # regenerate a figure's CSVs
 //! cnc-fl all                       # everything (quick horizon)
@@ -26,6 +27,7 @@ use cnc_fl::exp::p2p_figs;
 use cnc_fl::exp::presets::{
     self, case, traditional_config, Backend, Method, CASES,
 };
+use cnc_fl::fleet;
 use cnc_fl::netsim::channel::ChannelParams;
 use cnc_fl::netsim::topology::TopologyGen;
 use cnc_fl::util::cli::Command;
@@ -48,6 +50,7 @@ fn usage() -> String {
      \x20 table1           print the Table 1 simulation constants\n\
      \x20 table2           print the Table 2 cases (Pr1–Pr6)\n\
      \x20 run              one traditional-architecture training run\n\
+     \x20 fleet            sharded/async fleet-engine run (Fleet10k/Fleet100k)\n\
      \x20 p2p              one peer-to-peer training run\n\
      \x20 fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11\n\
      \x20                  regenerate that figure's CSV series\n\
@@ -102,6 +105,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "table1" => table1(),
         "table2" => table2(),
         "run" => run_traditional(rest),
+        "fleet" => run_fleet(rest),
         "p2p" => run_p2p(rest),
         "fig4" | "fig5" | "fig6" | "fig7" | "fig8" | "fig9" | "fig10" | "fig11" => {
             figure(sub, rest)
@@ -210,6 +214,63 @@ fn run_traditional(args: &[String]) -> Result<()> {
     println!(
         "{label}: {} rounds, final accuracy {:.4} → {}",
         h.rounds.len(),
+        h.final_accuracy(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn run_fleet(args: &[String]) -> Result<()> {
+    let cmd = Command::new("fleet", "sharded/async fleet-engine training run (mock backend)")
+        .opt("case", Some("Fleet10k"), "Fleet10k | Fleet100k")
+        .opt("shards", None, "override the case's shard count")
+        .opt("max-staleness", None, "override the staleness bound (0 = sync)")
+        .opt("rounds", None, "override the case's global rounds")
+        .opt("decay", Some("0.5"), "staleness weight decay in (0, 1]")
+        .opt("threads", Some("0"), "worker threads (0 = auto, 1 = serial)")
+        .opt("seed", Some("0"), "experiment seed")
+        .opt("out", Some("results"), "output directory")
+        .switch("verbose", "per-round progress on stderr");
+    let m = cmd.parse(args)?;
+    let case = presets::fleet_case(m.str_("case")?)?;
+    // fleet_config derives the per-shard grouping from the effective
+    // shard count, so the override goes in up front
+    let mut cfg =
+        presets::fleet_config(&case, m.usize_opt("shards")?, m.u64_("seed")?);
+    if let Some(stale) = m.usize_opt("max-staleness")? {
+        cfg.max_staleness = stale;
+    }
+    if let Some(rounds) = m.usize_opt("rounds")? {
+        cfg.rounds = rounds;
+    }
+    cfg.staleness_decay = m.f64_("decay")?;
+    cfg.threads = m.usize_("threads")?;
+    cfg.verbose = m.bool_("verbose")?;
+
+    let mut sys = presets::bootstrap_fleet_case(&case, cfg.seed);
+    let mut trainer = presets::make_fleet_trainer(&case);
+    let label = format!("{}/s{}k{}", case.name, cfg.shards, cfg.max_staleness);
+    let h = fleet::run(&mut sys, trainer.as_mut(), &cfg, &label)?;
+
+    let out = PathBuf::from(m.str_("out")?).join(format!(
+        "fleet_{}_{}s_{}k.csv",
+        case.name, cfg.shards, cfg.max_staleness
+    ));
+    h.write_csv(&out)?;
+    let commits: usize = h.rounds.iter().map(|r| r.shards_committed).sum();
+    let stale_mean: f64 = if h.rounds.is_empty() {
+        0.0
+    } else {
+        h.rounds.iter().map(|r| r.staleness_mean).sum::<f64>()
+            / h.rounds.len() as f64
+    };
+    println!(
+        "{label}: {} clients / {} shards, {} rounds, {} shard commits \
+         (mean staleness {stale_mean:.2}), final accuracy {:.4} → {}",
+        case.num_clients,
+        cfg.shards,
+        h.rounds.len(),
+        commits,
         h.final_accuracy(),
         out.display()
     );

@@ -34,12 +34,26 @@ pub struct RoundRecord {
     /// clients whose update missed the uplink deadline and was excluded
     /// from aggregation (0 when no deadline is configured)
     pub dropouts: usize,
+    /// shard updates folded into the global model this round (0 for the
+    /// flat coordinators, ≥ 0 under the `fleet` engine — an async round
+    /// can commit zero shards)
+    pub shards_committed: usize,
+    /// mean staleness, in rounds, of the shard updates committed this
+    /// round (0.0 for flat/synchronous runs)
+    pub staleness_mean: f64,
+    /// per-committed-shard local-delay spread t_max − t_min (Eq 9 probed
+    /// shard-locally); empty for flat runs
+    pub shard_spreads_s: Vec<f64>,
 }
 
 impl RoundRecord {
     /// Round local-training latency: the stragglers gate the round
-    /// (synchronous aggregation) — max over clients.
+    /// (synchronous aggregation) — max over clients. 0.0 when the round
+    /// trained nobody (an async fleet round with no commits).
     pub fn local_delay_round_s(&self) -> f64 {
+        if self.local_delays_s.is_empty() {
+            return 0.0;
+        }
         stats::max(&self.local_delays_s)
     }
 
@@ -52,9 +66,22 @@ impl RoundRecord {
     }
 
     /// Round uplink delay under per-client RBs: clients transmit in
-    /// parallel — max over clients (Eq 6's objective).
+    /// parallel — max over clients (Eq 6's objective). 0.0 when nothing
+    /// was transmitted this round.
     pub fn tx_delay_round_s(&self) -> f64 {
+        if self.tx_delays_s.is_empty() {
+            return 0.0;
+        }
         stats::max(&self.tx_delays_s)
+    }
+
+    /// Worst per-shard local-delay spread among this round's committed
+    /// shards (0.0 for flat runs / no commits).
+    pub fn shard_spread_max_s(&self) -> f64 {
+        if self.shard_spreads_s.is_empty() {
+            return 0.0;
+        }
+        stats::max(&self.shard_spreads_s)
     }
 
     /// Total transmission energy of the round (Eq 5's objective).
@@ -137,6 +164,9 @@ impl RunHistory {
             "cum_local_delay_s",
             "cum_tx_delay_s",
             "cum_tx_energy_j",
+            "shards_committed",
+            "staleness_mean",
+            "shard_spread_max_s",
         ]);
         let cum_local = self.cumulative(Metric::LocalDelayRound);
         let cum_tx = self.cumulative(Metric::TxDelayRound);
@@ -153,6 +183,9 @@ impl RunHistory {
                 cum_local[i],
                 cum_tx[i],
                 cum_e[i],
+                r.shards_committed as f64,
+                r.staleness_mean,
+                r.shard_spread_max_s(),
             ]);
         }
         t
@@ -199,8 +232,7 @@ mod tests {
             local_delays_s: local.to_vec(),
             tx_delays_s: tx.to_vec(),
             tx_energies_j: e.to_vec(),
-            compute_wall_s: 0.0,
-            dropouts: 0,
+            ..Default::default()
         }
     }
 
@@ -219,6 +251,27 @@ mod tests {
         let r = RoundRecord::default();
         assert_eq!(r.local_delay_diff_s(), 0.0);
         assert_eq!(r.tx_energy_round_j(), 0.0);
+        // an async fleet round that committed nothing must not poison the
+        // CSV with ±inf reductions
+        assert_eq!(r.local_delay_round_s(), 0.0);
+        assert_eq!(r.tx_delay_round_s(), 0.0);
+        assert_eq!(r.shard_spread_max_s(), 0.0);
+    }
+
+    #[test]
+    fn shard_columns_round_trip_to_csv() {
+        let mut h = RunHistory::new("fleet");
+        let mut r = rec(0, 0.4, &[1.0, 3.0], &[0.5], &[0.1]);
+        r.shards_committed = 3;
+        r.staleness_mean = 0.5;
+        r.shard_spreads_s = vec![0.25, 2.0, 1.0];
+        assert_eq!(r.shard_spread_max_s(), 2.0);
+        h.push(r);
+        let text = h.to_csv().to_string();
+        let header = text.lines().next().unwrap();
+        assert!(header.ends_with("shards_committed,staleness_mean,shard_spread_max_s"));
+        let row = text.lines().nth(1).unwrap();
+        assert!(row.contains(",3,0.5,2"), "{row}");
     }
 
     #[test]

@@ -62,6 +62,44 @@ impl Aggregator {
         self.weight_sum
     }
 
+    /// Fold another aggregator's partial sums into this one — the root
+    /// step of the hierarchical (two-level) aggregation in `fleet`.
+    ///
+    /// Merging a partial into an **empty** aggregator copies its state
+    /// bit-for-bit, so a one-shard hierarchy is exactly the flat fold.
+    /// With several shards the regrouping `(a+b)+(c+d)` vs `((a+b)+c)+d`
+    /// is exact whenever the partial sums are exactly representable
+    /// (e.g. integer-valued updates with integer weights), which is what
+    /// `tests/fleet_props.rs` pins down to 0 ULP.
+    pub fn merge(&mut self, other: &Aggregator) {
+        if self.count == 0 {
+            // bitwise copy into the existing arena — no fresh allocation
+            // for the per-round root of the fleet hierarchy
+            self.acc
+                .as_mut_slice()
+                .copy_from_slice(other.acc.as_slice());
+            self.weight_sum = other.weight_sum;
+            self.count = other.count;
+            return;
+        }
+        self.acc.add_scaled(&other.acc, 1.0);
+        self.weight_sum += other.weight_sum;
+        self.count += other.count;
+    }
+
+    /// [`merge`](Self::merge) with the incoming partial's weight scaled by
+    /// `factor` — the staleness-decay hook of the async fleet engine.
+    /// `factor == 1.0` takes the exact (unscaled) merge path.
+    pub fn merge_scaled(&mut self, other: &Aggregator, factor: f64) {
+        if factor == 1.0 {
+            self.merge(other);
+            return;
+        }
+        self.acc.add_scaled(&other.acc, factor as f32);
+        self.weight_sum += factor * other.weight_sum;
+        self.count += other.count;
+    }
+
     /// Normalize and return the aggregate. Errors when nothing (or only
     /// zero-weight updates) was pushed, matching `weighted_average`.
     pub fn finish(self) -> Result<ModelParams> {
@@ -148,6 +186,54 @@ mod tests {
         }
         let streamed = agg.finish().unwrap();
         assert_eq!(batch, streamed);
+    }
+
+    #[test]
+    fn merge_into_empty_is_bitwise_copy() {
+        let mut a = Aggregator::new();
+        a.push(&filled(0.25), 100);
+        a.push(&filled(-1.5), 600);
+        let mut root = Aggregator::new();
+        root.merge(&a);
+        assert_eq!(root.count(), 2);
+        assert_eq!(root.total_weight(), a.total_weight());
+        let x = a.finish().unwrap();
+        let y = root.finish().unwrap();
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn merge_of_partials_matches_flat_fold_on_integer_inputs() {
+        // integer values × integer weights keep every partial sum exact,
+        // so the two-level regrouping is bit-identical to the flat fold
+        let updates = [(filled(2.0), 3), (filled(5.0), 1), (filled(-4.0), 2), (filled(7.0), 4)];
+        let mut flat = Aggregator::new();
+        for (m, w) in &updates {
+            flat.push(m, *w);
+        }
+        let mut shard_a = Aggregator::new();
+        shard_a.push(&updates[0].0, updates[0].1);
+        shard_a.push(&updates[1].0, updates[1].1);
+        let mut shard_b = Aggregator::new();
+        shard_b.push(&updates[2].0, updates[2].1);
+        shard_b.push(&updates[3].0, updates[3].1);
+        let mut root = Aggregator::new();
+        root.merge(&shard_a);
+        root.merge(&shard_b);
+        assert_eq!(flat.finish().unwrap(), root.finish().unwrap());
+    }
+
+    #[test]
+    fn merge_scaled_discounts_the_partial() {
+        let mut a = Aggregator::new();
+        a.push(&filled(4.0), 100);
+        let mut root = Aggregator::new();
+        root.push(&filled(0.0), 100);
+        root.merge_scaled(&a, 0.5);
+        // (100·0 + 0.5·100·4) / (100 + 50) = 200/150
+        let m = root.finish().unwrap();
+        assert!((m.tensor(0)[0] - 200.0 / 150.0).abs() < 1e-6);
+        assert_eq!(root.count(), 2);
     }
 
     #[test]

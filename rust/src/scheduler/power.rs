@@ -70,16 +70,17 @@ impl PowerGroups {
                 .unwrap()
                 .then(a.cmp(&b))
         });
-        // contiguous cut into m parts, sizes as equal as possible
-        let base = u / m;
-        let extra = u % m;
-        let mut parts = Vec::with_capacity(m);
-        let mut off = 0;
-        for k in 0..m {
-            let len = base + usize::from(k < extra);
-            parts.push(order[off..off + len].to_vec());
-            off += len;
-        }
+        // contiguous cut into m parts, sizes as equal as possible — the
+        // same `util::chunk_even` scheme the fleet registry shards with
+        let parts = crate::util::chunk_even(&order, m);
+        // Guard the sharded path: a shard-local fleet handed a
+        // fleet-derived m would produce empty parts, which `sample`'s
+        // weighted part draw cannot handle (callers must clamp m to the
+        // shard's client count — see `exp::presets::default_m`).
+        debug_assert!(
+            parts.iter().all(|p| !p.is_empty()),
+            "PowerGroups::build produced an empty part (m={m}, U={u})"
+        );
         PowerGroups { parts }
     }
 

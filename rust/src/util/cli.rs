@@ -152,6 +152,15 @@ impl Matches {
         Ok(self.str_(name)?.parse::<usize>()?)
     }
 
+    /// Optional usize: `None` when the option has no value (no default
+    /// and not given), `Err` when a value is present but malformed —
+    /// the shape override flags (`--rounds`, `--shards`, …) use this.
+    pub fn usize_opt(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|s| s.parse::<usize>().map_err(anyhow::Error::from))
+            .transpose()
+    }
+
     pub fn u64_(&self, name: &str) -> Result<u64> {
         Ok(self.str_(name)?.parse::<u64>()?)
     }
@@ -243,5 +252,16 @@ mod tests {
     fn missing_required_option_errors() {
         let m = cmd().parse(&argv(&[])).unwrap();
         assert!(m.str_("out").is_err());
+    }
+
+    #[test]
+    fn usize_opt_distinguishes_absent_from_malformed() {
+        let c = Command::new("x", "y").opt("rounds", None, "override");
+        let m = c.parse(&argv(&[])).unwrap();
+        assert_eq!(m.usize_opt("rounds").unwrap(), None);
+        let m = c.parse(&argv(&["--rounds", "12"])).unwrap();
+        assert_eq!(m.usize_opt("rounds").unwrap(), Some(12));
+        let m = c.parse(&argv(&["--rounds", "twelve"])).unwrap();
+        assert!(m.usize_opt("rounds").is_err());
     }
 }

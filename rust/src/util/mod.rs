@@ -10,3 +10,43 @@ pub mod pool;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;
+
+/// Cut `xs` into `k` contiguous chunks with sizes as equal as possible
+/// (the first `len % k` chunks get one extra element) — the single
+/// partition scheme shared by `scheduler::PowerGroups` and the fleet
+/// registry, so grouping and sharding always stratify identically.
+pub fn chunk_even<T: Copy>(xs: &[T], k: usize) -> Vec<Vec<T>> {
+    assert!(k >= 1 && k <= xs.len(), "need 1 <= k({k}) <= len({})", xs.len());
+    let base = xs.len() / k;
+    let extra = xs.len() % k;
+    let mut out = Vec::with_capacity(k);
+    let mut off = 0usize;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push(xs[off..off + len].to_vec());
+        off += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_even_covers_in_order_with_balanced_sizes() {
+        let xs: Vec<usize> = (0..10).collect();
+        let c = chunk_even(&xs, 3);
+        assert_eq!(c, vec![vec![0, 1, 2, 3], vec![4, 5, 6], vec![7, 8, 9]]);
+        let c = chunk_even(&xs, 10);
+        assert!(c.iter().all(|p| p.len() == 1));
+        let c = chunk_even(&xs, 1);
+        assert_eq!(c, vec![xs.clone()]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn chunk_even_rejects_oversized_k() {
+        chunk_even(&[1, 2], 3);
+    }
+}

@@ -128,6 +128,30 @@ fn p2p_subcommand_mock() {
 }
 
 #[test]
+fn fleet10k_subcommand_completes_five_sharded_rounds() {
+    // acceptance: the Fleet10k preset (10⁴ clients) completes a 5-round
+    // mock run with sharded decisions and writes the shard/staleness CSV
+    let out = tmpdir("fleet");
+    let (ok, stdout, stderr) = run(&[
+        "fleet",
+        "--case",
+        "Fleet10k",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("10000 clients / 16 shards"), "{stdout}");
+    assert!(stdout.contains("final accuracy"));
+    let csv = std::fs::read_to_string(out.join("fleet_Fleet10k_16s_2k.csv")).unwrap();
+    assert!(csv.starts_with("round,accuracy"));
+    let header = csv.lines().next().unwrap();
+    assert!(header.contains("shards_committed"));
+    assert!(header.contains("staleness_mean"));
+    assert_eq!(csv.lines().count(), 6); // header + 5 rounds
+    let _ = std::fs::remove_dir_all(out);
+}
+
+#[test]
 fn bad_flag_value_reports_error() {
     let (ok, _, stderr) = run(&["run", "--method", "nonsense", "--backend", "mock"]);
     assert!(!ok);

@@ -1,0 +1,291 @@
+//! Property tests for the fleet layer: the degenerate-mode equivalence
+//! contract (`shards = 1, max_staleness = 0` ≡ the flat coordinator,
+//! bit-for-bit), the hierarchical fold's exactness, and shard-partition
+//! invariants (mock backend — no artifacts needed).
+
+use cnc_fl::cnc::optimize::{CohortStrategy, RbStrategy};
+use cnc_fl::cnc::CncSystem;
+use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
+use cnc_fl::coordinator::MockTrainer;
+use cnc_fl::fleet::{self, FleetConfig, FleetShards, RootAggregator, ShardBy, ShardUpdate};
+use cnc_fl::metrics::RunHistory;
+use cnc_fl::model::aggregate::weighted_average;
+use cnc_fl::model::params::ModelParams;
+use cnc_fl::netsim::channel::ChannelParams;
+use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::util::propcheck::{check, gen_usize, prop_assert, GenPair};
+use cnc_fl::util::rng::Pcg64;
+
+fn system(n: usize, seed: u64) -> CncSystem {
+    let mut ch = ChannelParams::default();
+    ch.fading_samples = 2;
+    CncSystem::bootstrap(n, 600, 1, PowerProfile::Bimodal, ch, seed)
+}
+
+/// Bitwise comparison of the fields both engines fill (compute_wall_s is
+/// wall-clock and the shard columns are fleet-only by design).
+fn assert_histories_identical(a: &RunHistory, b: &RunHistory) -> Result<(), String> {
+    if a.rounds.len() != b.rounds.len() {
+        return Err(format!(
+            "round counts differ: {} vs {}",
+            a.rounds.len(),
+            b.rounds.len()
+        ));
+    }
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        if x.accuracy.to_bits() != y.accuracy.to_bits() {
+            return Err(format!(
+                "round {}: accuracy {} vs {}",
+                x.round, x.accuracy, y.accuracy
+            ));
+        }
+        if x.train_loss.to_bits() != y.train_loss.to_bits() {
+            return Err(format!(
+                "round {}: loss {} vs {}",
+                x.round, x.train_loss, y.train_loss
+            ));
+        }
+        if x.local_delays_s != y.local_delays_s
+            || x.tx_delays_s != y.tx_delays_s
+            || x.tx_energies_j != y.tx_energies_j
+            || x.dropouts != y.dropouts
+        {
+            return Err(format!("round {}: decision telemetry differs", x.round));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// degenerate mode ≡ flat coordinator
+// ---------------------------------------------------------------------------
+
+#[test]
+fn one_shard_sync_fleet_equals_traditional_for_any_seed_and_width() {
+    check(
+        6,
+        GenPair(gen_usize(15..40), gen_usize(0..10_000)),
+        |&(u, seed)| {
+            let cohort = (u / 3).max(2);
+            let m = (u / cohort).clamp(1, u);
+            for threads in [1usize, 4] {
+                let trad = {
+                    let mut sys = system(u, seed as u64);
+                    let mut t = MockTrainer::new(u, 600);
+                    let cfg = TraditionalConfig {
+                        rounds: 3,
+                        cohort_size: cohort,
+                        n_rb: cohort,
+                        epoch_local: 2,
+                        cohort_strategy: CohortStrategy::PowerGrouping { m },
+                        rb_strategy: RbStrategy::HungarianEnergy,
+                        eval_every: 1,
+                        tx_deadline_s: None,
+                        threads,
+                        seed: seed as u64,
+                        verbose: false,
+                    };
+                    traditional::run(&mut sys, &mut t, &cfg, "flat").unwrap()
+                };
+                let flt = {
+                    let mut sys = system(u, seed as u64);
+                    let mut t = MockTrainer::new(u, 600);
+                    let cfg = FleetConfig {
+                        rounds: 3,
+                        shards: 1,
+                        max_staleness: 0,
+                        cohort_size: cohort,
+                        n_rb: cohort,
+                        epoch_local: 2,
+                        cohort_strategy: CohortStrategy::PowerGrouping { m },
+                        rb_strategy: RbStrategy::HungarianEnergy,
+                        threads,
+                        seed: seed as u64,
+                        ..Default::default()
+                    };
+                    fleet::run(&mut sys, &mut t, &cfg, "fleet").unwrap()
+                };
+                assert_histories_identical(&trad, &flt)
+                    .map_err(|e| format!("threads {threads}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn degenerate_mode_holds_for_uniform_cohorts_too() {
+    // FedAvg-style strategies go through different decision code paths;
+    // the degenerate contract must hold there as well
+    let seed = 77u64;
+    let trad = {
+        let mut sys = system(30, seed);
+        let mut t = MockTrainer::new(30, 600);
+        let cfg = TraditionalConfig {
+            rounds: 4,
+            cohort_size: 6,
+            n_rb: 8,
+            cohort_strategy: CohortStrategy::Uniform,
+            rb_strategy: RbStrategy::Random,
+            seed,
+            ..Default::default()
+        };
+        traditional::run(&mut sys, &mut t, &cfg, "flat").unwrap()
+    };
+    let flt = {
+        let mut sys = system(30, seed);
+        let mut t = MockTrainer::new(30, 600);
+        let cfg = FleetConfig {
+            rounds: 4,
+            shards: 1,
+            max_staleness: 0,
+            cohort_size: 6,
+            n_rb: 8,
+            cohort_strategy: CohortStrategy::Uniform,
+            rb_strategy: RbStrategy::Random,
+            seed,
+            ..Default::default()
+        };
+        fleet::run(&mut sys, &mut t, &cfg, "fleet").unwrap()
+    };
+    assert_histories_identical(&trad, &flt).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// hierarchical fold ≡ flat weighted average (0 ULP on integer inputs)
+// ---------------------------------------------------------------------------
+
+fn integer_params(seed: u64) -> ModelParams {
+    // small integer values: every partial sum stays exactly representable
+    // in f32 (well under 2^24), so regrouping cannot round
+    let mut rng = Pcg64::seed_from(seed);
+    let mut m = ModelParams::zeros();
+    for v in m.as_mut_slice() {
+        *v = rng.range_i64(-8, 8) as f32;
+    }
+    m
+}
+
+#[test]
+fn hierarchical_fold_is_0ulp_equal_to_flat_on_integer_weights() {
+    check(
+        15,
+        GenPair(gen_usize(2..12), gen_usize(0..1_000_000)),
+        |&(n, seed)| {
+            let mut rng = Pcg64::seed_from(seed as u64 ^ 0x51A6);
+            let updates: Vec<(ModelParams, usize)> = (0..n)
+                .map(|i| {
+                    let m = integer_params(seed as u64 * 131 + i as u64);
+                    let w = rng.below(7) as usize + 1;
+                    (m, w)
+                })
+                .collect();
+            let flat = weighted_average(&updates)
+                .map_err(|e| format!("weighted_average: {e}"))?;
+
+            // random contiguous two-level grouping of the same updates in
+            // the same order
+            let cuts = rng.below(n as u64 - 1) as usize + 1; // 1..n shards
+            let mut root = RootAggregator::new(0, 1.0);
+            let mut idx = 0usize;
+            for shard in 0..cuts {
+                let hi = if shard + 1 == cuts {
+                    n
+                } else {
+                    (idx + (n - idx) / (cuts - shard)).max(idx + 1)
+                };
+                let mut upd = ShardUpdate::new(shard, 0);
+                for (m, w) in &updates[idx..hi] {
+                    upd.push(m, *w);
+                }
+                idx = hi;
+                root.offer(&upd, 0);
+            }
+            let hier = root.finish().map_err(|e| format!("finish: {e}"))?;
+            let bitwise_equal = flat
+                .as_slice()
+                .iter()
+                .zip(hier.as_slice())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            prop_assert(bitwise_equal, "two-level fold drifted from flat fold")
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// shard-partition invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shards_always_partition_and_views_always_match() {
+    check(
+        20,
+        GenPair(gen_usize(4..120), gen_usize(0..10_000)),
+        |&(u, seed)| {
+            let sys = system(u, seed as u64);
+            let k = (u / 4).max(1).min(9);
+            for by in [ShardBy::Locality, ShardBy::Power] {
+                let f = FleetShards::build(&sys.pool, k, by)
+                    .map_err(|e| format!("build: {e}"))?;
+                let mut all: Vec<usize> =
+                    f.shards.iter().flat_map(|s| s.members.clone()).collect();
+                all.sort_unstable();
+                prop_assert(
+                    all == (0..u).collect::<Vec<_>>(),
+                    "shards must partition the fleet",
+                )?;
+                for s in &f.shards {
+                    let sorted = s.members.windows(2).all(|w| w[0] < w[1]);
+                    prop_assert(sorted, "members must be id-sorted")?;
+                    for (local, &c) in s.members.iter().enumerate() {
+                        prop_assert(
+                            s.pool.fleet.delays_s[local] == sys.pool.fleet.delays_s[c]
+                                && s.pool.fleet.data_sizes[local]
+                                    == sys.pool.fleet.data_sizes[c],
+                            "shard view must mirror the global pool",
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn async_staleness_never_exceeds_bound_for_any_seed() {
+    check(
+        6,
+        GenPair(gen_usize(24..60), gen_usize(0..10_000)),
+        |&(u, seed)| {
+            let mut sys = system(u, seed as u64);
+            let mut t = MockTrainer::new(u, 600);
+            let max_staleness = 1 + seed % 3;
+            let cfg = FleetConfig {
+                rounds: 6,
+                shards: 3,
+                max_staleness,
+                cohort_size: 6,
+                n_rb: 6,
+                seed: seed as u64,
+                ..Default::default()
+            };
+            let h = fleet::run(&mut sys, &mut t, &cfg, "stale").unwrap();
+            for r in &h.rounds {
+                prop_assert(
+                    r.staleness_mean <= max_staleness as f64,
+                    &format!(
+                        "round {}: mean staleness {} > bound {max_staleness}",
+                        r.round, r.staleness_mean
+                    ),
+                )?;
+                prop_assert(
+                    r.shards_committed <= 3,
+                    "cannot commit more shards than exist",
+                )?;
+            }
+            let commits: usize = h.rounds.iter().map(|r| r.shards_committed).sum();
+            prop_assert(commits > 0, "async run must commit something")
+        },
+    );
+}
