@@ -53,7 +53,7 @@ fn pjrt_scenario(store: ArtifactStore, rounds: usize) -> Result<()> {
     println!(
         "  {} artifacts, {}-param model, batch size {}",
         store.artifacts.len(),
-        store.param_count,
+        store.param_count(),
         store.batch_size
     );
     let engine = Engine::new(store)?;

@@ -22,7 +22,7 @@ fn run_method(method: Method, rounds: usize) -> Result<RunHistory> {
     cfg.eval_every = 2;
     let mut sys = presets::bootstrap_case(&c, 0);
     let mut trainer =
-        presets::make_trainer(&presets::Backend::Pjrt, &c, Split::Iid, 0)?;
+        presets::make_trainer(&presets::Backend::Pjrt, &c, Split::Iid, 0, None)?;
     traditional::run(&mut sys, trainer.as_mut(), &cfg, method.label())
 }
 

@@ -15,7 +15,11 @@ use std::sync::Mutex;
 use cnc_fl::cnc::optimize::{CohortStrategy, RbStrategy, SchedulingOptimizer};
 use cnc_fl::cnc::CncSystem;
 use cnc_fl::exp::presets::default_m;
-use cnc_fl::fleet::{decide_traditional_sharded, FleetShards, ShardBy};
+use cnc_fl::fleet::{
+    decide_traditional_sharded, FleetShards, RootAggregator, ShardBy, ShardUpdate,
+};
+use cnc_fl::model::params::ModelParams;
+use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
 use cnc_fl::netsim::channel::ChannelParams;
 use cnc_fl::netsim::compute::PowerProfile;
 use cnc_fl::runtime::ParallelExecutor;
@@ -137,5 +141,43 @@ fn main() {
         ));
     }
     println!("{table}");
+
+    // --- model-size axis: hierarchical aggregation per shape preset -----
+    // 16 shard partials folded through the root tier — the fleet's
+    // aggregation hot path, swept over the dynamic-arena presets
+    let mut agg_table = String::from(
+        "\n## hierarchical aggregation across shape presets (median)\n\n\
+         | shape | params | 16-shard root fold | MB folded/s |\n|---|---|---|---|\n",
+    );
+    for name in PRESET_NAMES {
+        let shape = ModelShape::preset(name).unwrap();
+        let shards: Vec<ShardUpdate> = (0..16)
+            .map(|s| {
+                let mut rng = Pcg64::new(0xA6, s as u64);
+                let mut m = ModelParams::zeros(&shape);
+                for v in m.as_mut_slice() {
+                    *v = rng.normal_scaled(0.0, 0.05) as f32;
+                }
+                let mut upd = ShardUpdate::new(&shape, s, 0);
+                upd.push(&m, 600);
+                upd
+            })
+            .collect();
+        let fold = b.bench(&format!("root fold 16 shards ({name})"), || {
+            let mut root = RootAggregator::new(&shape, 0, 1.0);
+            for upd in &shards {
+                root.offer(upd, 0);
+            }
+            black_box(root.finish().unwrap())
+        });
+        let mb = 16.0 * shape.payload_bytes() as f64 / 1e6;
+        agg_table.push_str(&format!(
+            "| {name} | {} | {} | {:.0} |\n",
+            shape.param_count(),
+            fmt_ns(fold.median_ns),
+            mb / (fold.median_ns * 1e-9),
+        ));
+    }
+    println!("{agg_table}");
     println!("{}", b.markdown_table());
 }

@@ -3,12 +3,17 @@
 //! flat-arena `ModelParams` + streaming `Aggregator` versus the seed's
 //! nested `Vec<Vec<f32>>` + clone-then-average implementation
 //! (reproduced inline below as `Legacy*` so the speedup is measured, not
-//! asserted).
+//! asserted). The legacy comparison runs on the paper's `mlp-784`; a
+//! second table sweeps the same hot paths across every shape preset, so
+//! a dynamic-arena regression on any model size shows up here.
 //!
 //! Run: `cargo bench --bench bench_params`
 
+use std::sync::Arc;
+
 use cnc_fl::model::aggregate::{weighted_average, Aggregator};
-use cnc_fl::model::params::{param_count, ModelParams, PARAM_SHAPES};
+use cnc_fl::model::params::ModelParams;
+use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
 use cnc_fl::util::bench::{black_box, fmt_ns, Bencher};
 use cnc_fl::util::rng::Pcg64;
 
@@ -23,23 +28,22 @@ struct LegacyParams {
 }
 
 impl LegacyParams {
-    fn zeros() -> Self {
+    fn zeros(shape: &ModelShape) -> Self {
         LegacyParams {
-            tensors: PARAM_SHAPES
-                .iter()
-                .map(|(_, s)| vec![0.0; s.iter().product()])
+            tensors: (0..shape.num_tensors())
+                .map(|i| vec![0.0; shape.elements(i)])
                 .collect(),
         }
     }
 
-    fn from_blob(blob: &[u8]) -> Self {
-        let mut tensors = Vec::with_capacity(PARAM_SHAPES.len());
+    fn from_blob(shape: &ModelShape, blob: &[u8]) -> Self {
+        let mut tensors = Vec::with_capacity(shape.num_tensors());
         let mut off = 0usize;
-        for (_, shape) in PARAM_SHAPES {
-            let n: usize = shape.iter().product();
+        for i in 0..shape.num_tensors() {
+            let n = shape.elements(i);
             let mut t = Vec::with_capacity(n);
-            for i in 0..n {
-                let b = &blob[off + i * 4..off + i * 4 + 4];
+            for j in 0..n {
+                let b = &blob[off + j * 4..off + j * 4 + 4];
                 t.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
             }
             off += n * 4;
@@ -49,7 +53,8 @@ impl LegacyParams {
     }
 
     fn to_blob(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(param_count() * 4);
+        let count: usize = self.tensors.iter().map(|t| t.len()).sum();
+        let mut out = Vec::with_capacity(count * 4);
         for t in &self.tensors {
             for &v in t {
                 out.extend_from_slice(&v.to_le_bytes());
@@ -67,9 +72,12 @@ impl LegacyParams {
     }
 }
 
-fn legacy_weighted_average(models: &[(LegacyParams, usize)]) -> LegacyParams {
+fn legacy_weighted_average(
+    shape: &ModelShape,
+    models: &[(LegacyParams, usize)],
+) -> LegacyParams {
     let total: usize = models.iter().map(|(_, n)| n).sum();
-    let mut acc = LegacyParams::zeros();
+    let mut acc = LegacyParams::zeros(shape);
     for (m, n) in models {
         acc.add_scaled(m, *n as f32 / total as f32);
     }
@@ -78,9 +86,9 @@ fn legacy_weighted_average(models: &[(LegacyParams, usize)]) -> LegacyParams {
 
 // ---------------------------------------------------------------------------
 
-fn random_blob(seed: u64) -> Vec<u8> {
+fn random_blob(shape: &Arc<ModelShape>, seed: u64) -> Vec<u8> {
     let mut rng = Pcg64::seed_from(seed);
-    let mut m = ModelParams::zeros();
+    let mut m = ModelParams::zeros(shape);
     for v in m.as_mut_slice() {
         *v = rng.normal_scaled(0.0, 0.05) as f32;
     }
@@ -100,16 +108,17 @@ fn main() {
     let mut b = Bencher::new();
     println!("# bench_params — flat-arena params vs seed Vec<Vec<f32>>\n");
 
-    let blob = random_blob(0);
-    let arena = ModelParams::from_blob(&blob).unwrap();
-    let legacy = LegacyParams::from_blob(&blob);
+    let paper = ModelShape::paper();
+    let blob = random_blob(&paper, 0);
+    let arena = ModelParams::from_blob(&paper, &blob).unwrap();
+    let legacy = LegacyParams::from_blob(&paper, &blob);
 
     // --- blob load ---------------------------------------------------------
     let l_load = b.bench("blob load  (legacy per-scalar)", || {
-        black_box(LegacyParams::from_blob(black_box(&blob)))
+        black_box(LegacyParams::from_blob(&paper, black_box(&blob)))
     });
     let a_load = b.bench("blob load  (arena memcpy)", || {
-        black_box(ModelParams::from_blob(black_box(&blob)).unwrap())
+        black_box(ModelParams::from_blob(&paper, black_box(&blob)).unwrap())
     });
 
     // --- blob store --------------------------------------------------------
@@ -121,11 +130,11 @@ fn main() {
     });
 
     // --- add_scaled kernel -------------------------------------------------
-    let mut l_acc = LegacyParams::zeros();
+    let mut l_acc = LegacyParams::zeros(&paper);
     let l_fma = b.bench("add_scaled (legacy nested loops)", || {
         l_acc.add_scaled(black_box(&legacy), 0.1);
     });
-    let mut a_acc = ModelParams::zeros();
+    let mut a_acc = ModelParams::zeros(&paper);
     let a_fma = b.bench("add_scaled (arena unrolled)", || {
         a_acc.add_scaled(black_box(&arena), 0.1);
     });
@@ -135,10 +144,12 @@ fn main() {
     // the streaming Aggregator folds borrowed updates in place
     const CLIENTS: usize = 10;
     let arena_updates: Vec<ModelParams> = (0..CLIENTS)
-        .map(|i| ModelParams::from_blob(&random_blob(i as u64)).unwrap())
+        .map(|i| {
+            ModelParams::from_blob(&paper, &random_blob(&paper, i as u64)).unwrap()
+        })
         .collect();
     let legacy_updates: Vec<LegacyParams> = (0..CLIENTS)
-        .map(|i| LegacyParams::from_blob(&random_blob(i as u64)))
+        .map(|i| LegacyParams::from_blob(&paper, &random_blob(&paper, i as u64)))
         .collect();
 
     let l_agg = b.bench("aggregate 10 clients (legacy clone+avg)", || {
@@ -146,10 +157,10 @@ fn main() {
             .iter()
             .map(|m| (m.clone(), 600))
             .collect();
-        black_box(legacy_weighted_average(&collected))
+        black_box(legacy_weighted_average(&paper, &collected))
     });
     let a_agg = b.bench("aggregate 10 clients (streaming arena)", || {
-        let mut agg = Aggregator::new();
+        let mut agg = Aggregator::new(&paper);
         for m in &arena_updates {
             agg.push(m, 600);
         }
@@ -163,6 +174,7 @@ fn main() {
         .collect();
     let batch = weighted_average(&collected).unwrap();
     let l_ref = legacy_weighted_average(
+        &paper,
         &legacy_updates.iter().map(|m| (m.clone(), 600)).collect::<Vec<_>>(),
     );
     let max_diff = batch
@@ -175,7 +187,7 @@ fn main() {
 
     // --- before/after table -----------------------------------------------
     let mut table = String::from(
-        "\n## before/after (median)\n\n| op | legacy | arena | speedup |\n|---|---|---|---|\n",
+        "\n## before/after on mlp-784 (median)\n\n| op | legacy | arena | speedup |\n|---|---|---|---|\n",
     );
     table.push_str(&speedup_row("blob load", l_load.median_ns, a_load.median_ns));
     table.push_str(&speedup_row("blob store", l_store.median_ns, a_store.median_ns));
@@ -189,7 +201,50 @@ fn main() {
     println!(
         "throughput: streaming aggregation {:.1} clients/ms, blob load {:.1} MB/s",
         a_agg.throughput(CLIENTS as f64) / 1e3,
-        a_load.throughput((param_count() * 4) as f64) / 1e6,
+        a_load.throughput((paper.param_count() * 4) as f64) / 1e6,
     );
+
+    // --- model-size axis: the same hot paths on every preset ---------------
+    // per-scalar normalization makes dynamic-layout overhead (if any)
+    // directly comparable across model sizes
+    let mut axis = String::from(
+        "\n## dynamic arena across shape presets (median, ns/scalar)\n\n\
+         | shape | params | blob load | add_scaled | 10-client agg |\n\
+         |---|---|---|---|---|\n",
+    );
+    for name in PRESET_NAMES {
+        let shape = ModelShape::preset(name).unwrap();
+        let n = shape.param_count() as f64;
+        let blob = random_blob(&shape, 42);
+        let load = b.bench(&format!("blob load  ({name})"), || {
+            black_box(ModelParams::from_blob(&shape, black_box(&blob)).unwrap())
+        });
+        let model = ModelParams::from_blob(&shape, &blob).unwrap();
+        let mut acc = ModelParams::zeros(&shape);
+        let fma = b.bench(&format!("add_scaled ({name})"), || {
+            acc.add_scaled(black_box(&model), 0.1);
+        });
+        let updates: Vec<ModelParams> = (0..CLIENTS)
+            .map(|i| {
+                ModelParams::from_blob(&shape, &random_blob(&shape, i as u64))
+                    .unwrap()
+            })
+            .collect();
+        let agg = b.bench(&format!("aggregate 10 ({name})"), || {
+            let mut a = Aggregator::new(&shape);
+            for m in &updates {
+                a.push(m, 600);
+            }
+            black_box(a.finish().unwrap())
+        });
+        axis.push_str(&format!(
+            "| {name} | {} | {:.3} | {:.3} | {:.3} |\n",
+            shape.param_count(),
+            load.median_ns / n,
+            fma.median_ns / n,
+            agg.median_ns / n,
+        ));
+    }
+    println!("{axis}");
     println!("\n{}", b.markdown_table());
 }

@@ -157,7 +157,7 @@ pub fn run_with_model(
         // the serial and parallel paths (identical fold order).
         let t0 = std::time::Instant::now();
         let n_parts = decision.parts.len();
-        let mut agg = Aggregator::new();
+        let mut agg = Aggregator::new(global.shape());
         let mut loss_sum = 0.0f64;
         let mut trained = 0usize;
         let mut reduce = |chain: ChainResult| -> Result<()> {

@@ -147,7 +147,7 @@ pub fn run_with_model(
         // shared `coordinator::train_cohort` path, same as the fleet
         // engine's
         let t0 = std::time::Instant::now();
-        let mut agg = Aggregator::new();
+        let mut agg = Aggregator::new(global.shape());
         let loss_sum = crate::coordinator::train_cohort(
             trainer,
             &executor,

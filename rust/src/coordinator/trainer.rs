@@ -23,13 +23,15 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::data::batch::{epoch_batches, eval_chunks, EvalChunks};
 use crate::data::synth::{gen_test_set, Dataset};
 use crate::data::{Partition, Prototypes, SynthSpec};
 use crate::model::params::ModelParams;
+use crate::model::shape::ModelShape;
 use crate::runtime::Engine;
 use crate::util::rng::Pcg64;
 
@@ -106,6 +108,28 @@ impl PjrtTrainer {
         lr: f32,
         seed: u64,
     ) -> Result<Self> {
+        // the synthetic data pipeline is 784-feature / 10-class; a
+        // manifest whose model disagrees on either end cannot train on
+        // it (this restores the cross-check the compile-time shape
+        // constants used to enforce)
+        let in_dim = engine.store().shape.input_dim();
+        if in_dim != crate::data::synth::INPUT_DIM {
+            bail!(
+                "artifact model `{}` expects {in_dim}-feature inputs, \
+                 synthetic data is {}-feature",
+                engine.store().shape.name(),
+                crate::data::synth::INPUT_DIM
+            );
+        }
+        let classes = engine.store().shape.num_classes();
+        if classes != crate::data::synth::NUM_CLASSES {
+            bail!(
+                "artifact model `{}` predicts {classes} classes, \
+                 synthetic labels span {}",
+                engine.store().shape.name(),
+                crate::data::synth::NUM_CLASSES
+            );
+        }
         let protos = Prototypes::build(&spec);
         let test_set = gen_test_set(&protos, &spec);
         let eval_chunk_size = 1000;
@@ -220,7 +244,10 @@ impl Trainer for PjrtTrainer {
 /// Deterministic fake: "training" nudges every parameter toward a target
 /// constant, "accuracy" is a saturating function of how close the global
 /// model is to the target. Captures the monotone-improvement property the
-/// coordinator logic relies on without touching PJRT.
+/// coordinator logic relies on without touching PJRT. The arena layout is
+/// any [`ModelShape`] ([`with_shape`](Self::with_shape)), so mock runs
+/// sweep model size as a scenario axis; [`new`](Self::new) keeps the
+/// paper's `mlp-784`.
 ///
 /// Fully thread-safe (call counting is atomic), so it exercises the
 /// coordinators' parallel path in tests.
@@ -229,17 +256,35 @@ pub struct MockTrainer {
     pub target: f32,
     /// per-epoch movement toward the target (0..1)
     pub rate: f32,
+    shape: Arc<ModelShape>,
     calls: AtomicUsize,
 }
 
 impl MockTrainer {
+    /// Mock fleet over the paper's `mlp-784` layout.
     pub fn new(num_clients: usize, samples_per_client: usize) -> Self {
+        Self::with_shape(num_clients, samples_per_client, &ModelShape::paper())
+    }
+
+    /// Mock fleet over an arbitrary model layout — the model-size
+    /// scenario axis of the fleet presets and benches.
+    pub fn with_shape(
+        num_clients: usize,
+        samples_per_client: usize,
+        shape: &Arc<ModelShape>,
+    ) -> Self {
         MockTrainer {
             data_sizes: vec![samples_per_client; num_clients],
             target: 1.0,
             rate: 0.3,
+            shape: Arc::clone(shape),
             calls: AtomicUsize::new(0),
         }
+    }
+
+    /// The arena layout this mock trains.
+    pub fn shape(&self) -> &Arc<ModelShape> {
+        &self.shape
     }
 
     /// Total `local_train` invocations (across all threads).
@@ -294,7 +339,7 @@ impl Trainer for MockTrainer {
     }
 
     fn init_params(&self) -> Result<ModelParams> {
-        Ok(ModelParams::zeros())
+        Ok(ModelParams::zeros(&self.shape))
     }
 
     fn data_size(&self, client: usize) -> usize {
@@ -355,9 +400,23 @@ mod tests {
     }
 
     #[test]
+    fn mock_trainer_sweeps_model_shapes() {
+        use crate::model::shape::PRESET_NAMES;
+        for name in PRESET_NAMES {
+            let shape = ModelShape::preset(name).unwrap();
+            let mut t = MockTrainer::with_shape(3, 600, &shape);
+            let p0 = t.init_params().unwrap();
+            assert_eq!(p0.as_slice().len(), shape.param_count(), "{name}");
+            let (p1, _) = t.local_train(0, &p0, 1, 0).unwrap();
+            assert_eq!(p1.shape().param_count(), shape.param_count());
+            assert!(t.evaluate(&p1).unwrap() > t.evaluate(&p0).unwrap());
+        }
+    }
+
+    #[test]
     fn call_counting_is_thread_safe() {
         let t = MockTrainer::new(4, 600);
-        let p0 = ModelParams::zeros();
+        let p0 = t.init_params().unwrap();
         std::thread::scope(|s| {
             for _ in 0..4 {
                 s.spawn(|| {

@@ -82,7 +82,7 @@ pub fn run_traditional(
     let mut cfg = traditional_config(c, method, opts.rounds, opts.seed);
     cfg.verbose = opts.verbose;
     let mut sys = bootstrap_case(c, opts.seed);
-    let mut trainer = presets::make_trainer(&opts.backend, c, split, opts.seed)?;
+    let mut trainer = presets::make_trainer(&opts.backend, c, split, opts.seed, None)?;
     let label = format!("{}/{}/{}", c.name, method.label(), split_tag(split));
     let h = traditional::run(&mut sys, trainer.as_mut(), &cfg, &label)?;
     RUN_CACHE.with(|c| c.borrow_mut().insert(key, h.clone()));

@@ -1,7 +1,9 @@
 //! Experiment presets: the paper's Table 1 constants and Table 2 cases
 //! (Pr1–Pr6), plus the shared run-assembly helpers the figure runners use.
 
-use anyhow::Result;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
 
 use crate::cnc::optimize::{CohortStrategy, RbStrategy};
 use crate::cnc::CncSystem;
@@ -9,9 +11,27 @@ use crate::coordinator::traditional::TraditionalConfig;
 use crate::coordinator::trainer::{MockTrainer, PjrtTrainer, Trainer};
 use crate::data::{Partition, Split, SynthSpec};
 use crate::fleet::{FleetConfig, ShardBy};
+use crate::model::shape::ModelShape;
 use crate::netsim::channel::ChannelParams;
 use crate::netsim::compute::PowerProfile;
 use crate::runtime::{ArtifactStore, Engine};
+
+/// Resolve a model-shape preset by name (`mlp-small` / `mlp-784` /
+/// `mlp-wide`) — the mock-backend model-size scenario axis.
+pub fn model_shape(name: &str) -> Result<Arc<ModelShape>> {
+    ModelShape::preset(name)
+}
+
+/// Channel constants with Z(w) charged from an explicit model shape.
+/// Table 1's 0.606 MB covers the paper's model + framing; a model-size
+/// sweep must instead charge each shape's actual raw payload in the
+/// Eq (3)/(4) transmission model, or every shape would simulate
+/// identical delays/energies.
+pub fn channel_for_shape(shape: &ModelShape) -> ChannelParams {
+    let mut ch = ChannelParams::default();
+    ch.payload_bytes = shape.payload_bytes() as f64;
+    ch
+}
 
 /// Table 1 learning constants.
 pub const LR: f32 = 0.01;
@@ -86,6 +106,8 @@ pub struct FleetCase {
     /// staleness bound for async commits (0 = synchronous)
     pub max_staleness: usize,
     pub global_rounds: usize,
+    /// model-shape preset the case trains (`--model` overrides)
+    pub model: &'static str,
 }
 
 impl FleetCase {
@@ -95,8 +117,9 @@ impl FleetCase {
     }
 }
 
-/// The fleet-scale cases: 10⁴ and 10⁵ clients.
-pub const FLEET_CASES: [FleetCase; 2] = [
+/// The fleet-scale cases: 10⁴ and 10⁵ clients on the paper's model,
+/// plus the 10⁴ fleet on the ≈1M-param `mlp-wide` (the model-size axis).
+pub const FLEET_CASES: [FleetCase; 3] = [
     FleetCase {
         name: "Fleet10k",
         num_clients: 10_000,
@@ -104,6 +127,7 @@ pub const FLEET_CASES: [FleetCase; 2] = [
         cohort_size: 160,
         max_staleness: 2,
         global_rounds: 5,
+        model: "mlp-784",
     },
     FleetCase {
         name: "Fleet100k",
@@ -112,6 +136,16 @@ pub const FLEET_CASES: [FleetCase; 2] = [
         cohort_size: 640,
         max_staleness: 3,
         global_rounds: 3,
+        model: "mlp-784",
+    },
+    FleetCase {
+        name: "Fleet10kWide",
+        num_clients: 10_000,
+        shards: 16,
+        cohort_size: 160,
+        max_staleness: 2,
+        global_rounds: 3,
+        model: "mlp-wide",
     },
 ];
 
@@ -121,7 +155,9 @@ pub fn fleet_case(name: &str) -> Result<FleetCase> {
         .find(|c| c.name.eq_ignore_ascii_case(name))
         .copied()
         .ok_or_else(|| {
-            anyhow::anyhow!("unknown fleet case `{name}` (Fleet10k|Fleet100k)")
+            anyhow::anyhow!(
+                "unknown fleet case `{name}` (Fleet10k|Fleet100k|Fleet10kWide)"
+            )
         })
 }
 
@@ -160,11 +196,17 @@ pub fn fleet_config(
     }
 }
 
-/// Bootstrap the CNC stack for a fleet-scale case. Fading sampling is
+/// Bootstrap the CNC stack for a fleet-scale case; `shape` is the
+/// resolved model the run trains, whose payload drives the Eq (3)
+/// transmission model ([`channel_for_shape`]). Fading sampling is
 /// dialled down: at 10⁴–10⁵ clients the Monte-Carlo channel expectation
 /// would dominate wall time without changing the scheduling behaviour.
-pub fn bootstrap_fleet_case(case: &FleetCase, seed: u64) -> CncSystem {
-    let mut channel = ChannelParams::default();
+pub fn bootstrap_fleet_case(
+    case: &FleetCase,
+    shape: &ModelShape,
+    seed: u64,
+) -> CncSystem {
+    let mut channel = channel_for_shape(shape);
     channel.fading_samples = 8;
     CncSystem::bootstrap(
         case.num_clients,
@@ -176,9 +218,21 @@ pub fn bootstrap_fleet_case(case: &FleetCase, seed: u64) -> CncSystem {
     )
 }
 
-/// Build the mock trainer a fleet-scale case runs with.
-pub fn make_fleet_trainer(case: &FleetCase) -> Box<dyn Trainer> {
-    Box::new(MockTrainer::new(case.num_clients, case.samples_per_client()))
+/// Build the mock trainer a fleet-scale case runs with. `shape_override`
+/// replaces the case's model preset (the CLI's `--model` knob).
+pub fn make_fleet_trainer(
+    case: &FleetCase,
+    shape_override: Option<&Arc<ModelShape>>,
+) -> Result<Box<dyn Trainer>> {
+    let shape = match shape_override {
+        Some(s) => Arc::clone(s),
+        None => model_shape(case.model)?,
+    };
+    Ok(Box::new(MockTrainer::with_shape(
+        case.num_clients,
+        case.samples_per_client(),
+        &shape,
+    )))
 }
 
 /// Which method a run uses (the paper's two curves).
@@ -252,18 +306,35 @@ pub enum Backend {
 }
 
 /// Build a trainer for a case. `split` picks IID vs Non-IID.
+/// `shape_override` swaps the mock backend's model layout (the CLI's
+/// `--model` knob); the pjrt backend rejects it — its shape always
+/// comes from the artifact manifest.
 pub fn make_trainer(
     backend: &Backend,
     case: &Case,
     split: Split,
     seed: u64,
+    shape_override: Option<&Arc<ModelShape>>,
 ) -> Result<Box<dyn Trainer>> {
     match backend {
-        Backend::Mock => Ok(Box::new(MockTrainer::new(
-            case.num_clients,
-            case.samples_per_client(),
-        ))),
+        Backend::Mock => {
+            let shape = match shape_override {
+                Some(s) => Arc::clone(s),
+                None => ModelShape::paper(),
+            };
+            Ok(Box::new(MockTrainer::with_shape(
+                case.num_clients,
+                case.samples_per_client(),
+                &shape,
+            )))
+        }
         Backend::Pjrt => {
+            if shape_override.is_some() {
+                bail!(
+                    "a model-shape override applies only to the mock backend \
+                     (the pjrt shape comes from the artifact manifest)"
+                );
+            }
             let store = ArtifactStore::load(&ArtifactStore::default_dir())?;
             let engine = Engine::new(store)?;
             let partition = Partition::new(case.num_clients, split, seed);
@@ -360,14 +431,54 @@ mod tests {
         let big = fleet_case("Fleet100k").unwrap();
         assert_eq!(big.num_clients, 100_000);
         assert!(fleet_case("Fleet1M").is_err());
-        let t = make_fleet_trainer(&c);
+        let t = make_fleet_trainer(&c, None).unwrap();
         assert_eq!(t.data_size(0), 600);
+        // the case's model preset drives the trainer's arena
+        assert_eq!(
+            t.init_params().unwrap().as_slice().len(),
+            model_shape(c.model).unwrap().param_count()
+        );
+        // the wide case and a --model override swap the layout
+        let wide_case = fleet_case("Fleet10kWide").unwrap();
+        assert_eq!(wide_case.model, "mlp-wide");
+        let small = model_shape("mlp-small").unwrap();
+        let t = make_fleet_trainer(&c, Some(&small)).unwrap();
+        assert_eq!(
+            t.init_params().unwrap().as_slice().len(),
+            small.param_count()
+        );
+        assert!(model_shape("mlp-tiny").is_err());
     }
 
     #[test]
     fn mock_backend_builds_without_artifacts() {
         let c = case("Pr1").unwrap();
-        let t = make_trainer(&Backend::Mock, &c, Split::Iid, 0).unwrap();
+        let t = make_trainer(&Backend::Mock, &c, Split::Iid, 0, None).unwrap();
         assert_eq!(t.data_size(0), 600);
+        // a shape override swaps the mock arena...
+        let small = model_shape("mlp-small").unwrap();
+        let t = make_trainer(&Backend::Mock, &c, Split::Iid, 0, Some(&small)).unwrap();
+        assert_eq!(
+            t.init_params().unwrap().as_slice().len(),
+            small.param_count()
+        );
+        // ...and is rejected on the manifest-driven pjrt backend
+        assert!(make_trainer(&Backend::Pjrt, &c, Split::Iid, 0, Some(&small)).is_err());
+    }
+
+    #[test]
+    fn channel_charges_the_shapes_actual_payload() {
+        // the model-size axis must reach Eq (3): a wide model transmits
+        // ~10× the paper preset's bytes, not Table 1's fixed 0.606 MB
+        let paper = model_shape("mlp-784").unwrap();
+        let wide = model_shape("mlp-wide").unwrap();
+        let ch_paper = channel_for_shape(&paper);
+        let ch_wide = channel_for_shape(&wide);
+        assert_eq!(ch_paper.payload_bytes, paper.payload_bytes() as f64);
+        assert_eq!(ch_wide.payload_bytes, wide.payload_bytes() as f64);
+        assert!(ch_wide.payload_bytes > 9.0 * ch_paper.payload_bytes);
+        let case = fleet_case("Fleet10kWide").unwrap();
+        let sys = bootstrap_fleet_case(&case, &wide, 0);
+        assert_eq!(sys.pool.channel.payload_bytes, wide.payload_bytes() as f64);
     }
 }

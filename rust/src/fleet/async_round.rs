@@ -252,7 +252,7 @@ pub fn run_with_model(
                 );
             }
             let t0 = std::time::Instant::now();
-            let mut update = ShardUpdate::new(d.shard, round);
+            let mut update = ShardUpdate::new(global.shape(), d.shard, round);
             let loss_sum = crate::coordinator::train_cohort(
                 trainer,
                 &executor,
@@ -285,7 +285,8 @@ pub fn run_with_model(
         //    update's staleness can only be *smaller* than its period's,
         //    so it always clears the bound.
         let flush = round + 1 == cfg.rounds;
-        let mut root = RootAggregator::new(cfg.max_staleness, cfg.staleness_decay);
+        let mut root =
+            RootAggregator::new(global.shape(), cfg.max_staleness, cfg.staleness_decay);
         let mut loss_sum = 0.0f64;
         let mut collected = 0usize;
         let mut dropouts = 0usize;

@@ -18,10 +18,13 @@
 //! `decay^staleness` (decay 1.0 = no discount; staleness 0 takes the
 //! exact unscaled merge path).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::model::aggregate::Aggregator;
 use crate::model::params::ModelParams;
+use crate::model::shape::ModelShape;
 
 /// One shard's in-flight round contribution: a streaming fold of its
 /// cohort updates, tagged with the global-model round it trained from.
@@ -34,11 +37,12 @@ pub struct ShardUpdate {
 }
 
 impl ShardUpdate {
-    pub fn new(shard: usize, round_tag: usize) -> Self {
+    /// An empty shard fold laid out for `shape` (the global model's).
+    pub fn new(shape: &Arc<ModelShape>, shard: usize, round_tag: usize) -> Self {
         ShardUpdate {
             shard,
             round_tag,
-            agg: Aggregator::new(),
+            agg: Aggregator::new(shape),
         }
     }
 
@@ -71,14 +75,16 @@ pub struct RootAggregator {
 impl RootAggregator {
     /// `decay` is the per-round multiplicative weight discount for stale
     /// updates (must be in (0, 1]); `max_staleness = 0` accepts only
-    /// current-round updates — the synchronous degenerate mode.
-    pub fn new(max_staleness: usize, decay: f64) -> Self {
+    /// current-round updates — the synchronous degenerate mode. The root
+    /// arena is laid out for `shape`; offering a shard update of a
+    /// different layout panics (see `model::aggregate`'s shape contract).
+    pub fn new(shape: &Arc<ModelShape>, max_staleness: usize, decay: f64) -> Self {
         assert!(
             decay > 0.0 && decay <= 1.0,
             "staleness decay {decay} outside (0, 1]"
         );
         RootAggregator {
-            root: Aggregator::new(),
+            root: Aggregator::new(shape),
             max_staleness,
             decay,
             accepted: 0,
@@ -138,8 +144,12 @@ mod tests {
     use super::*;
     use crate::model::aggregate::weighted_average;
 
+    fn shape() -> Arc<ModelShape> {
+        ModelShape::paper()
+    }
+
     fn filled(v: f32) -> ModelParams {
-        let mut m = ModelParams::zeros();
+        let mut m = ModelParams::zeros(&shape());
         for x in m.as_mut_slice() {
             *x = v;
         }
@@ -150,11 +160,11 @@ mod tests {
     fn single_shard_root_is_bitwise_flat_fold() {
         let updates = [(filled(0.25), 100), (filled(-1.5), 600), (filled(3.0), 47)];
         let flat = weighted_average(&updates).unwrap();
-        let mut shard = ShardUpdate::new(0, 4);
+        let mut shard = ShardUpdate::new(&shape(), 0, 4);
         for (m, w) in &updates {
             shard.push(m, *w);
         }
-        let mut root = RootAggregator::new(0, 1.0);
+        let mut root = RootAggregator::new(&shape(), 0, 1.0);
         assert_eq!(root.offer(&shard, 4), Some(0));
         assert_eq!(root.accepted(), 1);
         let hier = root.finish().unwrap();
@@ -166,12 +176,12 @@ mod tests {
         // exact-arithmetic inputs: regrouping cannot round
         let updates = [(filled(2.0), 3), (filled(6.0), 1), (filled(-4.0), 2)];
         let flat = weighted_average(&updates).unwrap();
-        let mut a = ShardUpdate::new(0, 0);
+        let mut a = ShardUpdate::new(&shape(), 0, 0);
         a.push(&updates[0].0, updates[0].1);
         a.push(&updates[1].0, updates[1].1);
-        let mut b = ShardUpdate::new(1, 0);
+        let mut b = ShardUpdate::new(&shape(), 1, 0);
         b.push(&updates[2].0, updates[2].1);
-        let mut root = RootAggregator::new(0, 1.0);
+        let mut root = RootAggregator::new(&shape(), 0, 1.0);
         root.offer(&a, 0);
         root.offer(&b, 0);
         let hier = root.finish().unwrap();
@@ -180,11 +190,11 @@ mod tests {
 
     #[test]
     fn staleness_bound_drops_old_updates() {
-        let mut fresh = ShardUpdate::new(0, 10);
+        let mut fresh = ShardUpdate::new(&shape(), 0, 10);
         fresh.push(&filled(1.0), 10);
-        let mut stale = ShardUpdate::new(1, 7);
+        let mut stale = ShardUpdate::new(&shape(), 1, 7);
         stale.push(&filled(9.0), 10);
-        let mut root = RootAggregator::new(2, 1.0);
+        let mut root = RootAggregator::new(&shape(), 2, 1.0);
         assert_eq!(root.offer(&fresh, 10), Some(0));
         assert_eq!(root.offer(&stale, 10), None); // 3 > 2
         assert_eq!(root.accepted(), 1);
@@ -195,11 +205,11 @@ mod tests {
 
     #[test]
     fn staleness_decay_discounts_weight() {
-        let mut fresh = ShardUpdate::new(0, 5);
+        let mut fresh = ShardUpdate::new(&shape(), 0, 5);
         fresh.push(&filled(0.0), 100);
-        let mut stale = ShardUpdate::new(1, 4);
+        let mut stale = ShardUpdate::new(&shape(), 1, 4);
         stale.push(&filled(4.0), 100);
-        let mut root = RootAggregator::new(2, 0.5);
+        let mut root = RootAggregator::new(&shape(), 2, 0.5);
         assert_eq!(root.offer(&fresh, 5), Some(0));
         assert_eq!(root.offer(&stale, 5), Some(1));
         assert!((root.mean_staleness() - 0.5).abs() < 1e-12);
@@ -210,8 +220,8 @@ mod tests {
 
     #[test]
     fn empty_updates_are_rejected_and_empty_root_errors() {
-        let empty = ShardUpdate::new(0, 0);
-        let mut root = RootAggregator::new(3, 1.0);
+        let empty = ShardUpdate::new(&shape(), 0, 0);
+        let mut root = RootAggregator::new(&shape(), 3, 1.0);
         assert_eq!(root.offer(&empty, 0), None);
         assert!(root.finish().is_err());
     }
@@ -219,6 +229,16 @@ mod tests {
     #[test]
     #[should_panic]
     fn invalid_decay_panics() {
-        RootAggregator::new(1, 0.0);
+        RootAggregator::new(&shape(), 1, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "merging")]
+    fn offer_rejects_mismatched_shard_shape() {
+        let small = ModelShape::preset("mlp-small").unwrap();
+        let mut upd = ShardUpdate::new(&small, 0, 0);
+        upd.push(&ModelParams::zeros(&small), 10);
+        let mut root = RootAggregator::new(&shape(), 0, 1.0);
+        root.offer(&upd, 0);
     }
 }

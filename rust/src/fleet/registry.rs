@@ -108,8 +108,10 @@ impl FleetShards {
             }
         };
         let mut order: Vec<usize> = (0..u).collect();
+        // total_cmp: a NaN delay from a degenerate channel sorts last
+        // (after +inf) instead of panicking the whole fleet build
         order.sort_by(|&a, &b| {
-            key(a).partial_cmp(&key(b)).unwrap().then(a.cmp(&b))
+            key(a).total_cmp(&key(b)).then(a.cmp(&b))
         });
         // contiguous cut into k parts, sizes as equal as possible — the
         // same `util::chunk_even` scheme PowerGroups strata use
@@ -188,8 +190,10 @@ pub fn split_proportional(total: usize, sizes: &[usize]) -> Vec<usize> {
         placed += fl;
         fracs.push((exact - fl as f64, i));
     }
-    // hand the remainder to the largest fractional parts (ties → lower id)
-    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    // hand the remainder to the largest fractional parts (ties → lower
+    // id); total_cmp keeps the sort deterministic even if a fraction
+    // ever degenerates to NaN
+    fracs.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
     let mut rest = total - placed;
     let mut fi = 0usize;
     while rest > 0 {
@@ -393,6 +397,33 @@ mod tests {
             let max_lo = crate::util::stats::max(&w[0].pool.fleet.delays_s);
             let min_hi = crate::util::stats::min(&w[1].pool.fleet.delays_s);
             assert!(max_lo <= min_hi + 1e-12);
+        }
+    }
+
+    #[test]
+    fn nan_delay_does_not_panic_the_fleet_build() {
+        // regression: the strata sort used partial_cmp().unwrap(), so a
+        // single NaN delay from a degenerate channel took down the whole
+        // fleet build
+        let mut p = pool(20, 7);
+        p.fleet.delays_s[3] = f64::NAN;
+        p.fleet.delays_s[11] = f64::NAN;
+        for by in [ShardBy::Power, ShardBy::Locality] {
+            let f = FleetShards::build(&p, 4, by).unwrap();
+            let mut all: Vec<usize> =
+                f.shards.iter().flat_map(|s| s.members.clone()).collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..20).collect::<Vec<_>>());
+        }
+        // NaN keys sort after every finite delay under total_cmp, so both
+        // degenerate clients land in the last power stratum
+        let f = FleetShards::build(&p, 4, ShardBy::Power).unwrap();
+        let last = f.shards.last().unwrap();
+        assert!(last.members.contains(&3) && last.members.contains(&11));
+        // determinism: the same degenerate pool builds the same shards
+        let g = FleetShards::build(&p, 4, ShardBy::Power).unwrap();
+        for (a, b) in f.shards.iter().zip(&g.shards) {
+            assert_eq!(a.members, b.members);
         }
     }
 

@@ -28,6 +28,7 @@ use cnc_fl::exp::presets::{
     self, case, traditional_config, Backend, Method, CASES,
 };
 use cnc_fl::fleet;
+use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
 use cnc_fl::netsim::channel::ChannelParams;
 use cnc_fl::netsim::topology::TopologyGen;
 use cnc_fl::util::cli::Command;
@@ -49,8 +50,9 @@ fn usage() -> String {
      subcommands:\n\
      \x20 table1           print the Table 1 simulation constants\n\
      \x20 table2           print the Table 2 cases (Pr1–Pr6)\n\
+     \x20 shapes           print the built-in model-shape presets\n\
      \x20 run              one traditional-architecture training run\n\
-     \x20 fleet            sharded/async fleet-engine run (Fleet10k/Fleet100k)\n\
+     \x20 fleet            sharded/async fleet-engine run (Fleet10k/Fleet100k/Fleet10kWide)\n\
      \x20 p2p              one peer-to-peer training run\n\
      \x20 fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11\n\
      \x20                  regenerate that figure's CSV series\n\
@@ -104,6 +106,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     match sub.as_str() {
         "table1" => table1(),
         "table2" => table2(),
+        "shapes" => shapes(),
         "run" => run_traditional(rest),
         "fleet" => run_fleet(rest),
         "p2p" => run_p2p(rest),
@@ -143,7 +146,7 @@ fn table1() -> Result<()> {
     );
     println!(
         "  Z(w)          0.606 MB       ({:.3} MB raw f32 payload here)",
-        cnc_fl::model::params::param_count() as f64 * 4.0 / 1e6
+        ModelShape::paper().payload_bytes() as f64 / 1e6
     );
     println!("  batch_size    {}", presets::BATCH_SIZE);
     println!("  lr            {}", presets::LR);
@@ -152,6 +155,30 @@ fn table1() -> Result<()> {
     println!("  local_epoch   [1, 5]");
     println!("  global_epoch  [300, 250]");
     println!("  m (Alg 1)     1/cfraction groups (Table 1's m row is garbled; see DESIGN.md)");
+    Ok(())
+}
+
+fn shapes() -> Result<()> {
+    println!("model-shape presets (mock backend / fleet scenario axis)");
+    println!(
+        "{:<10} {:>30} {:>11} {:>12}",
+        "name", "layout", "params", "raw Z(w) MB"
+    );
+    for name in PRESET_NAMES {
+        let s = ModelShape::preset(name)?;
+        let layout: Vec<String> = s
+            .tensors()
+            .map(|(n, d)| format!("{n}{d:?}"))
+            .collect();
+        println!(
+            "{:<10} {:>30} {:>11} {:>12.3}",
+            name,
+            layout.join(" "),
+            s.param_count(),
+            s.payload_bytes() as f64 / 1e6
+        );
+    }
+    println!("(the pjrt backend's shape always comes from the artifact manifest)");
     Ok(())
 }
 
@@ -182,6 +209,7 @@ fn run_traditional(args: &[String]) -> Result<()> {
         .opt("rounds", None, "override the case's global rounds")
         .opt("backend", Some("pjrt"), "pjrt | mock")
         .opt("split", Some("iid"), "iid | non-iid")
+        .opt("model", None, "model-shape preset (mock backend only; see `shapes`)")
         .opt("seed", Some("0"), "experiment seed")
         .opt("out", Some("results"), "output directory")
         .switch("verbose", "per-round progress on stderr");
@@ -197,10 +225,18 @@ fn run_traditional(args: &[String]) -> Result<()> {
     let seed = m.u64_("seed")?;
     let backend = parse_backend(m.str_("backend")?)?;
 
+    let shape_override = m.get("model").map(ModelShape::preset).transpose()?;
+
     let mut cfg = traditional_config(&c, method, rounds, seed);
     cfg.verbose = m.bool_("verbose")?;
     let mut sys = presets::bootstrap_case(&c, seed);
-    let mut trainer = presets::make_trainer(&backend, &c, split, seed)?;
+    if let Some(shape) = &shape_override {
+        // a swept model must also be charged in Eq (3): replace Table 1's
+        // fixed Z(w) with this shape's actual raw payload
+        sys.pool.channel = presets::channel_for_shape(shape);
+    }
+    let mut trainer =
+        presets::make_trainer(&backend, &c, split, seed, shape_override.as_ref())?;
     let label = format!("{}/{}", c.name, method.label());
     let h = traditional::run(&mut sys, trainer.as_mut(), &cfg, &label)?;
 
@@ -222,10 +258,11 @@ fn run_traditional(args: &[String]) -> Result<()> {
 
 fn run_fleet(args: &[String]) -> Result<()> {
     let cmd = Command::new("fleet", "sharded/async fleet-engine training run (mock backend)")
-        .opt("case", Some("Fleet10k"), "Fleet10k | Fleet100k")
+        .opt("case", Some("Fleet10k"), "Fleet10k | Fleet100k | Fleet10kWide")
         .opt("shards", None, "override the case's shard count")
         .opt("max-staleness", None, "override the staleness bound (0 = sync)")
         .opt("rounds", None, "override the case's global rounds")
+        .opt("model", None, "override the case's model-shape preset (see `shapes`)")
         .opt("decay", Some("0.5"), "staleness weight decay in (0, 1]")
         .opt("threads", Some("0"), "worker threads (0 = auto, 1 = serial)")
         .opt("seed", Some("0"), "experiment seed")
@@ -247,14 +284,28 @@ fn run_fleet(args: &[String]) -> Result<()> {
     cfg.threads = m.usize_("threads")?;
     cfg.verbose = m.bool_("verbose")?;
 
-    let mut sys = presets::bootstrap_fleet_case(&case, cfg.seed);
-    let mut trainer = presets::make_fleet_trainer(&case);
-    let label = format!("{}/s{}k{}", case.name, cfg.shards, cfg.max_staleness);
+    let shape = match m.get("model") {
+        Some(name) => ModelShape::preset(name)?,
+        None => ModelShape::preset(case.model)?,
+    };
+
+    let mut sys = presets::bootstrap_fleet_case(&case, &shape, cfg.seed);
+    let mut trainer = presets::make_fleet_trainer(&case, Some(&shape))?;
+    let label = format!(
+        "{}/{}/s{}k{}",
+        case.name,
+        shape.name(),
+        cfg.shards,
+        cfg.max_staleness
+    );
     let h = fleet::run(&mut sys, trainer.as_mut(), &cfg, &label)?;
 
     let out = PathBuf::from(m.str_("out")?).join(format!(
-        "fleet_{}_{}s_{}k.csv",
-        case.name, cfg.shards, cfg.max_staleness
+        "fleet_{}_{}_{}s_{}k.csv",
+        case.name,
+        shape.name(),
+        cfg.shards,
+        cfg.max_staleness
     ));
     h.write_csv(&out)?;
     let commits: usize = h.rounds.iter().map(|r| r.shards_committed).sum();
@@ -265,10 +316,14 @@ fn run_fleet(args: &[String]) -> Result<()> {
             / h.rounds.len() as f64
     };
     println!(
-        "{label}: {} clients / {} shards, {} rounds, {} shard commits \
-         (mean staleness {stale_mean:.2}), final accuracy {:.4} → {}",
+        "{label}: {} clients / {} shards, model {} ({} params, {:.3} MB), \
+         {} rounds, {} shard commits (mean staleness {stale_mean:.2}), \
+         final accuracy {:.4} → {}",
         case.num_clients,
         cfg.shards,
+        shape.name(),
+        shape.param_count(),
+        shape.payload_bytes() as f64 / 1e6,
         h.rounds.len(),
         commits,
         h.final_accuracy(),

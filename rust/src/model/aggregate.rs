@@ -8,6 +8,15 @@
 //! multiply-accumulate pass per update over the flat arena) and `finish`
 //! normalizes by `Σ wᵢ` in one final pass.
 //!
+//! # Shape contract
+//!
+//! The accumulator is laid out by the [`ModelShape`] it was built with;
+//! `push`/`merge`/`merge_scaled` **panic** on a layout-incompatible
+//! update (checked with the `shape::same` pointer fast path, so the
+//! per-update cost is one pointer compare). Mixing model sizes in one
+//! fold is a programming error, not a recoverable condition — the blob
+//! lengths differ and any "recovery" would aggregate garbage.
+//!
 //! # Determinism contract
 //!
 //! `push` is a floating-point fold, so the result depends on push
@@ -18,11 +27,15 @@
 //! parallel and serial rounds produce bit-identical global models.
 //!
 //! [`weighted_average`] remains as a thin compatibility wrapper for
-//! callers that already hold all updates.
+//! callers that already hold all updates (it adopts the first update's
+//! shape).
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::model::params::ModelParams;
+use crate::model::shape::{self, ModelShape};
 
 /// Streaming data-weighted model average: `w = Σᵢ (nᵢ / Σn) · wᵢ`.
 #[derive(Debug, Clone)]
@@ -35,18 +48,31 @@ pub struct Aggregator {
 }
 
 impl Aggregator {
-    pub fn new() -> Self {
+    /// An empty accumulator laid out for `shape`.
+    pub fn new(shape: &Arc<ModelShape>) -> Self {
         Aggregator {
-            acc: ModelParams::zeros(),
+            acc: ModelParams::zeros(shape),
             weight_sum: 0.0,
             count: 0,
         }
     }
 
+    /// The layout this aggregator folds over.
+    pub fn shape(&self) -> &Arc<ModelShape> {
+        self.acc.shape()
+    }
+
     /// Fold one update in with data-size weight `n_i`. Updates must be
     /// pushed in the caller's canonical (slot) order — see the module
-    /// docs' determinism contract.
+    /// docs' determinism contract. Panics if the update's shape does not
+    /// match the accumulator's.
     pub fn push(&mut self, update: &ModelParams, weight: usize) {
+        assert!(
+            shape::same(self.acc.shape(), update.shape()),
+            "aggregating `{}` update into `{}` accumulator",
+            update.shape().name(),
+            self.acc.shape().name()
+        );
         self.acc.add_scaled(update, weight as f32);
         self.weight_sum += weight as f64;
         self.count += 1;
@@ -64,6 +90,7 @@ impl Aggregator {
 
     /// Fold another aggregator's partial sums into this one — the root
     /// step of the hierarchical (two-level) aggregation in `fleet`.
+    /// Panics when the partials' layouts differ.
     ///
     /// Merging a partial into an **empty** aggregator copies its state
     /// bit-for-bit, so a one-shard hierarchy is exactly the flat fold.
@@ -72,6 +99,12 @@ impl Aggregator {
     /// (e.g. integer-valued updates with integer weights), which is what
     /// `tests/fleet_props.rs` pins down to 0 ULP.
     pub fn merge(&mut self, other: &Aggregator) {
+        assert!(
+            shape::same(self.acc.shape(), other.acc.shape()),
+            "merging `{}` partial into `{}` accumulator",
+            other.acc.shape().name(),
+            self.acc.shape().name()
+        );
         if self.count == 0 {
             // bitwise copy into the existing arena — no fresh allocation
             // for the per-round root of the fleet hierarchy
@@ -95,6 +128,12 @@ impl Aggregator {
             self.merge(other);
             return;
         }
+        assert!(
+            shape::same(self.acc.shape(), other.acc.shape()),
+            "merging `{}` partial into `{}` accumulator",
+            other.acc.shape().name(),
+            self.acc.shape().name()
+        );
         self.acc.add_scaled(&other.acc, factor as f32);
         self.weight_sum += factor * other.weight_sum;
         self.count += other.count;
@@ -115,17 +154,14 @@ impl Aggregator {
     }
 }
 
-impl Default for Aggregator {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 /// Data-weighted FedAvg aggregation over a pre-collected batch —
 /// compatibility wrapper over [`Aggregator`] for callers that already
-/// hold every update.
+/// hold every update. The fold adopts the first update's shape.
 pub fn weighted_average(models: &[(ModelParams, usize)]) -> Result<ModelParams> {
-    let mut agg = Aggregator::new();
+    let Some((first, _)) = models.first() else {
+        bail!("weighted_average of zero models");
+    };
+    let mut agg = Aggregator::new(first.shape());
     for (m, n) in models {
         agg.push(m, *n);
     }
@@ -135,9 +171,14 @@ pub fn weighted_average(models: &[(ModelParams, usize)]) -> Result<ModelParams> 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::shape::ModelShape;
+
+    fn shape() -> Arc<ModelShape> {
+        ModelShape::paper()
+    }
 
     fn filled(v: f32) -> ModelParams {
-        let mut m = ModelParams::zeros();
+        let mut m = ModelParams::zeros(&shape());
         for x in m.as_mut_slice() {
             *x = v;
         }
@@ -172,7 +213,7 @@ mod tests {
     fn empty_aggregation_errors() {
         assert!(weighted_average(&[]).is_err());
         assert!(weighted_average(&[(filled(1.0), 0)]).is_err());
-        assert!(Aggregator::new().finish().is_err());
+        assert!(Aggregator::new(&shape()).finish().is_err());
     }
 
     #[test]
@@ -180,7 +221,7 @@ mod tests {
         // same fold order → bit-identical result
         let updates = [(filled(0.25), 100), (filled(-1.5), 600), (filled(3.0), 47)];
         let batch = weighted_average(&updates).unwrap();
-        let mut agg = Aggregator::new();
+        let mut agg = Aggregator::new(&shape());
         for (m, n) in &updates {
             agg.push(m, *n);
         }
@@ -190,10 +231,10 @@ mod tests {
 
     #[test]
     fn merge_into_empty_is_bitwise_copy() {
-        let mut a = Aggregator::new();
+        let mut a = Aggregator::new(&shape());
         a.push(&filled(0.25), 100);
         a.push(&filled(-1.5), 600);
-        let mut root = Aggregator::new();
+        let mut root = Aggregator::new(&shape());
         root.merge(&a);
         assert_eq!(root.count(), 2);
         assert_eq!(root.total_weight(), a.total_weight());
@@ -207,17 +248,17 @@ mod tests {
         // integer values × integer weights keep every partial sum exact,
         // so the two-level regrouping is bit-identical to the flat fold
         let updates = [(filled(2.0), 3), (filled(5.0), 1), (filled(-4.0), 2), (filled(7.0), 4)];
-        let mut flat = Aggregator::new();
+        let mut flat = Aggregator::new(&shape());
         for (m, w) in &updates {
             flat.push(m, *w);
         }
-        let mut shard_a = Aggregator::new();
+        let mut shard_a = Aggregator::new(&shape());
         shard_a.push(&updates[0].0, updates[0].1);
         shard_a.push(&updates[1].0, updates[1].1);
-        let mut shard_b = Aggregator::new();
+        let mut shard_b = Aggregator::new(&shape());
         shard_b.push(&updates[2].0, updates[2].1);
         shard_b.push(&updates[3].0, updates[3].1);
-        let mut root = Aggregator::new();
+        let mut root = Aggregator::new(&shape());
         root.merge(&shard_a);
         root.merge(&shard_b);
         assert_eq!(flat.finish().unwrap(), root.finish().unwrap());
@@ -225,9 +266,9 @@ mod tests {
 
     #[test]
     fn merge_scaled_discounts_the_partial() {
-        let mut a = Aggregator::new();
+        let mut a = Aggregator::new(&shape());
         a.push(&filled(4.0), 100);
-        let mut root = Aggregator::new();
+        let mut root = Aggregator::new(&shape());
         root.push(&filled(0.0), 100);
         root.merge_scaled(&a, 0.5);
         // (100·0 + 0.5·100·4) / (100 + 50) = 200/150
@@ -238,7 +279,7 @@ mod tests {
 
     #[test]
     fn count_and_total_weight_track_pushes() {
-        let mut agg = Aggregator::new();
+        let mut agg = Aggregator::new(&shape());
         agg.push(&filled(1.0), 10);
         agg.push(&filled(2.0), 30);
         assert_eq!(agg.count(), 2);
@@ -246,5 +287,33 @@ mod tests {
         let m = agg.finish().unwrap();
         // (10·1 + 30·2) / 40 = 1.75
         assert!((m.tensor(3)[0] - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "aggregating")]
+    fn push_rejects_mismatched_shape() {
+        let small = ModelShape::preset("mlp-small").unwrap();
+        let mut agg = Aggregator::new(&shape());
+        agg.push(&ModelParams::zeros(&small), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "merging")]
+    fn merge_rejects_mismatched_shape() {
+        let small = ModelShape::preset("mlp-small").unwrap();
+        let mut a = Aggregator::new(&small);
+        a.push(&ModelParams::zeros(&small), 10);
+        let mut root = Aggregator::new(&shape());
+        root.merge(&a);
+    }
+
+    #[test]
+    #[should_panic(expected = "merging")]
+    fn merge_scaled_rejects_mismatched_shape() {
+        let small = ModelShape::preset("mlp-small").unwrap();
+        let mut a = Aggregator::new(&small);
+        a.push(&ModelParams::zeros(&small), 10);
+        let mut root = Aggregator::new(&shape());
+        root.merge_scaled(&a, 0.25);
     }
 }

@@ -15,12 +15,24 @@
 //! `cnc-fl ablate payload`).
 //!
 //! Codecs operate on the flat-arena `ModelParams` through its per-tensor
-//! views (`tensor(i)` / `tensor_mut(i)`), so quantization grids stay
-//! per-tensor while the storage stays contiguous.
+//! views (`tensor(i)` / `tensor_mut(i)`) and size every payload from the
+//! model's own [`ModelShape`] — byte counts are correct for any model,
+//! not just the paper's MLP. Encoded forms carry the shape so `densify`/
+//! `dequantize8` reconstruct the right arena.
+//!
+//! Non-finite inputs (a diverged client, a degenerate channel) are
+//! handled deterministically: `sparsify_topk` orders by `total_cmp`
+//! (NaN sorts as the largest magnitude — a diverged entry is "big", and
+//! selection never panics), and `quantize8` grids over the **finite**
+//! value range, clamping `±inf` to the grid ends and mapping NaN to the
+//! low end.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::model::params::{ModelParams, NUM_TENSORS, PARAM_COUNT};
+use crate::model::params::ModelParams;
+use crate::model::shape::ModelShape;
 
 /// A codec choice for transmitting model updates.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -36,19 +48,22 @@ pub enum PayloadCodec {
 impl PayloadCodec {
     /// Transmitted bytes for a model under this codec (protocol framing
     /// ignored — same simplification as the paper's constant Z(w)).
+    /// Sizes come from the model's own shape.
     pub fn payload_bytes(&self, params: &ModelParams) -> usize {
-        let n = PARAM_COUNT;
+        let shape = params.shape();
+        let n = shape.param_count();
+        let t = shape.num_tensors();
         match self {
             PayloadCodec::Raw => n * 4,
             // u8 per entry + (min, max) f32 per tensor
-            PayloadCodec::Quant8 => n + NUM_TENSORS * 8,
+            PayloadCodec::Quant8 => n + t * 8,
             // u32 index + f32 value per kept entry
             PayloadCodec::TopK { keep_frac } => {
                 let kept: usize = params
                     .tensors()
-                    .map(|t| keep_count(t.len(), *keep_frac))
+                    .map(|tv| keep_count(tv.len(), *keep_frac))
                     .sum();
-                kept * 8 + NUM_TENSORS * 4
+                kept * 8 + t * 4
             }
         }
     }
@@ -79,31 +94,53 @@ fn keep_count(len: usize, frac: f32) -> usize {
 // 8-bit affine quantization
 // ---------------------------------------------------------------------------
 
-/// Quantized tensors: u8 codes + per-tensor (min, scale).
+/// Quantized tensors: u8 codes + per-tensor (min, scale), tagged with the
+/// arena layout they decode into.
 #[derive(Debug, Clone)]
 pub struct Quantized {
+    pub shape: Arc<ModelShape>,
     pub codes: Vec<Vec<u8>>,
     pub mins: Vec<f32>,
     pub scales: Vec<f32>,
 }
 
 pub fn quantize8(params: &ModelParams) -> Quantized {
-    let mut codes = Vec::with_capacity(NUM_TENSORS);
+    let shape = params.shape();
+    let mut codes = Vec::with_capacity(shape.num_tensors());
     let mut mins = Vec::new();
     let mut scales = Vec::new();
     for t in params.tensors() {
-        let lo = t.iter().copied().fold(f32::INFINITY, f32::min);
-        let hi = t.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        // grid over the finite range only: one ±inf/NaN entry must not
+        // blow the scale to inf and collapse every code to 0
+        let (lo, hi) = t
+            .iter()
+            .copied()
+            .filter(|v| v.is_finite())
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), v| {
+                (lo.min(v), hi.max(v))
+            });
+        // all-non-finite tensor: fall back to the degenerate [0, 0] grid
+        let (lo, hi) = if lo.is_finite() { (lo, hi) } else { (0.0, 0.0) };
         let scale = if hi > lo { (hi - lo) / 255.0 } else { 1.0 };
         codes.push(
             t.iter()
-                .map(|&v| (((v - lo) / scale).round() as i32).clamp(0, 255) as u8)
+                .map(|&v| {
+                    if v.is_finite() {
+                        (((v - lo) / scale).round() as i32).clamp(0, 255) as u8
+                    } else if v == f32::INFINITY {
+                        255
+                    } else {
+                        // -inf and NaN clamp to the grid's low end
+                        0
+                    }
+                })
                 .collect(),
         );
         mins.push(lo);
         scales.push(scale);
     }
     Quantized {
+        shape: Arc::clone(shape),
         codes,
         mins,
         scales,
@@ -111,7 +148,7 @@ pub fn quantize8(params: &ModelParams) -> Quantized {
 }
 
 pub fn dequantize8(q: &Quantized) -> ModelParams {
-    let mut m = ModelParams::zeros();
+    let mut m = ModelParams::zeros(&q.shape);
     for (i, (codes, (&lo, &scale))) in
         q.codes.iter().zip(q.mins.iter().zip(&q.scales)).enumerate()
     {
@@ -126,25 +163,27 @@ pub fn dequantize8(q: &Quantized) -> ModelParams {
 // top-k sparsification
 // ---------------------------------------------------------------------------
 
-/// Sparse update: kept (index, value) pairs per tensor.
+/// Sparse update: kept (index, value) pairs per tensor, tagged with the
+/// arena layout they decode into.
 #[derive(Debug, Clone)]
 pub struct SparseUpdate {
+    pub shape: Arc<ModelShape>,
     pub entries: Vec<Vec<(u32, f32)>>,
 }
 
-/// Keep the `frac` largest-|v| entries of each tensor.
+/// Keep the `frac` largest-|v| entries of each tensor. NaN entries order
+/// as the largest magnitudes (`total_cmp`), so a diverged update
+/// sparsifies deterministically instead of panicking mid-round.
 pub fn sparsify_topk(params: &ModelParams, frac: f32) -> SparseUpdate {
     let entries = params
         .tensors()
         .map(|t| {
             let k = keep_count(t.len(), frac);
             let mut idx: Vec<u32> = (0..t.len() as u32).collect();
-            // partial selection of the top-k by |value|
+            // partial selection of the top-k by |value|; total_cmp is
+            // NaN-safe (positive NaN > inf > finite)
             idx.select_nth_unstable_by(k - 1, |&a, &b| {
-                t[b as usize]
-                    .abs()
-                    .partial_cmp(&t[a as usize].abs())
-                    .unwrap()
+                t[b as usize].abs().total_cmp(&t[a as usize].abs())
             });
             let mut kept: Vec<(u32, f32)> =
                 idx[..k].iter().map(|&i| (i, t[i as usize])).collect();
@@ -152,14 +191,17 @@ pub fn sparsify_topk(params: &ModelParams, frac: f32) -> SparseUpdate {
             kept
         })
         .collect();
-    SparseUpdate { entries }
+    SparseUpdate {
+        shape: Arc::clone(params.shape()),
+        entries,
+    }
 }
 
 impl SparseUpdate {
     /// Reconstruct a dense model: kept entries from the update, zeros
-    /// elsewhere (the arena layout fixes the shapes statically).
+    /// elsewhere (the carried shape fixes the arena layout).
     pub fn densify(&self) -> ModelParams {
-        let mut m = ModelParams::zeros();
+        let mut m = ModelParams::zeros(&self.shape);
         for (i, kept) in self.entries.iter().enumerate() {
             let t = m.tensor_mut(i);
             for &(idx, v) in kept {
@@ -177,15 +219,24 @@ impl SparseUpdate {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::shape::PRESET_NAMES;
     use crate::util::rng::Pcg64;
 
-    fn random_params(seed: u64) -> ModelParams {
-        let mut m = ModelParams::zeros();
+    fn shape() -> Arc<ModelShape> {
+        ModelShape::paper()
+    }
+
+    fn random_params_shaped(shape: &Arc<ModelShape>, seed: u64) -> ModelParams {
+        let mut m = ModelParams::zeros(shape);
         let mut rng = Pcg64::seed_from(seed);
         for v in m.as_mut_slice() {
             *v = rng.normal_scaled(0.0, 0.05) as f32;
         }
         m
+    }
+
+    fn random_params(seed: u64) -> ModelParams {
+        random_params_shaped(&shape(), seed)
     }
 
     #[test]
@@ -195,8 +246,24 @@ mod tests {
         assert_eq!(m, r);
         assert_eq!(
             PayloadCodec::Raw.payload_bytes(&m),
-            crate::model::params::param_count() * 4
+            shape().param_count() * 4
         );
+    }
+
+    #[test]
+    fn payload_bytes_track_the_model_shape() {
+        // the codec byte counts must follow the actual model, not any
+        // one compiled-in constant — check all three presets
+        for name in PRESET_NAMES {
+            let s = ModelShape::preset(name).unwrap();
+            let m = random_params_shaped(&s, 11);
+            let n = s.param_count();
+            let t = s.num_tensors();
+            assert_eq!(PayloadCodec::Raw.payload_bytes(&m), n * 4, "{name}");
+            assert_eq!(PayloadCodec::Quant8.payload_bytes(&m), n + t * 8, "{name}");
+            let topk = PayloadCodec::TopK { keep_frac: 1.0 }.payload_bytes(&m);
+            assert_eq!(topk, n * 8 + t * 4, "{name}");
+        }
     }
 
     #[test]
@@ -224,7 +291,7 @@ mod tests {
 
     #[test]
     fn quant8_constant_tensor_safe() {
-        let mut m = ModelParams::zeros();
+        let mut m = ModelParams::zeros(&shape());
         for v in m.as_mut_slice() {
             *v = 0.7;
         }
@@ -233,8 +300,49 @@ mod tests {
     }
 
     #[test]
+    fn quant8_survives_non_finite_entries() {
+        // regression: one inf used to make scale = inf → every code 0
+        let mut m = random_params(8);
+        m.tensor_mut(0)[3] = f32::INFINITY;
+        m.tensor_mut(0)[5] = f32::NEG_INFINITY;
+        m.tensor_mut(2)[1] = f32::NAN;
+        let q = quantize8(&m);
+        assert!(q.scales.iter().all(|s| s.is_finite()), "{:?}", q.scales);
+        assert!(q.mins.iter().all(|l| l.is_finite()));
+        // codes must still spread over the grid, not collapse to 0
+        assert!(q.codes[0].iter().any(|&c| c > 0 && c < 255));
+        assert_eq!(q.codes[0][3], 255); // +inf → top of grid
+        assert_eq!(q.codes[0][5], 0); // -inf → bottom
+        assert_eq!(q.codes[2][1], 0); // NaN → bottom
+        let d = dequantize8(&q);
+        // finite entries keep the usual half-step bound
+        let t = m.tensor(1);
+        let lo = t.iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = t.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let half_step = (hi - lo) / 255.0 / 2.0 + 1e-6;
+        for (a, b) in t.iter().zip(d.tensor(1)) {
+            assert!((a - b).abs() <= half_step);
+        }
+        // and the reconstruction is finite everywhere
+        assert!(d.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quant8_all_non_finite_tensor_degrades_gracefully() {
+        let mut m = ModelParams::zeros(&shape());
+        for v in m.tensor_mut(3) {
+            *v = f32::NAN;
+        }
+        let q = quantize8(&m);
+        assert_eq!(q.mins[3], 0.0);
+        assert_eq!(q.scales[3], 1.0);
+        let d = dequantize8(&q);
+        assert!(d.tensor(3).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
     fn topk_keeps_largest_magnitudes() {
-        let mut m = ModelParams::zeros();
+        let mut m = ModelParams::zeros(&shape());
         // tensor 3 is b2 with 10 entries — craft known values
         m.tensor_mut(3).copy_from_slice(&[
             0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -2.0, 0.3, 0.01,
@@ -245,6 +353,23 @@ mod tests {
         let d = s.densify();
         assert_eq!(d.tensor(3)[1], -5.0);
         assert_eq!(d.tensor(3)[0], 0.0); // dropped → zero
+    }
+
+    #[test]
+    fn topk_tolerates_nan_entries() {
+        // regression: partial_cmp().unwrap() used to panic on any NaN
+        let mut m = ModelParams::zeros(&shape());
+        m.tensor_mut(3).copy_from_slice(&[
+            0.1, f32::NAN, 0.2, 3.0, -0.05, 0.0, 1.0, -2.0, 0.3, 0.01,
+        ]);
+        let s = sparsify_topk(&m, 0.3); // must not panic
+        let kept: Vec<u32> = s.entries[3].iter().map(|&(i, _)| i).collect();
+        // NaN orders as the largest magnitude, then |3|, |-2|
+        assert_eq!(kept, vec![1, 3, 7]);
+        let d = s.densify();
+        assert!(d.tensor(3)[1].is_nan());
+        // a NaN-free tensor of the same model is unaffected
+        assert!(d.tensor(0).iter().all(|&v| v == 0.0));
     }
 
     #[test]
@@ -288,12 +413,15 @@ mod tests {
 
     #[test]
     fn quantize_dequantize_shapes_preserved() {
-        let m = random_params(7);
-        let q = quantize8(&m);
-        assert_eq!(q.codes.len(), NUM_TENSORS);
-        let d = dequantize8(&q);
-        for (a, b) in m.tensors().zip(d.tensors()) {
-            assert_eq!(a.len(), b.len());
+        for name in PRESET_NAMES {
+            let s = ModelShape::preset(name).unwrap();
+            let m = random_params_shaped(&s, 7);
+            let q = quantize8(&m);
+            assert_eq!(q.codes.len(), s.num_tensors());
+            let d = dequantize8(&q);
+            for (a, b) in m.tensors().zip(d.tensors()) {
+                assert_eq!(a.len(), b.len());
+            }
         }
     }
 }

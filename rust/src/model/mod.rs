@@ -1,11 +1,14 @@
-//! Rust-side model state: the flat-arena parameter store, streaming
-//! FedAvg aggregation, and the update-compression codecs of the paper's
+//! Rust-side model state: the runtime arena-layout descriptor
+//! (`shape`), the flat-arena parameter store, streaming FedAvg
+//! aggregation, and the update-compression codecs of the paper's
 //! related work [4].
 
 pub mod aggregate;
 pub mod compress;
 pub mod params;
+pub mod shape;
 
 pub use aggregate::{weighted_average, Aggregator};
 pub use compress::PayloadCodec;
 pub use params::ModelParams;
+pub use shape::ModelShape;

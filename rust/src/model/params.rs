@@ -1,12 +1,11 @@
-//! Model parameters on the Rust side: a **flat arena** over (w1, b1, w2,
-//! b2) matching `python/compile/model.py`'s PARAM_SHAPES.
+//! Model parameters on the Rust side: a **flat arena** laid out by a
+//! runtime [`ModelShape`] descriptor (see `model::shape`).
 //!
 //! # Arena layout
 //!
 //! All scalars live in one contiguous `Vec<f32>`, tensors concatenated in
-//! `PARAM_SHAPES` order at the compile-time offsets `TENSOR_OFFSETS`
-//! (exclusive prefix sums of the tensor lengths). Per-tensor views are
-//! zero-copy slices of the arena:
+//! the shape's order at its prefix-sum offsets. Per-tensor views are
+//! zero-copy slices of the arena; for the paper's `mlp-784` preset:
 //!
 //! ```text
 //! data: [ w1 (784·128) | b1 (128) | w2 (128·10) | b2 (10) ]
@@ -17,97 +16,75 @@
 //! `from_blob`/`to_blob` are single chunked byte copies (a `memcpy` on
 //! little-endian hosts) instead of per-scalar `from_le_bytes` loops, and
 //! the aggregation hot loops (`add_scaled`, `scale`, `max_abs_diff`) are
-//! one pass over the whole arena, unrolled 8-wide so LLVM auto-vectorizes.
+//! one pass over the whole arena, unrolled 8-wide so LLVM auto-vectorizes
+//! — the dynamic layout adds one `Arc` pointer per model and nothing to
+//! the loops themselves.
 //!
 //! The FedAvg aggregation built on these primitives lives in
 //! [`crate::model::aggregate`].
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
-/// Shapes of the exported model's parameters, in artifact argument order.
-/// Kept in sync with the manifest (validated by `runtime::artifacts`).
-pub const PARAM_SHAPES: [(&str, &[usize]); 4] = [
-    ("w1", &[784, 128]),
-    ("b1", &[128]),
-    ("w2", &[128, 10]),
-    ("b2", &[10]),
-];
-
-/// Number of parameter tensors.
-pub const NUM_TENSORS: usize = PARAM_SHAPES.len();
-
-const fn shape_elems(shape: &[usize]) -> usize {
-    let mut p = 1;
-    let mut i = 0;
-    while i < shape.len() {
-        p *= shape[i];
-        i += 1;
-    }
-    p
-}
-
-/// Exclusive prefix sums of tensor lengths; `TENSOR_OFFSETS[i]..
-/// TENSOR_OFFSETS[i + 1]` is tensor `i`'s arena range, and the final
-/// entry is the total scalar count.
-pub const TENSOR_OFFSETS: [usize; NUM_TENSORS + 1] = {
-    let mut offsets = [0usize; NUM_TENSORS + 1];
-    let mut i = 0;
-    while i < NUM_TENSORS {
-        offsets[i + 1] = offsets[i] + shape_elems(PARAM_SHAPES[i].1);
-        i += 1;
-    }
-    offsets
-};
-
-/// Total scalar count across all tensors (compile-time constant).
-pub const PARAM_COUNT: usize = TENSOR_OFFSETS[NUM_TENSORS];
-
-/// Total scalar count across all tensors.
-pub fn param_count() -> usize {
-    PARAM_COUNT
-}
+use crate::model::shape::{self, ModelShape};
 
 /// The model parameters as one contiguous arena (see module docs).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct ModelParams {
+    shape: Arc<ModelShape>,
     data: Vec<f32>,
 }
 
+impl PartialEq for ModelParams {
+    fn eq(&self, other: &Self) -> bool {
+        shape::same(&self.shape, &other.shape) && self.data == other.data
+    }
+}
+
 impl ModelParams {
-    /// All-zero parameters (aggregation accumulator).
-    pub fn zeros() -> Self {
+    /// All-zero parameters of the given layout (aggregation accumulator).
+    pub fn zeros(shape: &Arc<ModelShape>) -> Self {
         ModelParams {
-            data: vec![0.0; PARAM_COUNT],
+            shape: Arc::clone(shape),
+            data: vec![0.0; shape.param_count()],
         }
     }
 
-    /// Adopt a pre-laid-out arena (must be exactly `PARAM_COUNT` long).
-    pub fn from_vec(data: Vec<f32>) -> Result<Self> {
-        if data.len() != PARAM_COUNT {
+    /// Adopt a pre-laid-out arena (must match the shape's scalar count).
+    pub fn from_vec(shape: &Arc<ModelShape>, data: Vec<f32>) -> Result<Self> {
+        if data.len() != shape.param_count() {
             bail!(
-                "arena has {} scalars, expected {PARAM_COUNT}",
-                data.len()
+                "arena has {} scalars, shape `{}` expects {}",
+                data.len(),
+                shape.name(),
+                shape.param_count()
             );
         }
-        Ok(ModelParams { data })
+        Ok(ModelParams {
+            shape: Arc::clone(shape),
+            data,
+        })
     }
 
     /// Load from the AOT `init_params.f32.bin` blob (little-endian f32,
-    /// tensors concatenated in PARAM_SHAPES order — i.e. exactly the
-    /// arena layout). One byte copy on little-endian hosts.
-    pub fn from_blob(blob: &[u8]) -> Result<Self> {
-        let want = PARAM_COUNT * 4;
+    /// tensors concatenated in shape order — i.e. exactly the arena
+    /// layout). One byte copy on little-endian hosts.
+    pub fn from_blob(shape: &Arc<ModelShape>, blob: &[u8]) -> Result<Self> {
+        let count = shape.param_count();
+        let want = count * 4;
         if blob.len() != want {
             bail!(
-                "init params blob is {} bytes, expected {want}",
-                blob.len()
+                "init params blob is {} bytes, shape `{}` expects {want}",
+                blob.len(),
+                shape.name()
             );
         }
-        let mut data = vec![0.0f32; PARAM_COUNT];
+        let mut data = vec![0.0f32; count];
         #[cfg(target_endian = "little")]
-        // SAFETY: `blob` holds exactly PARAM_COUNT * 4 bytes (checked
-        // above), `data` owns PARAM_COUNT f32s, the ranges cannot
-        // overlap, and every bit pattern is a valid f32.
+        // SAFETY: `blob` holds exactly `count * 4` bytes (checked above),
+        // `data` owns `count` f32s, the ranges cannot overlap, and every
+        // bit pattern is a valid f32.
         unsafe {
             std::ptr::copy_nonoverlapping(
                 blob.as_ptr(),
@@ -119,19 +96,22 @@ impl ModelParams {
         for (dst, src) in data.iter_mut().zip(blob.chunks_exact(4)) {
             *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
         }
-        Ok(ModelParams { data })
+        Ok(ModelParams {
+            shape: Arc::clone(shape),
+            data,
+        })
     }
 
-    pub fn load(path: &std::path::Path) -> Result<Self> {
+    pub fn load(shape: &Arc<ModelShape>, path: &std::path::Path) -> Result<Self> {
         let blob = std::fs::read(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        Self::from_blob(&blob)
+        Self::from_blob(shape, &blob)
     }
 
     /// Serialize back to the blob format (round-trips `from_blob`
     /// byte-identically). One byte copy on little-endian hosts.
     pub fn to_blob(&self) -> Vec<u8> {
-        let want = PARAM_COUNT * 4;
+        let want = self.data.len() * 4;
         #[cfg(target_endian = "little")]
         {
             let mut out = vec![0u8; want];
@@ -156,6 +136,11 @@ impl ModelParams {
         }
     }
 
+    /// The arena layout this model was built with.
+    pub fn shape(&self) -> &Arc<ModelShape> {
+        &self.shape
+    }
+
     /// The whole arena.
     pub fn as_slice(&self) -> &[f32] {
         &self.data
@@ -166,23 +151,25 @@ impl ModelParams {
         &mut self.data
     }
 
-    /// Zero-copy view of tensor `i` (PARAM_SHAPES order).
+    /// Zero-copy view of tensor `i` (shape order).
     pub fn tensor(&self, i: usize) -> &[f32] {
-        &self.data[TENSOR_OFFSETS[i]..TENSOR_OFFSETS[i + 1]]
+        &self.data[self.shape.range(i)]
     }
 
     /// Mutable view of tensor `i`.
     pub fn tensor_mut(&mut self, i: usize) -> &mut [f32] {
-        &mut self.data[TENSOR_OFFSETS[i]..TENSOR_OFFSETS[i + 1]]
+        let r = self.shape.range(i);
+        &mut self.data[r]
     }
 
-    /// Iterate the per-tensor views in PARAM_SHAPES order.
+    /// Iterate the per-tensor views in shape order.
     pub fn tensors(&self) -> impl Iterator<Item = &[f32]> {
-        (0..NUM_TENSORS).map(|i| self.tensor(i))
+        (0..self.shape.num_tensors()).map(|i| self.tensor(i))
     }
 
     /// The payload size Z(w) in bytes if transmitted raw — compare with
-    /// Table 1's 0.606 MB (their model + framing; ours is 0.407 MB raw).
+    /// Table 1's 0.606 MB (their model + framing; the `mlp-784` preset is
+    /// 0.407 MB raw).
     pub fn payload_bytes(&self) -> usize {
         self.data.len() * 4
     }
@@ -237,9 +224,10 @@ impl ModelParams {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::shape::PRESET_NAMES;
 
-    fn filled(v: f32) -> ModelParams {
-        let mut m = ModelParams::zeros();
+    fn filled(shape: &Arc<ModelShape>, v: f32) -> ModelParams {
+        let mut m = ModelParams::zeros(shape);
         for x in m.as_mut_slice() {
             *x = v;
         }
@@ -247,77 +235,94 @@ mod tests {
     }
 
     #[test]
-    fn param_count_matches_python() {
-        assert_eq!(param_count(), 784 * 128 + 128 + 128 * 10 + 10);
-        assert_eq!(PARAM_COUNT, param_count());
+    fn paper_param_count_matches_python() {
+        let s = ModelShape::paper();
+        assert_eq!(s.param_count(), 784 * 128 + 128 + 128 * 10 + 10);
+        assert_eq!(ModelParams::zeros(&s).as_slice().len(), s.param_count());
     }
 
     #[test]
-    fn offsets_are_prefix_sums_of_shapes() {
-        assert_eq!(TENSOR_OFFSETS[0], 0);
-        assert_eq!(TENSOR_OFFSETS[1], 784 * 128);
-        assert_eq!(TENSOR_OFFSETS[2], 784 * 128 + 128);
-        assert_eq!(TENSOR_OFFSETS[3], 784 * 128 + 128 + 128 * 10);
-        assert_eq!(TENSOR_OFFSETS[4], PARAM_COUNT);
-        let m = ModelParams::zeros();
-        for (i, (name, shape)) in PARAM_SHAPES.iter().enumerate() {
-            let want: usize = shape.iter().product();
-            assert_eq!(m.tensor(i).len(), want, "tensor {name}");
+    fn tensor_views_match_shape_for_every_preset() {
+        for name in PRESET_NAMES {
+            let s = ModelShape::preset(name).unwrap();
+            let m = ModelParams::zeros(&s);
+            for i in 0..s.num_tensors() {
+                let want: usize = s.dims(i).iter().product();
+                assert_eq!(m.tensor(i).len(), want, "{name} tensor {i}");
+            }
+            assert_eq!(m.tensors().count(), s.num_tensors());
         }
     }
 
     #[test]
     fn tensor_views_alias_the_arena() {
-        let mut m = ModelParams::zeros();
+        let s = ModelShape::paper();
+        let mut m = ModelParams::zeros(&s);
         m.tensor_mut(2)[5] = 7.5;
-        assert_eq!(m.as_slice()[TENSOR_OFFSETS[2] + 5], 7.5);
-        assert_eq!(m.tensors().count(), NUM_TENSORS);
+        assert_eq!(m.as_slice()[s.offset(2) + 5], 7.5);
     }
 
     #[test]
-    fn blob_round_trip() {
-        let mut m = ModelParams::zeros();
-        // make it non-trivial
-        let mut v = 0.0f32;
-        for x in m.as_mut_slice() {
-            *x = v;
-            v += 0.001;
+    fn blob_round_trip_for_every_preset() {
+        for name in PRESET_NAMES {
+            let s = ModelShape::preset(name).unwrap();
+            let mut m = ModelParams::zeros(&s);
+            // make it non-trivial
+            let mut v = 0.0f32;
+            for x in m.as_mut_slice() {
+                *x = v;
+                v += 0.001;
+            }
+            let blob = m.to_blob();
+            assert_eq!(blob.len(), s.param_count() * 4);
+            let m2 = ModelParams::from_blob(&s, &blob).unwrap();
+            assert_eq!(m, m2);
+            // byte-identical the other way too
+            assert_eq!(m2.to_blob(), blob);
         }
-        let blob = m.to_blob();
-        assert_eq!(blob.len(), param_count() * 4);
-        let m2 = ModelParams::from_blob(&blob).unwrap();
-        assert_eq!(m, m2);
-        // byte-identical the other way too
-        assert_eq!(m2.to_blob(), blob);
     }
 
     #[test]
     fn blob_is_little_endian_per_scalar() {
-        let mut m = ModelParams::zeros();
+        let s = ModelShape::paper();
+        let mut m = ModelParams::zeros(&s);
         m.as_mut_slice()[0] = 1.5f32;
         let blob = m.to_blob();
         assert_eq!(&blob[0..4], &1.5f32.to_le_bytes());
     }
 
     #[test]
-    fn from_blob_rejects_bad_size() {
-        assert!(ModelParams::from_blob(&[0u8; 16]).is_err());
-        assert!(ModelParams::from_vec(vec![0.0; 3]).is_err());
+    fn from_blob_rejects_wrong_size_for_the_shape() {
+        let s = ModelShape::paper();
+        assert!(ModelParams::from_blob(&s, &[0u8; 16]).is_err());
+        assert!(ModelParams::from_vec(&s, vec![0.0; 3]).is_err());
+        // a small model's blob must not load as the paper model
+        let small = ModelShape::preset("mlp-small").unwrap();
+        let blob = ModelParams::zeros(&small).to_blob();
+        assert!(ModelParams::from_blob(&s, &blob).is_err());
+        assert!(ModelParams::from_blob(&small, &blob).is_ok());
     }
 
     #[test]
-    fn payload_matches_param_count() {
-        assert_eq!(filled(0.0).payload_bytes(), param_count() * 4);
+    fn payload_tracks_the_shape() {
+        let paper = ModelShape::paper();
+        assert_eq!(
+            filled(&paper, 0.0).payload_bytes(),
+            paper.param_count() * 4
+        );
         // ballpark of the paper's Z(w) = 0.606 MB
-        let mb = filled(0.0).payload_bytes() as f64 / 1e6;
+        let mb = filled(&paper, 0.0).payload_bytes() as f64 / 1e6;
         assert!((0.2..0.7).contains(&mb), "{mb} MB");
+        let wide = ModelShape::preset("mlp-wide").unwrap();
+        assert!(filled(&wide, 0.0).payload_bytes() > 3_600_000);
     }
 
     #[test]
     fn add_scaled_accumulates() {
-        let mut acc = ModelParams::zeros();
-        acc.add_scaled(&filled(2.0), 0.5);
-        acc.add_scaled(&filled(4.0), 0.25);
+        let s = ModelShape::paper();
+        let mut acc = ModelParams::zeros(&s);
+        acc.add_scaled(&filled(&s, 2.0), 0.5);
+        acc.add_scaled(&filled(&s, 4.0), 0.25);
         assert!((acc.tensor(1)[7] - 2.0).abs() < 1e-6);
         // the unroll remainder (arena length is not a multiple of 8) is
         // covered too
@@ -327,19 +332,28 @@ mod tests {
 
     #[test]
     fn scale_hits_every_scalar() {
-        let mut m = filled(2.0);
+        let s = ModelShape::preset("mlp-small").unwrap();
+        let mut m = filled(&s, 2.0);
         m.scale(0.25);
         assert!(m.as_slice().iter().all(|&v| (v - 0.5).abs() < 1e-7));
     }
 
     #[test]
     fn max_abs_diff_covers_remainder_lanes() {
-        let a = ModelParams::zeros();
-        let mut b = ModelParams::zeros();
+        let s = ModelShape::paper();
+        let a = ModelParams::zeros(&s);
+        let mut b = ModelParams::zeros(&s);
         // place the max difference in the final (remainder) scalar
         *b.as_mut_slice().last_mut().unwrap() = -3.0;
         assert_eq!(a.max_abs_diff(&b), 3.0);
         b.as_mut_slice()[1] = 9.0; // now in the unrolled body
         assert_eq!(a.max_abs_diff(&b), 9.0);
+    }
+
+    #[test]
+    fn equality_ignores_shape_name_but_not_layout() {
+        let a = filled(&ModelShape::mlp("x", 784, 128, 10), 1.0);
+        let b = filled(&ModelShape::paper(), 1.0);
+        assert_eq!(a, b);
     }
 }

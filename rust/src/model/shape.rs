@@ -1,0 +1,252 @@
+//! Runtime model-shape descriptor: the arena layout as **data**, not
+//! compile-time constants.
+//!
+//! The CNC decision layer is model-agnostic — Eq (3)/(4) delays and
+//! Table 1's Z(w) depend only on payload size — so the arena layout
+//! (tensor names, shapes, prefix-sum offsets, total scalar count) lives
+//! in a [`ModelShape`] built once per workload and shared via `Arc`.
+//! One binary can then drive several model sizes: the artifact manifest
+//! is the source of truth on the PJRT path (`runtime::artifacts`), and
+//! the [`preset`] table (`mlp-small` / `mlp-784` / `mlp-wide`) covers the
+//! mock-backend scenario sweeps.
+//!
+//! Every hot-path structure (`ModelParams`, `Aggregator`) carries the
+//! `Arc` and checks compatibility with a pointer-equality fast path
+//! ([`same`]), so the per-update cost of the dynamic layout is one
+//! pointer compare — the arena loops themselves are untouched.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// Names of the built-in shape presets, in size order.
+pub const PRESET_NAMES: [&str; 3] = ["mlp-small", "mlp-784", "mlp-wide"];
+
+/// The arena layout of one model: named tensors in artifact argument
+/// order plus the exclusive prefix sums of their lengths.
+#[derive(Debug, Clone)]
+pub struct ModelShape {
+    name: String,
+    tensors: Vec<(String, Vec<usize>)>,
+    /// `offsets[i]..offsets[i + 1]` is tensor `i`'s arena range; the
+    /// final entry is the total scalar count.
+    offsets: Vec<usize>,
+}
+
+/// Layout compatibility with a pointer fast path: shapes threaded off
+/// the same `Arc` never pay the deep compare.
+pub fn same(a: &Arc<ModelShape>, b: &Arc<ModelShape>) -> bool {
+    Arc::ptr_eq(a, b) || a == b
+}
+
+impl PartialEq for ModelShape {
+    /// Two shapes are interchangeable when their layouts agree — the
+    /// display name does not affect the arena.
+    fn eq(&self, other: &Self) -> bool {
+        self.tensors == other.tensors
+    }
+}
+
+impl Eq for ModelShape {}
+
+impl ModelShape {
+    /// Build a shape from `(name, dims)` tensors in arena order.
+    /// Zero-size tensors are rejected (an empty dim list is a scalar).
+    pub fn new(
+        name: impl Into<String>,
+        tensors: Vec<(String, Vec<usize>)>,
+    ) -> Result<Arc<Self>> {
+        let name = name.into();
+        if tensors.is_empty() {
+            bail!("model shape `{name}` has no tensors");
+        }
+        let mut offsets = Vec::with_capacity(tensors.len() + 1);
+        offsets.push(0usize);
+        for (tname, dims) in &tensors {
+            let elems: usize = dims.iter().product();
+            if elems == 0 {
+                bail!("tensor `{tname}` of shape `{name}` has a zero dim: {dims:?}");
+            }
+            offsets.push(offsets.last().unwrap() + elems);
+        }
+        Ok(Arc::new(ModelShape {
+            name,
+            tensors,
+            offsets,
+        }))
+    }
+
+    /// A two-layer `input → hidden → classes` MLP in the artifact layout
+    /// `(w1, b1, w2, b2)` — the family every built-in preset comes from.
+    pub fn mlp(
+        name: impl Into<String>,
+        input: usize,
+        hidden: usize,
+        classes: usize,
+    ) -> Arc<Self> {
+        Self::new(
+            name,
+            vec![
+                ("w1".to_string(), vec![input, hidden]),
+                ("b1".to_string(), vec![hidden]),
+                ("w2".to_string(), vec![hidden, classes]),
+                ("b2".to_string(), vec![classes]),
+            ],
+        )
+        .expect("mlp dims are nonzero")
+    }
+
+    /// The paper's 784→128→10 MLP (101 770 params ≈ 0.407 MB raw) —
+    /// the layout `python/compile/model.py` exports.
+    pub fn paper() -> Arc<Self> {
+        Self::mlp("mlp-784", 784, 128, 10)
+    }
+
+    /// Resolve a built-in preset by name (see [`PRESET_NAMES`]):
+    /// `mlp-small` ≈ 25k params, `mlp-784` the paper's ≈ 102k,
+    /// `mlp-wide` ≈ 1M.
+    pub fn preset(name: &str) -> Result<Arc<Self>> {
+        match name {
+            "mlp-small" => Ok(Self::mlp("mlp-small", 784, 32, 10)),
+            "mlp-784" => Ok(Self::paper()),
+            "mlp-wide" => Ok(Self::mlp("mlp-wide", 784, 1256, 10)),
+            other => bail!("unknown model shape `{other}` ({PRESET_NAMES:?})"),
+        }
+    }
+
+    /// The shape's display name (preset name or manifest-derived).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// Total scalar count across all tensors.
+    pub fn param_count(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Raw-f32 payload size Z(w) in bytes.
+    pub fn payload_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    /// Tensor `i`'s arena offset; `offset(num_tensors())` is the total
+    /// scalar count.
+    pub fn offset(&self, i: usize) -> usize {
+        self.offsets[i]
+    }
+
+    /// Tensor `i`'s arena range.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        self.offsets[i]..self.offsets[i + 1]
+    }
+
+    pub fn tensor_name(&self, i: usize) -> &str {
+        &self.tensors[i].0
+    }
+
+    pub fn dims(&self, i: usize) -> &[usize] {
+        &self.tensors[i].1
+    }
+
+    /// Scalar count of tensor `i`.
+    pub fn elements(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// Iterate `(name, dims)` in arena order.
+    pub fn tensors(&self) -> impl Iterator<Item = (&str, &[usize])> {
+        self.tensors.iter().map(|(n, d)| (n.as_str(), d.as_slice()))
+    }
+
+    /// The model's input feature dimension (first dim of the first
+    /// tensor) — what the runtime sizes data batches with.
+    pub fn input_dim(&self) -> usize {
+        self.tensors[0].1.first().copied().unwrap_or(1)
+    }
+
+    /// The model's output class count (last dim of the last tensor).
+    pub fn num_classes(&self) -> usize {
+        self.tensors
+            .last()
+            .and_then(|(_, d)| d.last())
+            .copied()
+            .unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape_matches_python() {
+        let s = ModelShape::paper();
+        assert_eq!(s.param_count(), 784 * 128 + 128 + 128 * 10 + 10);
+        assert_eq!(s.num_tensors(), 4);
+        assert_eq!(s.tensor_name(0), "w1");
+        assert_eq!(s.dims(0), &[784, 128]);
+        assert_eq!(s.input_dim(), 784);
+        assert_eq!(s.num_classes(), 10);
+        assert_eq!(s.payload_bytes(), 101_770 * 4);
+    }
+
+    #[test]
+    fn offsets_are_exclusive_prefix_sums() {
+        let s = ModelShape::paper();
+        assert_eq!(s.offset(0), 0);
+        assert_eq!(s.offset(1), 784 * 128);
+        assert_eq!(s.offset(2), 784 * 128 + 128);
+        assert_eq!(s.offset(3), 784 * 128 + 128 + 128 * 10);
+        assert_eq!(s.offset(4), s.param_count());
+        for i in 0..s.num_tensors() {
+            assert_eq!(s.range(i).len(), s.elements(i));
+            let want: usize = s.dims(i).iter().product();
+            assert_eq!(s.elements(i), want);
+        }
+    }
+
+    #[test]
+    fn presets_hit_their_size_classes() {
+        let small = ModelShape::preset("mlp-small").unwrap();
+        let paper = ModelShape::preset("mlp-784").unwrap();
+        let wide = ModelShape::preset("mlp-wide").unwrap();
+        assert!((20_000..40_000).contains(&small.param_count()), "{}", small.param_count());
+        assert_eq!(paper.param_count(), 101_770);
+        assert!((900_000..1_100_000).contains(&wide.param_count()), "{}", wide.param_count());
+        assert!(ModelShape::preset("resnet-50").is_err());
+        for name in PRESET_NAMES {
+            assert_eq!(ModelShape::preset(name).unwrap().name(), name);
+        }
+    }
+
+    #[test]
+    fn equality_is_layout_not_name() {
+        let a = ModelShape::mlp("a", 784, 128, 10);
+        let b = ModelShape::paper();
+        assert_eq!(*a, *b);
+        assert!(same(&a, &b));
+        let c = ModelShape::mlp("a", 784, 32, 10);
+        assert_ne!(*a, *c);
+        assert!(!same(&a, &c));
+        // ptr fast path
+        let d = Arc::clone(&a);
+        assert!(same(&a, &d));
+    }
+
+    #[test]
+    fn degenerate_shapes_rejected() {
+        assert!(ModelShape::new("empty", vec![]).is_err());
+        assert!(ModelShape::new(
+            "zero",
+            vec![("w".to_string(), vec![4, 0])]
+        )
+        .is_err());
+        // a scalar tensor (empty dims) is a valid 1-element tensor
+        let s = ModelShape::new("scalar", vec![("t".to_string(), vec![])]).unwrap();
+        assert_eq!(s.param_count(), 1);
+    }
+}

@@ -9,10 +9,12 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::model::params::{ModelParams, PARAM_SHAPES};
+use crate::model::params::ModelParams;
+use crate::model::shape::ModelShape;
 use crate::util::json::Json;
 
 /// Supported element types of artifact tensors.
@@ -63,13 +65,17 @@ pub struct ArtifactMeta {
     pub outputs: Vec<TensorMeta>,
 }
 
-/// The loaded artifact store.
+/// The loaded artifact store. The manifest is the **source of truth**
+/// for the model's arena layout: `shape` is parsed from its
+/// `param_names`/`param_shapes`, so one binary drives whatever model the
+/// Python side exported — no compile-time shape to drift from.
 #[derive(Debug, Clone)]
 pub struct ArtifactStore {
     pub dir: PathBuf,
     pub artifacts: BTreeMap<String, ArtifactMeta>,
     pub batch_size: usize,
-    pub param_count: usize,
+    /// the manifest-declared arena layout (drives every `ModelParams`)
+    pub shape: Arc<ModelShape>,
     init_params_file: PathBuf,
 }
 
@@ -82,17 +88,33 @@ impl ArtifactStore {
         let batch_size = model.req("batch_size")?.as_usize()?;
         let param_count = model.req("param_count")?.as_usize()?;
 
-        // cross-check the Python model's parameter shapes against ours
+        // the manifest's parameter list IS the arena layout
         let shapes = model.req("param_shapes")?.as_arr()?;
-        if shapes.len() != PARAM_SHAPES.len() {
-            bail!("manifest has {} param tensors, crate expects {}",
-                shapes.len(), PARAM_SHAPES.len());
+        let names = model.req("param_names")?.as_arr()?;
+        if names.len() != shapes.len() {
+            bail!(
+                "manifest declares {} param names but {} shapes",
+                names.len(),
+                shapes.len()
+            );
         }
-        for (j, (name, want)) in shapes.iter().zip(PARAM_SHAPES) {
-            let got = j.as_usize_vec()?;
-            if got != want {
-                bail!("param `{name}` shape mismatch: manifest {got:?}, crate {want:?}");
-            }
+        let tensors = names
+            .iter()
+            .zip(shapes)
+            .map(|(n, s)| Ok((n.as_str()?.to_string(), s.as_usize_vec()?)))
+            .collect::<Result<Vec<_>>>()?;
+        let shape = ModelShape::new(
+            format!("manifest:{}", dir.display()),
+            tensors,
+        )?;
+        // internal-consistency check: the declared count must match the
+        // declared shapes, or the init blob cannot be trusted
+        if shape.param_count() != param_count {
+            bail!(
+                "manifest param_count {param_count} disagrees with its \
+                 param_shapes total {}",
+                shape.param_count()
+            );
         }
 
         let mut artifacts = BTreeMap::new();
@@ -134,7 +156,7 @@ impl ArtifactStore {
             dir: dir.to_path_buf(),
             artifacts,
             batch_size,
-            param_count,
+            shape,
             init_params_file,
         })
     }
@@ -157,9 +179,15 @@ impl ArtifactStore {
         self.artifacts.contains_key(name)
     }
 
-    /// The deterministic initial global model (seed 0 on the Python side).
+    /// Total scalar parameter count of the manifest's model.
+    pub fn param_count(&self) -> usize {
+        self.shape.param_count()
+    }
+
+    /// The deterministic initial global model (seed 0 on the Python side),
+    /// laid out by the manifest's shape.
     pub fn init_params(&self) -> Result<ModelParams> {
-        ModelParams::load(&self.init_params_file)
+        ModelParams::load(&self.shape, &self.init_params_file)
     }
 
     /// The `train_epoch_{n}` variant for a per-client dataset size, if
@@ -194,7 +222,11 @@ mod tests {
         };
         let store = ArtifactStore::load(&dir).unwrap();
         assert_eq!(store.batch_size, 10);
-        assert_eq!(store.param_count, crate::model::params::param_count());
+        // the exported model is the paper's MLP — the manifest-parsed
+        // shape must agree with the `mlp-784` preset layout
+        assert_eq!(*store.shape, *ModelShape::paper());
+        assert_eq!(store.param_count(), 101_770);
+        assert_eq!(store.shape.input_dim(), 784);
         for name in ["train_step", "train_epoch_600", "eval_1000"] {
             assert!(store.has(name), "{name} missing");
         }

@@ -21,7 +21,8 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::model::params::{ModelParams, PARAM_SHAPES};
+use crate::model::params::ModelParams;
+use crate::model::shape::ModelShape;
 use crate::runtime::artifacts::{ArtifactStore, DType, TensorMeta};
 
 /// A typed host-side tensor heading into PJRT.
@@ -248,14 +249,14 @@ impl Engine {
         lr: f32,
     ) -> Result<(ModelParams, f32)> {
         let b = self.store.batch_size;
-        let xs = [nb, b, 784];
+        let xs = [nb, b, self.store.shape.input_dim()];
         let ys = [nb, b];
         let mut inputs = param_inputs(params);
         inputs.push(HostTensor::F32(x, &xs));
         inputs.push(HostTensor::I32(y, &ys));
         inputs.push(HostTensor::ScalarF32(lr));
         let outs = self.exec(artifact, &inputs)?;
-        unpack_params_and_scalar(outs)
+        unpack_params_and_scalar(&self.store.shape, outs)
     }
 
     /// One SGD step on a single batch.
@@ -267,14 +268,14 @@ impl Engine {
         lr: f32,
     ) -> Result<(ModelParams, f32)> {
         let b = self.store.batch_size;
-        let xs = [b, 784];
+        let xs = [b, self.store.shape.input_dim()];
         let ys = [b];
         let mut inputs = param_inputs(params);
         inputs.push(HostTensor::F32(x, &xs));
         inputs.push(HostTensor::I32(y, &ys));
         inputs.push(HostTensor::ScalarF32(lr));
         let outs = self.exec("train_step", &inputs)?;
-        unpack_params_and_scalar(outs)
+        unpack_params_and_scalar(&self.store.shape, outs)
     }
 
     /// Correct-prediction count on one eval chunk.
@@ -286,7 +287,7 @@ impl Engine {
         y: &[i32],
         chunk: usize,
     ) -> Result<i32> {
-        let xs = [chunk, 784];
+        let xs = [chunk, self.store.shape.input_dim()];
         let ys = [chunk];
         let mut inputs = param_inputs(params);
         inputs.push(HostTensor::F32(x, &xs));
@@ -307,7 +308,7 @@ impl Engine {
         x: &[f32],
         chunk: usize,
     ) -> Result<Vec<i32>> {
-        let xs = [chunk, 784];
+        let xs = [chunk, self.store.shape.input_dim()];
         let mut inputs = param_inputs(params);
         inputs.push(HostTensor::F32(x, &xs));
         let outs = self.exec(artifact, &inputs)?;
@@ -316,29 +317,36 @@ impl Engine {
 }
 
 fn param_inputs(params: &ModelParams) -> Vec<HostTensor<'_>> {
-    // zero-copy views straight out of the flat arena, one per tensor
-    (0..PARAM_SHAPES.len())
-        .map(|i| HostTensor::F32(params.tensor(i), PARAM_SHAPES[i].1))
+    // zero-copy views straight out of the flat arena, one per tensor;
+    // the dims slices live in the model's own Arc<ModelShape>
+    let shape = params.shape();
+    (0..shape.num_tensors())
+        .map(|i| HostTensor::F32(params.tensor(i), shape.dims(i)))
         .collect()
 }
 
-fn unpack_params_and_scalar(outs: Vec<xla::Literal>) -> Result<(ModelParams, f32)> {
-    if outs.len() != PARAM_SHAPES.len() + 1 {
-        bail!("expected {} outputs, got {}", PARAM_SHAPES.len() + 1, outs.len());
+fn unpack_params_and_scalar(
+    shape: &std::sync::Arc<ModelShape>,
+    outs: Vec<xla::Literal>,
+) -> Result<(ModelParams, f32)> {
+    let n = shape.num_tensors();
+    if outs.len() != n + 1 {
+        bail!("expected {} outputs, got {}", n + 1, outs.len());
     }
     // copy each output literal into its arena segment
-    let mut params = ModelParams::zeros();
-    for (i, (lit, (name, shape))) in outs.iter().zip(PARAM_SHAPES).enumerate() {
+    let mut params = ModelParams::zeros(shape);
+    for (i, lit) in outs.iter().take(n).enumerate() {
+        let name = shape.tensor_name(i);
         let v = lit
             .to_vec::<f32>()
             .with_context(|| format!("reading output `{name}`"))?;
-        let want: usize = shape.iter().product();
+        let want = shape.elements(i);
         if v.len() != want {
             bail!("output `{name}` has {} elements, expected {want}", v.len());
         }
         params.tensor_mut(i).copy_from_slice(&v);
     }
-    let loss = outs[PARAM_SHAPES.len()].get_first_element::<f32>()?;
+    let loss = outs[n].get_first_element::<f32>()?;
     Ok((params, loss))
 }
 

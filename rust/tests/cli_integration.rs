@@ -141,14 +141,59 @@ fn fleet10k_subcommand_completes_five_sharded_rounds() {
     ]);
     assert!(ok, "stdout={stdout} stderr={stderr}");
     assert!(stdout.contains("10000 clients / 16 shards"), "{stdout}");
+    assert!(stdout.contains("model mlp-784 (101770 params"), "{stdout}");
     assert!(stdout.contains("final accuracy"));
-    let csv = std::fs::read_to_string(out.join("fleet_Fleet10k_16s_2k.csv")).unwrap();
+    let csv =
+        std::fs::read_to_string(out.join("fleet_Fleet10k_mlp-784_16s_2k.csv"))
+            .unwrap();
     assert!(csv.starts_with("round,accuracy"));
     let header = csv.lines().next().unwrap();
     assert!(header.contains("shards_committed"));
     assert!(header.contains("staleness_mean"));
     assert_eq!(csv.lines().count(), 6); // header + 5 rounds
     let _ = std::fs::remove_dir_all(out);
+}
+
+#[test]
+fn fleet_model_override_swaps_the_arena_without_recompiling() {
+    // the dynamic-shape axis end-to-end: the same binary sweeps three
+    // model sizes through full sharded rounds via `--model`
+    let out = tmpdir("fleet-shapes");
+    for (model, params) in
+        [("mlp-small", "25450"), ("mlp-784", "101770"), ("mlp-wide", "998530")]
+    {
+        let (ok, stdout, stderr) = run(&[
+            "fleet",
+            "--case",
+            "Fleet10k",
+            "--rounds",
+            "2",
+            "--model",
+            model,
+            "--out",
+            out.to_str().unwrap(),
+        ]);
+        assert!(ok, "model={model} stdout={stdout} stderr={stderr}");
+        assert!(
+            stdout.contains(&format!("model {model} ({params} params")),
+            "{model}: {stdout}"
+        );
+        assert!(
+            out.join(format!("fleet_Fleet10k_{model}_16s_2k.csv")).exists(),
+            "{model}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(out);
+}
+
+#[test]
+fn shapes_subcommand_lists_presets() {
+    let (ok, stdout, stderr) = run(&["shapes"]);
+    assert!(ok, "stderr={stderr}");
+    for name in ["mlp-small", "mlp-784", "mlp-wide"] {
+        assert!(stdout.contains(name), "{stdout}");
+    }
+    assert!(stdout.contains("101770"), "{stdout}");
 }
 
 #[test]

@@ -11,6 +11,7 @@ use cnc_fl::fleet::{self, FleetConfig, FleetShards, RootAggregator, ShardBy, Sha
 use cnc_fl::metrics::RunHistory;
 use cnc_fl::model::aggregate::weighted_average;
 use cnc_fl::model::params::ModelParams;
+use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
 use cnc_fl::netsim::channel::ChannelParams;
 use cnc_fl::netsim::compute::PowerProfile;
 use cnc_fl::util::propcheck::{check, gen_usize, prop_assert, GenPair};
@@ -159,7 +160,7 @@ fn integer_params(seed: u64) -> ModelParams {
     // small integer values: every partial sum stays exactly representable
     // in f32 (well under 2^24), so regrouping cannot round
     let mut rng = Pcg64::seed_from(seed);
-    let mut m = ModelParams::zeros();
+    let mut m = ModelParams::zeros(&ModelShape::paper());
     for v in m.as_mut_slice() {
         *v = rng.range_i64(-8, 8) as f32;
     }
@@ -185,8 +186,9 @@ fn hierarchical_fold_is_0ulp_equal_to_flat_on_integer_weights() {
 
             // random contiguous two-level grouping of the same updates in
             // the same order
+            let shape = ModelShape::paper();
             let cuts = rng.below(n as u64 - 1) as usize + 1; // 1..n shards
-            let mut root = RootAggregator::new(0, 1.0);
+            let mut root = RootAggregator::new(&shape, 0, 1.0);
             let mut idx = 0usize;
             for shard in 0..cuts {
                 let hi = if shard + 1 == cuts {
@@ -194,7 +196,7 @@ fn hierarchical_fold_is_0ulp_equal_to_flat_on_integer_weights() {
                 } else {
                     (idx + (n - idx) / (cuts - shard)).max(idx + 1)
                 };
-                let mut upd = ShardUpdate::new(shard, 0);
+                let mut upd = ShardUpdate::new(&shape, shard, 0);
                 for (m, w) in &updates[idx..hi] {
                     upd.push(m, *w);
                 }
@@ -250,6 +252,46 @@ fn shards_always_partition_and_views_always_match() {
             Ok(())
         },
     );
+}
+
+// ---------------------------------------------------------------------------
+// model-size scenario axis: one binary, several arenas
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_engine_runs_every_shape_preset_without_recompiling() {
+    // the dynamic arena's acceptance bar: full sharded/async fleet rounds
+    // over all three model sizes in one process, each training the arena
+    // its shape declares
+    let seed = 5u64;
+    for name in PRESET_NAMES {
+        let shape = ModelShape::preset(name).unwrap();
+        let mut sys = system(36, seed);
+        let mut t = MockTrainer::with_shape(36, 600, &shape);
+        let cfg = FleetConfig {
+            rounds: 4,
+            shards: 3,
+            max_staleness: 1,
+            cohort_size: 6,
+            n_rb: 6,
+            cohort_strategy: CohortStrategy::PowerGrouping { m: 4 },
+            seed,
+            ..Default::default()
+        };
+        let (h, global) =
+            fleet::run_with_model(&mut sys, &mut t, &cfg, name).unwrap();
+        assert_eq!(h.rounds.len(), 4, "{name}");
+        assert_eq!(
+            global.as_slice().len(),
+            shape.param_count(),
+            "{name}: final model must use the preset's arena"
+        );
+        assert_eq!(global.payload_bytes(), shape.payload_bytes(), "{name}");
+        assert!(
+            h.final_accuracy() > h.rounds[0].accuracy.min(0.2),
+            "{name}: training must improve"
+        );
+    }
 }
 
 #[test]

@@ -2,6 +2,8 @@
 //! aggregator, and the parallel-coordinator determinism contract
 //! (mock backend — no artifacts needed).
 
+use std::sync::Arc;
+
 use cnc_fl::cnc::optimize::{
     CohortStrategy, PartitionStrategy, PathStrategy, RbStrategy,
 };
@@ -11,61 +13,121 @@ use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
 use cnc_fl::coordinator::MockTrainer;
 use cnc_fl::metrics::RunHistory;
 use cnc_fl::model::aggregate::{weighted_average, Aggregator};
-use cnc_fl::model::params::{
-    param_count, ModelParams, NUM_TENSORS, PARAM_SHAPES, TENSOR_OFFSETS,
-};
+use cnc_fl::model::params::ModelParams;
+use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
 use cnc_fl::netsim::channel::ChannelParams;
 use cnc_fl::netsim::compute::PowerProfile;
 use cnc_fl::netsim::topology::TopologyGen;
 use cnc_fl::util::propcheck::{check, gen_usize, prop_assert, GenPair};
 use cnc_fl::util::rng::Pcg64;
 
-fn random_params(seed: u64) -> ModelParams {
+fn random_params_shaped(shape: &Arc<ModelShape>, seed: u64) -> ModelParams {
     let mut rng = Pcg64::seed_from(seed);
-    let mut m = ModelParams::zeros();
+    let mut m = ModelParams::zeros(shape);
     for v in m.as_mut_slice() {
         *v = rng.normal_scaled(0.0, 1.0) as f32;
     }
     m
 }
 
+fn random_params(seed: u64) -> ModelParams {
+    random_params_shaped(&ModelShape::paper(), seed)
+}
+
 // ---------------------------------------------------------------------------
-// flat arena ⇄ blob
+// dynamic arena ⇄ blob, for every shape preset
 // ---------------------------------------------------------------------------
 
 #[test]
-fn blob_round_trips_byte_identically() {
-    check(25, gen_usize(0..1_000_000), |&seed| {
-        let m = random_params(seed as u64);
-        let blob = m.to_blob();
-        let back = ModelParams::from_blob(&blob)
-            .map_err(|e| format!("from_blob failed: {e}"))?;
-        prop_assert(back.to_blob() == blob, "blob → params → blob must be identity")?;
-        prop_assert(back == m, "params → blob → params must be identity")
-    });
+fn blob_round_trips_byte_identically_for_every_preset() {
+    for name in PRESET_NAMES {
+        let shape = ModelShape::preset(name).unwrap();
+        check(10, gen_usize(0..1_000_000), |&seed| {
+            let m = random_params_shaped(&shape, seed as u64);
+            let blob = m.to_blob();
+            prop_assert(
+                blob.len() == shape.param_count() * 4,
+                "blob bytes must be 4 × param_count",
+            )?;
+            let back = ModelParams::from_blob(&shape, &blob)
+                .map_err(|e| format!("from_blob failed: {e}"))?;
+            prop_assert(back.to_blob() == blob, "blob → params → blob must be identity")?;
+            prop_assert(back == m, "params → blob → params must be identity")
+        });
+    }
+}
+
+#[test]
+fn offsets_are_prefix_sums_for_every_preset() {
+    // the dynamic-offset invariant the whole arena rests on:
+    // offset(i+1) − offset(i) = Π dims(i), offset(0) = 0, and the final
+    // offset is the total scalar count
+    for name in PRESET_NAMES {
+        let shape = ModelShape::preset(name).unwrap();
+        assert_eq!(shape.offset(0), 0, "{name}");
+        let mut total = 0usize;
+        for i in 0..shape.num_tensors() {
+            let elems: usize = shape.dims(i).iter().product();
+            assert_eq!(shape.elements(i), elems, "{name} tensor {i}");
+            assert_eq!(shape.offset(i), total, "{name} tensor {i}");
+            total += elems;
+        }
+        assert_eq!(shape.offset(shape.num_tensors()), total, "{name}");
+        assert_eq!(shape.param_count(), total, "{name}");
+        // tensor views cover the arena exactly, in order
+        let m = random_params_shaped(&shape, 3);
+        let concat: Vec<f32> = m.tensors().flatten().copied().collect();
+        assert_eq!(concat, m.as_slice(), "{name}");
+    }
 }
 
 #[test]
 fn blob_layout_matches_seed_tensor_concatenation() {
     // the seed laid tensors out as per-tensor little-endian segments in
-    // PARAM_SHAPES order; the arena blob must be bit-compatible
+    // shape order; the arena blob must be bit-compatible
     let m = random_params(7);
+    let shape = m.shape().clone();
     let blob = m.to_blob();
     let mut off = 0usize;
-    for i in 0..NUM_TENSORS {
+    for i in 0..shape.num_tensors() {
         let view = m.tensor(i);
-        assert_eq!(off, TENSOR_OFFSETS[i] * 4);
+        assert_eq!(off, shape.offset(i) * 4);
         for &v in view {
             assert_eq!(&blob[off..off + 4], &v.to_le_bytes(), "offset {off}");
             off += 4;
         }
     }
-    assert_eq!(off, param_count() * 4);
-    let total: usize = PARAM_SHAPES
-        .iter()
-        .map(|(_, s)| s.iter().product::<usize>())
-        .sum();
-    assert_eq!(total, param_count());
+    assert_eq!(off, shape.param_count() * 4);
+}
+
+// ---------------------------------------------------------------------------
+// aggregator shape-mismatch rejection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn aggregator_rejects_cross_shape_folds_for_every_preset_pair() {
+    for a in PRESET_NAMES {
+        for b in PRESET_NAMES {
+            if a == b {
+                continue;
+            }
+            let sa = ModelShape::preset(a).unwrap();
+            let sb = ModelShape::preset(b).unwrap();
+            let update = ModelParams::zeros(&sb);
+            let pushed = std::panic::catch_unwind(|| {
+                let mut agg = Aggregator::new(&sa);
+                agg.push(&update, 10);
+            });
+            assert!(pushed.is_err(), "pushing {b} into {a} must panic");
+            let merged = std::panic::catch_unwind(|| {
+                let mut partial = Aggregator::new(&sb);
+                partial.push(&update, 10);
+                let mut root = Aggregator::new(&sa);
+                root.merge(&partial);
+            });
+            assert!(merged.is_err(), "merging {b} into {a} must panic");
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -88,7 +150,7 @@ fn aggregator_matches_weighted_average_for_random_weights() {
                 .collect();
             let batch = weighted_average(&updates)
                 .map_err(|e| format!("weighted_average: {e}"))?;
-            let mut agg = Aggregator::new();
+            let mut agg = Aggregator::new(&ModelShape::paper());
             for (m, w) in &updates {
                 agg.push(m, *w);
             }
@@ -98,7 +160,8 @@ fn aggregator_matches_weighted_average_for_random_weights() {
 
             // independent f64 reference at sampled arena positions
             let total: f64 = updates.iter().map(|(_, w)| *w as f64).sum();
-            for pos in [0usize, 1, 999, param_count() - 1] {
+            let count = ModelShape::paper().param_count();
+            for pos in [0usize, 1, 999, count - 1] {
                 let want: f64 = updates
                     .iter()
                     .map(|(m, w)| *w as f64 * m.as_slice()[pos] as f64)
@@ -123,7 +186,7 @@ fn aggregator_of_equal_models_is_identity_for_any_weights() {
         |&(n, seed)| {
             let m = random_params(seed as u64);
             let mut rng = Pcg64::seed_from(seed as u64 ^ 0xBEE);
-            let mut agg = Aggregator::new();
+            let mut agg = Aggregator::new(m.shape());
             for _ in 0..n {
                 agg.push(&m, rng.below(5000) as usize + 1);
             }
