@@ -140,7 +140,8 @@ fn pjrt_scenario(store: ArtifactStore, rounds: usize) -> Result<()> {
 fn fleet_scenario(rounds: usize) -> Result<()> {
     let num_clients = 200;
     println!(
-        "\n== fleet engine: {num_clients} clients, 4 shards, max_staleness 2 =="
+        "\n== fleet engine: {num_clients} clients, 4 shards / 2 regions, \
+         max_staleness 2 =="
     );
     let mut sys = CncSystem::bootstrap(
         num_clients,
@@ -155,6 +156,7 @@ fn fleet_scenario(rounds: usize) -> Result<()> {
         rounds,
         shards: 4,
         shard_by: ShardBy::Power,
+        regions: 2,
         max_staleness: 2,
         staleness_decay: 0.5,
         cohort_size: 20,

@@ -1,12 +1,17 @@
-//! Decision-layer latency: flat `SchedulingOptimizer` over the whole
-//! fleet versus K sharded optimizers fanned out over the
-//! `ParallelExecutor` — at 10³ / 10⁴ / 10⁵ clients (decisions only, no
-//! training; `MockTrainer` scale presets use exactly this path).
+//! Fleet-layer latency: flat `SchedulingOptimizer` over the whole fleet
+//! versus K sharded optimizers fanned out over the `ParallelExecutor` —
+//! at 10³ / 10⁴ / 10⁵ clients (decisions only, no training), plus the
+//! aggregation-tier tables: two-level vs **three-level root fold** (the
+//! ISSUE-4 acceptance bar: three-level wins at 10⁵ clients / 10³
+//! shards), per-shape hierarchical folds, and the cached-vs-rebuilt
+//! per-shard P2P cost sub-views.
 //!
 //! The flat path pays O(cohort³) in the Hungarian RB assignment plus
 //! O(cohort·n_rb) channel modelling per round; sharding cuts both to K
-//! independent O((cohort/K)³)-ish problems. Prints a before/after table
-//! like `bench_params` — the ISSUE-2 acceptance bar is ≥ 5× at 10⁴.
+//! independent O((cohort/K)³)-ish problems. The two-level root fold then
+//! pays O(shards) serial arena merges per commit; the region tier runs
+//! the per-region folds concurrently and leaves the root only O(regions)
+//! serial merges. Prints before/after tables like `bench_params`.
 //!
 //! Run: `cargo bench --bench bench_fleet`
 
@@ -16,12 +21,14 @@ use cnc_fl::cnc::optimize::{CohortStrategy, RbStrategy, SchedulingOptimizer};
 use cnc_fl::cnc::CncSystem;
 use cnc_fl::exp::presets::default_m;
 use cnc_fl::fleet::{
-    decide_traditional_sharded, FleetShards, RootAggregator, ShardBy, ShardUpdate,
+    decide_traditional_sharded, fold_regions, FleetTopology, RootAggregator,
+    ShardBy, ShardUpdate,
 };
 use cnc_fl::model::params::ModelParams;
 use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
 use cnc_fl::netsim::channel::ChannelParams;
 use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::netsim::topology::TopologyGen;
 use cnc_fl::runtime::ParallelExecutor;
 use cnc_fl::util::bench::{black_box, fmt_ns, Bencher};
 use cnc_fl::util::rng::Pcg64;
@@ -87,7 +94,9 @@ fn main() {
         });
 
         // --- sharded: K optimizers fanned out over the executor ---------
-        let fleet = FleetShards::build(&sys.pool, k, ShardBy::Power).unwrap();
+        let fleet =
+            FleetTopology::build(&sys.pool, k, ShardBy::Power, 1, ShardBy::Power)
+                .unwrap();
         let shard_len = u / k;
         let shard_strategy = CohortStrategy::PowerGrouping {
             m: default_m(shard_len, (cohort / k).max(1)),
@@ -141,6 +150,120 @@ fn main() {
         ));
     }
     println!("{table}");
+
+    // --- root-fold tiers: two-level vs three-level ----------------------
+    // one shard summary per 100 clients (≥10³ summaries at 10⁵ clients);
+    // the two-level root merges all S partials serially, the three-level
+    // root folds √S regions concurrently and merges only those
+    let fold_shape = ModelShape::preset("mlp-small").unwrap();
+    let executor = ParallelExecutor::new(0);
+    let mut tier_table = String::from(
+        "\n## root fold: two-level vs three-level (median per commit round)\n\n\
+         | clients | shard summaries | regions | two-level | three-level | speedup |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    for &u in &[1_000usize, 10_000, 100_000] {
+        let s = u / 100;
+        let updates: Vec<ShardUpdate> = (0..s)
+            .map(|i| {
+                let mut m = ModelParams::zeros(&fold_shape);
+                for (j, v) in m.as_mut_slice().iter_mut().enumerate() {
+                    *v = ((i * 31 + j) % 17) as f32 * 0.01 - 0.08;
+                }
+                let mut upd = ShardUpdate::new(&fold_shape, i, 0);
+                upd.push(&m, 600);
+                upd
+            })
+            .collect();
+        let two = b.bench(&format!("root fold two-level   {s:>5} shards"), || {
+            let mut root = RootAggregator::new(&fold_shape, 0, 1.0);
+            for upd in &updates {
+                root.offer(upd, 0);
+            }
+            black_box(root.finish().unwrap())
+        });
+        let r = (s as f64).sqrt().round() as usize;
+        let idx: Vec<usize> = (0..s).collect();
+        let groups = cnc_fl::util::chunk_even(&idx, r);
+        let three = b.bench(
+            &format!("root fold three-level {s:>5} shards ({r:>3} regions)"),
+            || {
+                let due: Vec<Vec<&ShardUpdate>> = groups
+                    .iter()
+                    .map(|g| g.iter().map(|&i| &updates[i]).collect())
+                    .collect();
+                let (root, _) =
+                    fold_regions(&fold_shape, &due, 0, 0, 1.0, &executor).unwrap();
+                black_box(root.finish().unwrap())
+            },
+        );
+        tier_table.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {:.1}× |\n",
+            u,
+            s,
+            r,
+            fmt_ns(two.median_ns),
+            fmt_ns(three.median_ns),
+            two.median_ns / three.median_ns
+        ));
+    }
+    println!("{tier_table}");
+
+    // --- cached per-shard cost views vs per-round submatrix rebuild -----
+    // the PR-2 P2P decision path cloned every shard's O(shard²) sub-view
+    // out of the fleet cost matrix every round; the registry now builds
+    // the views once per topology
+    let mut view_table = String::from(
+        "\n## P2P cost sub-views (median per round, all shards)\n\n\
+         | clients | shards | rebuilt per round | cached | speedup |\n\
+         |---|---|---|---|---|\n",
+    );
+    for &(u, k) in &[(1_000usize, 8usize), (2_000, 16)] {
+        let mut channel = ChannelParams::default();
+        channel.fading_samples = 4;
+        let sys =
+            CncSystem::bootstrap(u, 600, 1, PowerProfile::Bimodal, channel, 0xCAFE);
+        let mut rng = Pcg64::seed_from(0x10);
+        let g = TopologyGen::full(u, 1.0, 10.0, &mut rng);
+        let mut fleet = FleetTopology::build(
+            &sys.pool,
+            k,
+            ShardBy::Locality,
+            1,
+            ShardBy::Locality,
+        )
+        .unwrap();
+        let rebuild = b.bench(
+            &format!("submatrix rebuild {u:>5} clients ({k:>2} shards)"),
+            || {
+                let mut acc = 0.0f64;
+                for s in 0..k {
+                    acc += fleet.shard_cost_matrix(&g, s).at(0, 0);
+                }
+                black_box(acc)
+            },
+        );
+        fleet.cache_cost_views(&g);
+        let cached = b.bench(
+            &format!("submatrix cached  {u:>5} clients ({k:>2} shards)"),
+            || {
+                let mut acc = 0.0f64;
+                for s in 0..k {
+                    acc += fleet.cost_view(s).unwrap().at(0, 0);
+                }
+                black_box(acc)
+            },
+        );
+        view_table.push_str(&format!(
+            "| {} | {} | {} | {} | {:.0}× |\n",
+            u,
+            k,
+            fmt_ns(rebuild.median_ns),
+            fmt_ns(cached.median_ns),
+            rebuild.median_ns / cached.median_ns
+        ));
+    }
+    println!("{view_table}");
 
     // --- model-size axis: hierarchical aggregation per shape preset -----
     // 16 shard partials folded through the root tier — the fleet's

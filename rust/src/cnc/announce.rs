@@ -48,12 +48,29 @@ pub enum Announcement {
         shard: usize,
         cohort: Vec<usize>,
     },
-    /// shard → root aggregation tier: a shard update was folded into the
-    /// global model, `staleness` rounds after the model it trained on
+    /// shard → region aggregation tier: a shard update was folded into
+    /// the global model, `staleness` rounds after the model it trained on
     ShardCommit {
         round: usize,
         shard: usize,
         staleness: usize,
+    },
+    /// region tier → root: a region partial merging `shards` shard
+    /// updates (the oldest `max_staleness` rounds stale — the per-tier
+    /// staleness account) reached the global model
+    RegionCommit {
+        round: usize,
+        region: usize,
+        shards: usize,
+        max_staleness: usize,
+    },
+    /// registry: churn replaced part of the fleet and the strata were
+    /// rebuilt (`moved` surviving clients changed shard)
+    FleetRebalanced {
+        round: usize,
+        joined: usize,
+        left: usize,
+        moved: usize,
     },
 }
 
@@ -104,7 +121,9 @@ impl AnnouncementBus {
                 | Announcement::ModelBroadcast { round: r, .. }
                 | Announcement::UpdatesCollected { round: r, .. }
                 | Announcement::ShardDecision { round: r, .. }
-                | Announcement::ShardCommit { round: r, .. } => *r == round,
+                | Announcement::ShardCommit { round: r, .. }
+                | Announcement::RegionCommit { round: r, .. }
+                | Announcement::FleetRebalanced { round: r, .. } => *r == round,
             })
             .collect()
     }

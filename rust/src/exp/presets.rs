@@ -101,6 +101,8 @@ pub struct FleetCase {
     pub num_clients: usize,
     /// registry shard count K
     pub shards: usize,
+    /// region count R grouping the shards (1 = two-level aggregation)
+    pub regions: usize,
     /// fleet-global cohort per round (split across shards ∝ size)
     pub cohort_size: usize,
     /// staleness bound for async commits (0 = synchronous)
@@ -118,12 +120,15 @@ impl FleetCase {
 }
 
 /// The fleet-scale cases: 10⁴ and 10⁵ clients on the paper's model,
-/// plus the 10⁴ fleet on the ≈1M-param `mlp-wide` (the model-size axis).
-pub const FLEET_CASES: [FleetCase; 3] = [
+/// the 10⁴ fleet on the ≈1M-param `mlp-wide` (the model-size axis), and
+/// the 10⁵ fleet over 10³ shards grouped into regions — the three-level
+/// (region → shard → client) topology whose root fold stays O(regions).
+pub const FLEET_CASES: [FleetCase; 4] = [
     FleetCase {
         name: "Fleet10k",
         num_clients: 10_000,
         shards: 16,
+        regions: 1,
         cohort_size: 160,
         max_staleness: 2,
         global_rounds: 5,
@@ -133,6 +138,7 @@ pub const FLEET_CASES: [FleetCase; 3] = [
         name: "Fleet100k",
         num_clients: 100_000,
         shards: 64,
+        regions: 1,
         cohort_size: 640,
         max_staleness: 3,
         global_rounds: 3,
@@ -142,10 +148,21 @@ pub const FLEET_CASES: [FleetCase; 3] = [
         name: "Fleet10kWide",
         num_clients: 10_000,
         shards: 16,
+        regions: 1,
         cohort_size: 160,
         max_staleness: 2,
         global_rounds: 3,
         model: "mlp-wide",
+    },
+    FleetCase {
+        name: "Fleet100kRegions",
+        num_clients: 100_000,
+        shards: 1000,
+        regions: 25,
+        cohort_size: 2000,
+        max_staleness: 3,
+        global_rounds: 3,
+        model: "mlp-784",
     },
 ];
 
@@ -156,7 +173,8 @@ pub fn fleet_case(name: &str) -> Result<FleetCase> {
         .copied()
         .ok_or_else(|| {
             anyhow::anyhow!(
-                "unknown fleet case `{name}` (Fleet10k|Fleet100k|Fleet10kWide)"
+                "unknown fleet case `{name}` \
+                 (Fleet10k|Fleet100k|Fleet10kWide|Fleet100kRegions)"
             )
         })
 }
@@ -179,6 +197,9 @@ pub fn fleet_config(
         rounds: case.global_rounds,
         shards,
         shard_by: ShardBy::Power,
+        // a shard-count override shrinks the region tier with it
+        regions: case.regions.clamp(1, shards),
+        region_by: ShardBy::Locality,
         max_staleness: case.max_staleness,
         staleness_decay: 0.5,
         cohort_size: case.cohort_size,
@@ -190,6 +211,8 @@ pub fn fleet_config(
         rb_strategy: RbStrategy::HungarianEnergy,
         eval_every: 1,
         tx_deadline_s: None,
+        churn_every: 0,
+        churn_rate: 0.1,
         threads: 0,
         seed,
         verbose: false,
@@ -431,6 +454,17 @@ mod tests {
         let big = fleet_case("Fleet100k").unwrap();
         assert_eq!(big.num_clients, 100_000);
         assert!(fleet_case("Fleet1M").is_err());
+        // the region-tier case: 10⁵ clients over 10³ shards, 25 regions
+        let reg = fleet_case("Fleet100kRegions").unwrap();
+        assert_eq!(reg.shards, 1000);
+        assert_eq!(reg.regions, 25);
+        let reg_cfg = fleet_config(&reg, None, 7);
+        assert_eq!(reg_cfg.regions, 25);
+        assert!(reg_cfg.validate().is_ok());
+        // a shard override below the region count clamps the tier
+        let clamped = fleet_config(&reg, Some(8), 7);
+        assert_eq!(clamped.regions, 8);
+        assert!(clamped.validate().is_ok());
         let t = make_fleet_trainer(&c, None).unwrap();
         assert_eq!(t.data_size(0), 600);
         // the case's model preset drives the trainer's arena

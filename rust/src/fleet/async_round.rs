@@ -1,24 +1,45 @@
-//! Async bounded-staleness round engine over the sharded registry.
+//! Async bounded-staleness round engine over the three-level
+//! (region → shard → client) topology.
 //!
 //! Each shard runs at its **own cadence**: a shard whose stratum is
 //! `p×` slower than the fastest (Eq 8 mean delay) starts a job and
 //! commits it `p − 1` rounds later, training against the global model it
 //! fetched at start. Committed updates carry their start-round tag; the
-//! root accepts updates up to [`FleetConfig::max_staleness`] rounds old,
-//! discounting their aggregation weight by `staleness_decay^staleness`
-//! (`fleet::hierarchy`). Periods are clamped to `max_staleness + 1`, so
-//! no in-flight update can ever exceed the bound; the final round
-//! flushes all in-flight jobs (at a staleness no larger than their
-//! period's), so trained work is never discarded at run end.
+//! region tier accepts updates up to [`FleetConfig::max_staleness`]
+//! rounds old, discounting their aggregation weight by
+//! `staleness_decay^staleness` (`fleet::hierarchy`), and the root only
+//! merges the R region partials — per-region folds run concurrently and
+//! the serial tail of every commit is O(regions), not O(shards).
+//! Periods are clamped to `max_staleness + 1`, so no in-flight update
+//! can ever exceed the bound; the final round flushes all in-flight
+//! jobs (at a staleness no larger than their period's), so trained work
+//! is never discarded at run end. A round that accepts nothing (it can
+//! only happen through pathological inputs — the period clamp prevents
+//! it in normal operation) keeps the previous global and records a
+//! zero-commit row, it never errors.
+//!
+//! # Churn
+//!
+//! With `churn_every > 0`, every `churn_every`-th round replaces
+//! `churn_rate` of the fleet with fresh joiners and rebalances the
+//! topology (`FleetTopology::churn`): strata are rebuilt, cohort/RB
+//! splits and cadences re-derived, and the round's `rebalance_moves`
+//! column records how many surviving clients changed shard. Stable
+//! client ids persist across rebalances; in-flight jobs keep their
+//! commit schedule (their updates are plain aggregates — membership at
+//! training time is what matters).
 //!
 //! # Degenerate (synchronous) mode
 //!
 //! With `max_staleness = 0` every shard's period is 1 — decide, train,
-//! commit within the round — and with `shards = 1` on top, the engine
-//! reproduces `coordinator::traditional::run` **bit-for-bit** for the
-//! same seed (same per-round RNG derivation, same slot-ordered fold,
-//! single-shard root merge is a bitwise copy). `tests/fleet_props.rs`
-//! pins this for serial and parallel executors.
+//! commit within the round — and with `shards = 1, regions = 1` on top,
+//! the engine reproduces `coordinator::traditional::run` **bit-for-bit**
+//! for the same seed (same per-round RNG derivation, same slot-ordered
+//! fold, single-shard region and root merges are bitwise copies).
+//! `regions = 1` alone reproduces the two-level (PR-2) engine
+//! bit-for-bit: the single region's fold performs exactly the op
+//! sequence the old root did (`hierarchy::fold_regions`' contract,
+//! pinned by `tests/fleet_props.rs` for serial and parallel executors).
 
 use std::sync::Mutex;
 
@@ -28,9 +49,9 @@ use crate::cnc::announce::Announcement;
 use crate::cnc::optimize::{CohortStrategy, RbStrategy, SchedulingOptimizer};
 use crate::cnc::CncSystem;
 use crate::coordinator::trainer::Trainer;
-use crate::fleet::hierarchy::{RootAggregator, ShardUpdate};
+use crate::fleet::hierarchy::{fold_regions, ShardUpdate};
 use crate::fleet::registry::{
-    decide_traditional_sharded, split_proportional, FleetShards, ShardBy,
+    decide_traditional_sharded, split_proportional, FleetTopology, ShardBy,
 };
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::model::params::ModelParams;
@@ -38,8 +59,9 @@ use crate::runtime::ParallelExecutor;
 use crate::util::rng::Pcg64;
 
 /// Fleet-engine run settings. The flat-coordinator knobs keep their
-/// `TraditionalConfig` meaning; `shards`/`max_staleness` are the two new
-/// scaling axes (1 / 0 = the flat synchronous engine, bit-identical).
+/// `TraditionalConfig` meaning; `shards`/`regions`/`max_staleness` are
+/// the scaling axes (1 / 1 / 0 = the flat synchronous engine,
+/// bit-identical) and `churn_every`/`churn_rate` inject fleet churn.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
     pub rounds: usize,
@@ -47,6 +69,11 @@ pub struct FleetConfig {
     pub shards: usize,
     /// what static attribute strata shards are cut along
     pub shard_by: ShardBy,
+    /// region count R grouping the shards (1 = no region tier effect;
+    /// must be ≤ shards)
+    pub regions: usize,
+    /// what per-shard mean attribute regions are cut along
+    pub region_by: ShardBy,
     /// accept shard updates up to this many rounds old (0 = synchronous)
     pub max_staleness: usize,
     /// per-round multiplicative weight discount for stale updates, in
@@ -62,8 +89,14 @@ pub struct FleetConfig {
     pub rb_strategy: RbStrategy,
     pub eval_every: usize,
     pub tx_deadline_s: Option<f64>,
-    /// worker threads for decision fan-out and cohort-parallel training
-    /// (0 = one per core, 1 = serial); bit-identical either way
+    /// rebalance cadence: every `churn_every` rounds, `churn_rate` of
+    /// the fleet is replaced and the strata rebuilt (0 = no churn)
+    pub churn_every: usize,
+    /// fraction of the fleet replaced per churn event, in [0, 1]
+    pub churn_rate: f64,
+    /// worker threads for decision fan-out, cohort-parallel training and
+    /// region folds (0 = one per core, 1 = serial); bit-identical either
+    /// way
     pub threads: usize,
     pub seed: u64,
     pub verbose: bool,
@@ -75,6 +108,8 @@ impl Default for FleetConfig {
             rounds: 50,
             shards: 4,
             shard_by: ShardBy::Power,
+            regions: 1,
+            region_by: ShardBy::Locality,
             max_staleness: 0,
             staleness_decay: 0.5,
             cohort_size: 10,
@@ -84,10 +119,43 @@ impl Default for FleetConfig {
             rb_strategy: RbStrategy::HungarianEnergy,
             eval_every: 1,
             tx_deadline_s: None,
+            churn_every: 0,
+            churn_rate: 0.1,
             threads: 0,
             seed: 0,
             verbose: false,
         }
+    }
+}
+
+impl FleetConfig {
+    /// Reject configurations that would otherwise panic deep inside the
+    /// round loop (or silently misbehave). Called at the top of
+    /// [`run`] and by the CLI before a run starts.
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            bail!("shards must be >= 1");
+        }
+        if self.regions == 0 {
+            bail!("regions must be >= 1");
+        }
+        if self.regions > self.shards {
+            bail!(
+                "regions ({}) cannot exceed shards ({})",
+                self.regions,
+                self.shards
+            );
+        }
+        if !(self.staleness_decay > 0.0 && self.staleness_decay <= 1.0) {
+            bail!("staleness decay {} outside (0, 1]", self.staleness_decay);
+        }
+        if self.cohort_size == 0 {
+            bail!("cohort size must be >= 1");
+        }
+        if self.churn_every > 0 && !(0.0..=1.0).contains(&self.churn_rate) {
+            bail!("churn rate {} outside [0, 1]", self.churn_rate);
+        }
+        Ok(())
     }
 }
 
@@ -107,10 +175,15 @@ pub(crate) fn shard_round_rng(
     }
 }
 
+/// Per-round churn RNG (independent of the decision streams).
+fn churn_rng(seed: u64, round: usize) -> Pcg64 {
+    Pcg64::new(seed, 0xC4E4).split(&format!("churn/{round}"))
+}
+
 /// Shard cadences: a shard `r×` slower than the fastest stratum commits
 /// every `round(r)` rounds, clamped to `max_staleness + 1` so its updates
-/// always clear the root's staleness bound.
-pub fn shard_periods(fleet: &FleetShards, max_staleness: usize) -> Vec<usize> {
+/// always clear the staleness bound.
+pub fn shard_periods(fleet: &FleetTopology, max_staleness: usize) -> Vec<usize> {
     if max_staleness == 0 {
         return vec![1; fleet.num_shards()];
     }
@@ -122,10 +195,10 @@ pub fn shard_periods(fleet: &FleetShards, max_staleness: usize) -> Vec<usize> {
         .collect()
 }
 
-/// One shard's in-flight job: trained at `started`, committing at
-/// `commit_round`, with the decision telemetry to record on commit.
+/// One shard's in-flight job (start round lives in `update.round_tag`),
+/// committing at `commit_round`, with the decision telemetry to record
+/// on commit.
 struct PendingJob {
-    started: usize,
     commit_round: usize,
     update: ShardUpdate,
     loss_sum: f64,
@@ -158,8 +231,9 @@ pub fn run_with_model(
     cfg: &FleetConfig,
     label: &str,
 ) -> Result<(RunHistory, ModelParams)> {
+    cfg.validate()?;
     let u = sys.pool.fleet.num_clients();
-    if cfg.cohort_size < cfg.shards.max(1) || cfg.cohort_size > u {
+    if cfg.cohort_size < cfg.shards || cfg.cohort_size > u {
         bail!(
             "cohort size {} must be within [shards = {}, fleet = {u}]",
             cfg.cohort_size,
@@ -173,22 +247,27 @@ pub fn run_with_model(
             cfg.cohort_size
         );
     }
-    if !(cfg.staleness_decay > 0.0 && cfg.staleness_decay <= 1.0) {
-        bail!("staleness decay {} outside (0, 1]", cfg.staleness_decay);
-    }
 
-    let fleet = FleetShards::build(&sys.pool, cfg.shards, cfg.shard_by)?;
-    let k = fleet.num_shards();
-    let sizes = fleet.sizes();
-    let cohorts = split_proportional(cfg.cohort_size, &sizes);
+    let mut topology = FleetTopology::build(
+        &sys.pool,
+        cfg.shards,
+        cfg.shard_by,
+        cfg.regions,
+        cfg.region_by,
+    )?;
+    let k = topology.num_shards();
+    let mut cohorts = split_proportional(cfg.cohort_size, &topology.sizes());
     // RBs are radio resources, not clients: split ∝ cohort share (no
     // shard-size cap), floored at the shard's cohort so every shard's
     // assignment stays feasible. shards = 1 receives cfg.n_rb exactly.
-    let n_rbs: Vec<usize> = cohorts
-        .iter()
-        .map(|&c| (cfg.n_rb * c / cfg.cohort_size).max(c))
-        .collect();
-    let periods = shard_periods(&fleet, cfg.max_staleness);
+    let rb_split = |cohorts: &[usize]| -> Vec<usize> {
+        cohorts
+            .iter()
+            .map(|&c| (cfg.n_rb * c / cfg.cohort_size).max(c))
+            .collect()
+    };
+    let mut n_rbs = rb_split(&cohorts);
+    let mut periods = shard_periods(&topology, cfg.max_staleness);
     let optimizers: Vec<Mutex<SchedulingOptimizer>> =
         (0..k).map(|_| Mutex::new(SchedulingOptimizer::new())).collect();
     let executor = ParallelExecutor::new(cfg.threads);
@@ -200,6 +279,31 @@ pub fn run_with_model(
     pending.resize_with(k, || None);
 
     for round in 0..cfg.rounds {
+        // 0. churn: replace part of the fleet and rebuild the strata,
+        //    re-deriving the proportional splits and cadences
+        let mut rebalance_moves = 0usize;
+        if cfg.churn_every > 0
+            && round > 0
+            && round % cfg.churn_every == 0
+            && cfg.churn_rate > 0.0
+        {
+            let diff = topology.churn(
+                &mut sys.pool,
+                cfg.churn_rate,
+                &churn_rng(cfg.seed, round),
+            )?;
+            rebalance_moves = diff.moved;
+            sys.bus.publish(Announcement::FleetRebalanced {
+                round,
+                joined: diff.joined,
+                left: diff.left,
+                moved: diff.moved,
+            });
+            cohorts = split_proportional(cfg.cohort_size, &topology.sizes());
+            n_rbs = rb_split(&cohorts);
+            periods = shard_periods(&topology, cfg.max_staleness);
+        }
+
         sys.announce_resources(round);
 
         // 1. idle shards fetch the current global model and start a job:
@@ -211,7 +315,7 @@ pub fn run_with_model(
             .map(|&s| shard_round_rng(cfg.seed, round, s, k))
             .collect();
         let decisions = decide_traditional_sharded(
-            &fleet,
+            &topology,
             &optimizers,
             &idle,
             cfg.cohort_strategy,
@@ -263,9 +367,8 @@ pub fn run_with_model(
                 |upd, weight| update.push(upd, weight),
             )?;
             let wall_s = t0.elapsed().as_secs_f64();
-            let spread_s = fleet.shards[d.shard].delay_spread_s(&d.decision.cohort);
+            let spread_s = topology.shards[d.shard].delay_spread_s(&d.decision.cohort);
             pending[d.shard] = Some(PendingJob {
-                started: round,
                 commit_round: round + periods[d.shard] - 1,
                 update,
                 loss_sum,
@@ -278,15 +381,47 @@ pub fn run_with_model(
             });
         }
 
-        // 3. commits: fold due shard updates through the root tier in
-        //    shard order (deterministic), staleness-bounded + decayed.
-        //    The final round flushes every in-flight job — work already
-        //    trained is never discarded at run end, and a flushed
-        //    update's staleness can only be *smaller* than its period's,
-        //    so it always clears the bound.
+        // 3. commits: due shard updates fold per region (concurrently,
+        //    slot-ordered; shard order within each region) and only the
+        //    R region partials reach the root — staleness-bounded and
+        //    decayed at the region tier. The final round flushes every
+        //    in-flight job — work already trained is never discarded at
+        //    run end, and a flushed update's staleness can only be
+        //    *smaller* than its period's, so it always clears the bound.
         let flush = round + 1 == cfg.rounds;
-        let mut root =
-            RootAggregator::new(global.shape(), cfg.max_staleness, cfg.staleness_decay);
+        let mut due_jobs: Vec<Option<PendingJob>> = (0..k)
+            .map(|s| {
+                let due = pending[s]
+                    .as_ref()
+                    .is_some_and(|p| flush || p.commit_round <= round);
+                if due {
+                    pending[s].take()
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let (root, accepts) = {
+            let due_refs: Vec<Vec<&ShardUpdate>> = topology
+                .regions
+                .iter()
+                .map(|rg| {
+                    rg.shards
+                        .iter()
+                        .filter_map(|&s| due_jobs[s].as_ref().map(|j| &j.update))
+                        .collect()
+                })
+                .collect();
+            fold_regions(
+                global.shape(),
+                &due_refs,
+                round,
+                cfg.max_staleness,
+                cfg.staleness_decay,
+                &executor,
+            )?
+        };
+
         let mut loss_sum = 0.0f64;
         let mut collected = 0usize;
         let mut dropouts = 0usize;
@@ -295,20 +430,20 @@ pub fn run_with_model(
         let mut tx_delays_s = Vec::new();
         let mut tx_energies_j = Vec::new();
         let mut shard_spreads_s = Vec::new();
-        for s in 0..k {
-            let due = pending[s]
-                .as_ref()
-                .is_some_and(|p| flush || p.commit_round <= round);
-            if !due {
+        for rg in &topology.regions {
+            let acc = &accepts[rg.id];
+            if acc.is_empty() {
                 continue;
             }
-            let job = pending[s].take().expect("checked above");
-            if let Some(staleness) = root.offer(&job.update, round) {
+            let mut stale_max = 0usize;
+            for &(shard, staleness) in acc {
                 sys.bus.publish(Announcement::ShardCommit {
                     round,
-                    shard: s,
+                    shard,
                     staleness,
                 });
+                stale_max = stale_max.max(staleness);
+                let job = due_jobs[shard].take().expect("accepted shard was due");
                 loss_sum += job.loss_sum;
                 collected += job.update.count();
                 dropouts += job.dropouts;
@@ -318,16 +453,25 @@ pub fn run_with_model(
                 tx_energies_j.extend(job.tx_energies_j);
                 shard_spreads_s.push(job.spread_s);
             }
+            sys.bus.publish(Announcement::RegionCommit {
+                round,
+                region: rg.id,
+                shards: acc.len(),
+                max_staleness: stale_max,
+            });
         }
         let shards_committed = root.accepted();
+        let regions_committed = root.regions_merged();
         let staleness_mean = root.mean_staleness();
         if shards_committed > 0 {
             sys.bus.publish(Announcement::UpdatesCollected {
                 round,
                 count: collected,
             });
-            global = root.finish()?;
         }
+        // a round that accepted nothing keeps the previous global —
+        // never an error out of the engine (fleet::hierarchy)
+        global = root.finish_or_keep(global);
 
         // 4. evaluate + record (a commit-free round keeps the previous
         //    global, so its accuracy/loss carry over)
@@ -355,13 +499,17 @@ pub fn run_with_model(
             shards_committed,
             staleness_mean,
             shard_spreads_s,
+            regions_committed,
+            rebalance_moves,
         };
         if cfg.verbose {
             eprintln!(
                 "[{label}] round {round:>4}  acc {accuracy:.4}  loss {:.4}  \
-                 shards {shards_committed}/{k}  stale {staleness_mean:.2}  \
+                 shards {shards_committed}/{k}  regions {regions_committed}/{}  \
+                 stale {staleness_mean:.2}  moved {rebalance_moves}  \
                  spread_max {:.2}s",
                 rec.train_loss,
+                topology.num_regions(),
                 rec.shard_spread_max_s(),
             );
         }
@@ -403,7 +551,9 @@ mod tests {
         assert_eq!(h.rounds.len(), 6);
         for r in &h.rounds {
             assert_eq!(r.shards_committed, 4);
+            assert_eq!(r.regions_committed, 1);
             assert_eq!(r.staleness_mean, 0.0);
+            assert_eq!(r.rebalance_moves, 0);
             assert_eq!(r.shard_spreads_s.len(), 4);
             assert_eq!(r.local_delays_s.len(), 8);
         }
@@ -411,6 +561,27 @@ mod tests {
         assert_eq!(t.calls(), 6 * 8);
         let acc = h.accuracies();
         assert!(acc.last().unwrap() > acc.first().unwrap());
+    }
+
+    #[test]
+    fn region_tier_commits_every_region_when_synchronous() {
+        let mut s = sys(48, 8);
+        let mut t = MockTrainer::new(48, 600);
+        let mut c = cfg(5, 6, 0);
+        c.regions = 3;
+        let h = run(&mut s, &mut t, &c, "regions3").unwrap();
+        for r in &h.rounds {
+            assert_eq!(r.shards_committed, 6);
+            assert_eq!(r.regions_committed, 3);
+        }
+        let mut region_commits = 0;
+        for m in s.bus.audit() {
+            if let Announcement::RegionCommit { shards, .. } = m {
+                assert_eq!(*shards, 2);
+                region_commits += 1;
+            }
+        }
+        assert_eq!(region_commits, 5 * 3);
     }
 
     #[test]
@@ -423,6 +594,7 @@ mod tests {
         for r in &h.rounds {
             assert!(r.staleness_mean <= 2.0, "round {}: {}", r.round, r.staleness_mean);
             assert!(r.shards_committed <= 4);
+            assert!(r.regions_committed <= 1);
             total_commits += r.shards_committed;
         }
         assert!(total_commits > 0);
@@ -449,10 +621,13 @@ mod tests {
 
     #[test]
     fn parallel_fleet_matches_serial_bitwise() {
+        // three shards in two regions: decisions, training AND region
+        // folds all cross the executor — any width must be bit-identical
         let run_width = |threads: usize| {
             let mut s = sys(36, 3);
             let mut t = MockTrainer::new(36, 600);
             let mut c = cfg(5, 3, 1);
+            c.regions = 2;
             c.threads = threads;
             run(&mut s, &mut t, &c, "width").unwrap()
         };
@@ -466,7 +641,41 @@ mod tests {
                 assert_eq!(a.tx_delays_s, b.tx_delays_s);
                 assert_eq!(a.tx_energies_j, b.tx_energies_j);
                 assert_eq!(a.shards_committed, b.shards_committed);
+                assert_eq!(a.regions_committed, b.regions_committed);
             }
+        }
+    }
+
+    #[test]
+    fn churn_rebalances_and_stays_deterministic() {
+        let run_once = || {
+            let mut s = sys(60, 9);
+            let mut t = MockTrainer::new(60, 600);
+            let mut c = cfg(8, 4, 1);
+            c.regions = 2;
+            c.churn_every = 2;
+            c.churn_rate = 0.25;
+            run(&mut s, &mut t, &c, "churn").unwrap()
+        };
+        let h = run_once();
+        assert_eq!(h.rounds.len(), 8);
+        // churn rounds may move clients; non-churn rounds never do
+        let mut churn_rounds = 0usize;
+        for r in &h.rounds {
+            if r.round == 0 || r.round % 2 != 0 {
+                assert_eq!(r.rebalance_moves, 0, "round {}", r.round);
+            } else {
+                churn_rounds += 1;
+            }
+        }
+        assert!(churn_rounds > 0);
+        // training still progresses through rebalances
+        assert!(h.final_accuracy() > h.rounds[0].accuracy.min(0.2));
+        // bit-for-bit repeatable
+        let g = run_once();
+        for (a, b) in h.rounds.iter().zip(&g.rounds) {
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            assert_eq!(a.rebalance_moves, b.rebalance_moves);
         }
     }
 
@@ -487,12 +696,39 @@ mod tests {
         let mut c = cfg(2, 2, 1);
         c.staleness_decay = 0.0;
         assert!(run(&mut s, &mut t, &c, "bad").is_err());
+        // validate() rejects degenerate topologies before the loop
+        let mut c = cfg(2, 0, 0);
+        c.cohort_size = 2;
+        assert!(c.validate().is_err());
+        assert!(run(&mut s, &mut t, &c, "bad").is_err());
+        let mut c = cfg(2, 2, 0);
+        c.regions = 0;
+        assert!(c.validate().is_err());
+        assert!(run(&mut s, &mut t, &c, "bad").is_err());
+        let mut c = cfg(2, 2, 0);
+        c.regions = 3;
+        assert!(c.validate().is_err());
+        let mut c = cfg(2, 2, 0);
+        c.cohort_size = 0;
+        assert!(c.validate().is_err());
+        let mut c = cfg(2, 2, 0);
+        c.churn_every = 1;
+        c.churn_rate = 1.5;
+        assert!(c.validate().is_err());
+        assert!(cfg(2, 2, 0).validate().is_ok());
     }
 
     #[test]
     fn periods_collapse_to_one_when_synchronous() {
         let s = sys(24, 5);
-        let fleet = FleetShards::build(&s.pool, 4, ShardBy::Power).unwrap();
+        let fleet = FleetTopology::build(
+            &s.pool,
+            4,
+            ShardBy::Power,
+            1,
+            ShardBy::Locality,
+        )
+        .unwrap();
         assert_eq!(shard_periods(&fleet, 0), vec![1; 4]);
         let p = shard_periods(&fleet, 3);
         assert!(p.iter().all(|&x| (1..=4).contains(&x)));
@@ -509,15 +745,18 @@ mod tests {
         run(&mut s, &mut t, &cfg(2, 2, 0), "bus").unwrap();
         let mut decisions = 0;
         let mut commits = 0;
+        let mut region_commits = 0;
         for m in s.bus.audit() {
             match m {
                 Announcement::ShardDecision { .. } => decisions += 1,
                 Announcement::ShardCommit { .. } => commits += 1,
+                Announcement::RegionCommit { .. } => region_commits += 1,
                 _ => {}
             }
         }
         assert_eq!(decisions, 2 * 2);
         assert_eq!(commits, 2 * 2);
+        assert_eq!(region_commits, 2); // one region, one commit per round
     }
 
     #[test]

@@ -1,22 +1,32 @@
-//! Hierarchical (two-level) aggregation tier — shard-local streaming
-//! folds plus a root fold over shard summaries.
+//! Hierarchical aggregation tiers — shard-local streaming folds, region
+//! folds over shard partials, and a root fold over region partials.
 //!
 //! Each shard folds its cohort's updates with a local streaming
 //! [`Aggregator`] exactly as the flat coordinator does (Eq 1, slot
 //! order), producing a [`ShardUpdate`]: the unnormalized partial sums
 //! `Σ wᵢ·xᵢ` / `Σ wᵢ` tagged with the round whose global model the shard
-//! trained on. The [`RootAggregator`] then folds shard summaries —
-//! **weighted-average semantics are preserved exactly** because partials
-//! are merged unnormalized and divided by the grand total only once at
-//! `finish` (for a single shard the result is bit-identical to the flat
-//! fold; for several shards it is exact whenever the partial sums are,
-//! e.g. integer-valued updates — see `tests/fleet_props.rs`).
+//! trained on. A [`RegionAggregator`] folds its region's shard partials
+//! (shard order) into a [`RegionUpdate`]; the [`RootAggregator`] then
+//! merges only R region partials — **weighted-average semantics are
+//! preserved exactly** because partials are merged unnormalized at every
+//! tier and divided by the grand total only once at `finish` (for a
+//! single shard the result is bit-identical to the flat fold; for
+//! several it is exact whenever the partial sums are, e.g.
+//! integer-valued updates — see `tests/fleet_props.rs`).
 //!
-//! The root is also where the **bounded-staleness policy** lives: an
-//! update `staleness = round − round_tag` rounds old is accepted iff
+//! The **bounded-staleness policy** lives at the region tier (the first
+//! tier that sees round-tagged updates): an update
+//! `staleness = round − round_tag` rounds old is accepted iff
 //! `staleness ≤ max_staleness`, its weight multiplied by
 //! `decay^staleness` (decay 1.0 = no discount; staleness 0 takes the
-//! exact unscaled merge path).
+//! exact unscaled merge path). A region partial carries the **max
+//! staleness** of its constituent shard updates, and the root merges
+//! partials without re-discounting. [`RootAggregator::offer`] keeps the
+//! direct two-level path (identical policy) for callers without a
+//! region tier; [`fold_regions`] is the engine's three-level fold, with
+//! the per-region folds fanned out over the `ParallelExecutor`
+//! (slot-ordered, so results are bit-identical to a serial fold — and,
+//! for one region, to the two-level `offer` path).
 
 use std::sync::Arc;
 
@@ -25,6 +35,7 @@ use anyhow::Result;
 use crate::model::aggregate::Aggregator;
 use crate::model::params::ModelParams;
 use crate::model::shape::ModelShape;
+use crate::runtime::ParallelExecutor;
 
 /// One shard's in-flight round contribution: a streaming fold of its
 /// cohort updates, tagged with the global-model round it trained from.
@@ -61,6 +72,106 @@ impl ShardUpdate {
     }
 }
 
+/// One region's folded partial for a commit round: its accepted shard
+/// updates merged unnormalized (staleness decay already applied), plus
+/// the acceptance bookkeeping the root and the telemetry need.
+#[derive(Debug, Clone)]
+pub struct RegionUpdate {
+    pub region: usize,
+    /// shard updates folded in
+    pub accepted: usize,
+    /// shard updates dropped (over the staleness bound, or empty)
+    pub rejected: usize,
+    /// Σ staleness over accepted updates
+    pub staleness_sum: usize,
+    /// max staleness over accepted updates (the region's per-tier
+    /// staleness account: a region commit is as stale as its oldest
+    /// constituent)
+    pub staleness_max: usize,
+    agg: Aggregator,
+}
+
+/// Folds one region's shard partials under the bounded-staleness policy.
+/// The fold order (shard order within the region) is the caller's
+/// determinism contract, exactly like [`Aggregator::push`]'s.
+#[derive(Debug, Clone)]
+pub struct RegionAggregator {
+    region: usize,
+    agg: Aggregator,
+    max_staleness: usize,
+    decay: f64,
+    accepted: usize,
+    rejected: usize,
+    staleness_sum: usize,
+    staleness_max: usize,
+}
+
+impl RegionAggregator {
+    /// `decay` is the per-round multiplicative weight discount for stale
+    /// updates (must be in (0, 1]); `max_staleness = 0` accepts only
+    /// current-round updates. The arena is laid out for `shape`; a shard
+    /// update of a different layout panics (see `model::aggregate`).
+    pub fn new(
+        shape: &Arc<ModelShape>,
+        region: usize,
+        max_staleness: usize,
+        decay: f64,
+    ) -> Self {
+        assert!(
+            decay > 0.0 && decay <= 1.0,
+            "staleness decay {decay} outside (0, 1]"
+        );
+        RegionAggregator {
+            region,
+            agg: Aggregator::new(shape),
+            max_staleness,
+            decay,
+            accepted: 0,
+            rejected: 0,
+            staleness_sum: 0,
+            staleness_max: 0,
+        }
+    }
+
+    /// Offer a shard update at commit round `round`. Returns the
+    /// staleness if accepted, `None` if the update is over the staleness
+    /// bound (or empty) and was dropped.
+    pub fn offer(&mut self, update: &ShardUpdate, round: usize) -> Option<usize> {
+        assert!(
+            update.round_tag <= round,
+            "update from future round {} offered at round {round}",
+            update.round_tag
+        );
+        let staleness = round - update.round_tag;
+        if staleness > self.max_staleness || update.count() == 0 {
+            self.rejected += 1;
+            return None;
+        }
+        let factor = self.decay.powi(staleness as i32);
+        self.agg.merge_scaled(&update.agg, factor);
+        self.accepted += 1;
+        self.staleness_sum += staleness;
+        self.staleness_max = self.staleness_max.max(staleness);
+        Some(staleness)
+    }
+
+    pub fn accepted(&self) -> usize {
+        self.accepted
+    }
+
+    /// Seal the region partial.
+    pub fn finish(self) -> RegionUpdate {
+        RegionUpdate {
+            region: self.region,
+            accepted: self.accepted,
+            rejected: self.rejected,
+            staleness_sum: self.staleness_sum,
+            staleness_max: self.staleness_max,
+            agg: self.agg,
+        }
+    }
+}
+
 /// The root of the aggregation hierarchy for one commit round.
 #[derive(Debug, Clone)]
 pub struct RootAggregator {
@@ -70,14 +181,13 @@ pub struct RootAggregator {
     accepted: usize,
     rejected: usize,
     staleness_sum: usize,
+    regions_merged: usize,
 }
 
 impl RootAggregator {
-    /// `decay` is the per-round multiplicative weight discount for stale
-    /// updates (must be in (0, 1]); `max_staleness = 0` accepts only
-    /// current-round updates — the synchronous degenerate mode. The root
-    /// arena is laid out for `shape`; offering a shard update of a
-    /// different layout panics (see `model::aggregate`'s shape contract).
+    /// `decay`/`max_staleness` as in [`RegionAggregator::new`] — used by
+    /// the direct two-level [`offer`](Self::offer) path; region partials
+    /// arrive already discounted and bounded.
     pub fn new(shape: &Arc<ModelShape>, max_staleness: usize, decay: f64) -> Self {
         assert!(
             decay > 0.0 && decay <= 1.0,
@@ -90,11 +200,13 @@ impl RootAggregator {
             accepted: 0,
             rejected: 0,
             staleness_sum: 0,
+            regions_merged: 0,
         }
     }
 
-    /// Offer a shard update at root round `round`. Returns the staleness
-    /// if accepted, `None` if the update is over the staleness bound (or
+    /// Offer a shard update directly at root round `round` — the
+    /// two-level path (no region tier). Returns the staleness if
+    /// accepted, `None` if the update is over the staleness bound (or
     /// empty) and was dropped.
     pub fn offer(&mut self, update: &ShardUpdate, round: usize) -> Option<usize> {
         assert!(
@@ -114,7 +226,24 @@ impl RootAggregator {
         Some(staleness)
     }
 
-    /// Shard updates folded in so far.
+    /// Fold a sealed region partial in — the three-level path. The
+    /// partial's weights were already staleness-discounted at the region
+    /// tier, so the merge is exact (unscaled); an all-rejected region
+    /// contributes only its rejection count. Merging the first non-empty
+    /// partial into the empty root is a bitwise copy, which is what
+    /// makes a 1-region hierarchy identical to the two-level fold.
+    pub fn merge_region(&mut self, partial: &RegionUpdate) {
+        self.rejected += partial.rejected;
+        if partial.accepted == 0 {
+            return;
+        }
+        self.root.merge(&partial.agg);
+        self.accepted += partial.accepted;
+        self.staleness_sum += partial.staleness_sum;
+        self.regions_merged += 1;
+    }
+
+    /// Shard updates folded in so far (directly or via region partials).
     pub fn accepted(&self) -> usize {
         self.accepted
     }
@@ -122,6 +251,11 @@ impl RootAggregator {
     /// Shard updates dropped for exceeding the staleness bound.
     pub fn rejected(&self) -> usize {
         self.rejected
+    }
+
+    /// Non-empty region partials merged so far (0 on the two-level path).
+    pub fn regions_merged(&self) -> usize {
+        self.regions_merged
     }
 
     /// Mean staleness over accepted updates (0.0 when none).
@@ -133,10 +267,78 @@ impl RootAggregator {
     }
 
     /// Normalize and return the new global model. Errors when nothing was
-    /// accepted (callers should keep the previous global instead).
+    /// accepted (callers should keep the previous global instead — or use
+    /// [`finish_or_keep`](Self::finish_or_keep), which does exactly that).
     pub fn finish(self) -> Result<ModelParams> {
         self.root.finish()
     }
+
+    /// Normalize and return the new global model, or hand `previous`
+    /// straight back when the round accepted nothing (a fully-stale or
+    /// commit-free round must keep the previous global, never error out
+    /// of the engine). No clone on either path.
+    pub fn finish_or_keep(self, previous: ModelParams) -> ModelParams {
+        if self.accepted == 0 {
+            return previous;
+        }
+        // degenerate guard: accepted updates whose weights sum to zero
+        // (all-zero data sizes) cannot be normalized either
+        self.root.finish().unwrap_or(previous)
+    }
+}
+
+/// The engine's commit fold: region partials are built **concurrently**
+/// (one task per non-empty region, slot-ordered over `executor`) and
+/// merged into the root in region order — the root does O(regions)
+/// merges instead of O(shards). `due[r]` lists region r's due shard
+/// updates in shard order. Returns the root plus, per region, the
+/// accepted `(shard, staleness)` pairs in fold order.
+///
+/// Determinism: each region's fold order is fixed by `due`, the
+/// reduction is slot-ordered, and the root merge order is region order —
+/// so the result is bit-identical for any executor width, and for
+/// `due.len() == 1` bit-identical to offering every update to
+/// [`RootAggregator::offer`] directly (the two-level fold).
+pub fn fold_regions(
+    shape: &Arc<ModelShape>,
+    due: &[Vec<&ShardUpdate>],
+    round: usize,
+    max_staleness: usize,
+    decay: f64,
+    executor: &ParallelExecutor,
+) -> Result<(RootAggregator, Vec<Vec<(usize, usize)>>)> {
+    let mut root = RootAggregator::new(shape, max_staleness, decay);
+    let mut accepts: Vec<Vec<(usize, usize)>> = Vec::new();
+    accepts.resize_with(due.len(), Vec::new);
+    // only regions with due updates get a task (no per-round arena
+    // allocation for idle regions)
+    let busy: Vec<usize> = (0..due.len()).filter(|&r| !due[r].is_empty()).collect();
+    let mut partials: Vec<Option<(RegionUpdate, Vec<(usize, usize)>)>> = Vec::new();
+    partials.resize_with(busy.len(), || None);
+    executor.run_ordered(
+        busy.len(),
+        |bi| {
+            let r = busy[bi];
+            let mut agg = RegionAggregator::new(shape, r, max_staleness, decay);
+            let mut acc = Vec::with_capacity(due[r].len());
+            for upd in &due[r] {
+                if let Some(staleness) = agg.offer(upd, round) {
+                    acc.push((upd.shard, staleness));
+                }
+            }
+            Ok((agg.finish(), acc))
+        },
+        |bi, v| {
+            partials[bi] = Some(v);
+            Ok(())
+        },
+    )?;
+    for (bi, p) in partials.into_iter().enumerate() {
+        let (partial, acc) = p.expect("slot reduced");
+        root.merge_region(&partial);
+        accepts[busy[bi]] = acc;
+    }
+    Ok((root, accepts))
 }
 
 #[cfg(test)]
@@ -224,6 +426,134 @@ mod tests {
         let mut root = RootAggregator::new(&shape(), 3, 1.0);
         assert_eq!(root.offer(&empty, 0), None);
         assert!(root.finish().is_err());
+    }
+
+    #[test]
+    fn finish_or_keep_hands_back_the_previous_global_when_empty() {
+        let prev = filled(7.5);
+        let root = RootAggregator::new(&shape(), 2, 1.0);
+        let kept = root.finish_or_keep(prev.clone());
+        assert_eq!(kept, prev);
+        // ... and matches finish() exactly when something was accepted
+        let mut upd = ShardUpdate::new(&shape(), 0, 3);
+        upd.push(&filled(2.0), 10);
+        let mut a = RootAggregator::new(&shape(), 2, 1.0);
+        a.offer(&upd, 3);
+        let mut b = RootAggregator::new(&shape(), 2, 1.0);
+        b.offer(&upd, 3);
+        assert_eq!(a.finish().unwrap(), b.finish_or_keep(prev));
+    }
+
+    #[test]
+    fn region_tier_with_one_region_is_bitwise_the_two_level_fold() {
+        // the regions = 1 degenerate contract at the fold level: same
+        // updates, same order, same staleness/decay → same bits
+        let mk = |shard: usize, tag: usize, v: f32, w: usize| {
+            let mut u = ShardUpdate::new(&shape(), shard, tag);
+            u.push(&filled(v), w);
+            u
+        };
+        let updates = [
+            mk(0, 5, 0.37, 100),
+            mk(1, 4, -2.25, 640),
+            mk(2, 3, 1.5, 47),
+            mk(3, 1, 9.0, 10), // over the bound: rejected on both paths
+        ];
+        let mut two = RootAggregator::new(&shape(), 2, 0.5);
+        for u in &updates {
+            two.offer(u, 5);
+        }
+        let due: Vec<Vec<&ShardUpdate>> = vec![updates.iter().collect()];
+        for threads in [1, 4] {
+            let ex = ParallelExecutor::new(threads);
+            let (three, accepts) =
+                fold_regions(&shape(), &due, 5, 2, 0.5, &ex).unwrap();
+            assert_eq!(three.accepted(), two.accepted());
+            assert_eq!(three.rejected(), two.rejected());
+            assert_eq!(three.mean_staleness(), two.mean_staleness());
+            assert_eq!(three.regions_merged(), 1);
+            assert_eq!(accepts[0], vec![(0, 0), (1, 1), (2, 2)]);
+            let a = two.clone().finish().unwrap();
+            let b = three.finish().unwrap();
+            assert_eq!(a, b, "threads {threads}");
+            assert!(a
+                .as_slice()
+                .iter()
+                .zip(b.as_slice())
+                .all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+
+    #[test]
+    fn region_partial_carries_max_staleness() {
+        let mk = |shard: usize, tag: usize| {
+            let mut u = ShardUpdate::new(&shape(), shard, tag);
+            u.push(&filled(1.0), 10);
+            u
+        };
+        let mut agg = RegionAggregator::new(&shape(), 3, 4, 0.9);
+        agg.offer(&mk(0, 10), 10);
+        agg.offer(&mk(1, 7), 10);
+        agg.offer(&mk(2, 9), 10);
+        let partial = agg.finish();
+        assert_eq!(partial.region, 3);
+        assert_eq!(partial.accepted, 3);
+        assert_eq!(partial.staleness_max, 3);
+        assert_eq!(partial.staleness_sum, 4);
+    }
+
+    #[test]
+    fn fold_regions_parallel_matches_serial_bitwise() {
+        let mk = |shard: usize, tag: usize, seed: u64| {
+            let mut rng = crate::util::rng::Pcg64::seed_from(seed);
+            let mut m = ModelParams::zeros(&shape());
+            for v in m.as_mut_slice() {
+                *v = rng.normal_scaled(0.0, 0.1) as f32;
+            }
+            let mut u = ShardUpdate::new(&shape(), shard, tag);
+            u.push(&m, 600);
+            u
+        };
+        let updates: Vec<ShardUpdate> =
+            (0..9).map(|s| mk(s, 6 - (s % 3), s as u64)).collect();
+        let due: Vec<Vec<&ShardUpdate>> = vec![
+            updates[0..4].iter().collect(),
+            vec![],
+            updates[4..9].iter().collect(),
+        ];
+        let serial = {
+            let ex = ParallelExecutor::new(1);
+            let (root, acc) = fold_regions(&shape(), &due, 6, 3, 0.7, &ex).unwrap();
+            (root.finish().unwrap(), acc)
+        };
+        for threads in [2, 4] {
+            let ex = ParallelExecutor::new(threads);
+            let (root, acc) = fold_regions(&shape(), &due, 6, 3, 0.7, &ex).unwrap();
+            assert_eq!(acc, serial.1);
+            assert!(acc[1].is_empty());
+            let m = root.finish().unwrap();
+            assert!(m
+                .as_slice()
+                .iter()
+                .zip(serial.0.as_slice())
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn all_rejected_regions_leave_the_root_empty_but_counted() {
+        let mut stale = ShardUpdate::new(&shape(), 0, 0);
+        stale.push(&filled(1.0), 10);
+        let due: Vec<Vec<&ShardUpdate>> = vec![vec![&stale]];
+        let ex = ParallelExecutor::new(1);
+        let (root, accepts) =
+            fold_regions(&shape(), &due, 9, 2, 1.0, &ex).unwrap(); // staleness 9 > 2
+        assert_eq!(root.accepted(), 0);
+        assert_eq!(root.rejected(), 1);
+        assert_eq!(root.regions_merged(), 0);
+        assert!(accepts[0].is_empty());
+        let prev = filled(3.0);
+        assert_eq!(root.finish_or_keep(prev.clone()), prev);
     }
 
     #[test]

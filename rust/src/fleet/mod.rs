@@ -1,18 +1,21 @@
-//! The **fleet layer**: sharded client registry, hierarchical
+//! The **fleet layer**: region-tier client registry, hierarchical
 //! aggregation, and the async bounded-staleness round engine — the
 //! scaling tier that takes the CNC decision layer past ~10⁴ clients per
-//! round (ROADMAP "sharded fleets / async rounds").
+//! round and keeps the root fold flat past ~10³ shards (ROADMAP
+//! "sharded fleets / async rounds / multi-root hierarchies").
 //!
 //! ```text
 //!               ┌──────────────────────────────┐
 //!               │     fleet::async_round       │  round engine
 //!               │ per-shard cadence, staleness │
+//!               │ churn → rebalance            │
 //!               └──────┬──────────────┬────────┘
 //!        decisions     │              │   updates
 //!  ┌───────────────────▼──┐   ┌───────▼───────────────┐
 //!  │   fleet::registry    │   │   fleet::hierarchy    │
-//!  │ K shards × O(shard²) │   │ shard folds → root    │
-//!  │ SchedulingOptimizer  │   │ fold (exact Eq 1)     │
+//!  │ R regions × K shards │   │ shard folds → region  │
+//!  │ O(shard²) decisions  │   │ folds (∥) → root fold │
+//!  │ SchedulingOptimizer  │   │ over R partials       │
 //!  └──────────────────────┘   └───────────────────────┘
 //! ```
 //!
@@ -21,17 +24,20 @@
 //! allocation is Hungarian (Eq 5) or bottleneck (Eq 6) on the shard's
 //! client×RB matrices, P2P paths are Algorithm 3 over the shard's
 //! sub-topology (Eq 7) — just on K small strata instead of one flat
-//! fleet. The hierarchy preserves Eq 1's weighted average exactly, and
-//! `shards = 1, max_staleness = 0` reproduces the flat coordinator
-//! bit-for-bit (`tests/fleet_props.rs`).
+//! fleet. The three-level hierarchy preserves Eq 1's weighted average
+//! exactly; `regions = 1` reproduces the two-level fold bit-for-bit and
+//! `shards = 1, regions = 1, max_staleness = 0` reproduces the flat
+//! coordinator bit-for-bit (`tests/fleet_props.rs`).
 
 pub mod async_round;
 pub mod hierarchy;
 pub mod registry;
 
 pub use async_round::{run, run_with_model, shard_periods, FleetConfig};
-pub use hierarchy::{RootAggregator, ShardUpdate};
+pub use hierarchy::{
+    fold_regions, RegionAggregator, RegionUpdate, RootAggregator, ShardUpdate,
+};
 pub use registry::{
     decide_p2p_sharded, decide_traditional_sharded, split_proportional,
-    FleetShards, Shard, ShardBy, ShardRoundDecision,
+    ChurnDiff, FleetTopology, Region, Shard, ShardBy, ShardRoundDecision,
 };

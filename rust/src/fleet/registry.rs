@@ -1,24 +1,42 @@
-//! Sharded client registry — the piece that takes the CNC decision layer
-//! past ~10⁴ clients per round.
+//! Sharded client registry with a **region tier** — the piece that takes
+//! the CNC decision layer past ~10⁴ clients per round and keeps it there
+//! while the fleet churns.
 //!
 //! The paper's CNC "arranges devices to participate in training based on
 //! arithmetic power" over one flat fleet, which makes every scheduling
 //! decision O(fleet²) or worse (the Hungarian RB assignment is cubic in
-//! the cohort). [`FleetShards`] partitions the pooled fleet into K shards
-//! by **locality** (radio distance — a geography proxy) or **power
+//! the cohort). [`FleetTopology`] partitions the pooled fleet into K
+//! shards by **locality** (radio distance — a geography proxy) or **power
 //! stratum** (Eq 8 delay), hands each shard its own [`ResourcePool`] view
-//! (and `CostMatrix` sub-view for P2P), and fans per-shard
+//! (and a cached `CostMatrix` sub-view for P2P), and fans per-shard
 //! `SchedulingOptimizer` decisions out over `runtime::ParallelExecutor` —
-//! K independent O(shard²) problems instead of one O(fleet²) one.
+//! K independent O(shard²) problems instead of one O(fleet²) one. Shards
+//! are then grouped into R **regions** (contiguous cut over the region
+//! key, locality by default), so the aggregation hierarchy folds
+//! region → shard → client and the root only ever merges R partials
+//! (`fleet::hierarchy`).
 //!
 //! # Determinism
 //!
 //! Shard membership is a pure function of the pooled fleet state: clients
-//! are sorted by the shard key (ties broken by id) and cut contiguously,
-//! and every shard's member list is then re-sorted by **global id**, so a
-//! 1-shard registry is the identity view of the fleet — the foundation of
-//! the engine's bit-exact degenerate mode (`shards = 1`).
+//! are sorted by the shard key (ties broken by pool index) and cut
+//! contiguously, every shard's member list is re-sorted by **pool
+//! index**, and regions cut the shard list the same way over the shards'
+//! mean region key. A 1-shard, 1-region topology is the identity view of
+//! the fleet — the foundation of the engine's bit-exact degenerate mode
+//! (`shards = 1, regions = 1`).
+//!
+//! # Churn
+//!
+//! Every pool row carries a **stable client id** (`client_ids`) that
+//! survives [`FleetTopology::rebalance`]. [`FleetTopology::churn`]
+//! simulates fleet churn: a deterministic fraction of clients leaves and
+//! is replaced in place by fresh joiners (new stable ids, re-drawn delay
+//! and radio site), after which the strata are rebuilt and a
+//! [`ChurnDiff`] reports how many clients joined, left, and moved
+//! between shards. Rebalancing invalidates the cached cost-matrix views.
 
+use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
 
 use anyhow::{bail, Result};
@@ -28,12 +46,15 @@ use crate::cnc::optimize::{
     SchedulingOptimizer,
 };
 use crate::cnc::pooling::ResourcePool;
+use crate::netsim::channel::RadioSite;
 use crate::netsim::topology::CostMatrix;
 use crate::runtime::ParallelExecutor;
 use crate::scheduler::power::FleetInfo;
 use crate::util::rng::Pcg64;
+use crate::util::stats;
 
-/// Which static client attribute keys the shard partition.
+/// Which static client attribute keys the shard partition (and, taken as
+/// a per-shard mean, the region grouping).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardBy {
     /// radio distance to the aggregation site (geography/topology proxy)
@@ -47,7 +68,7 @@ pub enum ShardBy {
 #[derive(Debug, Clone)]
 pub struct Shard {
     pub id: usize,
-    /// fleet-global client ids, ascending
+    /// fleet pool indices, ascending
     pub members: Vec<usize>,
     /// shard-local resource view (delays/data sizes/sites re-indexed
     /// 0..members.len(), same channel model)
@@ -63,14 +84,21 @@ impl Shard {
         self.members.is_empty()
     }
 
-    /// Map a shard-local client index back to its fleet-global id.
+    /// Map a shard-local client index back to its fleet pool index.
     pub fn to_global(&self, local: usize) -> usize {
         self.members[local]
     }
 
     /// Mean Eq 8 local delay of the shard (drives the async cadence).
     pub fn mean_delay_s(&self) -> f64 {
-        crate::util::stats::mean(&self.pool.fleet.delays_s)
+        stats::mean(&self.pool.fleet.delays_s)
+    }
+
+    /// Mean radio distance of the shard (drives the region grouping).
+    pub fn mean_distance_m(&self) -> f64 {
+        let d: Vec<f64> =
+            self.pool.sites.iter().map(|s| s.distance_m).collect();
+        stats::mean(&d)
     }
 
     /// Shard-local t_max − t_min over a shard-local cohort.
@@ -82,76 +110,200 @@ impl Shard {
             .iter()
             .map(|&i| self.pool.fleet.delays_s[i])
             .collect();
-        crate::util::stats::max(&d) - crate::util::stats::min(&d)
+        stats::max(&d) - stats::min(&d)
     }
 }
 
-/// The sharded registry over one experiment's pooled fleet.
+/// One region: a contiguous group of shards whose partials fold together
+/// before the root sees them.
 #[derive(Debug, Clone)]
-pub struct FleetShards {
-    pub shards: Vec<Shard>,
-    /// shard id of every fleet-global client
-    pub shard_of_client: Vec<usize>,
+pub struct Region {
+    pub id: usize,
+    /// shard ids, ascending
+    pub shards: Vec<usize>,
 }
 
-impl FleetShards {
-    /// Partition `pool` into `k` shards. `k = 1` yields the identity view.
-    pub fn build(pool: &ResourcePool, k: usize, by: ShardBy) -> Result<Self> {
-        let u = pool.fleet.num_clients();
-        if k == 0 || k > u {
-            bail!("need 1 <= shards({k}) <= fleet({u})");
+/// What a rebalance did to the fleet (counts over **stable client ids**).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChurnDiff {
+    /// stable ids present after the rebalance that did not exist before
+    pub joined: usize,
+    /// stable ids present before the rebalance that no longer exist
+    pub left: usize,
+    /// surviving ids whose shard assignment changed
+    pub moved: usize,
+}
+
+/// The three-level (region → shard → client) registry over one
+/// experiment's pooled fleet.
+#[derive(Debug, Clone)]
+pub struct FleetTopology {
+    pub shards: Vec<Shard>,
+    pub regions: Vec<Region>,
+    /// shard id of every fleet pool index
+    pub shard_of_client: Vec<usize>,
+    /// region id of every shard
+    pub region_of_shard: Vec<usize>,
+    /// stable global id of every pool row; survives `rebalance`, fresh
+    /// ids are minted by `churn` for joiners
+    pub client_ids: Vec<u64>,
+    next_client_id: u64,
+    shard_by: ShardBy,
+    region_by: ShardBy,
+    /// per-shard P2P cost sub-views, built once per topology by
+    /// `cache_cost_views` (cleared on rebalance). Empty until cached.
+    cost_views: Vec<CostMatrix>,
+    /// identity of the matrix the views were built from, so a consumer
+    /// handing in a *different* matrix fails loudly instead of silently
+    /// deciding on stale costs
+    cost_views_fingerprint: Option<(usize, u64)>,
+}
+
+/// Cheap identity for a cost matrix: its size plus a 64-entry strided
+/// sample folded into a hash — detects a regenerated/mutated matrix
+/// without an O(n²) scan per round.
+fn cost_fingerprint(g: &CostMatrix) -> (usize, u64) {
+    let n = g.n;
+    let mut acc = 0u64;
+    if n > 0 {
+        let cells = n * n;
+        let samples = cells.min(64);
+        let stride = (cells / samples).max(1);
+        let mut idx = 0usize;
+        for _ in 0..samples {
+            acc = acc
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(g.at(idx / n, idx % n).to_bits());
+            idx += stride;
         }
-        let key = |i: usize| -> f64 {
-            match by {
-                ShardBy::Locality => pool.sites[i].distance_m,
-                ShardBy::Power => pool.fleet.delays_s[i],
-            }
+    }
+    (n, acc)
+}
+
+/// Contiguous stratified cut of `pool` into `k` shards along `by`.
+fn partition(
+    pool: &ResourcePool,
+    k: usize,
+    by: ShardBy,
+) -> Result<(Vec<Shard>, Vec<usize>)> {
+    let u = pool.fleet.num_clients();
+    if k == 0 || k > u {
+        bail!("need 1 <= shards({k}) <= fleet({u})");
+    }
+    let key = |i: usize| -> f64 {
+        match by {
+            ShardBy::Locality => pool.sites[i].distance_m,
+            ShardBy::Power => pool.fleet.delays_s[i],
+        }
+    };
+    let mut order: Vec<usize> = (0..u).collect();
+    // total_cmp: a NaN delay from a degenerate channel sorts last
+    // (after +inf) instead of panicking the whole fleet build
+    order.sort_by(|&a, &b| key(a).total_cmp(&key(b)).then(a.cmp(&b)));
+    // contiguous cut into k parts, sizes as equal as possible — the
+    // same `util::chunk_even` scheme PowerGroups strata use
+    let mut shards = Vec::with_capacity(k);
+    let mut shard_of_client = vec![0usize; u];
+    for (id, mut members) in
+        crate::util::chunk_even(&order, k).into_iter().enumerate()
+    {
+        // pool-index order inside the shard keeps shard-local views
+        // stable and makes k = 1 the exact identity view
+        members.sort_unstable();
+        for &c in &members {
+            shard_of_client[c] = id;
+        }
+        let fleet = FleetInfo {
+            delays_s: members.iter().map(|&c| pool.fleet.delays_s[c]).collect(),
+            data_sizes: members
+                .iter()
+                .map(|&c| pool.fleet.data_sizes[c])
+                .collect(),
         };
-        let mut order: Vec<usize> = (0..u).collect();
-        // total_cmp: a NaN delay from a degenerate channel sorts last
-        // (after +inf) instead of panicking the whole fleet build
-        order.sort_by(|&a, &b| {
-            key(a).total_cmp(&key(b)).then(a.cmp(&b))
+        let sites = members.iter().map(|&c| pool.sites[c].clone()).collect();
+        shards.push(Shard {
+            id,
+            members,
+            pool: ResourcePool {
+                fleet,
+                sites,
+                channel: pool.channel.clone(),
+            },
         });
-        // contiguous cut into k parts, sizes as equal as possible — the
-        // same `util::chunk_even` scheme PowerGroups strata use
-        let mut shards = Vec::with_capacity(k);
-        let mut shard_of_client = vec![0usize; u];
-        for (id, mut members) in
-            crate::util::chunk_even(&order, k).into_iter().enumerate()
-        {
-            // global-id order inside the shard keeps shard-local views
-            // stable and makes k = 1 the exact identity view
-            members.sort_unstable();
-            for &c in &members {
-                shard_of_client[c] = id;
-            }
-            let fleet = FleetInfo {
-                delays_s: members.iter().map(|&c| pool.fleet.delays_s[c]).collect(),
-                data_sizes: members
-                    .iter()
-                    .map(|&c| pool.fleet.data_sizes[c])
-                    .collect(),
-            };
-            let sites = members.iter().map(|&c| pool.sites[c].clone()).collect();
-            shards.push(Shard {
-                id,
-                members,
-                pool: ResourcePool {
-                    fleet,
-                    sites,
-                    channel: pool.channel.clone(),
-                },
-            });
+    }
+    Ok((shards, shard_of_client))
+}
+
+/// Group `shards` into `r` regions: contiguous cut over the shards'
+/// mean region key (ties broken by shard id), each region's shard list
+/// re-sorted ascending. `r = 1` yields the identity grouping.
+fn group_regions(
+    shards: &[Shard],
+    r: usize,
+    by: ShardBy,
+) -> (Vec<Region>, Vec<usize>) {
+    let k = shards.len();
+    let key = |s: &Shard| -> f64 {
+        match by {
+            ShardBy::Locality => s.mean_distance_m(),
+            ShardBy::Power => s.mean_delay_s(),
         }
-        Ok(FleetShards {
+    };
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| {
+        key(&shards[a]).total_cmp(&key(&shards[b])).then(a.cmp(&b))
+    });
+    let mut regions = Vec::with_capacity(r);
+    let mut region_of_shard = vec![0usize; k];
+    for (id, mut members) in
+        crate::util::chunk_even(&order, r).into_iter().enumerate()
+    {
+        members.sort_unstable();
+        for &s in &members {
+            region_of_shard[s] = id;
+        }
+        regions.push(Region { id, shards: members });
+    }
+    (regions, region_of_shard)
+}
+
+impl FleetTopology {
+    /// Partition `pool` into `shards` shards grouped into `regions`
+    /// regions. `shards = 1, regions = 1` yields the identity view.
+    pub fn build(
+        pool: &ResourcePool,
+        shards: usize,
+        shard_by: ShardBy,
+        regions: usize,
+        region_by: ShardBy,
+    ) -> Result<Self> {
+        if regions == 0 || regions > shards {
+            bail!("need 1 <= regions({regions}) <= shards({shards})");
+        }
+        let (shards, shard_of_client) = partition(pool, shards, shard_by)?;
+        let (regions, region_of_shard) =
+            group_regions(&shards, regions, region_by);
+        let u = shard_of_client.len();
+        Ok(FleetTopology {
             shards,
+            regions,
             shard_of_client,
+            region_of_shard,
+            client_ids: (0..u as u64).collect(),
+            next_client_id: u as u64,
+            shard_by,
+            region_by,
+            cost_views: Vec::new(),
+            cost_views_fingerprint: None,
         })
     }
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    pub fn num_regions(&self) -> usize {
+        self.regions.len()
     }
 
     /// Total clients across all shards.
@@ -164,10 +316,155 @@ impl FleetShards {
         self.shards.iter().map(|s| s.len()).collect()
     }
 
-    /// The shard-local view of a fleet-global P2P cost matrix — what each
-    /// shard's Algorithm 3 run operates on (O(shard²) storage).
+    /// The shard-local view of a fleet-global P2P cost matrix — an
+    /// O(shard²) clone. Hot callers should run
+    /// [`cache_cost_views`](Self::cache_cost_views) once per topology
+    /// instead of rebuilding this every round.
     pub fn shard_cost_matrix(&self, g: &CostMatrix, shard: usize) -> CostMatrix {
         g.submatrix(&self.shards[shard].members)
+    }
+
+    /// Build (once) the per-shard sub-views of `g` that
+    /// `decide_p2p_sharded` operates on. Cleared by `rebalance`/`churn`
+    /// (membership changed), after which the caller re-caches against
+    /// the current topology.
+    pub fn cache_cost_views(&mut self, g: &CostMatrix) {
+        self.cost_views = (0..self.shards.len())
+            .map(|s| self.shard_cost_matrix(g, s))
+            .collect();
+        self.cost_views_fingerprint = Some(cost_fingerprint(g));
+    }
+
+    /// Were the cached views built from (a matrix indistinguishable
+    /// from) `g`?
+    pub fn cost_views_match(&self, g: &CostMatrix) -> bool {
+        self.cost_views_fingerprint == Some(cost_fingerprint(g))
+    }
+
+    /// The cached sub-view for `shard`, if `cache_cost_views` ran since
+    /// the last rebalance.
+    pub fn cost_view(&self, shard: usize) -> Option<&CostMatrix> {
+        self.cost_views.get(shard)
+    }
+
+    pub fn has_cost_views(&self) -> bool {
+        !self.cost_views.is_empty()
+    }
+
+    /// The current stable-id → shard assignment (the "before" side of a
+    /// [`ChurnDiff`]).
+    fn assignment(&self) -> HashMap<u64, usize> {
+        self.client_ids
+            .iter()
+            .copied()
+            .zip(self.shard_of_client.iter().copied())
+            .collect()
+    }
+
+    /// Re-partition from the (possibly mutated) pool with the topology's
+    /// stored shape, invalidating cached cost views.
+    fn rebuild(&mut self, pool: &ResourcePool) -> Result<()> {
+        let (shards, shard_of_client) =
+            partition(pool, self.shards.len(), self.shard_by)?;
+        let (regions, region_of_shard) =
+            group_regions(&shards, self.regions.len(), self.region_by);
+        self.shards = shards;
+        self.regions = regions;
+        self.shard_of_client = shard_of_client;
+        self.region_of_shard = region_of_shard;
+        self.cost_views.clear();
+        self.cost_views_fingerprint = None;
+        Ok(())
+    }
+
+    /// Diff the current assignment against a pre-rebuild snapshot.
+    fn diff_from(&self, old: &HashMap<u64, usize>) -> ChurnDiff {
+        let new_ids: HashSet<u64> = self.client_ids.iter().copied().collect();
+        let left = old.keys().filter(|id| !new_ids.contains(id)).count();
+        let mut joined = 0usize;
+        let mut moved = 0usize;
+        for (i, id) in self.client_ids.iter().enumerate() {
+            match old.get(id) {
+                None => joined += 1,
+                Some(&s) if s != self.shard_of_client[i] => moved += 1,
+                Some(_) => {}
+            }
+        }
+        ChurnDiff { joined, left, moved }
+    }
+
+    /// Rebuild shards and regions from the (possibly mutated) pool,
+    /// preserving stable client ids, and report what changed. The pool
+    /// must describe the same rows as `client_ids` (same length — churn
+    /// replaces clients in place). Cached cost views are invalidated.
+    pub fn rebalance(&mut self, pool: &ResourcePool) -> Result<ChurnDiff> {
+        let u = pool.fleet.num_clients();
+        if u != self.client_ids.len() {
+            bail!(
+                "rebalance pool has {u} clients but the topology tracks {}",
+                self.client_ids.len()
+            );
+        }
+        let old = self.assignment();
+        self.rebuild(pool)?;
+        Ok(self.diff_from(&old))
+    }
+
+    /// Simulate fleet churn: replace `rate` of the clients (rounded) in
+    /// place with fresh joiners — new stable ids, delay re-drawn
+    /// uniformly over the **pre-churn** fleet's finite delay range,
+    /// radio site re-drawn from the channel's distance range; the slot's
+    /// data volume is inherited — then rebalance. The reported
+    /// [`ChurnDiff`] is against the pre-churn assignment (joiners count
+    /// as joined, never as moved). Deterministic in `rng`.
+    pub fn churn(
+        &mut self,
+        pool: &mut ResourcePool,
+        rate: f64,
+        rng: &Pcg64,
+    ) -> Result<ChurnDiff> {
+        if !(0.0..=1.0).contains(&rate) {
+            bail!("churn rate {rate} outside [0, 1]");
+        }
+        let u = pool.fleet.num_clients();
+        if u != self.client_ids.len() {
+            bail!(
+                "churn pool has {u} clients but the topology tracks {}",
+                self.client_ids.len()
+            );
+        }
+        let n = ((rate * u as f64).round() as usize).min(u);
+        if n == 0 {
+            return Ok(ChurnDiff::default());
+        }
+        // snapshot BEFORE minting joiner ids, or the diff sees nothing
+        let old = self.assignment();
+        let mut rng = rng.split("churn");
+        let mut replaced = rng.sample_indices(u, n);
+        replaced.sort_unstable(); // deterministic redraw order
+        let finite: Vec<f64> = pool
+            .fleet
+            .delays_s
+            .iter()
+            .copied()
+            .filter(|d| d.is_finite())
+            .collect();
+        let (lo, hi) = if finite.is_empty() {
+            (1.0, 10.0)
+        } else {
+            (stats::min(&finite), stats::max(&finite))
+        };
+        let (d_lo, d_hi) = pool.channel.distance_m;
+        for &i in &replaced {
+            pool.fleet.delays_s[i] = rng.uniform(lo, hi);
+            pool.sites[i] = RadioSite {
+                distance_m: rng.uniform(d_lo, d_hi),
+            };
+            self.client_ids[i] = self.next_client_id;
+            self.next_client_id += 1;
+        }
+        self.rebuild(pool)?;
+        Ok(self.diff_from(&old))
     }
 }
 
@@ -228,11 +525,11 @@ pub fn split_proportional(total: usize, sizes: &[usize]) -> Vec<usize> {
 }
 
 /// One shard's traditional-architecture decision, with the cohort lifted
-/// back to fleet-global ids (shard-local slot order preserved).
+/// back to fleet pool indices (shard-local slot order preserved).
 #[derive(Debug, Clone)]
 pub struct ShardRoundDecision {
     pub shard: usize,
-    /// fleet-global cohort ids, in shard-local slot order
+    /// fleet pool indices of the cohort, in shard-local slot order
     pub cohort_global: Vec<usize>,
     /// the raw shard-local decision (delays/energies aligned with slots)
     pub decision: RoundDecision,
@@ -245,7 +542,7 @@ pub struct ShardRoundDecision {
 /// closure needing `&mut` access.
 #[allow(clippy::too_many_arguments)]
 pub fn decide_traditional_sharded(
-    fleet: &FleetShards,
+    fleet: &FleetTopology,
     optimizers: &[Mutex<SchedulingOptimizer>],
     shard_ids: &[usize],
     cohort_strategy: CohortStrategy,
@@ -289,9 +586,13 @@ pub fn decide_traditional_sharded(
 }
 
 /// Run `decide_p2p` per shard over the shard-local sub-topologies, fanned
-/// out over the executor. Part orders come back in fleet-global ids.
+/// out over the executor. Part orders come back in fleet pool indices.
+/// Uses the topology's cached cost views when present (the per-round
+/// O(shard²) `submatrix` clone disappears) — erroring if the cache was
+/// built from a different matrix than `g` — and falls back to building
+/// the sub-views on the fly when nothing is cached.
 pub fn decide_p2p_sharded(
-    fleet: &FleetShards,
+    fleet: &FleetTopology,
     optimizers: &[Mutex<SchedulingOptimizer>],
     g: &CostMatrix,
     path_strategy: PathStrategy,
@@ -300,17 +601,30 @@ pub fn decide_p2p_sharded(
 ) -> Result<Vec<P2pDecision>> {
     let k = fleet.num_shards();
     assert_eq!(rngs.len(), k);
+    if fleet.has_cost_views() && !fleet.cost_views_match(g) {
+        bail!(
+            "cached cost views were built from a different cost matrix; \
+             call cache_cost_views(g) after changing the topology input"
+        );
+    }
     let mut out: Vec<Option<P2pDecision>> = Vec::new();
     out.resize_with(k, || None);
     executor.run_ordered(
         k,
         |s| {
             let shard = &fleet.shards[s];
-            let sub = fleet.shard_cost_matrix(g, s);
+            let built;
+            let sub = match fleet.cost_view(s) {
+                Some(v) => v,
+                None => {
+                    built = fleet.shard_cost_matrix(g, s);
+                    &built
+                }
+            };
             let mut opt = optimizers[s].lock().expect("optimizer poisoned");
             let mut d = opt.decide_p2p(
                 &shard.pool,
-                &sub,
+                sub,
                 &crate::cnc::optimize::PartitionStrategy::All,
                 path_strategy,
                 &rngs[s],
@@ -351,12 +665,17 @@ mod tests {
         ResourcePool::model(&reg, ch, 1)
     }
 
+    fn flat(p: &ResourcePool, k: usize, by: ShardBy) -> Result<FleetTopology> {
+        FleetTopology::build(p, k, by, 1, by)
+    }
+
     #[test]
     fn shards_partition_the_fleet_exactly() {
         let p = pool(53, 0);
         for by in [ShardBy::Locality, ShardBy::Power] {
-            let f = FleetShards::build(&p, 7, by).unwrap();
+            let f = FleetTopology::build(&p, 7, by, 3, by).unwrap();
             assert_eq!(f.num_shards(), 7);
+            assert_eq!(f.num_regions(), 3);
             let mut all: Vec<usize> = f
                 .shards
                 .iter()
@@ -380,22 +699,47 @@ mod tests {
     }
 
     #[test]
+    fn regions_partition_the_shards_exactly() {
+        let p = pool(60, 11);
+        for (k, r) in [(8usize, 3usize), (5, 5), (6, 1)] {
+            let f = FleetTopology::build(&p, k, ShardBy::Power, r, ShardBy::Locality)
+                .unwrap();
+            assert_eq!(f.regions.len(), r);
+            let mut all: Vec<usize> =
+                f.regions.iter().flat_map(|rg| rg.shards.clone()).collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..k).collect::<Vec<_>>());
+            for rg in &f.regions {
+                assert!(!rg.shards.is_empty(), "empty region");
+                assert!(rg.shards.windows(2).all(|w| w[0] < w[1]));
+                for &s in &rg.shards {
+                    assert_eq!(f.region_of_shard[s], rg.id);
+                }
+            }
+        }
+        // one region is the identity grouping over the shards
+        let f = flat(&p, 6, ShardBy::Power).unwrap();
+        assert_eq!(f.regions[0].shards, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn one_shard_is_the_identity_view() {
         let p = pool(20, 1);
-        let f = FleetShards::build(&p, 1, ShardBy::Power).unwrap();
+        let f = flat(&p, 1, ShardBy::Power).unwrap();
         assert_eq!(f.shards[0].members, (0..20).collect::<Vec<_>>());
         assert_eq!(f.shards[0].pool.fleet.delays_s, p.fleet.delays_s);
         assert_eq!(f.shards[0].pool.fleet.data_sizes, p.fleet.data_sizes);
+        assert_eq!(f.client_ids, (0..20u64).collect::<Vec<_>>());
     }
 
     #[test]
     fn power_sharding_stratifies_delay() {
         let p = pool(60, 2);
-        let f = FleetShards::build(&p, 4, ShardBy::Power).unwrap();
+        let f = flat(&p, 4, ShardBy::Power).unwrap();
         // shard s's slowest member is ≤ shard s+1's fastest member
         for w in f.shards.windows(2) {
-            let max_lo = crate::util::stats::max(&w[0].pool.fleet.delays_s);
-            let min_hi = crate::util::stats::min(&w[1].pool.fleet.delays_s);
+            let max_lo = stats::max(&w[0].pool.fleet.delays_s);
+            let min_hi = stats::min(&w[1].pool.fleet.delays_s);
             assert!(max_lo <= min_hi + 1e-12);
         }
     }
@@ -409,7 +753,7 @@ mod tests {
         p.fleet.delays_s[3] = f64::NAN;
         p.fleet.delays_s[11] = f64::NAN;
         for by in [ShardBy::Power, ShardBy::Locality] {
-            let f = FleetShards::build(&p, 4, by).unwrap();
+            let f = FleetTopology::build(&p, 4, by, 2, by).unwrap();
             let mut all: Vec<usize> =
                 f.shards.iter().flat_map(|s| s.members.clone()).collect();
             all.sort_unstable();
@@ -417,21 +761,122 @@ mod tests {
         }
         // NaN keys sort after every finite delay under total_cmp, so both
         // degenerate clients land in the last power stratum
-        let f = FleetShards::build(&p, 4, ShardBy::Power).unwrap();
+        let f = flat(&p, 4, ShardBy::Power).unwrap();
         let last = f.shards.last().unwrap();
         assert!(last.members.contains(&3) && last.members.contains(&11));
         // determinism: the same degenerate pool builds the same shards
-        let g = FleetShards::build(&p, 4, ShardBy::Power).unwrap();
+        let g = flat(&p, 4, ShardBy::Power).unwrap();
         for (a, b) in f.shards.iter().zip(&g.shards) {
             assert_eq!(a.members, b.members);
         }
     }
 
     #[test]
-    fn bad_shard_counts_error() {
+    fn bad_shard_and_region_counts_error() {
         let p = pool(5, 3);
-        assert!(FleetShards::build(&p, 0, ShardBy::Power).is_err());
-        assert!(FleetShards::build(&p, 6, ShardBy::Power).is_err());
+        assert!(flat(&p, 0, ShardBy::Power).is_err());
+        assert!(flat(&p, 6, ShardBy::Power).is_err());
+        assert!(
+            FleetTopology::build(&p, 3, ShardBy::Power, 0, ShardBy::Power).is_err()
+        );
+        assert!(
+            FleetTopology::build(&p, 3, ShardBy::Power, 4, ShardBy::Power).is_err()
+        );
+    }
+
+    #[test]
+    fn rebalance_without_pool_change_moves_nobody() {
+        let p = pool(40, 12);
+        let mut f =
+            FleetTopology::build(&p, 5, ShardBy::Power, 2, ShardBy::Locality)
+                .unwrap();
+        let before: Vec<Vec<usize>> =
+            f.shards.iter().map(|s| s.members.clone()).collect();
+        let diff = f.rebalance(&p).unwrap();
+        assert_eq!(diff, ChurnDiff::default());
+        for (s, b) in f.shards.iter().zip(&before) {
+            assert_eq!(&s.members, b);
+        }
+    }
+
+    #[test]
+    fn churn_replaces_ids_and_reports_the_diff() {
+        let mut p = pool(50, 13);
+        let mut f =
+            FleetTopology::build(&p, 5, ShardBy::Power, 2, ShardBy::Power)
+                .unwrap();
+        let old_ids: HashSet<u64> = f.client_ids.iter().copied().collect();
+        let rng = Pcg64::new(99, 0);
+        let diff = f.churn(&mut p, 0.2, &rng).unwrap();
+        assert_eq!(diff.joined, 10);
+        assert_eq!(diff.left, 10);
+        // joiners got fresh ids ≥ 50; survivors kept theirs
+        let new_ids: HashSet<u64> = f.client_ids.iter().copied().collect();
+        assert_eq!(new_ids.len(), 50, "ids must stay unique");
+        assert_eq!(old_ids.intersection(&new_ids).count(), 40);
+        assert!(new_ids.iter().filter(|&&id| id >= 50).count() == 10);
+        // shards still partition the (same-sized) fleet, none empty
+        let mut all: Vec<usize> =
+            f.shards.iter().flat_map(|s| s.members.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..50).collect::<Vec<_>>());
+        assert!(f.shards.iter().all(|s| !s.is_empty()));
+        // determinism: same pool + same rng → same churn
+        let mut p2 = pool(50, 13);
+        let mut f2 =
+            FleetTopology::build(&p2, 5, ShardBy::Power, 2, ShardBy::Power)
+                .unwrap();
+        let diff2 = f2.churn(&mut p2, 0.2, &Pcg64::new(99, 0)).unwrap();
+        assert_eq!(diff, diff2);
+        assert_eq!(f.client_ids, f2.client_ids);
+        // zero rate is a no-op
+        let diff0 = f.churn(&mut p, 0.0, &rng).unwrap();
+        assert_eq!(diff0, ChurnDiff::default());
+        // out-of-range rate errors
+        assert!(f.churn(&mut p, 1.5, &rng).is_err());
+    }
+
+    #[test]
+    fn cost_views_cache_and_invalidate() {
+        let mut p = pool(24, 14);
+        let mut f = flat(&p, 3, ShardBy::Locality).unwrap();
+        let mut rng = Pcg64::seed_from(6);
+        let g = TopologyGen::full(24, 1.0, 10.0, &mut rng);
+        assert!(!f.has_cost_views());
+        assert!(f.cost_view(0).is_none());
+        f.cache_cost_views(&g);
+        assert!(f.has_cost_views());
+        for s in 0..3 {
+            let cached = f.cost_view(s).unwrap();
+            let fresh = f.shard_cost_matrix(&g, s);
+            assert_eq!(cached.n, fresh.n);
+            for a in 0..cached.n {
+                for b in 0..cached.n {
+                    assert_eq!(cached.at(a, b), fresh.at(a, b));
+                }
+            }
+        }
+        // a different matrix is detected, not silently served stale
+        let mut rng2 = Pcg64::seed_from(7);
+        let g2 = TopologyGen::full(24, 2.0, 20.0, &mut rng2);
+        assert!(f.cost_views_match(&g));
+        assert!(!f.cost_views_match(&g2));
+        let optimizers: Vec<Mutex<SchedulingOptimizer>> =
+            (0..3).map(|_| Mutex::new(SchedulingOptimizer::new())).collect();
+        let rngs: Vec<Pcg64> = (0..3).map(|s| Pcg64::new(3, s as u64)).collect();
+        let ex = ParallelExecutor::new(1);
+        assert!(decide_p2p_sharded(
+            &f,
+            &optimizers,
+            &g2,
+            PathStrategy::Greedy,
+            &rngs,
+            &ex
+        )
+        .is_err());
+        // rebalance (here via churn) invalidates the cache
+        f.churn(&mut p, 0.25, &Pcg64::new(1, 2)).unwrap();
+        assert!(!f.has_cost_views());
     }
 
     #[test]
@@ -457,7 +902,7 @@ mod tests {
     #[test]
     fn sharded_traditional_decisions_stay_in_shard() {
         let p = pool(40, 4);
-        let f = FleetShards::build(&p, 4, ShardBy::Power).unwrap();
+        let f = flat(&p, 4, ShardBy::Power).unwrap();
         let optimizers: Vec<Mutex<SchedulingOptimizer>> =
             (0..4).map(|_| Mutex::new(SchedulingOptimizer::new())).collect();
         let shard_ids: Vec<usize> = (0..4).collect();
@@ -486,24 +931,39 @@ mod tests {
     }
 
     #[test]
-    fn sharded_p2p_chains_cover_each_shard() {
+    fn sharded_p2p_chains_cover_each_shard_cached_or_not() {
         let p = pool(24, 5);
-        let f = FleetShards::build(&p, 3, ShardBy::Locality).unwrap();
+        let mut f = flat(&p, 3, ShardBy::Locality).unwrap();
         let optimizers: Vec<Mutex<SchedulingOptimizer>> =
             (0..3).map(|_| Mutex::new(SchedulingOptimizer::new())).collect();
         let mut rng = Pcg64::seed_from(6);
         let g = TopologyGen::full(24, 1.0, 10.0, &mut rng);
         let rngs: Vec<Pcg64> = (0..3).map(|s| Pcg64::new(7, s as u64)).collect();
         let ex = ParallelExecutor::new(2);
-        let ds =
+        let uncached =
             decide_p2p_sharded(&f, &optimizers, &g, PathStrategy::Greedy, &rngs, &ex)
                 .unwrap();
-        assert_eq!(ds.len(), 3);
-        for (s, d) in ds.iter().enumerate() {
+        for (s, d) in uncached.iter().enumerate() {
             let mut covered: Vec<usize> =
                 d.parts.iter().flat_map(|p| p.order.clone()).collect();
             covered.sort_unstable();
             assert_eq!(covered, f.shards[s].members);
+        }
+        // cached views produce the same decisions (fresh optimizers: the
+        // greedy path keeps per-round state)
+        f.cache_cost_views(&g);
+        let optimizers2: Vec<Mutex<SchedulingOptimizer>> =
+            (0..3).map(|_| Mutex::new(SchedulingOptimizer::new())).collect();
+        let rngs2: Vec<Pcg64> = (0..3).map(|s| Pcg64::new(7, s as u64)).collect();
+        let cached = decide_p2p_sharded(
+            &f, &optimizers2, &g, PathStrategy::Greedy, &rngs2, &ex,
+        )
+        .unwrap();
+        for (a, b) in uncached.iter().zip(&cached) {
+            assert_eq!(a.parts.len(), b.parts.len());
+            for (pa, pb) in a.parts.iter().zip(&b.parts) {
+                assert_eq!(pa.order, pb.order);
+            }
         }
     }
 }

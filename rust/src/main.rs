@@ -52,7 +52,8 @@ fn usage() -> String {
      \x20 table2           print the Table 2 cases (Pr1–Pr6)\n\
      \x20 shapes           print the built-in model-shape presets\n\
      \x20 run              one traditional-architecture training run\n\
-     \x20 fleet            sharded/async fleet-engine run (Fleet10k/Fleet100k/Fleet10kWide)\n\
+     \x20 fleet            sharded/async fleet-engine run (Fleet10k/Fleet100k/\n\
+     \x20                  Fleet10kWide/Fleet100kRegions; --regions/--churn knobs)\n\
      \x20 p2p              one peer-to-peer training run\n\
      \x20 fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11\n\
      \x20                  regenerate that figure's CSV series\n\
@@ -258,22 +259,32 @@ fn run_traditional(args: &[String]) -> Result<()> {
 
 fn run_fleet(args: &[String]) -> Result<()> {
     let cmd = Command::new("fleet", "sharded/async fleet-engine training run (mock backend)")
-        .opt("case", Some("Fleet10k"), "Fleet10k | Fleet100k | Fleet10kWide")
+        .opt("case", Some("Fleet10k"), "Fleet10k | Fleet100k | Fleet10kWide | Fleet100kRegions")
+        .opt("preset", None, "alias for --case")
         .opt("shards", None, "override the case's shard count")
+        .opt("regions", None, "override the case's region count (<= shards)")
         .opt("max-staleness", None, "override the staleness bound (0 = sync)")
         .opt("rounds", None, "override the case's global rounds")
         .opt("model", None, "override the case's model-shape preset (see `shapes`)")
         .opt("decay", Some("0.5"), "staleness weight decay in (0, 1]")
+        .opt("churn", None, "inject churn: EVERY[:RATE] — every EVERY rounds replace RATE of the fleet (default rate 0.1)")
         .opt("threads", Some("0"), "worker threads (0 = auto, 1 = serial)")
         .opt("seed", Some("0"), "experiment seed")
         .opt("out", Some("results"), "output directory")
         .switch("verbose", "per-round progress on stderr");
     let m = cmd.parse(args)?;
-    let case = presets::fleet_case(m.str_("case")?)?;
+    let case_name = match m.get("preset") {
+        Some(p) => p.to_string(),
+        None => m.str_("case")?.to_string(),
+    };
+    let case = presets::fleet_case(&case_name)?;
     // fleet_config derives the per-shard grouping from the effective
     // shard count, so the override goes in up front
     let mut cfg =
         presets::fleet_config(&case, m.usize_opt("shards")?, m.u64_("seed")?);
+    if let Some(regions) = m.usize_opt("regions")? {
+        cfg.regions = regions;
+    }
     if let Some(stale) = m.usize_opt("max-staleness")? {
         cfg.max_staleness = stale;
     }
@@ -281,8 +292,17 @@ fn run_fleet(args: &[String]) -> Result<()> {
         cfg.rounds = rounds;
     }
     cfg.staleness_decay = m.f64_("decay")?;
+    if let Some(spec) = m.get("churn") {
+        let (every, rate) = match spec.split_once(':') {
+            Some((e, r)) => (e.trim().parse::<usize>()?, r.trim().parse::<f64>()?),
+            None => (spec.trim().parse::<usize>()?, cfg.churn_rate),
+        };
+        cfg.churn_every = every;
+        cfg.churn_rate = rate;
+    }
     cfg.threads = m.usize_("threads")?;
     cfg.verbose = m.bool_("verbose")?;
+    cfg.validate()?;
 
     let shape = match m.get("model") {
         Some(name) => ModelShape::preset(name)?,
@@ -291,24 +311,33 @@ fn run_fleet(args: &[String]) -> Result<()> {
 
     let mut sys = presets::bootstrap_fleet_case(&case, &shape, cfg.seed);
     let mut trainer = presets::make_fleet_trainer(&case, Some(&shape))?;
+    // region-less runs keep the PR-2 label/file naming
+    let region_tag = if cfg.regions > 1 {
+        format!("_r{}", cfg.regions)
+    } else {
+        String::new()
+    };
     let label = format!(
-        "{}/{}/s{}k{}",
+        "{}/{}/s{}k{}{}",
         case.name,
         shape.name(),
         cfg.shards,
-        cfg.max_staleness
+        cfg.max_staleness,
+        region_tag
     );
     let h = fleet::run(&mut sys, trainer.as_mut(), &cfg, &label)?;
 
     let out = PathBuf::from(m.str_("out")?).join(format!(
-        "fleet_{}_{}_{}s_{}k.csv",
+        "fleet_{}_{}_{}s_{}k{}.csv",
         case.name,
         shape.name(),
         cfg.shards,
-        cfg.max_staleness
+        cfg.max_staleness,
+        region_tag
     ));
     h.write_csv(&out)?;
     let commits: usize = h.rounds.iter().map(|r| r.shards_committed).sum();
+    let moves: usize = h.rounds.iter().map(|r| r.rebalance_moves).sum();
     let stale_mean: f64 = if h.rounds.is_empty() {
         0.0
     } else {
@@ -316,11 +345,12 @@ fn run_fleet(args: &[String]) -> Result<()> {
             / h.rounds.len() as f64
     };
     println!(
-        "{label}: {} clients / {} shards, model {} ({} params, {:.3} MB), \
-         {} rounds, {} shard commits (mean staleness {stale_mean:.2}), \
-         final accuracy {:.4} → {}",
+        "{label}: {} clients / {} shards / {} regions, model {} ({} params, \
+         {:.3} MB), {} rounds, {} shard commits (mean staleness \
+         {stale_mean:.2}), {moves} rebalance moves, final accuracy {:.4} → {}",
         case.num_clients,
         cfg.shards,
+        cfg.regions,
         shape.name(),
         shape.param_count(),
         shape.payload_bytes() as f64 / 1e6,

@@ -44,6 +44,12 @@ pub struct RoundRecord {
     /// per-committed-shard local-delay spread t_max − t_min (Eq 9 probed
     /// shard-locally); empty for flat runs
     pub shard_spreads_s: Vec<f64>,
+    /// region partials merged into the global model this round (0 for
+    /// flat runs; ≤ the topology's region count under the fleet engine)
+    pub regions_committed: usize,
+    /// surviving clients whose shard changed in this round's
+    /// churn-triggered rebalance (0 when no rebalance ran)
+    pub rebalance_moves: usize,
 }
 
 impl RoundRecord {
@@ -167,6 +173,8 @@ impl RunHistory {
             "shards_committed",
             "staleness_mean",
             "shard_spread_max_s",
+            "regions_committed",
+            "rebalance_moves",
         ]);
         let cum_local = self.cumulative(Metric::LocalDelayRound);
         let cum_tx = self.cumulative(Metric::TxDelayRound);
@@ -186,6 +194,8 @@ impl RunHistory {
                 r.shards_committed as f64,
                 r.staleness_mean,
                 r.shard_spread_max_s(),
+                r.regions_committed as f64,
+                r.rebalance_moves as f64,
             ]);
         }
         t
@@ -265,13 +275,18 @@ mod tests {
         r.shards_committed = 3;
         r.staleness_mean = 0.5;
         r.shard_spreads_s = vec![0.25, 2.0, 1.0];
+        r.regions_committed = 2;
+        r.rebalance_moves = 7;
         assert_eq!(r.shard_spread_max_s(), 2.0);
         h.push(r);
         let text = h.to_csv().to_string();
         let header = text.lines().next().unwrap();
-        assert!(header.ends_with("shards_committed,staleness_mean,shard_spread_max_s"));
+        assert!(header.ends_with(
+            "shards_committed,staleness_mean,shard_spread_max_s,\
+             regions_committed,rebalance_moves"
+        ));
         let row = text.lines().nth(1).unwrap();
-        assert!(row.contains(",3,0.5,2"), "{row}");
+        assert!(row.contains(",3,0.5,2,2,7"), "{row}");
     }
 
     #[test]

@@ -187,6 +187,44 @@ fn fleet_model_override_swaps_the_arena_without_recompiling() {
 }
 
 #[test]
+fn fleet_region_tier_and_churn_flags_work() {
+    // the CI smoke line plus churn: `--preset` aliases `--case`, the
+    // region tier and churn knobs validate and run, and the CSV carries
+    // the new region/rebalance columns in a region-tagged file
+    let out = tmpdir("fleet-regions");
+    let (ok, stdout, stderr) = run(&[
+        "fleet",
+        "--preset",
+        "Fleet10k",
+        "--rounds",
+        "2",
+        "--regions",
+        "2",
+        "--churn",
+        "1:0.1",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("10000 clients / 16 shards / 2 regions"), "{stdout}");
+    let csv = std::fs::read_to_string(
+        out.join("fleet_Fleet10k_mlp-784_16s_2k_r2.csv"),
+    )
+    .unwrap();
+    let header = csv.lines().next().unwrap();
+    assert!(header.contains("regions_committed"), "{header}");
+    assert!(header.contains("rebalance_moves"), "{header}");
+    assert_eq!(csv.lines().count(), 3); // header + 2 rounds
+    // a bad region count is rejected up front by FleetConfig::validate
+    let (ok, _, stderr) = run(&[
+        "fleet", "--preset", "Fleet10k", "--rounds", "1", "--regions", "99",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("regions"), "{stderr}");
+    let _ = std::fs::remove_dir_all(out);
+}
+
+#[test]
 fn shapes_subcommand_lists_presets() {
     let (ok, stdout, stderr) = run(&["shapes"]);
     assert!(ok, "stderr={stderr}");

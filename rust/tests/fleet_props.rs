@@ -1,19 +1,27 @@
 //! Property tests for the fleet layer: the degenerate-mode equivalence
-//! contract (`shards = 1, max_staleness = 0` ≡ the flat coordinator,
-//! bit-for-bit), the hierarchical fold's exactness, and shard-partition
-//! invariants (mock backend — no artifacts needed).
+//! contracts (`shards = 1, regions = 1, max_staleness = 0` ≡ the flat
+//! coordinator bit-for-bit; `regions = 1` ≡ the two-level PR-2 fold
+//! bit-for-bit), the hierarchical fold's exactness across all three
+//! tiers, and shard/region-partition + churn-rebalance invariants (mock
+//! backend — no artifacts needed).
+
+use std::collections::HashSet;
 
 use cnc_fl::cnc::optimize::{CohortStrategy, RbStrategy};
 use cnc_fl::cnc::CncSystem;
 use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
 use cnc_fl::coordinator::MockTrainer;
-use cnc_fl::fleet::{self, FleetConfig, FleetShards, RootAggregator, ShardBy, ShardUpdate};
+use cnc_fl::fleet::{
+    self, fold_regions, ChurnDiff, FleetConfig, FleetTopology, RootAggregator,
+    ShardBy, ShardUpdate,
+};
 use cnc_fl::metrics::RunHistory;
 use cnc_fl::model::aggregate::weighted_average;
 use cnc_fl::model::params::ModelParams;
 use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
 use cnc_fl::netsim::channel::ChannelParams;
 use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::runtime::ParallelExecutor;
 use cnc_fl::util::propcheck::{check, gen_usize, prop_assert, GenPair};
 use cnc_fl::util::rng::Pcg64;
 
@@ -94,6 +102,7 @@ fn one_shard_sync_fleet_equals_traditional_for_any_seed_and_width() {
                     let cfg = FleetConfig {
                         rounds: 3,
                         shards: 1,
+                        regions: 1,
                         max_staleness: 0,
                         cohort_size: cohort,
                         n_rb: cohort,
@@ -139,6 +148,7 @@ fn degenerate_mode_holds_for_uniform_cohorts_too() {
         let cfg = FleetConfig {
             rounds: 4,
             shards: 1,
+            regions: 1,
             max_staleness: 0,
             cohort_size: 6,
             n_rb: 8,
@@ -153,14 +163,92 @@ fn degenerate_mode_holds_for_uniform_cohorts_too() {
 }
 
 // ---------------------------------------------------------------------------
+// regions = 1 ≡ the PR-2 two-level fold, bit-for-bit, for every preset
+// ---------------------------------------------------------------------------
+
+#[test]
+fn one_region_fold_is_bitwise_the_two_level_fold_for_all_presets() {
+    // the engine commits through `fold_regions`; with one region it must
+    // perform exactly the op sequence the PR-2 root did (offer in shard
+    // order with decay^staleness weighting) — pinned bitwise for every
+    // model preset, random staleness patterns, serial and parallel
+    // executors
+    check(
+        9,
+        GenPair(gen_usize(2..10), gen_usize(0..100_000)),
+        |&(n, seed)| {
+            let preset = PRESET_NAMES[seed % PRESET_NAMES.len()];
+            let shape = ModelShape::preset(preset).unwrap();
+            let mut rng = Pcg64::seed_from(seed as u64 ^ 0xAB1E);
+            let round = 6usize;
+            let max_staleness = seed % 3;
+            let decay = 0.5 + 0.5 * (seed % 2) as f64; // 0.5 or 1.0
+            let updates: Vec<ShardUpdate> = (0..n)
+                .map(|s| {
+                    // some round tags exceed the bound → rejected on
+                    // both paths
+                    let tag = round - rng.below(4) as usize;
+                    let mut u = ShardUpdate::new(&shape, s, tag);
+                    let mut m = ModelParams::zeros(&shape);
+                    for v in m.as_mut_slice() {
+                        *v = rng.normal_scaled(0.0, 0.1) as f32;
+                    }
+                    u.push(&m, 100 + rng.below(500) as usize);
+                    u
+                })
+                .collect();
+
+            // PR-2 path: offer every shard update to the root directly
+            let mut two = RootAggregator::new(&shape, max_staleness, decay);
+            for u in &updates {
+                two.offer(u, round);
+            }
+
+            // three-level path, one region
+            let due: Vec<Vec<&ShardUpdate>> = vec![updates.iter().collect()];
+            for threads in [1usize, 4] {
+                let ex = ParallelExecutor::new(threads);
+                let (three, _) =
+                    fold_regions(&shape, &due, round, max_staleness, decay, &ex)
+                        .map_err(|e| format!("fold: {e}"))?;
+                prop_assert(
+                    three.accepted() == two.accepted()
+                        && three.rejected() == two.rejected()
+                        && three.mean_staleness() == two.mean_staleness(),
+                    &format!("{preset}: counters diverged (threads {threads})"),
+                )?;
+                if two.accepted() == 0 {
+                    continue;
+                }
+                let a = two.clone().finish().map_err(|e| e.to_string())?;
+                let b = three.finish().map_err(|e| e.to_string())?;
+                let bitwise = a
+                    .as_slice()
+                    .iter()
+                    .zip(b.as_slice())
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                prop_assert(
+                    bitwise,
+                    &format!(
+                        "{preset}: one-region fold drifted from the two-level \
+                         fold (threads {threads})"
+                    ),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
 // hierarchical fold ≡ flat weighted average (0 ULP on integer inputs)
 // ---------------------------------------------------------------------------
 
-fn integer_params(seed: u64) -> ModelParams {
+fn integer_params(shape: &std::sync::Arc<ModelShape>, seed: u64) -> ModelParams {
     // small integer values: every partial sum stays exactly representable
     // in f32 (well under 2^24), so regrouping cannot round
     let mut rng = Pcg64::seed_from(seed);
-    let mut m = ModelParams::zeros(&ModelShape::paper());
+    let mut m = ModelParams::zeros(shape);
     for v in m.as_mut_slice() {
         *v = rng.range_i64(-8, 8) as f32;
     }
@@ -173,10 +261,11 @@ fn hierarchical_fold_is_0ulp_equal_to_flat_on_integer_weights() {
         15,
         GenPair(gen_usize(2..12), gen_usize(0..1_000_000)),
         |&(n, seed)| {
+            let shape = ModelShape::paper();
             let mut rng = Pcg64::seed_from(seed as u64 ^ 0x51A6);
             let updates: Vec<(ModelParams, usize)> = (0..n)
                 .map(|i| {
-                    let m = integer_params(seed as u64 * 131 + i as u64);
+                    let m = integer_params(&shape, seed as u64 * 131 + i as u64);
                     let w = rng.below(7) as usize + 1;
                     (m, w)
                 })
@@ -186,7 +275,6 @@ fn hierarchical_fold_is_0ulp_equal_to_flat_on_integer_weights() {
 
             // random contiguous two-level grouping of the same updates in
             // the same order
-            let shape = ModelShape::paper();
             let cuts = rng.below(n as u64 - 1) as usize + 1; // 1..n shards
             let mut root = RootAggregator::new(&shape, 0, 1.0);
             let mut idx = 0usize;
@@ -214,8 +302,47 @@ fn hierarchical_fold_is_0ulp_equal_to_flat_on_integer_weights() {
     );
 }
 
+#[test]
+fn three_level_region_fold_is_0ulp_equal_to_flat_on_integer_inputs() {
+    // fixed cohort of integer-valued updates folded client → shard →
+    // region → root must regroup exactly to the flat Eq 1 average
+    let shape = ModelShape::paper();
+    let updates: Vec<(ModelParams, usize)> = (0..12)
+        .map(|i| (integer_params(&shape, 0xF00 + i as u64), (i as usize % 5) + 1))
+        .collect();
+    let flat = weighted_average(&updates).unwrap();
+
+    // 6 shards of 2 updates, grouped into 3 regions of 2 shards
+    let shard_updates: Vec<ShardUpdate> = (0..6)
+        .map(|s| {
+            let mut u = ShardUpdate::new(&shape, s, 0);
+            u.push(&updates[2 * s].0, updates[2 * s].1);
+            u.push(&updates[2 * s + 1].0, updates[2 * s + 1].1);
+            u
+        })
+        .collect();
+    let due: Vec<Vec<&ShardUpdate>> = (0..3)
+        .map(|r| vec![&shard_updates[2 * r], &shard_updates[2 * r + 1]])
+        .collect();
+    for threads in [1usize, 3] {
+        let ex = ParallelExecutor::new(threads);
+        let (root, accepts) = fold_regions(&shape, &due, 0, 0, 1.0, &ex).unwrap();
+        assert_eq!(root.accepted(), 6);
+        assert_eq!(root.regions_merged(), 3);
+        assert_eq!(accepts.iter().map(Vec::len).sum::<usize>(), 6);
+        let hier = root.finish().unwrap();
+        assert!(
+            flat.as_slice()
+                .iter()
+                .zip(hier.as_slice())
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "three-level fold drifted from flat fold (threads {threads})"
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
-// shard-partition invariants
+// shard/region-partition + rebalance invariants
 // ---------------------------------------------------------------------------
 
 #[test]
@@ -226,8 +353,9 @@ fn shards_always_partition_and_views_always_match() {
         |&(u, seed)| {
             let sys = system(u, seed as u64);
             let k = (u / 4).max(1).min(9);
+            let r = (k / 2).max(1);
             for by in [ShardBy::Locality, ShardBy::Power] {
-                let f = FleetShards::build(&sys.pool, k, by)
+                let f = FleetTopology::build(&sys.pool, k, by, r, by)
                     .map_err(|e| format!("build: {e}"))?;
                 let mut all: Vec<usize> =
                     f.shards.iter().flat_map(|s| s.members.clone()).collect();
@@ -235,6 +363,13 @@ fn shards_always_partition_and_views_always_match() {
                 prop_assert(
                     all == (0..u).collect::<Vec<_>>(),
                     "shards must partition the fleet",
+                )?;
+                let mut shard_ids: Vec<usize> =
+                    f.regions.iter().flat_map(|rg| rg.shards.clone()).collect();
+                shard_ids.sort_unstable();
+                prop_assert(
+                    shard_ids == (0..k).collect::<Vec<_>>(),
+                    "regions must partition the shards",
                 )?;
                 for s in &f.shards {
                     let sorted = s.members.windows(2).all(|w| w[0] < w[1]);
@@ -254,6 +389,82 @@ fn shards_always_partition_and_views_always_match() {
     );
 }
 
+#[test]
+fn rebalance_invariants_hold_under_injected_churn() {
+    // (b) of the region-tier acceptance: across repeated churn events the
+    // client set is preserved modulo the reported diff, no shard is ever
+    // empty, stable ids stay unique and survivors keep theirs
+    check(
+        8,
+        GenPair(gen_usize(30..90), gen_usize(0..10_000)),
+        |&(u, seed)| {
+            let mut sys = system(u, seed as u64);
+            let k = (u / 8).max(2);
+            let r = (k / 2).max(1);
+            let mut topo = FleetTopology::build(
+                &sys.pool,
+                k,
+                ShardBy::Power,
+                r,
+                ShardBy::Locality,
+            )
+            .map_err(|e| format!("build: {e}"))?;
+            let rate = 0.1 + (seed % 3) as f64 * 0.1;
+            for event in 0..3u64 {
+                let before: HashSet<u64> =
+                    topo.client_ids.iter().copied().collect();
+                let rng = Pcg64::new(seed as u64, event);
+                let diff = topo
+                    .churn(&mut sys.pool, rate, &rng)
+                    .map_err(|e| format!("churn: {e}"))?;
+                let expect = ((rate * u as f64).round() as usize).min(u);
+                prop_assert(
+                    diff.joined == expect && diff.left == expect,
+                    &format!("diff {diff:?} != expected churn {expect}"),
+                )?;
+                let after: HashSet<u64> =
+                    topo.client_ids.iter().copied().collect();
+                prop_assert(after.len() == u, "stable ids must stay unique")?;
+                prop_assert(
+                    before.intersection(&after).count() == u - diff.left,
+                    "survivors must keep their ids",
+                )?;
+                // the partition stays exact and nonempty after rebuild
+                let mut all: Vec<usize> = topo
+                    .shards
+                    .iter()
+                    .flat_map(|s| s.members.clone())
+                    .collect();
+                all.sort_unstable();
+                prop_assert(
+                    all == (0..u).collect::<Vec<_>>(),
+                    "churned shards must still partition the fleet",
+                )?;
+                prop_assert(
+                    topo.shards.iter().all(|s| !s.is_empty()),
+                    "churn must never leave an empty shard",
+                )?;
+                prop_assert(
+                    topo.regions.iter().all(|rg| !rg.shards.is_empty()),
+                    "churn must never leave an empty region",
+                )?;
+                prop_assert(
+                    diff.moved <= u - diff.left,
+                    "moved counts only survivors",
+                )?;
+            }
+            // an untouched pool rebalances to the identical assignment
+            let diff = topo
+                .rebalance(&sys.pool)
+                .map_err(|e| format!("rebalance: {e}"))?;
+            prop_assert(
+                diff == ChurnDiff::default(),
+                "no-op rebalance must report no changes",
+            )
+        },
+    );
+}
+
 // ---------------------------------------------------------------------------
 // model-size scenario axis: one binary, several arenas
 // ---------------------------------------------------------------------------
@@ -262,7 +473,7 @@ fn shards_always_partition_and_views_always_match() {
 fn fleet_engine_runs_every_shape_preset_without_recompiling() {
     // the dynamic arena's acceptance bar: full sharded/async fleet rounds
     // over all three model sizes in one process, each training the arena
-    // its shape declares
+    // its shape declares — now through the region tier
     let seed = 5u64;
     for name in PRESET_NAMES {
         let shape = ModelShape::preset(name).unwrap();
@@ -271,6 +482,7 @@ fn fleet_engine_runs_every_shape_preset_without_recompiling() {
         let cfg = FleetConfig {
             rounds: 4,
             shards: 3,
+            regions: 2,
             max_staleness: 1,
             cohort_size: 6,
             n_rb: 6,
@@ -287,6 +499,10 @@ fn fleet_engine_runs_every_shape_preset_without_recompiling() {
             "{name}: final model must use the preset's arena"
         );
         assert_eq!(global.payload_bytes(), shape.payload_bytes(), "{name}");
+        assert!(
+            h.rounds.iter().all(|r| r.regions_committed <= 2),
+            "{name}: more region commits than regions"
+        );
         assert!(
             h.final_accuracy() > h.rounds[0].accuracy.min(0.2),
             "{name}: training must improve"
@@ -306,6 +522,7 @@ fn async_staleness_never_exceeds_bound_for_any_seed() {
             let cfg = FleetConfig {
                 rounds: 6,
                 shards: 3,
+                regions: 2,
                 max_staleness,
                 cohort_size: 6,
                 n_rb: 6,
@@ -324,6 +541,10 @@ fn async_staleness_never_exceeds_bound_for_any_seed() {
                 prop_assert(
                     r.shards_committed <= 3,
                     "cannot commit more shards than exist",
+                )?;
+                prop_assert(
+                    r.regions_committed <= 2,
+                    "cannot commit more regions than exist",
                 )?;
             }
             let commits: usize = h.rounds.iter().map(|r| r.shards_committed).sum();
