@@ -85,6 +85,7 @@ fn pjrt_scenario(store: ArtifactStore, rounds: usize) -> Result<()> {
         threads: 0,
         seed: 0,
         verbose: false,
+        transport: Default::default(),
     };
     println!("\ntraining {rounds} global rounds (Pr1, CNC optimization, IID) …");
     let (h, global) =

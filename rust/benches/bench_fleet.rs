@@ -3,8 +3,9 @@
 //! at 10³ / 10⁴ / 10⁵ clients (decisions only, no training), plus the
 //! aggregation-tier tables: two-level vs **three-level root fold** (the
 //! ISSUE-4 acceptance bar: three-level wins at 10⁵ clients / 10³
-//! shards), per-shape hierarchical folds, and the cached-vs-rebuilt
-//! per-shard P2P cost sub-views.
+//! shards), per-shape hierarchical folds, the cached-vs-rebuilt
+//! per-shard P2P cost sub-views, and the transport-plane codec table
+//! (bytes/round and wire+fold time for raw vs quant8 vs topk:0.1).
 //!
 //! The flat path pays O(cohort³) in the Hungarian RB assignment plus
 //! O(cohort·n_rb) channel modelling per round; sharding cuts both to K
@@ -24,6 +25,8 @@ use cnc_fl::fleet::{
     decide_traditional_sharded, fold_regions, FleetTopology, RootAggregator,
     ShardBy, ShardUpdate,
 };
+use cnc_fl::model::aggregate::Aggregator;
+use cnc_fl::model::compress::PayloadCodec;
 use cnc_fl::model::params::ModelParams;
 use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
 use cnc_fl::netsim::channel::ChannelParams;
@@ -302,5 +305,65 @@ fn main() {
         ));
     }
     println!("{agg_table}");
+
+    // --- transport codecs: bytes/round and wire+fold time ---------------
+    // one round's uplink at 10³/10⁴ clients (1 % cohorts on the paper
+    // model): each update passes the wire codec's encode → decode, then
+    // folds into the streaming aggregator — the exact per-update path of
+    // `coordinator::train_cohort`
+    let codec_shape = ModelShape::preset("mlp-784").unwrap();
+    let mut codec_table = String::from(
+        "\n## wire codecs (per round: cohort encode → decode → fold)\n\n\
+         | clients | cohort | codec | bytes/round | wire+fold |\n\
+         |---|---|---|---|---|\n",
+    );
+    for &u in &[1_000usize, 10_000] {
+        let cohort = cohort_for(u);
+        let updates: Vec<ModelParams> = (0..cohort)
+            .map(|i| {
+                let mut rng = Pcg64::new(0xC0DEC, i as u64);
+                let mut m = ModelParams::zeros(&codec_shape);
+                for v in m.as_mut_slice() {
+                    *v = rng.normal_scaled(0.0, 0.05) as f32;
+                }
+                m
+            })
+            .collect();
+        for codec in [
+            PayloadCodec::Raw,
+            PayloadCodec::Quant8,
+            PayloadCodec::TopK { keep_frac: 0.1 },
+        ] {
+            let label = codec.label();
+            let fold = b.bench(
+                &format!("wire+fold {u:>6} clients ({label})"),
+                || {
+                    // the engines' exact per-update cost: raw folds the
+                    // owned update directly (zero wire work), non-raw
+                    // pays the encode → decode before the fold
+                    let mut agg = Aggregator::new(&codec_shape);
+                    for m in &updates {
+                        if codec.is_raw() {
+                            agg.push(m, 600);
+                        } else {
+                            let wired = codec.round_trip(m).unwrap();
+                            agg.push(&wired, 600);
+                        }
+                    }
+                    black_box(agg.finish().unwrap())
+                },
+            );
+            let bytes = cohort * codec.payload_bytes_for(&codec_shape);
+            codec_table.push_str(&format!(
+                "| {} | {} | {} | {:.3} MB | {} |\n",
+                u,
+                cohort,
+                label,
+                bytes as f64 / 1e6,
+                fmt_ns(fold.median_ns),
+            ));
+        }
+    }
+    println!("{codec_table}");
     println!("{}", b.markdown_table());
 }

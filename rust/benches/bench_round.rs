@@ -59,6 +59,7 @@ fn trad_cfg(rounds: usize) -> TraditionalConfig {
         eval_every: 1,
         tx_deadline_s: None,
         threads: 0,
+        transport: Default::default(),
         seed: 0,
         verbose: false,
     }
@@ -99,6 +100,7 @@ fn main() {
         threads: 0,
         seed: 0,
         verbose: false,
+        transport: Default::default(),
     };
     b.bench("p2p round exp-1 (20 clients E=4, PJRT)", || {
         let mut sys = system(20);
@@ -117,6 +119,7 @@ fn main() {
         threads: 0,
         seed: 0,
         verbose: false,
+        transport: Default::default(),
     };
     b.bench("p2p round exp-2 (8 clients TSP, PJRT)", || {
         let mut sys = system(8);
@@ -136,6 +139,7 @@ fn main() {
             threads: 0,
             seed: 0,
             verbose: false,
+            transport: Default::default(),
         };
         b.bench("p2p round fig11 (28 clients, mock)", || {
             let mut sys = system(28);

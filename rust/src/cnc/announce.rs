@@ -30,7 +30,8 @@ pub enum Announcement {
         parts: Vec<Vec<usize>>,
     },
     /// orchestration → clients: global model broadcast (round start /
-    /// final model)
+    /// final model); `payload_bytes` is the transport plane's real
+    /// downlink transfer size (dense model × fetch points)
     ModelBroadcast {
         round: usize,
         payload_bytes: usize,
@@ -49,11 +50,14 @@ pub enum Announcement {
         cohort: Vec<usize>,
     },
     /// shard → region aggregation tier: a shard update was folded into
-    /// the global model, `staleness` rounds after the model it trained on
+    /// the global model, `staleness` rounds after the model it trained
+    /// on; `bytes` is the partial's wire size over the shard backhaul
+    /// (the transport plane's codec-charged Z(w))
     ShardCommit {
         round: usize,
         shard: usize,
         staleness: usize,
+        bytes: usize,
     },
     /// region tier → root: a region partial merging `shards` shard
     /// updates (the oldest `max_staleness` rounds stale — the per-tier

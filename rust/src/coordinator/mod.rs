@@ -17,6 +17,7 @@ pub use trainer::{MockTrainer, PjrtTrainer, SharedTrainer, Trainer};
 
 use anyhow::Result;
 
+use crate::model::compress::PayloadCodec;
 use crate::model::params::ModelParams;
 use crate::runtime::ParallelExecutor;
 
@@ -50,10 +51,15 @@ pub(crate) fn cohort_survivors(
 }
 
 /// Train the `active` cohort — `(client id, data size)` pairs in slot
-/// order — against `global`, folding every update through `fold` in slot
-/// order (the `model::aggregate` determinism contract), in parallel when
-/// the executor is wider than one thread and the backend is shared.
-/// Returns the summed training loss.
+/// order — against `global`, passing every update through the wire
+/// `codec` (`PayloadCodec::apply_wire`: the identity for `Raw`, the
+/// lossy encode → decode otherwise, so Quant8/TopK lossiness reaches
+/// the aggregate and hence the accuracy) and folding the received
+/// reconstruction through `fold` in slot order (the `model::aggregate`
+/// determinism contract), in parallel when the executor is wider than
+/// one thread and the backend is shared. The codec runs inside the
+/// worker on the parallel path, so compression parallelizes with
+/// training. Returns the summed training loss.
 ///
 /// The single training path of both the flat coordinator and the fleet
 /// engine: their bit-identity contract (`tests/fleet_props.rs`) rests on
@@ -65,6 +71,7 @@ pub(crate) fn train_cohort(
     global: &ModelParams,
     epochs: usize,
     round: usize,
+    codec: PayloadCodec,
     mut fold: impl FnMut(&ModelParams, usize),
 ) -> Result<f64> {
     let mut loss_sum = 0.0f64;
@@ -74,7 +81,11 @@ pub(crate) fn train_cohort(
         let shared = trainer.as_shared().expect("checked above");
         executor.run_ordered(
             active.len(),
-            |i| shared.local_train_shared(active[i].0, global, epochs, round),
+            |i| {
+                let (upd, loss) =
+                    shared.local_train_shared(active[i].0, global, epochs, round)?;
+                Ok((codec.apply_wire(upd)?, loss))
+            },
             |i, (upd, loss)| {
                 loss_sum += loss as f64;
                 fold(&upd, active[i].1);
@@ -84,6 +95,7 @@ pub(crate) fn train_cohort(
     } else {
         for &(client, data_size) in active {
             let (upd, loss) = trainer.local_train(client, global, epochs, round)?;
+            let upd = codec.apply_wire(upd)?;
             loss_sum += loss as f64;
             fold(&upd, data_size);
         }

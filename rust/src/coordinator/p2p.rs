@@ -20,6 +20,15 @@
 //! designed matrices (Eq 7): each part contributes its path cost; the
 //! round's transmission delay is the max over parallel chains, energy the
 //! sum.
+//!
+//! Parameter movement goes through the transport plane: the running
+//! sub-model passes the wire codec's lossy round trip at **every chain
+//! hop** (`PayloadCodec::apply_wire` — a chain of lossy forwards
+//! compounds, exactly as it would on real links), and the round ledger
+//! charges one broadcast per chain head plus one codec-sized transfer
+//! per hop (bytes only — chain *costs* stay in the Eq (7) relative
+//! units). `transport.codec = Raw` (the default) is bit-identical to
+//! the pre-transport engine.
 
 use anyhow::Result;
 
@@ -29,9 +38,11 @@ use crate::cnc::CncSystem;
 use crate::coordinator::trainer::{SharedTrainer, Trainer};
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::model::aggregate::Aggregator;
+use crate::model::compress::PayloadCodec;
 use crate::model::params::ModelParams;
 use crate::netsim::topology::CostMatrix;
 use crate::runtime::ParallelExecutor;
+use crate::transport::{RoundLedger, TransportConfig, TransportPlan};
 use crate::util::rng::Pcg64;
 
 /// P2P run settings.
@@ -47,6 +58,8 @@ pub struct P2pConfig {
     /// 1 = serial. Only takes effect for `Trainer::as_shared` backends;
     /// results are bit-identical either way.
     pub threads: usize,
+    /// transport plane: wire codec + tier rate models
+    pub transport: TransportConfig,
     pub seed: u64,
     pub verbose: bool,
 }
@@ -60,6 +73,7 @@ impl Default for P2pConfig {
             epoch_local: 1,
             eval_every: 1,
             threads: 0,
+            transport: TransportConfig::default(),
             seed: 0,
             verbose: false,
         }
@@ -80,11 +94,14 @@ struct ChainResult {
 /// their backend in this, so loss accounting and chain seeding can
 /// never drift between them — the bit-identity contract depends on it).
 /// `n_te` is the part's summed data size (precomputed by the caller).
+/// Every forward — peer → peer and the last peer → aggregator — passes
+/// the wire `codec` (the identity for `Raw`).
 fn run_chain<F>(
     mut train: F,
     order: &[usize],
     n_te: usize,
     global: &ModelParams,
+    codec: PayloadCodec,
 ) -> Result<ChainResult>
 where
     F: FnMut(usize, &ModelParams) -> Result<(ModelParams, f32)>,
@@ -93,7 +110,7 @@ where
     let mut loss_sum = 0.0f64;
     for &client in order {
         let (next, loss) = train(client, &w)?;
-        w = next;
+        w = codec.apply_wire(next)?;
         loss_sum += loss as f64;
     }
     Ok(ChainResult {
@@ -127,6 +144,9 @@ pub fn run_with_model(
     let mut history = RunHistory::new(label);
     let mut global = trainer.init_params()?;
     let executor = ParallelExecutor::new(cfg.threads);
+    // P2P charges chain transmissions in the Eq (7) relative cost units;
+    // the transport plan sizes the wire bytes and applies the codec
+    let plan = TransportPlan::new(global.shape(), &cfg.transport)?;
 
     for round in 0..cfg.rounds {
         let round_rng = Pcg64::new(cfg.seed, 0x9292).split(&format!("round/{round}"));
@@ -157,6 +177,13 @@ pub fn run_with_model(
         // the serial and parallel paths (identical fold order).
         let t0 = std::time::Instant::now();
         let n_parts = decision.parts.len();
+        let mut ledger = RoundLedger::new();
+        // downlink: the CNC hands the current global to each chain head;
+        // uplink: one codec-sized forward per hop (peer → peer, and the
+        // final peer → aggregator)
+        ledger.record(plan.broadcast(n_parts));
+        let hops: usize = decision.parts.iter().map(|p| p.order.len()).sum();
+        ledger.record(plan.p2p_hops(hops));
         let mut agg = Aggregator::new(global.shape());
         let mut loss_sum = 0.0f64;
         let mut trained = 0usize;
@@ -178,6 +205,7 @@ pub fn run_with_model(
                         &decision.parts[e].order,
                         part_sizes[e],
                         &global,
+                        plan.codec(),
                     )
                 },
                 |_, chain| reduce(chain),
@@ -189,6 +217,7 @@ pub fn run_with_model(
                     &part.order,
                     n_te,
                     &global,
+                    plan.codec(),
                 )?;
                 reduce(chain)?;
             }
@@ -225,6 +254,10 @@ pub fn run_with_model(
             tx_delays_s: tx_costs.clone(),
             tx_energies_j: tx_costs,
             compute_wall_s,
+            uplink_bytes: ledger.uplink_bytes(),
+            backhaul_bytes: ledger.backhaul_bytes(),
+            broadcast_bytes: ledger.broadcast_bytes(),
+            comm_delay_s: ledger.comm_delay_s(),
             ..Default::default()
         };
         if cfg.verbose {
@@ -345,6 +378,30 @@ mod tests {
         };
         run(&mut s, &mut t, &g, &cfg, "rs").unwrap();
         assert_eq!(t.calls(), 3 * 15);
+    }
+
+    #[test]
+    fn transport_columns_charge_chain_hops() {
+        let mut s = sys(12, 20);
+        let g = topo(12, 21);
+        let mut t = MockTrainer::new(12, 3000);
+        let cfg = P2pConfig {
+            rounds: 2,
+            partition_strategy: PartitionStrategy::BalancedDelay { e: 3 },
+            ..Default::default()
+        };
+        let h = run(&mut s, &mut t, &g, &cfg, "bytes").unwrap();
+        let raw = crate::model::shape::ModelShape::paper().payload_bytes();
+        for r in &h.rounds {
+            // raw codec: one dense forward per hop (every client visited
+            // once), one broadcast per chain head, no backhaul tiers
+            assert_eq!(r.uplink_bytes, 12 * raw);
+            assert_eq!(r.broadcast_bytes, 3 * raw);
+            assert_eq!(r.backhaul_bytes, 0);
+            // chain costs stay in Eq (7) units; the wire clock only sees
+            // the downlink tier
+            assert!(r.comm_delay_s > 0.0);
+        }
     }
 
     #[test]

@@ -10,11 +10,17 @@
 //!    (`epoch_local` epochs through the PJRT artifacts) — **in parallel**
 //!    across a worker pool when the backend is thread-safe
 //!    (`Trainer::as_shared`), serially otherwise;
-//! 4. updates are "transmitted" (simulated uplink: Eq 3/4 costs recorded)
-//!    and **streamed** into the data-weighted `Aggregator` in cohort slot
+//! 4. updates are "transmitted" (simulated uplink: Eq 3/4 costs recorded
+//!    for the codec-compressed Z(w), and each update passes the wire
+//!    codec's lossy round trip — `transport::TransportPlan`) and
+//!    **streamed** into the data-weighted `Aggregator` in cohort slot
 //!    order — O(1) models in memory, and bit-identical results for any
 //!    worker count (see `model::aggregate`'s determinism contract);
 //! 5. the new global model is evaluated on the test set.
+//!
+//! All parameter movement (broadcast down, uplink back) is charged
+//! through the transport plane; `transport.codec = Raw` (the default)
+//! is bit-identical to the pre-transport engine.
 
 use anyhow::Result;
 
@@ -26,6 +32,7 @@ use crate::metrics::{RoundRecord, RunHistory};
 use crate::model::aggregate::Aggregator;
 use crate::model::params::ModelParams;
 use crate::runtime::ParallelExecutor;
+use crate::transport::{RoundLedger, TransportConfig, TransportPlan};
 use crate::util::rng::Pcg64;
 
 /// Traditional-architecture run settings.
@@ -49,6 +56,8 @@ pub struct TraditionalConfig {
     /// core, 1 = serial. Only takes effect for backends that implement
     /// `Trainer::as_shared`; results are bit-identical either way.
     pub threads: usize,
+    /// transport plane: wire codec (`--codec`) + tier rate models
+    pub transport: TransportConfig,
     pub seed: u64,
     /// echo per-round progress to stderr
     pub verbose: bool,
@@ -66,6 +75,7 @@ impl Default for TraditionalConfig {
             eval_every: 1,
             tx_deadline_s: None,
             threads: 0,
+            transport: TransportConfig::default(),
             seed: 0,
             verbose: false,
         }
@@ -99,9 +109,32 @@ pub fn run_with_model(
     cfg: &TraditionalConfig,
     label: &str,
 ) -> Result<(RunHistory, ModelParams)> {
+    let global = trainer.init_params()?;
+
+    // the transport plane: one wire-size/delay table for the whole run.
+    // Eq (3)/(4) charge the codec-compressed Z(w) — the channel's
+    // payload is scaled here and restored after the round loop on
+    // *every* exit path, error or not (the raw codec touches nothing).
+    let plan = TransportPlan::new(global.shape(), &cfg.transport)?;
+    let base_payload_bytes = sys.pool.channel.payload_bytes;
+    plan.charge_channel(&mut sys.pool.channel);
+    let outcome = run_rounds(sys, trainer, cfg, label, &plan, global);
+    sys.pool.channel.payload_bytes = base_payload_bytes;
+    outcome
+}
+
+/// The engine's round loop, factored out of [`run_with_model`] so the
+/// caller can restore the codec-charged channel no matter how the loop
+/// exits.
+fn run_rounds(
+    sys: &mut CncSystem,
+    trainer: &mut dyn Trainer,
+    cfg: &TraditionalConfig,
+    label: &str,
+    plan: &TransportPlan,
+    mut global: ModelParams,
+) -> Result<(RunHistory, ModelParams)> {
     let mut history = RunHistory::new(label);
-    let mut global = trainer.init_params()?;
-    let payload = global.payload_bytes();
     let executor = ParallelExecutor::new(cfg.threads);
 
     for round in 0..cfg.rounds {
@@ -122,10 +155,14 @@ pub fn run_with_model(
             cohort: decision.cohort.clone(),
             rb_of_client: decision.rb_of_client.clone(),
         });
+        let mut ledger = RoundLedger::new();
+        let down = plan.broadcast(1);
         sys.bus.publish(Announcement::ModelBroadcast {
             round,
-            payload_bytes: payload,
+            payload_bytes: down.bytes,
         });
+        ledger.record(down);
+        ledger.record(plan.uplink(&decision.tx_delays_s, &decision.tx_energies_j));
 
         // dropout model: shared `coordinator::cohort_survivors` filter
         // (survivors keep their cohort slot order)
@@ -155,6 +192,7 @@ pub fn run_with_model(
             &global,
             cfg.epoch_local,
             round,
+            plan.codec(),
             |upd, weight| agg.push(upd, weight),
         )?;
         let compute_wall_s = t0.elapsed().as_secs_f64();
@@ -183,6 +221,10 @@ pub fn run_with_model(
             tx_energies_j: decision.tx_energies_j.clone(),
             compute_wall_s,
             dropouts,
+            uplink_bytes: ledger.uplink_bytes(),
+            backhaul_bytes: ledger.backhaul_bytes(),
+            broadcast_bytes: ledger.broadcast_bytes(),
+            comm_delay_s: ledger.comm_delay_s(),
             ..Default::default()
         };
         if cfg.verbose {
@@ -278,6 +320,26 @@ mod tests {
             assert!(r.tx_energy_round_j() > 0.0);
             assert!(r.local_delay_round_s() > 0.0);
         }
+    }
+
+    #[test]
+    fn transport_columns_charge_every_transfer() {
+        let mut s = sys(30, 12);
+        let mut t = MockTrainer::new(30, 600);
+        let h = run(&mut s, &mut t, &cfg(4), "bytes").unwrap();
+        let raw = crate::model::shape::ModelShape::paper().payload_bytes();
+        for r in &h.rounds {
+            // raw codec: every cohort member uplinks the dense model,
+            // one broadcast down, no backhaul tiers in the flat engine
+            assert_eq!(r.uplink_bytes, 5 * raw);
+            assert_eq!(r.broadcast_bytes, raw);
+            assert_eq!(r.backhaul_bytes, 0);
+            // the comm critical path is gated by the slowest uplink plus
+            // the downlink
+            assert!(r.comm_delay_s >= r.tx_delay_round_s());
+        }
+        // the run restores the channel's Z(w) it charged
+        assert_eq!(s.pool.channel.payload_bytes, 0.606e6);
     }
 
     #[test]

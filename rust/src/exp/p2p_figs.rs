@@ -134,6 +134,7 @@ pub fn run_p2p_setting(
         threads: 0,
         seed: opts.seed,
         verbose: opts.verbose,
+        transport: Default::default(),
     };
     let label = format!("p2p/{}/{}", setting.tag, split_tag(split));
     p2p::run(&mut sys, trainer.as_mut(), g, &cfg, &label)

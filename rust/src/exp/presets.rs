@@ -15,6 +15,7 @@ use crate::model::shape::ModelShape;
 use crate::netsim::channel::ChannelParams;
 use crate::netsim::compute::PowerProfile;
 use crate::runtime::{ArtifactStore, Engine};
+use crate::transport::TransportConfig;
 
 /// Resolve a model-shape preset by name (`mlp-small` / `mlp-784` /
 /// `mlp-wide`) — the mock-backend model-size scenario axis.
@@ -214,6 +215,7 @@ pub fn fleet_config(
         churn_every: 0,
         churn_rate: 0.1,
         threads: 0,
+        transport: TransportConfig::default(),
         seed,
         verbose: false,
     }
@@ -303,6 +305,7 @@ pub fn traditional_config(
         eval_every: 1,
         tx_deadline_s: None,
         threads: 0,
+        transport: TransportConfig::default(),
         seed,
         verbose: false,
     }

@@ -40,6 +40,22 @@
 //! bit-for-bit: the single region's fold performs exactly the op
 //! sequence the old root did (`hierarchy::fold_regions`' contract,
 //! pinned by `tests/fleet_props.rs` for serial and parallel executors).
+//!
+//! # Transport
+//!
+//! Every parameter movement is charged through the transport plane
+//! (`crate::transport`): the root broadcast to idle shards, the Eq (2)–(4)
+//! radio uplink per cohort member (at the codec-compressed Z(w) — the
+//! plan scales the channel's payload for the run and restores it at the
+//! end), the shard → region backhaul per committed partial and the
+//! region → root backhaul per merged region. Client updates pass the
+//! wire codec's lossy round trip before the shard fold; partials and the
+//! broadcast are charged but kept arithmetically exact (see the
+//! transport module docs). `transport.codec = Raw` (the default) is
+//! bit-identical to the pre-transport engine; per-round
+//! `uplink_bytes`/`backhaul_bytes`/`broadcast_bytes`/`comm_delay_s`
+//! land in the CSV. An uplink transfer is recorded in the round its
+//! shard *commits*, alongside the rest of that job's telemetry.
 
 use std::sync::Mutex;
 
@@ -56,6 +72,7 @@ use crate::fleet::registry::{
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::model::params::ModelParams;
 use crate::runtime::ParallelExecutor;
+use crate::transport::{RoundLedger, Transfer, TransportConfig, TransportPlan};
 use crate::util::rng::Pcg64;
 
 /// Fleet-engine run settings. The flat-coordinator knobs keep their
@@ -98,6 +115,8 @@ pub struct FleetConfig {
     /// region folds (0 = one per core, 1 = serial); bit-identical either
     /// way
     pub threads: usize,
+    /// transport plane: wire codec (`--codec`) + per-tier rate models
+    pub transport: TransportConfig,
     pub seed: u64,
     pub verbose: bool,
 }
@@ -122,6 +141,7 @@ impl Default for FleetConfig {
             churn_every: 0,
             churn_rate: 0.1,
             threads: 0,
+            transport: TransportConfig::default(),
             seed: 0,
             verbose: false,
         }
@@ -155,6 +175,7 @@ impl FleetConfig {
         if self.churn_every > 0 && !(0.0..=1.0).contains(&self.churn_rate) {
             bail!("churn rate {} outside [0, 1]", self.churn_rate);
         }
+        self.transport.validate()?;
         Ok(())
     }
 }
@@ -211,6 +232,9 @@ struct PendingJob {
     /// round's compute_wall_s describes the same cohorts as its other
     /// telemetry)
     wall_s: f64,
+    /// the cohort's radio-uplink transfer (codec-sized), recorded into
+    /// the round ledger on commit alongside the rest of the telemetry
+    uplink: Transfer,
 }
 
 /// Run the sharded/async fleet engine; returns the history only.
@@ -248,6 +272,31 @@ pub fn run_with_model(
         );
     }
 
+    let global = trainer.init_params()?;
+    // the transport plane: charged before the topology is built, so the
+    // per-shard ResourcePool views clone the codec-charged channel
+    // (Eq (3) charges the compressed Z(w) in every shard's decisions).
+    // The channel is restored after the round loop on *every* exit
+    // path, error or not; the raw codec touches nothing.
+    let plan = TransportPlan::new(global.shape(), &cfg.transport)?;
+    let base_payload_bytes = sys.pool.channel.payload_bytes;
+    plan.charge_channel(&mut sys.pool.channel);
+    let outcome = run_rounds(sys, trainer, cfg, label, &plan, global);
+    sys.pool.channel.payload_bytes = base_payload_bytes;
+    outcome
+}
+
+/// The engine's round loop, factored out of [`run_with_model`] so the
+/// caller can restore the codec-charged channel no matter how the loop
+/// exits.
+fn run_rounds(
+    sys: &mut CncSystem,
+    trainer: &mut dyn Trainer,
+    cfg: &FleetConfig,
+    label: &str,
+    plan: &TransportPlan,
+    mut global: ModelParams,
+) -> Result<(RunHistory, ModelParams)> {
     let mut topology = FleetTopology::build(
         &sys.pool,
         cfg.shards,
@@ -273,8 +322,6 @@ pub fn run_with_model(
     let executor = ParallelExecutor::new(cfg.threads);
 
     let mut history = RunHistory::new(label);
-    let mut global = trainer.init_params()?;
-    let payload = global.payload_bytes();
     let mut pending: Vec<Option<PendingJob>> = Vec::new();
     pending.resize_with(k, || None);
 
@@ -325,11 +372,16 @@ pub fn run_with_model(
             &rngs,
             &executor,
         )?;
+        let mut ledger = RoundLedger::new();
         if !idle.is_empty() {
+            // downlink: the dense global model to every shard fetching a
+            // fresh job this round
+            let down = plan.broadcast(idle.len());
             sys.bus.publish(Announcement::ModelBroadcast {
                 round,
-                payload_bytes: payload,
+                payload_bytes: down.bytes,
             });
+            ledger.record(down);
         }
 
         // 2. train every started job now, against the current global —
@@ -364,10 +416,13 @@ pub fn run_with_model(
                 &global,
                 cfg.epoch_local,
                 round,
+                plan.codec(),
                 |upd, weight| update.push(upd, weight),
             )?;
             let wall_s = t0.elapsed().as_secs_f64();
             let spread_s = topology.shards[d.shard].delay_spread_s(&d.decision.cohort);
+            let uplink =
+                plan.uplink(&d.decision.tx_delays_s, &d.decision.tx_energies_j);
             pending[d.shard] = Some(PendingJob {
                 commit_round: round + periods[d.shard] - 1,
                 update,
@@ -378,6 +433,7 @@ pub fn run_with_model(
                 tx_energies_j: d.decision.tx_energies_j,
                 spread_s,
                 wall_s,
+                uplink,
             });
         }
 
@@ -441,6 +497,7 @@ pub fn run_with_model(
                     round,
                     shard,
                     staleness,
+                    bytes: plan.update_bytes(),
                 });
                 stale_max = stale_max.max(staleness);
                 let job = due_jobs[shard].take().expect("accepted shard was due");
@@ -452,6 +509,7 @@ pub fn run_with_model(
                 tx_delays_s.extend(job.tx_delays_s);
                 tx_energies_j.extend(job.tx_energies_j);
                 shard_spreads_s.push(job.spread_s);
+                ledger.record(job.uplink);
             }
             sys.bus.publish(Announcement::RegionCommit {
                 round,
@@ -468,6 +526,11 @@ pub fn run_with_model(
                 round,
                 count: collected,
             });
+            // backhaul tiers: every accepted partial crosses its shard →
+            // region pipe, every merged region partial crosses region →
+            // root
+            ledger.record(plan.shard_backhaul(shards_committed));
+            ledger.record(plan.region_backhaul(regions_committed));
         }
         // a round that accepted nothing keeps the previous global —
         // never an error out of the engine (fleet::hierarchy)
@@ -501,6 +564,10 @@ pub fn run_with_model(
             shard_spreads_s,
             regions_committed,
             rebalance_moves,
+            uplink_bytes: ledger.uplink_bytes(),
+            backhaul_bytes: ledger.backhaul_bytes(),
+            broadcast_bytes: ledger.broadcast_bytes(),
+            comm_delay_s: ledger.comm_delay_s(),
         };
         if cfg.verbose {
             eprintln!(
@@ -549,6 +616,7 @@ mod tests {
         let mut t = MockTrainer::new(40, 600);
         let h = run(&mut s, &mut t, &cfg(6, 4, 0), "sync4").unwrap();
         assert_eq!(h.rounds.len(), 6);
+        let raw = crate::model::shape::ModelShape::paper().payload_bytes();
         for r in &h.rounds {
             assert_eq!(r.shards_committed, 4);
             assert_eq!(r.regions_committed, 1);
@@ -556,6 +624,12 @@ mod tests {
             assert_eq!(r.rebalance_moves, 0);
             assert_eq!(r.shard_spreads_s.len(), 4);
             assert_eq!(r.local_delays_s.len(), 8);
+            // synchronous raw-codec transport accounting: 8 dense
+            // uplinks, a 4-shard broadcast, 4 + 1 backhaul partials
+            assert_eq!(r.uplink_bytes, 8 * raw);
+            assert_eq!(r.broadcast_bytes, 4 * raw);
+            assert_eq!(r.backhaul_bytes, 5 * raw);
+            assert!(r.comm_delay_s > r.tx_delay_round_s());
         }
         // every round trained the full global cohort
         assert_eq!(t.calls(), 6 * 8);

@@ -30,4 +30,5 @@ pub mod model;
 pub mod netsim;
 pub mod runtime;
 pub mod scheduler;
+pub mod transport;
 pub mod util;

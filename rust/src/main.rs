@@ -31,6 +31,7 @@ use cnc_fl::fleet;
 use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
 use cnc_fl::netsim::channel::ChannelParams;
 use cnc_fl::netsim::topology::TopologyGen;
+use cnc_fl::transport::PayloadCodec;
 use cnc_fl::util::cli::Command;
 
 fn main() {
@@ -53,7 +54,8 @@ fn usage() -> String {
      \x20 shapes           print the built-in model-shape presets\n\
      \x20 run              one traditional-architecture training run\n\
      \x20 fleet            sharded/async fleet-engine run (Fleet10k/Fleet100k/\n\
-     \x20                  Fleet10kWide/Fleet100kRegions; --regions/--churn knobs)\n\
+     \x20                  Fleet10kWide/Fleet100kRegions; --regions/--churn/\n\
+     \x20                  --codec knobs)\n\
      \x20 p2p              one peer-to-peer training run\n\
      \x20 fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11\n\
      \x20                  regenerate that figure's CSV series\n\
@@ -211,6 +213,7 @@ fn run_traditional(args: &[String]) -> Result<()> {
         .opt("backend", Some("pjrt"), "pjrt | mock")
         .opt("split", Some("iid"), "iid | non-iid")
         .opt("model", None, "model-shape preset (mock backend only; see `shapes`)")
+        .opt("codec", Some("raw"), "wire codec: raw | quant8 | topk:FRAC")
         .opt("seed", Some("0"), "experiment seed")
         .opt("out", Some("results"), "output directory")
         .switch("verbose", "per-round progress on stderr");
@@ -227,25 +230,30 @@ fn run_traditional(args: &[String]) -> Result<()> {
     let backend = parse_backend(m.str_("backend")?)?;
 
     let shape_override = m.get("model").map(ModelShape::preset).transpose()?;
+    let codec: PayloadCodec = m.str_("codec")?.parse()?;
 
     let mut cfg = traditional_config(&c, method, rounds, seed);
+    cfg.transport.codec = codec;
     cfg.verbose = m.bool_("verbose")?;
     let mut sys = presets::bootstrap_case(&c, seed);
     if let Some(shape) = &shape_override {
         // a swept model must also be charged in Eq (3): replace Table 1's
-        // fixed Z(w) with this shape's actual raw payload
+        // fixed Z(w) with this shape's actual raw payload (the transport
+        // plane then scales it to the codec's wire size for the run)
         sys.pool.channel = presets::channel_for_shape(shape);
     }
     let mut trainer =
         presets::make_trainer(&backend, &c, split, seed, shape_override.as_ref())?;
-    let label = format!("{}/{}", c.name, method.label());
+    let codec_tag = codec.file_tag();
+    let label = format!("{}/{}{}", c.name, method.label(), codec_tag);
     let h = traditional::run(&mut sys, trainer.as_mut(), &cfg, &label)?;
 
     let out = PathBuf::from(m.str_("out")?).join(format!(
-        "run_{}_{}_{}.csv",
+        "run_{}_{}_{}{}.csv",
         c.name,
         method.label(),
-        figures::split_tag(split)
+        figures::split_tag(split),
+        codec_tag
     ));
     h.write_csv(&out)?;
     println!(
@@ -266,6 +274,7 @@ fn run_fleet(args: &[String]) -> Result<()> {
         .opt("max-staleness", None, "override the staleness bound (0 = sync)")
         .opt("rounds", None, "override the case's global rounds")
         .opt("model", None, "override the case's model-shape preset (see `shapes`)")
+        .opt("codec", Some("raw"), "wire codec: raw | quant8 | topk:FRAC")
         .opt("decay", Some("0.5"), "staleness weight decay in (0, 1]")
         .opt("churn", None, "inject churn: EVERY[:RATE] — every EVERY rounds replace RATE of the fleet (default rate 0.1)")
         .opt("threads", Some("0"), "worker threads (0 = auto, 1 = serial)")
@@ -300,6 +309,8 @@ fn run_fleet(args: &[String]) -> Result<()> {
         cfg.churn_every = every;
         cfg.churn_rate = rate;
     }
+    let codec: PayloadCodec = m.str_("codec")?.parse()?;
+    cfg.transport.codec = codec;
     cfg.threads = m.usize_("threads")?;
     cfg.verbose = m.bool_("verbose")?;
     cfg.validate()?;
@@ -311,33 +322,38 @@ fn run_fleet(args: &[String]) -> Result<()> {
 
     let mut sys = presets::bootstrap_fleet_case(&case, &shape, cfg.seed);
     let mut trainer = presets::make_fleet_trainer(&case, Some(&shape))?;
-    // region-less runs keep the PR-2 label/file naming
+    // region-less raw runs keep the PR-2 label/file naming
     let region_tag = if cfg.regions > 1 {
         format!("_r{}", cfg.regions)
     } else {
         String::new()
     };
+    let codec_tag = codec.file_tag();
     let label = format!(
-        "{}/{}/s{}k{}{}",
+        "{}/{}/s{}k{}{}{}",
         case.name,
         shape.name(),
         cfg.shards,
         cfg.max_staleness,
-        region_tag
+        region_tag,
+        codec_tag
     );
     let h = fleet::run(&mut sys, trainer.as_mut(), &cfg, &label)?;
 
     let out = PathBuf::from(m.str_("out")?).join(format!(
-        "fleet_{}_{}_{}s_{}k{}.csv",
+        "fleet_{}_{}_{}s_{}k{}{}.csv",
         case.name,
         shape.name(),
         cfg.shards,
         cfg.max_staleness,
-        region_tag
+        region_tag,
+        codec_tag
     ));
     h.write_csv(&out)?;
     let commits: usize = h.rounds.iter().map(|r| r.shards_committed).sum();
     let moves: usize = h.rounds.iter().map(|r| r.rebalance_moves).sum();
+    let uplink_mb: f64 =
+        h.rounds.iter().map(|r| r.uplink_bytes).sum::<usize>() as f64 / 1e6;
     let stale_mean: f64 = if h.rounds.is_empty() {
         0.0
     } else {
@@ -346,14 +362,17 @@ fn run_fleet(args: &[String]) -> Result<()> {
     };
     println!(
         "{label}: {} clients / {} shards / {} regions, model {} ({} params, \
-         {:.3} MB), {} rounds, {} shard commits (mean staleness \
-         {stale_mean:.2}), {moves} rebalance moves, final accuracy {:.4} → {}",
+         {:.3} MB), codec {} ({:.3} MB/update), {} rounds, {} shard commits \
+         (mean staleness {stale_mean:.2}), {moves} rebalance moves, \
+         {uplink_mb:.1} MB uplinked, final accuracy {:.4} → {}",
         case.num_clients,
         cfg.shards,
         cfg.regions,
         shape.name(),
         shape.param_count(),
         shape.payload_bytes() as f64 / 1e6,
+        codec.label(),
+        codec.payload_bytes_for(&shape) as f64 / 1e6,
         h.rounds.len(),
         commits,
         h.final_accuracy(),

@@ -50,6 +50,20 @@ pub struct RoundRecord {
     /// surviving clients whose shard changed in this round's
     /// churn-triggered rebalance (0 when no rebalance ran)
     pub rebalance_moves: usize,
+    /// wire bytes of this round's client → server/shard uplink transfers
+    /// (codec-compressed Z(w) × transmitting clients — the transport
+    /// plane's `Link::Uplink` tier)
+    pub uplink_bytes: usize,
+    /// wire bytes over the shard → region and region → root backhauls
+    /// (0 for the flat coordinators)
+    pub backhaul_bytes: usize,
+    /// wire bytes of the downlink model broadcast (dense model ×
+    /// fetch points)
+    pub broadcast_bytes: usize,
+    /// the round's communication critical path: broadcast → uplink →
+    /// backhaul tiers crossed serially, each gated by its slowest
+    /// transfer (`transport::RoundLedger::comm_delay_s`)
+    pub comm_delay_s: f64,
 }
 
 impl RoundRecord {
@@ -175,6 +189,10 @@ impl RunHistory {
             "shard_spread_max_s",
             "regions_committed",
             "rebalance_moves",
+            "uplink_bytes",
+            "backhaul_bytes",
+            "broadcast_bytes",
+            "comm_delay_s",
         ]);
         let cum_local = self.cumulative(Metric::LocalDelayRound);
         let cum_tx = self.cumulative(Metric::TxDelayRound);
@@ -196,6 +214,10 @@ impl RunHistory {
                 r.shard_spread_max_s(),
                 r.regions_committed as f64,
                 r.rebalance_moves as f64,
+                r.uplink_bytes as f64,
+                r.backhaul_bytes as f64,
+                r.broadcast_bytes as f64,
+                r.comm_delay_s,
             ]);
         }
         t
@@ -283,10 +305,29 @@ mod tests {
         let header = text.lines().next().unwrap();
         assert!(header.ends_with(
             "shards_committed,staleness_mean,shard_spread_max_s,\
-             regions_committed,rebalance_moves"
+             regions_committed,rebalance_moves,\
+             uplink_bytes,backhaul_bytes,broadcast_bytes,comm_delay_s"
         ));
         let row = text.lines().nth(1).unwrap();
         assert!(row.contains(",3,0.5,2,2,7"), "{row}");
+    }
+
+    #[test]
+    fn transport_columns_round_trip_to_csv() {
+        let mut h = RunHistory::new("transport");
+        let mut r = rec(0, 0.4, &[1.0], &[0.5], &[0.1]);
+        r.uplink_bytes = 101_770;
+        r.backhaul_bytes = 2048;
+        r.broadcast_bytes = 407_080;
+        r.comm_delay_s = 1.25;
+        h.push(r);
+        let text = h.to_csv().to_string();
+        let row = text.lines().nth(1).unwrap();
+        assert!(row.ends_with(",101770,2048,407080,1.25"), "{row}");
+        // the flat default charges nothing
+        let d = RoundRecord::default();
+        assert_eq!(d.uplink_bytes, 0);
+        assert_eq!(d.comm_delay_s, 0.0);
     }
 
     #[test]

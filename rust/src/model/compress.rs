@@ -9,10 +9,12 @@
 //!   tensor as (index, value) pairs; the paper's family of sketch/sparse
 //!   updates.
 //!
-//! The coordinator exposes these through `PayloadCodec`; the channel
-//! simulator then charges Eq (3)/(4) for the *compressed* Z(w), so the
-//! CNC × compression interaction is measurable (ablation in
-//! `cnc-fl ablate payload`).
+//! The transport plane (`crate::transport`) wires `PayloadCodec` through
+//! every engine: client updates pass the lossy [`PayloadCodec::round_trip`]
+//! before aggregation and the channel simulator charges Eq (3)/(4) for
+//! the *compressed* Z(w), so the CNC × compression interaction is
+//! measurable end to end (`--codec raw|quant8|topk:FRAC` on
+//! `cnc-fl run` and `cnc-fl fleet`).
 //!
 //! Codecs operate on the flat-arena `ModelParams` through its per-tensor
 //! views (`tensor(i)` / `tensor_mut(i)`) and size every payload from the
@@ -46,11 +48,51 @@ pub enum PayloadCodec {
 }
 
 impl PayloadCodec {
-    /// Transmitted bytes for a model under this codec (protocol framing
-    /// ignored — same simplification as the paper's constant Z(w)).
-    /// Sizes come from the model's own shape.
-    pub fn payload_bytes(&self, params: &ModelParams) -> usize {
-        let shape = params.shape();
+    /// The paper's default wire format.
+    pub fn is_raw(&self) -> bool {
+        matches!(self, PayloadCodec::Raw)
+    }
+
+    /// Short tag for labels and CSV file names (`raw`, `quant8`,
+    /// `topk0.1`).
+    pub fn label(&self) -> String {
+        match self {
+            PayloadCodec::Raw => "raw".to_string(),
+            PayloadCodec::Quant8 => "quant8".to_string(),
+            PayloadCodec::TopK { keep_frac } => format!("topk{keep_frac}"),
+        }
+    }
+
+    /// File/label suffix: empty for the raw default (so existing file
+    /// names are untouched), `_<label>` otherwise — the one derivation
+    /// every subcommand's CSV naming uses.
+    pub fn file_tag(&self) -> String {
+        if self.is_raw() {
+            String::new()
+        } else {
+            format!("_{}", self.label())
+        }
+    }
+
+    /// Reject out-of-range codec parameters. The one definition of the
+    /// top-k keep-fraction bound: the CLI parser, the transport plane's
+    /// config validation and [`round_trip`](Self::round_trip) all call
+    /// this.
+    pub fn validate(&self) -> Result<()> {
+        if let PayloadCodec::TopK { keep_frac } = self {
+            if !(*keep_frac > 0.0 && *keep_frac <= 1.0) {
+                bail!("topk keep fraction {keep_frac} outside (0, 1]");
+            }
+        }
+        Ok(())
+    }
+
+    /// Transmitted bytes for a model of `shape` under this codec
+    /// (protocol framing ignored — same simplification as the paper's
+    /// constant Z(w)). The one wire-size definition: the transport
+    /// plane, the params-level [`payload_bytes`](Self::payload_bytes)
+    /// and every CSV byte column all come from here.
+    pub fn payload_bytes_for(&self, shape: &ModelShape) -> usize {
         let n = shape.param_count();
         let t = shape.num_tensors();
         match self {
@@ -59,13 +101,18 @@ impl PayloadCodec {
             PayloadCodec::Quant8 => n + t * 8,
             // u32 index + f32 value per kept entry
             PayloadCodec::TopK { keep_frac } => {
-                let kept: usize = params
-                    .tensors()
-                    .map(|tv| keep_count(tv.len(), *keep_frac))
+                let kept: usize = (0..t)
+                    .map(|i| keep_count(shape.elements(i), *keep_frac))
                     .sum();
                 kept * 8 + t * 4
             }
         }
+    }
+
+    /// Transmitted bytes for a concrete model — sized from its own
+    /// shape (delegates to [`payload_bytes_for`](Self::payload_bytes_for)).
+    pub fn payload_bytes(&self, params: &ModelParams) -> usize {
+        self.payload_bytes_for(params.shape())
     }
 
     /// Encode → decode; returns the reconstructed model (what the server
@@ -75,10 +122,44 @@ impl PayloadCodec {
             PayloadCodec::Raw => Ok(params.clone()),
             PayloadCodec::Quant8 => Ok(dequantize8(&quantize8(params))),
             PayloadCodec::TopK { keep_frac } => {
-                if !(*keep_frac > 0.0 && *keep_frac <= 1.0) {
-                    bail!("keep_frac must be in (0, 1], got {keep_frac}");
-                }
+                self.validate()?;
                 Ok(sparsify_topk(params, *keep_frac).densify())
+            }
+        }
+    }
+
+    /// Apply the wire's encode → decode to an owned update — what the
+    /// engines call on every transmitted client update. `Raw` is the
+    /// identity and moves the params through untouched (no clone, no
+    /// arithmetic — the bit-identity contract of `--codec raw`).
+    pub fn apply_wire(&self, params: ModelParams) -> Result<ModelParams> {
+        if self.is_raw() {
+            Ok(params)
+        } else {
+            self.round_trip(&params)
+        }
+    }
+}
+
+impl std::str::FromStr for PayloadCodec {
+    type Err = anyhow::Error;
+
+    /// Parse the CLI form: `raw` | `quant8` | `topk:FRAC`.
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim();
+        match s {
+            "raw" => Ok(PayloadCodec::Raw),
+            "quant8" => Ok(PayloadCodec::Quant8),
+            other => {
+                let Some(frac) = other.strip_prefix("topk:") else {
+                    bail!("unknown codec `{other}` (raw|quant8|topk:FRAC)");
+                };
+                let keep_frac: f32 = frac
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("topk fraction `{frac}`: {e}"))?;
+                let codec = PayloadCodec::TopK { keep_frac };
+                codec.validate()?;
+                Ok(codec)
             }
         }
     }
@@ -391,6 +472,72 @@ mod tests {
         let m = random_params(4);
         let r = PayloadCodec::TopK { keep_frac: 1.0 }.round_trip(&m).unwrap();
         assert_eq!(m, r);
+    }
+
+    #[test]
+    fn codec_parses_the_cli_forms() {
+        assert_eq!("raw".parse::<PayloadCodec>().unwrap(), PayloadCodec::Raw);
+        assert_eq!(
+            " quant8 ".parse::<PayloadCodec>().unwrap(),
+            PayloadCodec::Quant8
+        );
+        assert_eq!(
+            "topk:0.1".parse::<PayloadCodec>().unwrap(),
+            PayloadCodec::TopK { keep_frac: 0.1 }
+        );
+        assert!("topk:0".parse::<PayloadCodec>().is_err());
+        assert!("topk:1.5".parse::<PayloadCodec>().is_err());
+        assert!("topk:x".parse::<PayloadCodec>().is_err());
+        assert!("gzip".parse::<PayloadCodec>().is_err());
+        // labels round into file names
+        assert_eq!(PayloadCodec::Raw.label(), "raw");
+        assert_eq!(PayloadCodec::Quant8.label(), "quant8");
+        assert_eq!(
+            PayloadCodec::TopK { keep_frac: 0.1 }.label(),
+            "topk0.1"
+        );
+        assert!(PayloadCodec::Raw.is_raw());
+        assert!(!PayloadCodec::Quant8.is_raw());
+        // raw keeps legacy file names; other codecs get a suffix
+        assert_eq!(PayloadCodec::Raw.file_tag(), "");
+        assert_eq!(PayloadCodec::Quant8.file_tag(), "_quant8");
+        // one range definition behind parser, config and round_trip
+        assert!(PayloadCodec::TopK { keep_frac: 0.5 }.validate().is_ok());
+        assert!(PayloadCodec::TopK { keep_frac: -0.1 }.validate().is_err());
+    }
+
+    #[test]
+    fn apply_wire_is_identity_for_raw_and_round_trip_otherwise() {
+        let m = random_params(12);
+        let raw = PayloadCodec::Raw.apply_wire(m.clone()).unwrap();
+        assert!(m
+            .as_slice()
+            .iter()
+            .zip(raw.as_slice())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        let q = PayloadCodec::Quant8.apply_wire(m.clone()).unwrap();
+        let rt = PayloadCodec::Quant8.round_trip(&m).unwrap();
+        assert_eq!(q, rt);
+        assert!(m.max_abs_diff(&q) > 0.0, "quant8 wire must be lossy");
+    }
+
+    #[test]
+    fn shape_level_sizing_matches_params_level() {
+        for name in PRESET_NAMES {
+            let s = ModelShape::preset(name).unwrap();
+            let m = random_params_shaped(&s, 13);
+            for codec in [
+                PayloadCodec::Raw,
+                PayloadCodec::Quant8,
+                PayloadCodec::TopK { keep_frac: 0.3 },
+            ] {
+                assert_eq!(
+                    codec.payload_bytes(&m),
+                    codec.payload_bytes_for(&s),
+                    "{name} {codec:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -169,9 +169,10 @@ impl ModelParams {
 
     /// The payload size Z(w) in bytes if transmitted raw — compare with
     /// Table 1's 0.606 MB (their model + framing; the `mlp-784` preset is
-    /// 0.407 MB raw).
+    /// 0.407 MB raw). Delegates to [`ModelShape::payload_bytes`]: there
+    /// is exactly one Z(w) definition in the system.
     pub fn payload_bytes(&self) -> usize {
-        self.data.len() * 4
+        self.shape.payload_bytes()
     }
 
     /// Accumulate `weight * other` into self — the hot loop of

@@ -144,6 +144,18 @@ pub fn tx_energy_j(p: &ChannelParams, delay_s: f64) -> f64 {
     p.tx_power_w * delay_s
 }
 
+/// The single Eq (3)/(4) charging point for one radio-uplink
+/// transmission: delay for the channel's Z(w) (codec-charged by the
+/// transport plane) at `rate_bps`, and the energy that airtime costs.
+/// `rb::build_cost_matrices` — and its consistency test — charge
+/// through here, and `crate::transport` re-exports it as the plane's
+/// uplink charge, so byte/delay accounting cannot drift between the
+/// cost matrices and the transport tiers.
+pub fn uplink_cost(p: &ChannelParams, rate_bps: f64) -> (f64, f64) {
+    let delay_s = tx_delay_s(p, rate_bps);
+    (delay_s, tx_energy_j(p, delay_s))
+}
+
 /// A client's fixed radio situation for a whole experiment: its distance
 /// to the aggregation server (drawn once, as in the paper's setup).
 #[derive(Debug, Clone)]

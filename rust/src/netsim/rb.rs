@@ -10,8 +10,8 @@
 //! algorithm or Eq (6) with bottleneck assignment (see `assign`).
 
 use crate::netsim::channel::{
-    instantaneous_rate_bps, tx_delay_s, tx_energy_j, uplink_rate_bps,
-    ChannelParams, RadioSite,
+    instantaneous_rate_bps, uplink_cost, uplink_rate_bps, ChannelParams,
+    RadioSite,
 };
 use crate::util::rng::Pcg64;
 
@@ -97,11 +97,14 @@ pub fn build_cost_matrices(
             } else {
                 uplink_rate_bps(p, d, pool.interference_w[k], &mut r)
             };
-            let l = tx_delay_s(p, bps);
+            // the single Eq (3)/(4) uplink charging point (re-exported
+            // by the transport plane) — bytes/delay cannot drift from
+            // the codec's charged Z(w)
+            let (l, e) = uplink_cost(p, bps);
             let idx = row * n_rb + k;
             rate[idx] = bps;
             delay[idx] = l;
-            energy[idx] = tx_energy_j(p, l);
+            energy[idx] = e;
         }
     }
     RbCostMatrices {
@@ -145,7 +148,13 @@ mod tests {
         assert_eq!(m.n_rb, 8);
         for i in 0..6 {
             for k in 0..8 {
-                // e = P · l  and  l = Z / r  must hold element-wise
+                // every matrix entry must be exactly the transport
+                // plane's Eq (3)/(4) charge for its rate — the one Z(w)
+                // definition the codecs scale
+                let (l, e) = uplink_cost(&p, m.rate(i, k));
+                assert_eq!(m.delay(i, k).to_bits(), l.to_bits());
+                assert_eq!(m.energy(i, k).to_bits(), e.to_bits());
+                // ... which is e = P · l and l = Z / r element-wise
                 assert!(
                     (m.energy(i, k) - p.tx_power_w * m.delay(i, k)).abs() < 1e-12
                 );

@@ -1,0 +1,546 @@
+//! The **transport plane**: one typed communication layer that every
+//! model-parameter movement in the system goes through.
+//!
+//! The paper charges every uplink transfer through Eq (2)–(4); update
+//! compression is the standard second lever next to CNC scheduling
+//! (§I-B, Konečný et al. [4]). Before this module the byte/delay
+//! charging was re-derived ad hoc at each transfer site and the
+//! [`PayloadCodec`] codecs were dead code. Now:
+//!
+//! ```text
+//!                 root ──────────────┐
+//!          Broadcast ↓ (raw model)   │ RegionBackhaul ↑ (codec partial)
+//!                 region ────────────┤
+//!                                    │ ShardBackhaul  ↑ (codec partial)
+//!                 shard ─────────────┤
+//!          Broadcast ↓ (raw model)   │ Uplink         ↑ (codec update,
+//!                 client ────────────┘                   Eq 2–4 radio)
+//! ```
+//!
+//! * a [`Link`] names the tier a transfer crosses;
+//! * a [`Transfer`] records what moved: `{link, codec, count, bytes,
+//!   delay_s, energy_j}`;
+//! * a [`TransportPlan`] — built from the run's resolved
+//!   [`ModelShape`] and the engine config's [`TransportConfig`] — is the
+//!   single place transfer sizes and tier delays come from. The uplink
+//!   keeps the paper's Eq (2)–(4) channel/RB machinery (the plan scales
+//!   the channel's Z(w) to the codec's wire size via
+//!   [`TransportPlan::charge_channel`], so Eq (3) charges the
+//!   *compressed* payload); backhaul and broadcast tiers get simple
+//!   rate+latency models, giving the three-level fleet a nonzero
+//!   inter-tier cost;
+//! * a [`RoundLedger`] accumulates one round's transfers and reduces
+//!   them to the per-tier CSV columns (`uplink_bytes`, `backhaul_bytes`,
+//!   `broadcast_bytes`, `comm_delay_s`).
+//!
+//! # What the codec touches
+//!
+//! Client updates pass through the codec's lossy `round_trip` before any
+//! aggregation ([`PayloadCodec::apply_wire`] in
+//! `coordinator::train_cohort` and the P2P chain walk), so Quant8/TopK
+//! lossiness shows up in *accuracy*, not just in bytes. Shard/region
+//! partials and the downlink broadcast are **charged** through the plan
+//! but not lossy-compressed: an update crosses the radio uplink once per
+//! client per round (where compression dominates), while a partial
+//! crosses a wired backhaul once per shard — the simulation charges its
+//! bytes and keeps its arithmetic exact, preserving the hierarchy's
+//! bit-identity contracts. `Raw` is the identity on every path: a
+//! `--codec raw` run is bit-identical to the pre-transport engines
+//! (pinned by `tests/transport_props.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::model::shape::ModelShape;
+use crate::netsim::channel::ChannelParams;
+
+pub use crate::model::compress::PayloadCodec;
+
+/// The tier a parameter transfer crosses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Link {
+    /// client → shard/server radio uplink (Eq 2–4; per-client RBs in
+    /// parallel)
+    Uplink,
+    /// shard → region wired backhaul (aggregated partials)
+    ShardBackhaul,
+    /// region → root wired backhaul (region partials)
+    RegionBackhaul,
+    /// root → clients downlink broadcast (the dense global model)
+    Broadcast,
+}
+
+impl Link {
+    /// Every tier, in the serial order of one round's communication
+    /// critical path: broadcast down, then uplink, then the backhauls.
+    pub const ALL: [Link; 4] = [
+        Link::Broadcast,
+        Link::Uplink,
+        Link::ShardBackhaul,
+        Link::RegionBackhaul,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Link::Uplink => "uplink",
+            Link::ShardBackhaul => "shard-backhaul",
+            Link::RegionBackhaul => "region-backhaul",
+            Link::Broadcast => "broadcast",
+        }
+    }
+}
+
+/// A wired tier's rate model: `delay = latency + bytes·8 / rate`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierRate {
+    pub rate_bps: f64,
+    pub latency_s: f64,
+}
+
+impl TierRate {
+    pub fn new(rate_bps: f64, latency_s: f64) -> Self {
+        TierRate {
+            rate_bps,
+            latency_s,
+        }
+    }
+
+    /// Transfer delay for `bytes` over this tier.
+    pub fn delay_for(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 * 8.0 / self.rate_bps
+    }
+
+    fn validate(&self, tier: &str) -> Result<()> {
+        if !(self.rate_bps > 0.0 && self.rate_bps.is_finite()) {
+            bail!("{tier} rate {} must be positive and finite", self.rate_bps);
+        }
+        if !(self.latency_s >= 0.0 && self.latency_s.is_finite()) {
+            bail!(
+                "{tier} latency {} must be non-negative and finite",
+                self.latency_s
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Per-run transport settings: the wire codec plus the non-radio tiers'
+/// rate models. Embedded in every engine config (`TraditionalConfig`,
+/// `P2pConfig`, `FleetConfig`); the flat coordinators simply never use
+/// the backhaul tiers.
+#[derive(Debug, Clone)]
+pub struct TransportConfig {
+    /// wire codec for client updates (`--codec raw|quant8|topk:FRAC`)
+    pub codec: PayloadCodec,
+    /// shard → region backhaul (default 1 Gb/s, 2 ms)
+    pub shard_backhaul: TierRate,
+    /// region → root backhaul (default 10 Gb/s, 5 ms)
+    pub region_backhaul: TierRate,
+    /// root → clients downlink (default 100 Mb/s, 1 ms)
+    pub broadcast: TierRate,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            codec: PayloadCodec::Raw,
+            shard_backhaul: TierRate::new(1e9, 2e-3),
+            region_backhaul: TierRate::new(1e10, 5e-3),
+            broadcast: TierRate::new(1e8, 1e-3),
+        }
+    }
+}
+
+impl TransportConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.codec.validate()?;
+        self.shard_backhaul.validate("shard backhaul")?;
+        self.region_backhaul.validate("region backhaul")?;
+        self.broadcast.validate("broadcast")?;
+        Ok(())
+    }
+}
+
+/// One parameter movement across a tier (possibly aggregating several
+/// same-shaped payloads — `count` of them — into one record).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transfer {
+    pub link: Link,
+    pub codec: PayloadCodec,
+    /// payloads moved (clients on the uplink, partials on a backhaul,
+    /// receivers on the broadcast)
+    pub count: usize,
+    /// total wire bytes
+    pub bytes: usize,
+    /// tier delay: max over parallel radio transmissions (uplink), or
+    /// the rate model's serialized delay (wired tiers); 0 for tiers the
+    /// scenario charges in relative cost units (P2P chains)
+    pub delay_s: f64,
+    /// summed transmission energy (Eq 4); 0 on wired tiers
+    pub energy_j: f64,
+}
+
+/// The resolved per-run transfer-size/delay table: built once from the
+/// model shape the run trains and the engine's [`TransportConfig`], then
+/// consulted for every transfer. There is exactly one Z(w) definition
+/// behind it (`ModelShape::payload_bytes` / the codec's wire sizing).
+#[derive(Debug, Clone)]
+pub struct TransportPlan {
+    cfg: TransportConfig,
+    /// wire bytes of one codec-encoded client update / shard partial
+    update_bytes: usize,
+    /// wire bytes of the dense model (broadcast payload)
+    raw_bytes: usize,
+}
+
+impl TransportPlan {
+    pub fn new(shape: &ModelShape, cfg: &TransportConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(TransportPlan {
+            cfg: cfg.clone(),
+            update_bytes: cfg.codec.payload_bytes_for(shape),
+            raw_bytes: shape.payload_bytes(),
+        })
+    }
+
+    pub fn codec(&self) -> PayloadCodec {
+        self.cfg.codec
+    }
+
+    /// Wire bytes of one codec-encoded update — the compressed Z(w).
+    pub fn update_bytes(&self) -> usize {
+        self.update_bytes
+    }
+
+    /// Wire bytes of one dense-model broadcast.
+    pub fn broadcast_model_bytes(&self) -> usize {
+        self.raw_bytes
+    }
+
+    /// `compressed Z(w) / raw Z(w)` — 1.0 for the raw codec.
+    pub fn compression_ratio(&self) -> f64 {
+        self.update_bytes as f64 / self.raw_bytes as f64
+    }
+
+    /// Charge the codec's wire size in the Eq (3)/(4) channel model:
+    /// scales the channel's Z(w) (which may include protocol framing,
+    /// e.g. Table 1's 0.606 MB) by the codec's compression ratio, so
+    /// every uplink delay/energy the scheduler derives is for the
+    /// *compressed* payload. The raw codec leaves the channel untouched
+    /// — bit-identical to the pre-transport engines.
+    pub fn charge_channel(&self, channel: &mut ChannelParams) {
+        if !self.cfg.codec.is_raw() {
+            channel.payload_bytes *= self.compression_ratio();
+        }
+    }
+
+    /// One round's uplink tier: the decided cohort's slot-aligned Eq (3)
+    /// delays and Eq (4) energies (every decided client transmits —
+    /// a deadline dropout spent its airtime even though the server
+    /// discards the update). Clients hold distinct RBs, so the tier
+    /// delay is the max.
+    pub fn uplink(&self, tx_delays_s: &[f64], tx_energies_j: &[f64]) -> Transfer {
+        Transfer {
+            link: Link::Uplink,
+            codec: self.cfg.codec,
+            count: tx_delays_s.len(),
+            bytes: self.update_bytes * tx_delays_s.len(),
+            delay_s: tx_delays_s.iter().copied().fold(0.0, f64::max),
+            energy_j: tx_energies_j.iter().sum(),
+        }
+    }
+
+    /// P2P chain hops: model forwards between peers, charged in bytes
+    /// only (chain transmission *costs* stay in the paper's relative
+    /// Eq (7) units, recorded separately by the P2P coordinator).
+    pub fn p2p_hops(&self, hops: usize) -> Transfer {
+        Transfer {
+            link: Link::Uplink,
+            codec: self.cfg.codec,
+            count: hops,
+            bytes: self.update_bytes * hops,
+            delay_s: 0.0,
+            energy_j: 0.0,
+        }
+    }
+
+    /// Shard → region backhaul carrying `partials` shard partials
+    /// (serialized on the shared pipe).
+    pub fn shard_backhaul(&self, partials: usize) -> Transfer {
+        let bytes = self.update_bytes * partials;
+        Transfer {
+            link: Link::ShardBackhaul,
+            codec: self.cfg.codec,
+            count: partials,
+            bytes,
+            delay_s: self.cfg.shard_backhaul.delay_for(bytes),
+            energy_j: 0.0,
+        }
+    }
+
+    /// Region → root backhaul carrying `partials` region partials.
+    pub fn region_backhaul(&self, partials: usize) -> Transfer {
+        let bytes = self.update_bytes * partials;
+        Transfer {
+            link: Link::RegionBackhaul,
+            codec: self.cfg.codec,
+            count: partials,
+            bytes,
+            delay_s: self.cfg.region_backhaul.delay_for(bytes),
+            energy_j: 0.0,
+        }
+    }
+
+    /// Root → clients downlink: the dense global model to `receivers`
+    /// fetch points — one per shard fetching a job under the fleet
+    /// engine, one per chain head under P2P, and a single radio
+    /// broadcast (`receivers = 1`: one transmission heard by the whole
+    /// cohort) under the traditional coordinator. Broadcast is never
+    /// codec-compressed — the receiver needs the exact dense model to
+    /// train against.
+    pub fn broadcast(&self, receivers: usize) -> Transfer {
+        let bytes = self.raw_bytes * receivers;
+        Transfer {
+            link: Link::Broadcast,
+            codec: PayloadCodec::Raw,
+            count: receivers,
+            bytes,
+            delay_s: self.cfg.broadcast.delay_for(bytes),
+            energy_j: 0.0,
+        }
+    }
+}
+
+/// The plane's radio-uplink charge — the single Eq (3)/(4) charging
+/// point, defined next to the channel model it wraps
+/// ([`crate::netsim::channel::uplink_cost`]) and re-exported here so
+/// transport consumers need only this module.
+pub use crate::netsim::channel::uplink_cost;
+
+/// One round's transfers, reduced to the per-tier telemetry columns.
+#[derive(Debug, Clone, Default)]
+pub struct RoundLedger {
+    transfers: Vec<Transfer>,
+}
+
+impl RoundLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a transfer. Empty transfers (`count == 0`) are ignored —
+    /// a tier nobody crossed charges nothing, not its base latency.
+    pub fn record(&mut self, t: Transfer) {
+        if t.count > 0 {
+            self.transfers.push(t);
+        }
+    }
+
+    pub fn transfers(&self) -> &[Transfer] {
+        &self.transfers
+    }
+
+    /// Total bytes that crossed `link` this round.
+    pub fn bytes(&self, link: Link) -> usize {
+        self.transfers
+            .iter()
+            .filter(|t| t.link == link)
+            .map(|t| t.bytes)
+            .sum()
+    }
+
+    pub fn uplink_bytes(&self) -> usize {
+        self.bytes(Link::Uplink)
+    }
+
+    /// Bytes over both backhaul tiers (the inter-tier CSV column).
+    pub fn backhaul_bytes(&self) -> usize {
+        self.bytes(Link::ShardBackhaul) + self.bytes(Link::RegionBackhaul)
+    }
+
+    pub fn broadcast_bytes(&self) -> usize {
+        self.bytes(Link::Broadcast)
+    }
+
+    /// A tier's delay this round: transfers within one tier run in
+    /// parallel (distinct shards / RBs), so the tier is gated by its
+    /// slowest transfer.
+    pub fn tier_delay_s(&self, link: Link) -> f64 {
+        self.transfers
+            .iter()
+            .filter(|t| t.link == link)
+            .map(|t| t.delay_s)
+            .fold(0.0, f64::max)
+    }
+
+    /// The round's communication critical path: tiers are crossed
+    /// serially (broadcast → uplink → shard backhaul → region backhaul),
+    /// each gated by its slowest transfer.
+    pub fn comm_delay_s(&self) -> f64 {
+        Link::ALL.iter().map(|&l| self.tier_delay_s(l)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::shape::PRESET_NAMES;
+
+    fn plan_for(codec: PayloadCodec) -> TransportPlan {
+        let shape = ModelShape::paper();
+        let cfg = TransportConfig {
+            codec,
+            ..Default::default()
+        };
+        TransportPlan::new(&shape, &cfg).unwrap()
+    }
+
+    #[test]
+    fn plan_sizes_come_from_the_one_z_definition() {
+        for name in PRESET_NAMES {
+            let shape = ModelShape::preset(name).unwrap();
+            let plan =
+                TransportPlan::new(&shape, &TransportConfig::default()).unwrap();
+            assert_eq!(plan.update_bytes(), shape.payload_bytes(), "{name}");
+            assert_eq!(plan.broadcast_model_bytes(), shape.payload_bytes());
+            assert_eq!(plan.compression_ratio(), 1.0);
+        }
+    }
+
+    #[test]
+    fn quant8_compresses_at_least_3_5x_on_every_preset() {
+        // the acceptance bar: quant8 must report ≥ 3.5× fewer uplink
+        // bytes than raw for any built-in model
+        for name in PRESET_NAMES {
+            let shape = ModelShape::preset(name).unwrap();
+            let cfg = TransportConfig {
+                codec: PayloadCodec::Quant8,
+                ..Default::default()
+            };
+            let plan = TransportPlan::new(&shape, &cfg).unwrap();
+            let ratio = plan.broadcast_model_bytes() as f64
+                / plan.update_bytes() as f64;
+            assert!(ratio >= 3.5, "{name}: quant8 only {ratio:.2}×");
+        }
+    }
+
+    #[test]
+    fn charge_channel_scales_z_for_codecs_and_is_identity_for_raw() {
+        let mut ch = ChannelParams::default();
+        let before = ch.payload_bytes;
+        plan_for(PayloadCodec::Raw).charge_channel(&mut ch);
+        assert_eq!(ch.payload_bytes.to_bits(), before.to_bits());
+
+        let plan = plan_for(PayloadCodec::Quant8);
+        plan.charge_channel(&mut ch);
+        let want = before * plan.compression_ratio();
+        assert!((ch.payload_bytes - want).abs() < 1e-9);
+        assert!(ch.payload_bytes < before / 3.5);
+    }
+
+    #[test]
+    fn uplink_transfer_reduces_cohort_telemetry() {
+        let plan = plan_for(PayloadCodec::Quant8);
+        let t = plan.uplink(&[0.5, 2.0, 1.0], &[0.01, 0.02, 0.03]);
+        assert_eq!(t.link, Link::Uplink);
+        assert_eq!(t.count, 3);
+        assert_eq!(t.bytes, 3 * plan.update_bytes());
+        assert_eq!(t.delay_s, 2.0); // parallel RBs: max
+        assert!((t.energy_j - 0.06).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wired_tiers_serialize_and_broadcast_is_raw() {
+        let plan = plan_for(PayloadCodec::Quant8);
+        let s = plan.shard_backhaul(4);
+        assert_eq!(s.bytes, 4 * plan.update_bytes());
+        let want = 2e-3 + s.bytes as f64 * 8.0 / 1e9;
+        assert!((s.delay_s - want).abs() < 1e-12);
+        let r = plan.region_backhaul(2);
+        assert_eq!(r.bytes, 2 * plan.update_bytes());
+        assert!(r.delay_s < s.delay_s, "region pipe is faster");
+        // the downlink always carries the dense model
+        let b = plan.broadcast(3);
+        assert_eq!(b.bytes, 3 * plan.broadcast_model_bytes());
+        assert_eq!(b.codec, PayloadCodec::Raw);
+        assert!(b.delay_s > 0.0);
+        assert_eq!(s.energy_j, 0.0);
+    }
+
+    #[test]
+    fn uplink_cost_is_eq3_times_eq4() {
+        let p = ChannelParams::default();
+        let (l, e) = uplink_cost(&p, 4e6);
+        assert!((l - p.payload_bits() / 4e6).abs() < 1e-12);
+        assert!((e - p.tx_power_w * l).abs() < 1e-15);
+    }
+
+    #[test]
+    fn ledger_reduces_per_tier_and_serializes_across_tiers() {
+        let plan = plan_for(PayloadCodec::Raw);
+        let mut ledger = RoundLedger::new();
+        ledger.record(plan.broadcast(2));
+        ledger.record(plan.uplink(&[1.0, 3.0], &[0.1, 0.1]));
+        ledger.record(plan.uplink(&[2.0], &[0.2]));
+        ledger.record(plan.shard_backhaul(3));
+        ledger.record(plan.region_backhaul(1));
+        ledger.record(plan.shard_backhaul(0)); // empty: ignored
+        assert_eq!(ledger.transfers().len(), 5);
+        assert_eq!(ledger.uplink_bytes(), 3 * plan.update_bytes());
+        assert_eq!(ledger.backhaul_bytes(), 4 * plan.update_bytes());
+        assert_eq!(ledger.broadcast_bytes(), 2 * plan.broadcast_model_bytes());
+        // within a tier: parallel (max); across tiers: serial (sum)
+        assert_eq!(ledger.tier_delay_s(Link::Uplink), 3.0);
+        let want = ledger.tier_delay_s(Link::Broadcast)
+            + 3.0
+            + ledger.tier_delay_s(Link::ShardBackhaul)
+            + ledger.tier_delay_s(Link::RegionBackhaul);
+        assert!((ledger.comm_delay_s() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_ledger_charges_nothing() {
+        let ledger = RoundLedger::new();
+        assert_eq!(ledger.uplink_bytes(), 0);
+        assert_eq!(ledger.backhaul_bytes(), 0);
+        assert_eq!(ledger.broadcast_bytes(), 0);
+        assert_eq!(ledger.comm_delay_s(), 0.0);
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerate_tiers() {
+        let mut cfg = TransportConfig::default();
+        assert!(cfg.validate().is_ok());
+        cfg.codec = PayloadCodec::TopK { keep_frac: 0.0 };
+        assert!(cfg.validate().is_err());
+        cfg.codec = PayloadCodec::Raw;
+        cfg.broadcast.rate_bps = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.broadcast.rate_bps = 1e8;
+        cfg.shard_backhaul.latency_s = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.shard_backhaul.latency_s = 0.0;
+        cfg.region_backhaul.rate_bps = f64::INFINITY;
+        assert!(cfg.validate().is_err());
+        // plan construction runs the same validation
+        let shape = ModelShape::paper();
+        let bad = TransportConfig {
+            codec: PayloadCodec::TopK { keep_frac: 1.5 },
+            ..Default::default()
+        };
+        assert!(TransportPlan::new(&shape, &bad).is_err());
+    }
+
+    #[test]
+    fn topk_plan_bytes_follow_the_kept_fraction() {
+        let shape = ModelShape::paper();
+        let cfg = TransportConfig {
+            codec: PayloadCodec::TopK { keep_frac: 0.1 },
+            ..Default::default()
+        };
+        let plan = TransportPlan::new(&shape, &cfg).unwrap();
+        // ~10 % of entries at 8 B each ≈ 20 % of the 4 B/entry raw size
+        let frac = plan.update_bytes() as f64
+            / plan.broadcast_model_bytes() as f64;
+        assert!((0.15..0.25).contains(&frac), "{frac}");
+    }
+}

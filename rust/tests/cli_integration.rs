@@ -225,6 +225,87 @@ fn fleet_region_tier_and_churn_flags_work() {
 }
 
 #[test]
+fn fleet_codec_flag_compresses_the_uplink_and_tags_the_csv() {
+    // the transport plane end-to-end: `--codec quant8` on the Fleet10k
+    // preset must land the new byte columns in a codec-tagged CSV with
+    // ≥ 3.5× fewer uplink bytes per round than raw (acceptance bar)
+    let out = tmpdir("fleet-codec");
+    for codec in ["raw", "quant8"] {
+        let (ok, stdout, stderr) = run(&[
+            "fleet",
+            "--preset",
+            "Fleet10k",
+            "--rounds",
+            "2",
+            "--codec",
+            codec,
+            "--out",
+            out.to_str().unwrap(),
+        ]);
+        assert!(ok, "codec={codec} stdout={stdout} stderr={stderr}");
+        assert!(stdout.contains(&format!("codec {codec}")), "{stdout}");
+    }
+    let read = |name: &str| {
+        std::fs::read_to_string(out.join(name)).unwrap()
+    };
+    let raw_csv = read("fleet_Fleet10k_mlp-784_16s_2k.csv");
+    let q8_csv = read("fleet_Fleet10k_mlp-784_16s_2k_quant8.csv");
+    let header = raw_csv.lines().next().unwrap();
+    for col in ["uplink_bytes", "backhaul_bytes", "broadcast_bytes", "comm_delay_s"] {
+        assert!(header.contains(col), "{header}");
+    }
+    let col = header.split(',').position(|c| c == "uplink_bytes").unwrap();
+    let uplink = |csv: &str| -> Vec<f64> {
+        csv.lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(col).unwrap().parse().unwrap())
+            .collect()
+    };
+    let raw_bytes = uplink(&raw_csv);
+    let q8_bytes = uplink(&q8_csv);
+    for (r, q) in raw_bytes.iter().zip(&q8_bytes) {
+        if *r == 0.0 {
+            continue; // async round with no commits
+        }
+        assert!(
+            r / q >= 3.5,
+            "quant8 uplink bytes only {:.2}x smaller",
+            r / q
+        );
+    }
+    // a malformed codec is rejected up front
+    let (ok, _, stderr) = run(&[
+        "fleet", "--preset", "Fleet10k", "--rounds", "1", "--codec", "gzip",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("codec"), "{stderr}");
+    let _ = std::fs::remove_dir_all(out);
+}
+
+#[test]
+fn run_codec_flag_works_on_the_traditional_engine() {
+    let out = tmpdir("run-codec");
+    let (ok, stdout, stderr) = run(&[
+        "run",
+        "--case",
+        "Pr1",
+        "--rounds",
+        "2",
+        "--backend",
+        "mock",
+        "--codec",
+        "topk:0.2",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    let csv =
+        std::fs::read_to_string(out.join("run_Pr1_cnc_iid_topk0.2.csv")).unwrap();
+    assert!(csv.lines().next().unwrap().contains("uplink_bytes"));
+    let _ = std::fs::remove_dir_all(out);
+}
+
+#[test]
 fn shapes_subcommand_lists_presets() {
     let (ok, stdout, stderr) = run(&["shapes"]);
     assert!(ok, "stderr={stderr}");

@@ -45,6 +45,7 @@ fn traditional_rounds_always_complete_with_valid_metrics() {
                 threads: 0,
                 seed: seed as u64,
                 verbose: false,
+                transport: Default::default(),
             };
             let h = traditional::run(&mut sys, &mut t, &cfg, "prop").unwrap();
             for r in &h.rounds {
@@ -86,6 +87,7 @@ fn p2p_every_client_visited_exactly_once_per_round() {
                 threads: 0,
                 seed: seed as u64,
                 verbose: false,
+                transport: Default::default(),
             };
             p2p::run(&mut sys, &mut t, &g, &cfg, "prop").unwrap();
             prop_assert(
@@ -116,6 +118,7 @@ fn cnc_delay_spread_dominates_fedavg_across_seeds() {
                 threads: 0,
                 seed,
                 verbose: false,
+                transport: Default::default(),
             };
             traditional::run(&mut sys, &mut t, &cfg, "x").unwrap()
         };
@@ -155,6 +158,7 @@ fn p2p_partition_count_bounds_round_chain_delay() {
                 threads: 0,
                 seed,
                 verbose: false,
+                transport: Default::default(),
             };
             p2p::run(&mut sys, &mut t, &g, &cfg, "x").unwrap()
         };
@@ -190,6 +194,7 @@ fn aggregation_weights_are_conserved() {
                 threads: 0,
                 seed: seed as u64,
                 verbose: false,
+                transport: Default::default(),
             };
             let h = traditional::run(&mut sys, &mut t, &cfg, "agg").unwrap();
             // identity training → accuracy constant across rounds
@@ -223,6 +228,7 @@ fn bus_message_flow_is_exactly_four_per_traditional_round() {
                 threads: 0,
                 seed: seed as u64,
                 verbose: false,
+                transport: Default::default(),
             };
             traditional::run(&mut sys, &mut t, &cfg, "bus").unwrap();
             prop_assert(

@@ -64,6 +64,7 @@ fn traditional_cnc_learns_iid() {
         threads: 0,
         seed: 0,
         verbose: false,
+        transport: Default::default(),
     };
     let h = traditional::run(&mut sys, &mut t, &cfg, "e2e/iid").unwrap();
     assert_eq!(h.rounds.len(), 15);
@@ -89,6 +90,7 @@ fn traditional_cnc_learns_non_iid() {
         threads: 0,
         seed: 0,
         verbose: false,
+        transport: Default::default(),
     };
     let h = traditional::run(&mut sys, &mut t, &cfg, "e2e/noniid").unwrap();
     let acc = h.final_accuracy();
@@ -111,6 +113,7 @@ fn p2p_chain_learns() {
         threads: 0,
         seed: 0,
         verbose: false,
+        transport: Default::default(),
     };
     let h = p2p::run(&mut sys, &mut t, &g, &cfg, "e2e/p2p").unwrap();
     // every client trains each round → 3 rounds of 20 chains is plenty
@@ -134,6 +137,7 @@ fn cnc_and_fedavg_reach_similar_accuracy_but_cnc_cheaper() {
         threads: 0,
         seed: 0,
         verbose: false,
+        transport: Default::default(),
     };
     let mut sys1 = system(100, 1);
     let h_cnc = traditional::run(&mut sys1, &mut t1, &base, "cnc").unwrap();
@@ -176,6 +180,7 @@ fn local_epochs_scale_compute_not_crash() {
         threads: 0,
         seed: 0,
         verbose: false,
+        transport: Default::default(),
     };
     let h = traditional::run(&mut sys, &mut t, &cfg, "e2e/5ep").unwrap();
     assert_eq!(h.rounds.len(), 2);

@@ -85,6 +85,7 @@ fn trad_cfg(rounds: usize, cohort: usize) -> TraditionalConfig {
         eval_every: 1,
         tx_deadline_s: None,
         threads: 0,
+        transport: Default::default(),
         seed: 0,
         verbose: false,
     }
@@ -132,6 +133,7 @@ fn p2p_chain_failure_propagates() {
         threads: 0,
         seed: 0,
         verbose: false,
+        transport: Default::default(),
     };
     assert!(p2p::run(&mut sys, &mut t, &g, &cfg, "flaky").is_err());
 }
@@ -154,6 +156,7 @@ fn p2p_on_disconnected_topology_errors_not_hangs() {
         threads: 0,
         seed: 0,
         verbose: false,
+        transport: Default::default(),
     };
     let err = p2p::run(&mut sys, &mut t, &g, &cfg, "star").unwrap_err();
     assert!(err.to_string().contains("no feasible path"), "{err}");
@@ -173,6 +176,7 @@ fn p2p_wrong_topology_size_rejected() {
         threads: 0,
         seed: 0,
         verbose: false,
+        transport: Default::default(),
     };
     assert!(p2p::run(&mut sys, &mut t, &g, &cfg, "size").is_err());
 }

@@ -93,6 +93,7 @@ fn one_shard_sync_fleet_equals_traditional_for_any_seed_and_width() {
                         threads,
                         seed: seed as u64,
                         verbose: false,
+                        transport: Default::default(),
                     };
                     traditional::run(&mut sys, &mut t, &cfg, "flat").unwrap()
                 };

@@ -263,6 +263,7 @@ fn traditional_parallel_runs_equal_serial_for_any_seed() {
                     threads,
                     seed: seed as u64,
                     verbose: false,
+                    transport: Default::default(),
                 };
                 traditional::run(&mut sys, &mut t, &cfg, "det").unwrap()
             };
@@ -298,6 +299,7 @@ fn p2p_parallel_runs_equal_serial_for_any_seed() {
                     threads,
                     seed: seed as u64,
                     verbose: false,
+                    transport: Default::default(),
                 };
                 p2p::run(&mut sys, &mut t, &g, &cfg, "det").unwrap()
             };

@@ -1,0 +1,293 @@
+//! Transport-plane properties: the raw codec is bit-invisible (every
+//! engine produces the exact pre-transport histories), a lossless
+//! non-raw wire (top-k at keep = 1.0) changes *only* the byte
+//! accounting, lossy codecs reach both the bytes and the model, and the
+//! per-tier CSV byte columns are exactly `codec wire size × transfer
+//! count` (mock backend — no artifacts needed).
+
+use cnc_fl::cnc::optimize::CohortStrategy;
+use cnc_fl::cnc::CncSystem;
+use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
+use cnc_fl::coordinator::MockTrainer;
+use cnc_fl::fleet::{self, FleetConfig};
+use cnc_fl::metrics::RunHistory;
+use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
+use cnc_fl::netsim::channel::ChannelParams;
+use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::transport::{PayloadCodec, TransportConfig, TransportPlan};
+
+fn system(n: usize, seed: u64) -> CncSystem {
+    let mut ch = ChannelParams::default();
+    ch.fading_samples = 2;
+    CncSystem::bootstrap(n, 600, 1, PowerProfile::Bimodal, ch, seed)
+}
+
+fn fleet_cfg(codec: PayloadCodec, threads: usize) -> FleetConfig {
+    FleetConfig {
+        rounds: 4,
+        shards: 3,
+        regions: 2,
+        max_staleness: 1,
+        cohort_size: 6,
+        n_rb: 6,
+        cohort_strategy: CohortStrategy::PowerGrouping { m: 4 },
+        threads,
+        transport: TransportConfig {
+            codec,
+            ..Default::default()
+        },
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+fn assert_training_bitwise_equal(a: &RunHistory, b: &RunHistory, tag: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{tag}");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(
+            x.accuracy.to_bits(),
+            y.accuracy.to_bits(),
+            "{tag}: round {} accuracy {} vs {}",
+            x.round,
+            x.accuracy,
+            y.accuracy
+        );
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{tag}: round {} loss",
+            x.round
+        );
+        assert_eq!(x.local_delays_s, y.local_delays_s, "{tag}");
+        assert_eq!(x.shards_committed, y.shards_committed, "{tag}");
+        assert_eq!(x.regions_committed, y.regions_committed, "{tag}");
+        assert_eq!(x.dropouts, y.dropouts, "{tag}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// raw-codec bit-identity: the transport refactor is pure re-plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn raw_codec_fleet_degenerate_matches_traditional_for_every_preset_and_width() {
+    // the satellite contract: with `--codec raw` (stated explicitly, not
+    // just defaulted) the refactored engines reproduce the pre-transport
+    // behaviour — pinned through the flat ≡ degenerate-fleet equality
+    // across all three shape presets × {serial, parallel}
+    for name in PRESET_NAMES {
+        let shape = ModelShape::preset(name).unwrap();
+        for threads in [1usize, 4] {
+            let raw_transport = TransportConfig {
+                codec: PayloadCodec::Raw,
+                ..Default::default()
+            };
+            let trad = {
+                let mut sys = system(30, 7);
+                let mut t = MockTrainer::with_shape(30, 600, &shape);
+                let cfg = TraditionalConfig {
+                    rounds: 3,
+                    cohort_size: 6,
+                    n_rb: 6,
+                    cohort_strategy: CohortStrategy::PowerGrouping { m: 5 },
+                    threads,
+                    transport: raw_transport.clone(),
+                    seed: 7,
+                    ..Default::default()
+                };
+                traditional::run(&mut sys, &mut t, &cfg, "flat").unwrap()
+            };
+            let flt = {
+                let mut sys = system(30, 7);
+                let mut t = MockTrainer::with_shape(30, 600, &shape);
+                let cfg = FleetConfig {
+                    rounds: 3,
+                    shards: 1,
+                    regions: 1,
+                    max_staleness: 0,
+                    cohort_size: 6,
+                    n_rb: 6,
+                    cohort_strategy: CohortStrategy::PowerGrouping { m: 5 },
+                    threads,
+                    transport: raw_transport,
+                    seed: 7,
+                    ..Default::default()
+                };
+                fleet::run(&mut sys, &mut t, &cfg, "fleet").unwrap()
+            };
+            assert_training_bitwise_equal(
+                &trad,
+                &flt,
+                &format!("{name}/threads{threads}"),
+            );
+            // and both charge the identical raw byte columns
+            for (x, y) in trad.rounds.iter().zip(&flt.rounds) {
+                assert_eq!(x.uplink_bytes, y.uplink_bytes, "{name}");
+                assert_eq!(x.uplink_bytes, 6 * shape.payload_bytes(), "{name}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lossless_wire_changes_bytes_but_not_one_bit_of_training() {
+    // top-k at keep = 1.0 round-trips exactly, but its wire format costs
+    // 8 B/entry instead of 4 — so a run with it must produce bitwise the
+    // same models/accuracies as raw while charging ~2× the uplink bytes
+    // (and, through Eq (3), ~2× the uplink delay). This pins that the
+    // codec plumbing touches *only* the wire.
+    for threads in [1usize, 4] {
+        let run_with = |codec: PayloadCodec| {
+            let mut sys = system(36, 3);
+            let mut t = MockTrainer::new(36, 600);
+            let cfg = fleet_cfg(codec, threads);
+            fleet::run(&mut sys, &mut t, &cfg, "wire").unwrap()
+        };
+        let raw = run_with(PayloadCodec::Raw);
+        let lossless = run_with(PayloadCodec::TopK { keep_frac: 1.0 });
+        assert_training_bitwise_equal(&raw, &lossless, "lossless-wire");
+        let ub_raw: usize = raw.rounds.iter().map(|r| r.uplink_bytes).sum();
+        let ub_lossless: usize =
+            lossless.rounds.iter().map(|r| r.uplink_bytes).sum();
+        assert!(
+            ub_lossless as f64 > 1.9 * ub_raw as f64,
+            "index+value pairs must cost ~2× raw: {ub_lossless} vs {ub_raw}"
+        );
+        // broadcast stays dense either way
+        for (x, y) in raw.rounds.iter().zip(&lossless.rounds) {
+            assert_eq!(x.broadcast_bytes, y.broadcast_bytes);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// byte accounting: CSV columns == codec wire size × transfer count
+// ---------------------------------------------------------------------------
+
+#[test]
+fn byte_columns_are_codec_wire_size_times_transfer_count() {
+    let shape = ModelShape::paper();
+    let codec = PayloadCodec::Quant8;
+    let transport = TransportConfig {
+        codec,
+        ..Default::default()
+    };
+    let plan = TransportPlan::new(&shape, &transport).unwrap();
+    let ub = plan.update_bytes();
+    let raw = plan.broadcast_model_bytes();
+    assert_eq!(ub, codec.payload_bytes_for(&shape));
+
+    let mut sys = system(40, 5);
+    let mut t = MockTrainer::new(40, 600);
+    let cfg = FleetConfig {
+        rounds: 3,
+        shards: 4,
+        regions: 2,
+        max_staleness: 0, // synchronous: every shard decides and commits
+        cohort_size: 8,
+        n_rb: 8,
+        cohort_strategy: CohortStrategy::PowerGrouping { m: 5 },
+        transport,
+        seed: 5,
+        ..Default::default()
+    };
+    let h = fleet::run(&mut sys, &mut t, &cfg, "bytes").unwrap();
+    let mut csv_total = 0usize;
+    let mut expect_total = 0usize;
+    for r in &h.rounds {
+        // per tier: cohort uplinks, 4-shard broadcast, 4 shard partials
+        // up the shard backhaul + 2 region partials up the region one
+        assert_eq!(r.uplink_bytes, 8 * ub, "round {}", r.round);
+        assert_eq!(r.broadcast_bytes, 4 * raw);
+        assert_eq!(r.backhaul_bytes, (4 + 2) * ub);
+        assert!(r.comm_delay_s > 0.0);
+        assert!(r.comm_delay_s >= r.tx_delay_round_s());
+        csv_total += r.uplink_bytes + r.backhaul_bytes + r.broadcast_bytes;
+        expect_total += 8 * ub + 4 * raw + 6 * ub;
+    }
+    assert_eq!(csv_total, expect_total);
+}
+
+// ---------------------------------------------------------------------------
+// lossy codecs reach bytes, Eq (3) delays AND the model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quant8_cuts_uplink_bytes_and_delays_at_least_3_5x_and_is_lossy() {
+    let run_with = |codec: PayloadCodec| {
+        let mut sys = system(36, 9);
+        let mut t = MockTrainer::new(36, 600);
+        let cfg = fleet_cfg(codec, 1);
+        fleet::run_with_model(&mut sys, &mut t, &cfg, "q8").unwrap()
+    };
+    let (h_raw, g_raw) = run_with(PayloadCodec::Raw);
+    let (h_q8, g_q8) = run_with(PayloadCodec::Quant8);
+    for (a, b) in h_raw.rounds.iter().zip(&h_q8.rounds) {
+        if a.uplink_bytes == 0 {
+            continue; // an async round with no commits charges nothing
+        }
+        let byte_ratio = a.uplink_bytes as f64 / b.uplink_bytes as f64;
+        assert!(
+            byte_ratio >= 3.5,
+            "round {}: quant8 only {byte_ratio:.2}× fewer uplink bytes",
+            a.round
+        );
+        // Eq (3) charges the compressed Z(w): the same cohort's slowest
+        // uplink shrinks by (nearly) the same factor
+        let delay_ratio = a.tx_delay_round_s() / b.tx_delay_round_s();
+        assert!(
+            delay_ratio > 3.0,
+            "round {}: compressed Z(w) not charged (ratio {delay_ratio:.2})",
+            a.round
+        );
+    }
+    // lossiness reaches the model — quantization error survives the fold
+    assert!(
+        g_raw.max_abs_diff(&g_q8) > 0.0,
+        "quant8 wire must perturb the global model"
+    );
+}
+
+#[test]
+fn charged_channel_is_restored_even_when_the_run_errors() {
+    // mid-run failures must not leak the codec-scaled Z(w) back to the
+    // caller's CncSystem (a retry would otherwise compound the scaling)
+    let mut sys = system(20, 21);
+    let before = sys.pool.channel.payload_bytes;
+    let mut t = MockTrainer::new(20, 600);
+    let cfg = TraditionalConfig {
+        rounds: 2,
+        cohort_size: 4,
+        n_rb: 4,
+        tx_deadline_s: Some(1e-12), // nobody can make this: round 0 bails
+        transport: TransportConfig {
+            codec: PayloadCodec::Quant8,
+            ..Default::default()
+        },
+        seed: 21,
+        ..Default::default()
+    };
+    assert!(traditional::run(&mut sys, &mut t, &cfg, "err").is_err());
+    assert_eq!(sys.pool.channel.payload_bytes.to_bits(), before.to_bits());
+}
+
+#[test]
+fn topk_fraction_scales_the_wire_and_the_run_completes() {
+    let mut sys = system(36, 13);
+    let mut t = MockTrainer::new(36, 600);
+    let cfg = fleet_cfg(PayloadCodec::TopK { keep_frac: 0.25 }, 1);
+    let h = fleet::run(&mut sys, &mut t, &cfg, "topk").unwrap();
+    let raw_bytes = ModelShape::paper().payload_bytes();
+    let committed: Vec<_> =
+        h.rounds.iter().filter(|r| r.uplink_bytes > 0).collect();
+    assert!(!committed.is_empty());
+    for r in &committed {
+        // kept quarter at 8 B/entry ≈ half the raw bytes, per uplink
+        let per_update = r.uplink_bytes as f64
+            / (r.tx_delays_s.len().max(1)) as f64;
+        let frac = per_update / raw_bytes as f64;
+        assert!((0.45..0.55).contains(&frac), "round {}: {frac}", r.round);
+    }
+    // the engine restored the channel's Z(w) it charged for the run
+    assert_eq!(sys.pool.channel.payload_bytes, 0.606e6);
+}
