@@ -4,8 +4,11 @@
 //! aggregation-tier tables: two-level vs **three-level root fold** (the
 //! ISSUE-4 acceptance bar: three-level wins at 10⁵ clients / 10³
 //! shards), per-shape hierarchical folds, the cached-vs-rebuilt
-//! per-shard P2P cost sub-views, and the transport-plane codec table
-//! (bytes/round and wire+fold time for raw vs quant8 vs topk:0.1).
+//! per-shard P2P cost sub-views, the transport-plane codec table
+//! (bytes/round and wire+fold time for raw vs quant8 vs topk:0.1), and
+//! the update-guard admission table (calm vs byzantine:0.2, guard
+//! on/off) — the latter also written to `BENCH_weather.json`, the first
+//! machine-readable bench artifact of the perf-trajectory series.
 //!
 //! The flat path pays O(cohort³) in the Hungarian RB assignment plus
 //! O(cohort·n_rb) channel modelling per round; sharding cuts both to K
@@ -21,9 +24,10 @@ use std::sync::Mutex;
 use cnc_fl::cnc::optimize::{CohortStrategy, RbStrategy, SchedulingOptimizer};
 use cnc_fl::cnc::CncSystem;
 use cnc_fl::exp::presets::default_m;
+use cnc_fl::fleet::weather::poison;
 use cnc_fl::fleet::{
-    decide_traditional_sharded, fold_regions, FleetTopology, RootAggregator,
-    ShardBy, ShardUpdate,
+    decide_traditional_sharded, fold_regions, FleetTopology, GuardPolicy,
+    RootAggregator, ShardBy, ShardUpdate, UpdateGuard,
 };
 use cnc_fl::model::aggregate::Aggregator;
 use cnc_fl::model::compress::PayloadCodec;
@@ -365,5 +369,110 @@ fn main() {
         }
     }
     println!("{codec_table}");
+
+    // --- update guard: admission overhead under failure weather ---------
+    // the per-update cost the weather suite adds at the shard fold: each
+    // cohort member passes the finite-check + L2 norm-clip before the
+    // push. Calm skies measure the pure overhead on honest traffic;
+    // byzantine:0.2 swaps every 5th update for a poisoned payload (NaN /
+    // inf / ×1e6 norm, cycling) so the reject path is exercised too
+    let guard_shape = ModelShape::preset("mlp-784").unwrap();
+    let mut guard_table = String::from(
+        "\n## update guard (per round: cohort admit → fold)\n\n\
+         | clients | cohort | weather | guard | admit+fold | overhead |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    let mut guard_json = Vec::new();
+    for &u in &[1_000usize, 10_000] {
+        let cohort = cohort_for(u);
+        let honest: Vec<ModelParams> = (0..cohort)
+            .map(|i| {
+                let mut rng = Pcg64::new(0x6A12D, i as u64);
+                let mut m = ModelParams::zeros(&guard_shape);
+                for v in m.as_mut_slice() {
+                    *v = rng.normal_scaled(0.0, 0.05) as f32;
+                }
+                m
+            })
+            .collect();
+        let mixed: Vec<ModelParams> = honest
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                if i % 5 == 0 {
+                    poison(m, i as u64)
+                } else {
+                    m.clone()
+                }
+            })
+            .collect();
+        for (weather, updates) in
+            [("calm", &honest), ("byzantine:0.2", &mixed)]
+        {
+            let mut off_ns = 0.0f64;
+            for (guard_label, guard) in [
+                ("off", UpdateGuard::new(&GuardPolicy::off())),
+                ("on", UpdateGuard::new(&GuardPolicy::default())),
+            ] {
+                let mut last_rejected = 0usize;
+                let run = b.bench(
+                    &format!(
+                        "guard {guard_label:>3} {weather:<13} {u:>6} clients"
+                    ),
+                    || {
+                        let mut upd = ShardUpdate::new(&guard_shape, 0, 0);
+                        for m in updates {
+                            if guard.admit(m) {
+                                upd.push(m, 600);
+                            } else {
+                                upd.rejected_updates += 1;
+                            }
+                        }
+                        last_rejected = upd.rejected_updates;
+                        black_box(upd.count())
+                    },
+                );
+                let overhead = if guard_label == "off" {
+                    off_ns = run.median_ns;
+                    "—".to_string()
+                } else {
+                    format!(
+                        "{:+.1} %",
+                        (run.median_ns - off_ns) / off_ns * 100.0
+                    )
+                };
+                guard_table.push_str(&format!(
+                    "| {} | {} | {} | {} | {} | {} |\n",
+                    u,
+                    cohort,
+                    weather,
+                    guard_label,
+                    fmt_ns(run.median_ns),
+                    overhead,
+                ));
+                guard_json.push(format!(
+                    "    {{\"clients\": {u}, \"cohort\": {cohort}, \
+                     \"weather\": \"{weather}\", \"guard\": \"{guard_label}\", \
+                     \"median_ns\": {:.1}, \"rejected\": {last_rejected}}}",
+                    run.median_ns,
+                ));
+            }
+        }
+    }
+    println!("{guard_table}");
+    // the machine-readable counterpart: the first artifact of the
+    // perf-trajectory series (written to the bench's working directory —
+    // the crate root under `cargo bench`)
+    let json = format!(
+        "{{\n  \"bench\": \"bench_fleet/update_guard\",\n  \"shape\": \
+         \"{}\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        guard_shape.name(),
+        guard_json.join(",\n"),
+    );
+    match std::fs::write("BENCH_weather.json", &json) {
+        Ok(()) => println!("wrote BENCH_weather.json"),
+        Err(e) => eprintln!("BENCH_weather.json not written: {e}"),
+    }
+
     println!("{}", b.markdown_table());
 }

@@ -10,7 +10,7 @@ use crate::cnc::CncSystem;
 use crate::coordinator::traditional::TraditionalConfig;
 use crate::coordinator::trainer::{MockTrainer, PjrtTrainer, Trainer};
 use crate::data::{Partition, Split, SynthSpec};
-use crate::fleet::{FleetConfig, ShardBy};
+use crate::fleet::{FleetConfig, GuardPolicy, ShardBy, WeatherSpec};
 use crate::model::shape::ModelShape;
 use crate::netsim::channel::ChannelParams;
 use crate::netsim::compute::PowerProfile;
@@ -214,6 +214,8 @@ pub fn fleet_config(
         tx_deadline_s: None,
         churn_every: 0,
         churn_rate: 0.1,
+        weather: WeatherSpec::Calm,
+        guard: GuardPolicy::default(),
         threads: 0,
         transport: TransportConfig::default(),
         seed,

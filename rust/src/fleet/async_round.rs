@@ -29,6 +29,22 @@
 //! commit schedule (their updates are plain aggregates — membership at
 //! training time is what matters).
 //!
+//! # Failure weather
+//!
+//! [`FleetConfig::weather`] injects deterministic hostile-network
+//! weather (`fleet::weather`) into the loop: dark regions idle entirely
+//! (no broadcast/uplink bytes charged, in-flight jobs held through the
+//! outage), storm-spiked strata start jobs on stretched cadences with
+//! spiked Eq (8) telemetry, flaky weather forces extra churn every
+//! round, and byzantine weather poisons a fraction of client updates at
+//! the `train_cohort` wire point. [`FleetConfig::guard`] configures the
+//! `UpdateGuard` admission check at the shard fold (finite + L2-norm)
+//! and the optional trimmed-mean at region accept time; drops ride up
+//! the hierarchy into the CSV's `rejected_updates`, outages into
+//! `outage_regions`, and `recovery_rounds` records how long accuracy
+//! took to re-cross its pre-event level. The calm default draws no
+//! randomness and is bit-identical to the pre-weather engine.
+//!
 //! # Degenerate (synchronous) mode
 //!
 //! With `max_staleness = 0` every shard's period is 1 — decide, train,
@@ -65,9 +81,12 @@ use crate::cnc::announce::Announcement;
 use crate::cnc::optimize::{CohortStrategy, RbStrategy, SchedulingOptimizer};
 use crate::cnc::CncSystem;
 use crate::coordinator::trainer::Trainer;
-use crate::fleet::hierarchy::{fold_regions, ShardUpdate};
+use crate::fleet::hierarchy::{fold_regions_guarded, ShardUpdate};
 use crate::fleet::registry::{
     decide_traditional_sharded, split_proportional, FleetTopology, ShardBy,
+};
+use crate::fleet::weather::{
+    poison, GuardPolicy, RoundWeather, UpdateGuard, WeatherEngine, WeatherSpec,
 };
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::model::params::ModelParams;
@@ -111,6 +130,13 @@ pub struct FleetConfig {
     pub churn_every: usize,
     /// fraction of the fleet replaced per churn event, in [0, 1]
     pub churn_rate: f64,
+    /// failure weather injected per round (`fleet::weather`; the calm
+    /// default perturbs nothing and draws no randomness)
+    pub weather: WeatherSpec,
+    /// update-guard rejection policy at the shard fold / region tier
+    /// (enabled by default: admission never modifies an honest update,
+    /// so calm runs stay bit-identical with the guard on)
+    pub guard: GuardPolicy,
     /// worker threads for decision fan-out, cohort-parallel training and
     /// region folds (0 = one per core, 1 = serial); bit-identical either
     /// way
@@ -140,6 +166,8 @@ impl Default for FleetConfig {
             tx_deadline_s: None,
             churn_every: 0,
             churn_rate: 0.1,
+            weather: WeatherSpec::Calm,
+            guard: GuardPolicy::default(),
             threads: 0,
             transport: TransportConfig::default(),
             seed: 0,
@@ -175,6 +203,8 @@ impl FleetConfig {
         if self.churn_every > 0 && !(0.0..=1.0).contains(&self.churn_rate) {
             bail!("churn rate {} outside [0, 1]", self.churn_rate);
         }
+        self.weather.validate()?;
+        self.guard.validate()?;
         self.transport.validate()?;
         Ok(())
     }
@@ -209,6 +239,31 @@ pub fn shard_periods(fleet: &FleetTopology, max_staleness: usize) -> Vec<usize> 
         return vec![1; fleet.num_shards()];
     }
     let means: Vec<f64> = fleet.shards.iter().map(|s| s.mean_delay_s()).collect();
+    let fastest = means.iter().copied().fold(f64::INFINITY, f64::min).max(1e-12);
+    means
+        .iter()
+        .map(|m| ((m / fastest).round() as usize).clamp(1, max_staleness + 1))
+        .collect()
+}
+
+/// [`shard_periods`] under a straggler storm: each spiked shard's
+/// Eq (8) mean delay is multiplied by the storm's factor before cadences
+/// are derived, so a spiked stratum commits on a slower cadence (and its
+/// updates carry more staleness) for the window's duration.
+fn storm_periods(
+    fleet: &FleetTopology,
+    max_staleness: usize,
+    wx: &RoundWeather,
+) -> Vec<usize> {
+    if max_staleness == 0 {
+        return vec![1; fleet.num_shards()];
+    }
+    let means: Vec<f64> = fleet
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(s, sh)| sh.mean_delay_s() * wx.shard_spike(s))
+        .collect();
     let fastest = means.iter().copied().fold(f64::INFINITY, f64::min).max(1e-12);
     means
         .iter()
@@ -320,43 +375,88 @@ fn run_rounds(
     let optimizers: Vec<Mutex<SchedulingOptimizer>> =
         (0..k).map(|_| Mutex::new(SchedulingOptimizer::new())).collect();
     let executor = ParallelExecutor::new(cfg.threads);
+    let weather = WeatherEngine::new(cfg.weather, cfg.seed);
+    let guard = UpdateGuard::new(&cfg.guard);
+    // recovery accounting: (onset round, pre-event accuracy) of the
+    // weather event in progress, armed on the first perturbed round and
+    // resolved when accuracy re-crosses its pre-event level
+    let mut recovery: Option<(usize, f64)> = None;
 
     let mut history = RunHistory::new(label);
     let mut pending: Vec<Option<PendingJob>> = Vec::new();
     pending.resize_with(k, || None);
 
     for round in 0..cfg.rounds {
+        // the round's weather forecast — a pure function of
+        // (spec, seed, round), so runs stay seed-deterministic; calm
+        // draws no randomness and perturbs nothing below
+        let wx = weather.round_weather(round, cfg.regions, k);
+
         // 0. churn: replace part of the fleet and rebuild the strata,
-        //    re-deriving the proportional splits and cadences
+        //    re-deriving the proportional splits and cadences. Flaky
+        //    weather forces an *extra* churn draw every round (its own
+        //    RNG stream), composing with the scheduled cycle.
         let mut rebalance_moves = 0usize;
-        if cfg.churn_every > 0
+        let scheduled_churn = cfg.churn_every > 0
             && round > 0
             && round % cfg.churn_every == 0
-            && cfg.churn_rate > 0.0
-        {
-            let diff = topology.churn(
-                &mut sys.pool,
-                cfg.churn_rate,
-                &churn_rng(cfg.seed, round),
-            )?;
-            rebalance_moves = diff.moved;
-            sys.bus.publish(Announcement::FleetRebalanced {
-                round,
-                joined: diff.joined,
-                left: diff.left,
-                moved: diff.moved,
-            });
+            && cfg.churn_rate > 0.0;
+        if scheduled_churn || wx.flaky_rate > 0.0 {
+            if scheduled_churn {
+                let diff = topology.churn(
+                    &mut sys.pool,
+                    cfg.churn_rate,
+                    &churn_rng(cfg.seed, round),
+                )?;
+                rebalance_moves += diff.moved;
+                sys.bus.publish(Announcement::FleetRebalanced {
+                    round,
+                    joined: diff.joined,
+                    left: diff.left,
+                    moved: diff.moved,
+                });
+            }
+            if wx.flaky_rate > 0.0 {
+                let diff = topology.churn(
+                    &mut sys.pool,
+                    wx.flaky_rate,
+                    &weather.flaky_rng(round),
+                )?;
+                rebalance_moves += diff.moved;
+                sys.bus.publish(Announcement::FleetRebalanced {
+                    round,
+                    joined: diff.joined,
+                    left: diff.left,
+                    moved: diff.moved,
+                });
+            }
             cohorts = split_proportional(cfg.cohort_size, &topology.sizes());
             n_rbs = rb_split(&cohorts);
             periods = shard_periods(&topology, cfg.max_staleness);
         }
 
+        // a straggler storm stretches the spiked shards' cadences for
+        // this round's job starts; off-window rounds use the base periods
+        let stormy_periods;
+        let eff_periods: &[usize] = if wx.spiked_shards.is_empty() {
+            &periods
+        } else {
+            stormy_periods = storm_periods(&topology, cfg.max_staleness, &wx);
+            &stormy_periods
+        };
+
         sys.announce_resources(round);
 
         // 1. idle shards fetch the current global model and start a job:
-        //    per-shard decisions fanned out over the executor
-        let idle: Vec<usize> =
-            (0..k).filter(|&s| pending[s].is_none()).collect();
+        //    per-shard decisions fanned out over the executor. Shards in
+        //    a dark region neither fetch nor train — their broadcast
+        //    bytes are never charged.
+        let idle: Vec<usize> = (0..k)
+            .filter(|&s| {
+                pending[s].is_none()
+                    && !wx.shard_is_dark(s, &topology.region_of_shard)
+            })
+            .collect();
         let rngs: Vec<Pcg64> = idle
             .iter()
             .map(|&s| shard_round_rng(cfg.seed, round, s, k))
@@ -409,6 +509,17 @@ fn run_rounds(
             }
             let t0 = std::time::Instant::now();
             let mut update = ShardUpdate::new(global.shape(), d.shard, round);
+            // byzantine weather swaps a fraction of updates for poisoned
+            // payloads right at the wire point; the guard then decides
+            // admission. The fold runs in slot order on the caller
+            // thread (serial and parallel alike) and the poison RNG is
+            // keyed per (round, shard), so corruption is deterministic
+            // and thread-count-independent. Calm weather takes the
+            // `poisoned = None` path with zero extra RNG draws, and
+            // admission never modifies an update — honest folds are
+            // bit-identical to the pre-weather engine.
+            let mut byz_rng = (wx.byzantine_frac > 0.0)
+                .then(|| weather.byzantine_rng(round, d.shard));
             let loss_sum = crate::coordinator::train_cohort(
                 trainer,
                 &executor,
@@ -417,18 +528,41 @@ fn run_rounds(
                 cfg.epoch_local,
                 round,
                 plan.codec(),
-                |upd, weight| update.push(upd, weight),
+                |upd, weight| {
+                    let mut poisoned = None;
+                    if let Some(rng) = byz_rng.as_mut() {
+                        if rng.next_f64() < wx.byzantine_frac {
+                            poisoned = Some(poison(upd, rng.below(3)));
+                        }
+                    }
+                    let candidate = poisoned.as_ref().unwrap_or(upd);
+                    if guard.admit(candidate) {
+                        update.push(candidate, weight);
+                    } else {
+                        update.rejected_updates += 1;
+                    }
+                },
             )?;
             let wall_s = t0.elapsed().as_secs_f64();
-            let spread_s = topology.shards[d.shard].delay_spread_s(&d.decision.cohort);
+            // a storm-spiked stratum reports spiked Eq (8) telemetry
+            let spike = wx.shard_spike(d.shard);
+            let mut local_delays_s = d.decision.local_delays_s;
+            let mut spread_s =
+                topology.shards[d.shard].delay_spread_s(&d.decision.cohort);
+            if spike != 1.0 {
+                for v in &mut local_delays_s {
+                    *v *= spike;
+                }
+                spread_s *= spike;
+            }
             let uplink =
                 plan.uplink(&d.decision.tx_delays_s, &d.decision.tx_energies_j);
             pending[d.shard] = Some(PendingJob {
-                commit_round: round + periods[d.shard] - 1,
+                commit_round: round + eff_periods[d.shard] - 1,
                 update,
                 loss_sum,
                 dropouts,
-                local_delays_s: d.decision.local_delays_s,
+                local_delays_s,
                 tx_delays_s: d.decision.tx_delays_s,
                 tx_energies_j: d.decision.tx_energies_j,
                 spread_s,
@@ -445,11 +579,15 @@ fn run_rounds(
         //    run end, and a flushed update's staleness can only be
         //    *smaller* than its period's, so it always clears the bound.
         let flush = round + 1 == cfg.rounds;
+        // a dark shard holds its in-flight job (even at flush — a dark
+        // region cannot reach the backhaul): the update ages through the
+        // outage and faces the staleness bound when the region comes back
         let mut due_jobs: Vec<Option<PendingJob>> = (0..k)
             .map(|s| {
                 let due = pending[s]
                     .as_ref()
-                    .is_some_and(|p| flush || p.commit_round <= round);
+                    .is_some_and(|p| flush || p.commit_round <= round)
+                    && !wx.shard_is_dark(s, &topology.region_of_shard);
                 if due {
                     pending[s].take()
                 } else {
@@ -457,6 +595,11 @@ fn run_rounds(
                 }
             })
             .collect();
+        let trim_frac = if cfg.guard.enabled {
+            cfg.guard.trim_frac
+        } else {
+            0.0
+        };
         let (root, accepts) = {
             let due_refs: Vec<Vec<&ShardUpdate>> = topology
                 .regions
@@ -468,12 +611,13 @@ fn run_rounds(
                         .collect()
                 })
                 .collect();
-            fold_regions(
+            fold_regions_guarded(
                 global.shape(),
                 &due_refs,
                 round,
                 cfg.max_staleness,
                 cfg.staleness_decay,
+                trim_frac,
                 &executor,
             )?
         };
@@ -521,6 +665,7 @@ fn run_rounds(
         let shards_committed = root.accepted();
         let regions_committed = root.regions_merged();
         let staleness_mean = root.mean_staleness();
+        let rejected_updates = root.rejected_updates();
         if shards_committed > 0 {
             sys.bus.publish(Announcement::UpdatesCollected {
                 round,
@@ -550,6 +695,21 @@ fn run_rounds(
         } else {
             history.rounds.last().map(|r| r.train_loss).unwrap_or(0.0)
         };
+        // recovery accounting: arm on the first perturbed round (the
+        // pre-event level is the accuracy standing *before* this round);
+        // resolve on the first unperturbed committing round whose
+        // accuracy re-crosses it
+        let mut recovery_rounds = 0usize;
+        if wx.perturbed {
+            if recovery.is_none() {
+                recovery = Some((round, history.final_accuracy()));
+            }
+        } else if let Some((onset, pre_acc)) = recovery {
+            if shards_committed > 0 && accuracy >= pre_acc {
+                recovery_rounds = round - onset;
+                recovery = None;
+            }
+        }
         let rec = RoundRecord {
             round,
             accuracy,
@@ -568,16 +728,21 @@ fn run_rounds(
             backhaul_bytes: ledger.backhaul_bytes(),
             broadcast_bytes: ledger.broadcast_bytes(),
             comm_delay_s: ledger.comm_delay_s(),
+            rejected_updates,
+            outage_regions: wx.dark_regions.len(),
+            recovery_rounds,
         };
         if cfg.verbose {
             eprintln!(
                 "[{label}] round {round:>4}  acc {accuracy:.4}  loss {:.4}  \
                  shards {shards_committed}/{k}  regions {regions_committed}/{}  \
                  stale {staleness_mean:.2}  moved {rebalance_moves}  \
-                 spread_max {:.2}s",
+                 spread_max {:.2}s  rej {}  dark {}",
                 rec.train_loss,
                 topology.num_regions(),
                 rec.shard_spread_max_s(),
+                rec.rejected_updates,
+                rec.outage_regions,
             );
         }
         history.push(rec);
@@ -789,7 +954,98 @@ mod tests {
         c.churn_every = 1;
         c.churn_rate = 1.5;
         assert!(c.validate().is_err());
+        // weather/guard fields route through the same single validation
+        let mut c = cfg(2, 2, 0);
+        c.weather = WeatherSpec::Byzantine { frac: 1.5 };
+        assert!(c.validate().is_err());
+        let mut c = cfg(2, 2, 0);
+        c.weather = WeatherSpec::Storm {
+            spike: 0.0,
+            window: 3,
+        };
+        assert!(c.validate().is_err());
+        let mut c = cfg(2, 2, 0);
+        c.weather = WeatherSpec::Outage {
+            regions: 1,
+            window: 0,
+        };
+        assert!(c.validate().is_err());
+        let mut c = cfg(2, 2, 0);
+        c.guard.clip_norm = f64::INFINITY;
+        assert!(c.validate().is_err());
+        let mut c = cfg(2, 2, 0);
+        c.guard.trim_frac = 0.5;
+        assert!(c.validate().is_err());
         assert!(cfg(2, 2, 0).validate().is_ok());
+    }
+
+    #[test]
+    fn byzantine_weather_counts_and_drops_poisoned_updates() {
+        let mut s = sys(30, 11);
+        let mut t = MockTrainer::new(30, 600);
+        let mut c = cfg(4, 2, 0);
+        c.weather = WeatherSpec::Byzantine { frac: 0.5 };
+        let (h, global) = run_with_model(&mut s, &mut t, &c, "byz").unwrap();
+        let rejected: usize = h.rounds.iter().map(|r| r.rejected_updates).sum();
+        assert!(rejected > 0, "frac 0.5 over 4 rounds must poison something");
+        // the guard kept every poisoned payload out of the global model
+        assert!(global.as_slice().iter().all(|v| v.is_finite()));
+        for r in &h.rounds {
+            assert!(r.accuracy.is_finite());
+        }
+        // round 0 is always the clear baseline
+        assert_eq!(h.rounds[0].rejected_updates, 0);
+    }
+
+    #[test]
+    fn storm_weather_stretches_cadences_but_stays_deterministic() {
+        let run_once = || {
+            let mut s = sys(60, 12);
+            let mut t = MockTrainer::new(60, 600);
+            let mut c = cfg(8, 4, 2);
+            c.weather = WeatherSpec::Storm {
+                spike: 6.0,
+                window: 2,
+            };
+            run(&mut s, &mut t, &c, "storm").unwrap()
+        };
+        let a = run_once();
+        let b = run_once();
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits());
+            assert_eq!(x.local_delays_s, y.local_delays_s);
+            assert_eq!(x.shards_committed, y.shards_committed);
+        }
+        // the spiked telemetry shows up: some stormy round reports a
+        // larger straggler-gated delay than calm round 0 did
+        let max_delay = a
+            .rounds
+            .iter()
+            .map(|r| r.local_delay_round_s())
+            .fold(0.0f64, f64::max);
+        assert!(max_delay >= a.rounds[0].local_delay_round_s());
+    }
+
+    #[test]
+    fn outage_darkens_regions_and_recovery_is_recorded() {
+        let mut s = sys(48, 13);
+        let mut t = MockTrainer::new(48, 600);
+        let mut c = cfg(8, 4, 1);
+        c.regions = 2;
+        c.weather = WeatherSpec::Outage {
+            regions: 1,
+            window: 2,
+        };
+        let h = run(&mut s, &mut t, &c, "outage").unwrap();
+        assert_eq!(h.rounds[0].outage_regions, 0);
+        assert!(h.rounds.iter().any(|r| r.outage_regions == 1));
+        // rounds 1-2 dark, 3-4 clear: the clear rounds recover (mock
+        // training improves monotonically, so the first committing
+        // clear round re-crosses the pre-event level)
+        assert!(
+            h.rounds.iter().any(|r| r.recovery_rounds > 0),
+            "recovery_rounds never populated"
+        );
     }
 
     #[test]

@@ -44,6 +44,10 @@ pub struct ShardUpdate {
     pub shard: usize,
     /// round of the global model this update was computed against
     pub round_tag: usize,
+    /// client updates dropped by the `UpdateGuard` at this shard's fold
+    /// (poisoned payloads) — carried up the hierarchy like staleness is,
+    /// so the root can report the round's total guard activity
+    pub rejected_updates: usize,
     agg: Aggregator,
 }
 
@@ -53,6 +57,7 @@ impl ShardUpdate {
         ShardUpdate {
             shard,
             round_tag,
+            rejected_updates: 0,
             agg: Aggregator::new(shape),
         }
     }
@@ -69,6 +74,12 @@ impl ShardUpdate {
 
     pub fn total_weight(&self) -> f64 {
         self.agg.total_weight()
+    }
+
+    /// L2 norm of this partial's mean update (f64-accumulated) — the
+    /// statistic the trimmed-mean guard orders shard partials by.
+    pub fn mean_update_norm(&self) -> f64 {
+        self.agg.mean_l2_norm()
     }
 }
 
@@ -88,6 +99,10 @@ pub struct RegionUpdate {
     /// staleness account: a region commit is as stale as its oldest
     /// constituent)
     pub staleness_max: usize,
+    /// client updates dropped by the guard layers under this region
+    /// (shard-fold rejections carried in by the partials, plus every
+    /// folded update of a trim-dropped partial)
+    pub rejected_updates: usize,
     agg: Aggregator,
 }
 
@@ -104,6 +119,7 @@ pub struct RegionAggregator {
     rejected: usize,
     staleness_sum: usize,
     staleness_max: usize,
+    rejected_updates: usize,
 }
 
 impl RegionAggregator {
@@ -130,18 +146,22 @@ impl RegionAggregator {
             rejected: 0,
             staleness_sum: 0,
             staleness_max: 0,
+            rejected_updates: 0,
         }
     }
 
     /// Offer a shard update at commit round `round`. Returns the
     /// staleness if accepted, `None` if the update is over the staleness
-    /// bound (or empty) and was dropped.
+    /// bound (or empty) and was dropped. The partial's guard-rejection
+    /// count is surfaced either way — an all-rejected (empty) shard fold
+    /// must still report its drops.
     pub fn offer(&mut self, update: &ShardUpdate, round: usize) -> Option<usize> {
         assert!(
             update.round_tag <= round,
             "update from future round {} offered at round {round}",
             update.round_tag
         );
+        self.rejected_updates += update.rejected_updates;
         let staleness = round - update.round_tag;
         if staleness > self.max_staleness || update.count() == 0 {
             self.rejected += 1;
@@ -159,6 +179,14 @@ impl RegionAggregator {
         self.accepted
     }
 
+    /// Drop a shard partial under the trimmed-mean policy: counted like
+    /// a staleness rejection, with every client update it folded charged
+    /// to the guard account on top of the drops it already carried.
+    fn trim(&mut self, update: &ShardUpdate) {
+        self.rejected += 1;
+        self.rejected_updates += update.rejected_updates + update.count();
+    }
+
     /// Seal the region partial.
     pub fn finish(self) -> RegionUpdate {
         RegionUpdate {
@@ -167,6 +195,7 @@ impl RegionAggregator {
             rejected: self.rejected,
             staleness_sum: self.staleness_sum,
             staleness_max: self.staleness_max,
+            rejected_updates: self.rejected_updates,
             agg: self.agg,
         }
     }
@@ -182,6 +211,7 @@ pub struct RootAggregator {
     rejected: usize,
     staleness_sum: usize,
     regions_merged: usize,
+    rejected_updates: usize,
 }
 
 impl RootAggregator {
@@ -201,6 +231,7 @@ impl RootAggregator {
             rejected: 0,
             staleness_sum: 0,
             regions_merged: 0,
+            rejected_updates: 0,
         }
     }
 
@@ -214,6 +245,7 @@ impl RootAggregator {
             "update from future round {} offered at round {round}",
             update.round_tag
         );
+        self.rejected_updates += update.rejected_updates;
         let staleness = round - update.round_tag;
         if staleness > self.max_staleness || update.count() == 0 {
             self.rejected += 1;
@@ -233,7 +265,10 @@ impl RootAggregator {
     /// partial into the empty root is a bitwise copy, which is what
     /// makes a 1-region hierarchy identical to the two-level fold.
     pub fn merge_region(&mut self, partial: &RegionUpdate) {
+        // rejection accounts survive even when the whole partial is
+        // empty — an all-guarded region still reports its drops
         self.rejected += partial.rejected;
+        self.rejected_updates += partial.rejected_updates;
         if partial.accepted == 0 {
             return;
         }
@@ -251,6 +286,13 @@ impl RootAggregator {
     /// Shard updates dropped for exceeding the staleness bound.
     pub fn rejected(&self) -> usize {
         self.rejected
+    }
+
+    /// Client updates dropped by the guard layers this commit round
+    /// (shard-fold finite/norm rejections + trimmed-mean drops) — the
+    /// CSV's `rejected_updates` column.
+    pub fn rejected_updates(&self) -> usize {
+        self.rejected_updates
     }
 
     /// Non-empty region partials merged so far (0 on the two-level path).
@@ -307,6 +349,26 @@ pub fn fold_regions(
     decay: f64,
     executor: &ParallelExecutor,
 ) -> Result<(RootAggregator, Vec<Vec<(usize, usize)>>)> {
+    fold_regions_guarded(shape, due, round, max_staleness, decay, 0.0, executor)
+}
+
+/// [`fold_regions`] with the trimmed-mean guard: before a region folds
+/// its due partials, `trim_frac` of them are dropped from **each** tail
+/// of the mean-update-norm ordering (ties broken by shard id). Robust
+/// aggregation at partial granularity: a shard whose fold was dominated
+/// by adversarial payloads sits at an extreme of the norm ordering and
+/// is discarded wholesale, its folded updates charged to the root's
+/// `rejected_updates` account. `trim_frac == 0.0` is exactly
+/// [`fold_regions`] — same fold, same bits.
+pub fn fold_regions_guarded(
+    shape: &Arc<ModelShape>,
+    due: &[Vec<&ShardUpdate>],
+    round: usize,
+    max_staleness: usize,
+    decay: f64,
+    trim_frac: f64,
+    executor: &ParallelExecutor,
+) -> Result<(RootAggregator, Vec<Vec<(usize, usize)>>)> {
     let mut root = RootAggregator::new(shape, max_staleness, decay);
     let mut accepts: Vec<Vec<(usize, usize)>> = Vec::new();
     accepts.resize_with(due.len(), Vec::new);
@@ -319,9 +381,14 @@ pub fn fold_regions(
         busy.len(),
         |bi| {
             let r = busy[bi];
+            let keep = trim_keep_mask(&due[r], trim_frac);
             let mut agg = RegionAggregator::new(shape, r, max_staleness, decay);
             let mut acc = Vec::with_capacity(due[r].len());
-            for upd in &due[r] {
+            for (i, upd) in due[r].iter().enumerate() {
+                if !keep[i] {
+                    agg.trim(upd);
+                    continue;
+                }
                 if let Some(staleness) = agg.offer(upd, round) {
                     acc.push((upd.shard, staleness));
                 }
@@ -339,6 +406,37 @@ pub fn fold_regions(
         accepts[busy[bi]] = acc;
     }
     Ok((root, accepts))
+}
+
+/// Which of a region's due partials survive the trimmed mean: with
+/// `t = ⌊trim_frac · n⌋` (capped so at least one partial survives), the
+/// `t` lowest and `t` highest mean-update norms are dropped. Fewer than
+/// 3 partials (or `trim_frac == 0`) trims nothing — a trimmed mean needs
+/// both tails plus a middle.
+fn trim_keep_mask(due: &[&ShardUpdate], trim_frac: f64) -> Vec<bool> {
+    let n = due.len();
+    let mut keep = vec![true; n];
+    if trim_frac <= 0.0 || n < 3 {
+        return keep;
+    }
+    let t = ((trim_frac * n as f64).floor() as usize).min((n - 1) / 2);
+    if t == 0 {
+        return keep;
+    }
+    let norms: Vec<f64> = due.iter().map(|u| u.mean_update_norm()).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        norms[a]
+            .total_cmp(&norms[b])
+            .then(due[a].shard.cmp(&due[b].shard))
+    });
+    for &i in order.iter().take(t) {
+        keep[i] = false;
+    }
+    for &i in order.iter().rev().take(t) {
+        keep[i] = false;
+    }
+    keep
 }
 
 #[cfg(test)]
@@ -554,6 +652,127 @@ mod tests {
         assert!(accepts[0].is_empty());
         let prev = filled(3.0);
         assert_eq!(root.finish_or_keep(prev.clone()), prev);
+    }
+
+    #[test]
+    fn rejected_updates_ride_up_every_tier() {
+        // a shard fold that guard-dropped 3 client updates but still
+        // folded 1: the count must reach the root whether the partial is
+        // accepted, staleness-rejected, or even empty
+        let mut partly = ShardUpdate::new(&shape(), 0, 5);
+        partly.rejected_updates = 3;
+        partly.push(&filled(1.0), 10);
+        let mut all_dropped = ShardUpdate::new(&shape(), 1, 5);
+        all_dropped.rejected_updates = 4; // empty fold: everything guarded
+        let mut stale = ShardUpdate::new(&shape(), 2, 0);
+        stale.rejected_updates = 2;
+        stale.push(&filled(1.0), 10);
+
+        let mut region = RegionAggregator::new(&shape(), 0, 2, 1.0);
+        assert_eq!(region.offer(&partly, 5), Some(0));
+        assert_eq!(region.offer(&all_dropped, 5), None); // empty
+        assert_eq!(region.offer(&stale, 5), None); // staleness 5 > 2
+        let partial = region.finish();
+        assert_eq!(partial.rejected_updates, 9);
+        assert_eq!(partial.accepted, 1);
+
+        let mut root = RootAggregator::new(&shape(), 2, 1.0);
+        root.merge_region(&partial);
+        assert_eq!(root.rejected_updates(), 9);
+
+        // an all-rejected region partial still surfaces its count
+        // through merge_region's early return
+        let mut empty_region = RegionAggregator::new(&shape(), 1, 2, 1.0);
+        assert_eq!(empty_region.offer(&all_dropped, 5), None);
+        let empty_partial = empty_region.finish();
+        assert_eq!(empty_partial.accepted, 0);
+        root.merge_region(&empty_partial);
+        assert_eq!(root.rejected_updates(), 13);
+
+        // ... and through the direct two-level offer path
+        let mut two = RootAggregator::new(&shape(), 2, 1.0);
+        two.offer(&partly, 5);
+        two.offer(&all_dropped, 5);
+        assert_eq!(two.rejected_updates(), 7);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_the_norm_extremes() {
+        let mk = |shard: usize, v: f32| {
+            let mut u = ShardUpdate::new(&shape(), shard, 4);
+            u.push(&filled(v), 10);
+            u
+        };
+        // shard 3 is the adversarial outlier (huge norm), shard 0 the
+        // low tail; trim 0.25 of 4 partials from each end drops both
+        let updates = [mk(0, 0.0), mk(1, 2.0), mk(2, 3.0), mk(3, 1e6)];
+        let due: Vec<Vec<&ShardUpdate>> = vec![updates.iter().collect()];
+        let ex = ParallelExecutor::new(1);
+        let (root, accepts) =
+            fold_regions_guarded(&shape(), &due, 4, 0, 1.0, 0.25, &ex).unwrap();
+        assert_eq!(accepts[0], vec![(1, 0), (2, 0)]);
+        assert_eq!(root.accepted(), 2);
+        assert_eq!(root.rejected(), 2);
+        // each trimmed partial folded 1 client update
+        assert_eq!(root.rejected_updates(), 2);
+        let m = root.finish().unwrap();
+        // mean of 2.0 and 3.0 at equal weight
+        assert!((m.tensor(0)[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn trim_needs_three_partials_and_leaves_a_survivor() {
+        let mk = |shard: usize, v: f32| {
+            let mut u = ShardUpdate::new(&shape(), shard, 0);
+            u.push(&filled(v), 10);
+            u
+        };
+        let two = [mk(0, 1.0), mk(1, 1e6)];
+        let due: Vec<Vec<&ShardUpdate>> = vec![two.iter().collect()];
+        let ex = ParallelExecutor::new(1);
+        // n = 2 < 3: nothing trimmed even at an aggressive fraction
+        let (root, _) =
+            fold_regions_guarded(&shape(), &due, 0, 0, 1.0, 0.49, &ex).unwrap();
+        assert_eq!(root.accepted(), 2);
+        assert_eq!(root.rejected_updates(), 0);
+        // n = 3 at 0.49: t capped to (n-1)/2 = 1 → the middle survives
+        let three = [mk(0, 1.0), mk(1, 2.0), mk(2, 1e6)];
+        let due: Vec<Vec<&ShardUpdate>> = vec![three.iter().collect()];
+        let (root, accepts) =
+            fold_regions_guarded(&shape(), &due, 0, 0, 1.0, 0.49, &ex).unwrap();
+        assert_eq!(accepts[0], vec![(1, 0)]);
+        assert_eq!(root.accepted(), 1);
+        assert_eq!(root.rejected(), 2);
+    }
+
+    #[test]
+    fn zero_trim_fold_is_bitwise_fold_regions() {
+        let mk = |shard: usize, seed: u64| {
+            let mut rng = crate::util::rng::Pcg64::seed_from(seed);
+            let mut m = ModelParams::zeros(&shape());
+            for v in m.as_mut_slice() {
+                *v = rng.normal_scaled(0.0, 0.1) as f32;
+            }
+            let mut u = ShardUpdate::new(&shape(), shard, 3);
+            u.push(&m, 600);
+            u
+        };
+        let updates: Vec<ShardUpdate> = (0..6).map(|s| mk(s, s as u64)).collect();
+        let due: Vec<Vec<&ShardUpdate>> = vec![
+            updates[0..3].iter().collect(),
+            updates[3..6].iter().collect(),
+        ];
+        let ex = ParallelExecutor::new(2);
+        let (a, acc_a) = fold_regions(&shape(), &due, 4, 2, 0.5, &ex).unwrap();
+        let (b, acc_b) =
+            fold_regions_guarded(&shape(), &due, 4, 2, 0.5, 0.0, &ex).unwrap();
+        assert_eq!(acc_a, acc_b);
+        let (ma, mb) = (a.finish().unwrap(), b.finish().unwrap());
+        assert!(ma
+            .as_slice()
+            .iter()
+            .zip(mb.as_slice())
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

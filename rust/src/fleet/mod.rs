@@ -29,15 +29,26 @@
 //! `shards = 1, regions = 1, max_staleness = 0` reproduces the flat
 //! coordinator bit-for-bit (`tests/fleet_props.rs`).
 
+//! The weather module (`fleet::weather`) injects deterministic
+//! hostile-network failure weather — outages, straggler storms, flapping
+//! clients, byzantine updates — through the round engine, guarded by the
+//! `UpdateGuard` rejection policy (`tests/failure_injection.rs` is the
+//! robustness gate).
+
 pub mod async_round;
 pub mod hierarchy;
 pub mod registry;
+pub mod weather;
 
 pub use async_round::{run, run_with_model, shard_periods, FleetConfig};
 pub use hierarchy::{
-    fold_regions, RegionAggregator, RegionUpdate, RootAggregator, ShardUpdate,
+    fold_regions, fold_regions_guarded, RegionAggregator, RegionUpdate,
+    RootAggregator, ShardUpdate,
 };
 pub use registry::{
     decide_p2p_sharded, decide_traditional_sharded, split_proportional,
     ChurnDiff, FleetTopology, Region, Shard, ShardBy, ShardRoundDecision,
+};
+pub use weather::{
+    GuardPolicy, RoundWeather, UpdateGuard, WeatherEngine, WeatherSpec,
 };

@@ -1,0 +1,773 @@
+//! Hostile-network **failure weather** for the fleet engine: deterministic,
+//! seeded perturbations applied to each round before it runs, paired with
+//! the `UpdateGuard` defense that keeps poisoned updates out of the global
+//! model.
+//!
+//! The paper claims CNC-guided FL "copes well with complex network
+//! situations"; the edge-FL surveys (arXiv:2111.07392, arXiv:2310.05269)
+//! name the situations: stragglers, churn, outages and poisoned updates.
+//! This module drives exactly that weather through the production round
+//! path — no side simulation:
+//!
+//! * **Regional outages** (`outage:R:W`) — R whole regions go dark for W
+//!   rounds (then W rounds of clear air, repeating). Dark shards receive
+//!   no broadcast (the transport ledger charges nothing), train nothing,
+//!   and commit nothing; their in-flight updates age and face the usual
+//!   staleness bound on re-entry.
+//! * **Straggler storms** (`storm[:SPIKE[:W]]`) — a deterministic quarter
+//!   of the strata see their Eq (8) local delays multiplied by SPIKE for
+//!   W-round windows, stretching their commit cadences and staleness.
+//! * **Flapping clients** (`flaky:RATE`) — forced join/leave churn of
+//!   RATE of the fleet **every** round (on top of any scheduled
+//!   `churn_every` cycle), constantly rebuilding the strata.
+//! * **Byzantine updates** (`byzantine:FRAC`) — FRAC of client updates
+//!   are replaced at the `train_cohort` wire point with NaN-fill,
+//!   inf-fill, or ×10⁶ norm-scaled payloads.
+//!
+//! Every draw comes from a dedicated [`Pcg64`] stream keyed by
+//! `(seed, round, …)`, so runs are reproducible and `calm` consumes **no**
+//! randomness at all — the calm path is bit-identical to the pre-weather
+//! engine (pinned by `tests/failure_injection.rs`).
+//!
+//! The defense half mirrors robust-aggregation practice: a
+//! [`GuardPolicy`] on `FleetConfig` configures the [`UpdateGuard`] applied
+//! at the shard fold (finite-check + L2-norm bound) and an optional
+//! trimmed-mean over shard partials at region accept time
+//! (`fold_regions_guarded`). Rejections are *drops*, not rescales — a
+//! norm-clipped poisoned payload would still inject an adversarial
+//! direction — and every drop is counted: `rejected_updates` rides up the
+//! hierarchy like `staleness_max` does, into the round CSV.
+
+use anyhow::{bail, Result};
+
+use crate::model::params::ModelParams;
+use crate::util::rng::Pcg64;
+
+/// Dedicated RNG stream for weather draws (cohorts use 0xF1EE, scheduled
+/// churn 0xC4E4) — weather never perturbs the engine's existing streams.
+const WEATHER_STREAM: u64 = 0x7EA7;
+
+/// Fraction of shards a storm window slows down (at least one).
+const STORM_SHARD_FRAC: f64 = 0.25;
+
+// ---------------------------------------------------------------------------
+// weather specification (the `--weather` grammar)
+// ---------------------------------------------------------------------------
+
+/// One weather regime, as selected by `cnc-fl fleet --weather …`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WeatherSpec {
+    /// No perturbation: the engine's existing, well-behaved fleet.
+    Calm,
+    /// Straggler storm: spike the local delays of a quarter of the
+    /// shards by `spike` for alternating `window`-round windows.
+    Storm { spike: f64, window: usize },
+    /// Regional outage: `regions` regions dark for alternating
+    /// `window`-round windows.
+    Outage { regions: usize, window: usize },
+    /// Flapping clients: forced churn of `rate` of the fleet every round.
+    Flaky { rate: f64 },
+    /// Byzantine clients: `frac` of client updates poisoned on the wire.
+    Byzantine { frac: f64 },
+}
+
+impl Default for WeatherSpec {
+    fn default() -> Self {
+        WeatherSpec::Calm
+    }
+}
+
+impl WeatherSpec {
+    pub fn is_calm(&self) -> bool {
+        matches!(self, WeatherSpec::Calm)
+    }
+
+    /// Human-readable label (CSV summaries, bench tables).
+    pub fn label(&self) -> String {
+        match self {
+            WeatherSpec::Calm => "calm".to_string(),
+            WeatherSpec::Storm { spike, window } => format!("storm{spike}x{window}"),
+            WeatherSpec::Outage { regions, window } => format!("outage{regions}x{window}"),
+            WeatherSpec::Flaky { rate } => format!("flaky{rate}"),
+            WeatherSpec::Byzantine { frac } => format!("byz{frac}"),
+        }
+    }
+
+    /// File suffix: empty for calm (existing file names untouched),
+    /// `_<label>` otherwise — same derivation as `PayloadCodec::file_tag`.
+    pub fn file_tag(&self) -> String {
+        if self.is_calm() {
+            String::new()
+        } else {
+            format!("_{}", self.label())
+        }
+    }
+
+    /// Reject out-of-range weather parameters. The one definition of the
+    /// bounds: the CLI parser and `FleetConfig::validate` both call this.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            WeatherSpec::Calm => {}
+            WeatherSpec::Storm { spike, window } => {
+                if !(spike.is_finite() && *spike > 0.0) {
+                    bail!("storm spike factor {spike} must be finite and > 0");
+                }
+                if *window == 0 {
+                    bail!("storm window must be >= 1 round");
+                }
+            }
+            WeatherSpec::Outage { regions, window } => {
+                if *regions == 0 {
+                    bail!("outage must darken >= 1 region");
+                }
+                if *window == 0 {
+                    bail!("outage window must be >= 1 round");
+                }
+            }
+            WeatherSpec::Flaky { rate } => {
+                if !(rate.is_finite() && (0.0..=1.0).contains(rate)) {
+                    bail!("flaky rate {rate} outside [0, 1]");
+                }
+            }
+            WeatherSpec::Byzantine { frac } => {
+                if !(frac.is_finite() && (0.0..=1.0).contains(frac)) {
+                    bail!("byzantine fraction {frac} outside [0, 1]");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for WeatherSpec {
+    type Err = anyhow::Error;
+
+    /// Parse the CLI form:
+    /// `calm` | `storm[:SPIKE[:W]]` | `outage:R:W` | `flaky:RATE` |
+    /// `byzantine:FRAC`.
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim();
+        let (head, rest) = match s.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (s, None),
+        };
+        let spec = match (head, rest) {
+            ("calm", None) => WeatherSpec::Calm,
+            ("calm", Some(_)) => bail!("calm takes no parameters"),
+            ("storm", None) => WeatherSpec::Storm {
+                spike: 4.0,
+                window: 3,
+            },
+            ("storm", Some(r)) => {
+                let (spike_s, window_s) = match r.split_once(':') {
+                    Some((a, b)) => (a, Some(b)),
+                    None => (r, None),
+                };
+                let spike: f64 = spike_s
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("storm spike `{spike_s}`: {e}"))?;
+                let window: usize = match window_s {
+                    Some(w) => w
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("storm window `{w}`: {e}"))?,
+                    None => 3,
+                };
+                WeatherSpec::Storm { spike, window }
+            }
+            ("outage", Some(r)) => {
+                let Some((regions_s, window_s)) = r.split_once(':') else {
+                    bail!("outage needs two parameters: outage:R:W");
+                };
+                let regions: usize = regions_s
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("outage regions `{regions_s}`: {e}"))?;
+                let window: usize = window_s
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("outage window `{window_s}`: {e}"))?;
+                WeatherSpec::Outage { regions, window }
+            }
+            ("outage", None) => bail!("outage needs two parameters: outage:R:W"),
+            ("flaky", Some(r)) => WeatherSpec::Flaky {
+                rate: r
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("flaky rate `{r}`: {e}"))?,
+            },
+            ("flaky", None) => bail!("flaky needs a rate: flaky:RATE"),
+            ("byzantine", Some(r)) => WeatherSpec::Byzantine {
+                frac: r
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("byzantine fraction `{r}`: {e}"))?,
+            },
+            ("byzantine", None) => bail!("byzantine needs a fraction: byzantine:FRAC"),
+            (other, _) => bail!(
+                "unknown weather `{other}` \
+                 (calm|storm[:SPIKE[:W]]|outage:R:W|flaky:RATE|byzantine:FRAC)"
+            ),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-round forecast
+// ---------------------------------------------------------------------------
+
+/// What the weather does to one round — computed up front by
+/// [`WeatherEngine::round_weather`] so the engine consults plain data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundWeather {
+    /// Regions dark this round (sorted; their shards idle entirely).
+    pub dark_regions: Vec<usize>,
+    /// Shards whose local delays are multiplied by `spike` this round.
+    pub spiked_shards: Vec<usize>,
+    /// The storm's delay multiplier (1.0 outside a storm window).
+    pub spike: f64,
+    /// Forced-churn fraction this round (0.0 unless flaky weather).
+    pub flaky_rate: f64,
+    /// Fraction of client updates poisoned this round.
+    pub byzantine_frac: f64,
+    /// True when anything above perturbs the round — drives the
+    /// recovery-accounting onset in the engine.
+    pub perturbed: bool,
+}
+
+impl RoundWeather {
+    /// Clear skies: the identity perturbation.
+    pub fn calm() -> Self {
+        RoundWeather {
+            dark_regions: Vec::new(),
+            spiked_shards: Vec::new(),
+            spike: 1.0,
+            flaky_rate: 0.0,
+            byzantine_frac: 0.0,
+            perturbed: false,
+        }
+    }
+
+    /// Is `shard` dark this round, given the registry's shard → region map?
+    pub fn shard_is_dark(&self, shard: usize, region_of_shard: &[usize]) -> bool {
+        !self.dark_regions.is_empty()
+            && self.dark_regions.contains(&region_of_shard[shard])
+    }
+
+    /// The storm multiplier for `shard` this round (1.0 if unaffected).
+    pub fn shard_spike(&self, shard: usize) -> f64 {
+        if self.spiked_shards.contains(&shard) {
+            self.spike
+        } else {
+            1.0
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the engine
+// ---------------------------------------------------------------------------
+
+/// Deterministic weather generator: same `(spec, seed)` ⇒ the same
+/// perturbation sequence, independent of thread count or fleet state.
+#[derive(Debug, Clone)]
+pub struct WeatherEngine {
+    spec: WeatherSpec,
+    seed: u64,
+}
+
+impl WeatherEngine {
+    pub fn new(spec: WeatherSpec, seed: u64) -> Self {
+        WeatherEngine { spec, seed }
+    }
+
+    pub fn spec(&self) -> &WeatherSpec {
+        &self.spec
+    }
+
+    /// Is an alternating `window`-on / `window`-off event active at
+    /// `round`, and if so which event index is it? Round 0 is always
+    /// clear so every run establishes a pre-event accuracy baseline for
+    /// the recovery accounting.
+    fn event_at(round: usize, window: usize) -> Option<usize> {
+        if round == 0 {
+            return None;
+        }
+        let phase = (round - 1) % (2 * window);
+        if phase < window {
+            Some((round - 1) / (2 * window))
+        } else {
+            None
+        }
+    }
+
+    /// The forecast for `round` over a fleet of `num_regions` regions ×
+    /// `num_shards` shards. Calm weather draws no randomness.
+    pub fn round_weather(
+        &self,
+        round: usize,
+        num_regions: usize,
+        num_shards: usize,
+    ) -> RoundWeather {
+        let mut wx = RoundWeather::calm();
+        match self.spec {
+            WeatherSpec::Calm => {}
+            WeatherSpec::Outage { regions, window } => {
+                if let Some(event) = Self::event_at(round, window) {
+                    // never darken the whole fleet: at least one region
+                    // stays up so rounds keep making progress
+                    let k = regions.min(num_regions.saturating_sub(1));
+                    if k > 0 {
+                        let mut rng = Pcg64::new(self.seed, WEATHER_STREAM)
+                            .split(&format!("outage/{event}"));
+                        let mut dark = rng.sample_indices(num_regions, k);
+                        dark.sort_unstable();
+                        wx.dark_regions = dark;
+                        wx.perturbed = true;
+                    }
+                }
+            }
+            WeatherSpec::Storm { spike, window } => {
+                if let Some(event) = Self::event_at(round, window) {
+                    let k = ((num_shards as f64 * STORM_SHARD_FRAC) as usize)
+                        .clamp(1, num_shards);
+                    let mut rng = Pcg64::new(self.seed, WEATHER_STREAM)
+                        .split(&format!("storm/{event}"));
+                    let mut hit = rng.sample_indices(num_shards, k);
+                    hit.sort_unstable();
+                    wx.spiked_shards = hit;
+                    wx.spike = spike;
+                    wx.perturbed = true;
+                }
+            }
+            WeatherSpec::Flaky { rate } => {
+                // round 0 stays clear (baseline); every later round flaps
+                if round > 0 && rate > 0.0 {
+                    wx.flaky_rate = rate;
+                    wx.perturbed = true;
+                }
+            }
+            WeatherSpec::Byzantine { frac } => {
+                if round > 0 && frac > 0.0 {
+                    wx.byzantine_frac = frac;
+                    wx.perturbed = true;
+                }
+            }
+        }
+        wx
+    }
+
+    /// RNG for this round's forced-churn draw (flaky weather) — distinct
+    /// from the scheduled-churn stream so `churn_every` and `flaky`
+    /// compose without correlation.
+    pub fn flaky_rng(&self, round: usize) -> Pcg64 {
+        Pcg64::new(self.seed, WEATHER_STREAM).split(&format!("flaky/{round}"))
+    }
+
+    /// RNG deciding which of `(round, shard)`'s cohort slots are
+    /// poisoned and how — keyed per shard so the draw is independent of
+    /// shard execution order (serial == parallel).
+    pub fn byzantine_rng(&self, round: usize, shard: usize) -> Pcg64 {
+        Pcg64::new(self.seed, WEATHER_STREAM).split(&format!("byz/{round}/{shard}"))
+    }
+}
+
+/// Replace an update with an adversarial payload. `kind % 3` selects:
+/// NaN-fill, +inf-fill, or ×10⁶ norm scaling (the "plausible numbers,
+/// hostile magnitude" attack the norm bound exists for).
+pub fn poison(update: &ModelParams, kind: u64) -> ModelParams {
+    let mut out = update.clone();
+    match kind % 3 {
+        0 => {
+            for v in out.as_mut_slice() {
+                *v = f32::NAN;
+            }
+        }
+        1 => {
+            for v in out.as_mut_slice() {
+                *v = f32::INFINITY;
+            }
+        }
+        _ => {
+            for v in out.as_mut_slice() {
+                *v *= 1e6;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// the defense: guard policy + update guard
+// ---------------------------------------------------------------------------
+
+/// Robust-aggregation knobs on `FleetConfig` (CLI: `--guard`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GuardPolicy {
+    /// Master switch. Enabled by default: admission is a pure
+    /// pass-through for honest updates (no value is modified), so calm
+    /// runs stay bit-identical with the guard on.
+    pub enabled: bool,
+    /// Updates whose L2 norm exceeds this are dropped (not rescaled —
+    /// a rescaled poisoned payload still injects its direction).
+    pub clip_norm: f64,
+    /// Fraction trimmed from *each* tail of a region's due shard
+    /// partials, ordered by mean-update norm (0.0 disables; < 0.5).
+    pub trim_frac: f64,
+}
+
+impl Default for GuardPolicy {
+    fn default() -> Self {
+        GuardPolicy {
+            enabled: true,
+            // far above any honest MockTrainer/PJRT update (norms ≈ 10²)
+            // yet far below the ×10⁶ poison payloads (norms ≈ 10⁷)
+            clip_norm: 1e6,
+            trim_frac: 0.0,
+        }
+    }
+}
+
+impl GuardPolicy {
+    /// A disabled guard (the "document the poisoning" configuration).
+    pub fn off() -> Self {
+        GuardPolicy {
+            enabled: false,
+            ..GuardPolicy::default()
+        }
+    }
+
+    /// Reject out-of-range guard parameters (one definition: CLI parser
+    /// and `FleetConfig::validate` both call this).
+    pub fn validate(&self) -> Result<()> {
+        if !(self.clip_norm.is_finite() && self.clip_norm > 0.0) {
+            bail!("guard clip norm {} must be finite and > 0", self.clip_norm);
+        }
+        if !(self.trim_frac.is_finite() && (0.0..0.5).contains(&self.trim_frac)) {
+            bail!("guard trim fraction {} outside [0, 0.5)", self.trim_frac);
+        }
+        Ok(())
+    }
+
+    pub fn label(&self) -> String {
+        if !self.enabled {
+            "guard-off".to_string()
+        } else if self.trim_frac > 0.0 {
+            format!("guard{}trim{}", self.clip_norm, self.trim_frac)
+        } else {
+            format!("guard{}", self.clip_norm)
+        }
+    }
+}
+
+impl std::str::FromStr for GuardPolicy {
+    type Err = anyhow::Error;
+
+    /// Parse the CLI form: `on[:CLIP_NORM[:TRIM_FRAC]]` | `off`.
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s == "off" {
+            return Ok(GuardPolicy::off());
+        }
+        let Some(rest) = s.strip_prefix("on") else {
+            bail!("unknown guard `{s}` (on[:CLIP_NORM[:TRIM_FRAC]]|off)");
+        };
+        let mut policy = GuardPolicy::default();
+        if let Some(params) = rest.strip_prefix(':') {
+            let (clip_s, trim_s) = match params.split_once(':') {
+                Some((a, b)) => (a, Some(b)),
+                None => (params, None),
+            };
+            policy.clip_norm = clip_s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("guard clip norm `{clip_s}`: {e}"))?;
+            if let Some(t) = trim_s {
+                policy.trim_frac = t
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("guard trim fraction `{t}`: {e}"))?;
+            }
+        } else if !rest.is_empty() {
+            bail!("unknown guard `{s}` (on[:CLIP_NORM[:TRIM_FRAC]]|off)");
+        }
+        policy.validate()?;
+        Ok(policy)
+    }
+}
+
+/// The admission check applied to every client update at the shard fold.
+#[derive(Debug, Clone)]
+pub struct UpdateGuard {
+    policy: GuardPolicy,
+}
+
+impl UpdateGuard {
+    pub fn new(policy: &GuardPolicy) -> Self {
+        UpdateGuard { policy: *policy }
+    }
+
+    pub fn policy(&self) -> &GuardPolicy {
+        &self.policy
+    }
+
+    /// `true` iff `update` may be folded: every value finite and the L2
+    /// norm within the clip bound. Accumulates in f64 so a ×10⁶-scaled
+    /// f32 payload can't overflow the norm itself into acceptance.
+    pub fn admit(&self, update: &ModelParams) -> bool {
+        if !self.policy.enabled {
+            return true;
+        }
+        let mut sq = 0.0f64;
+        for &v in update.as_slice() {
+            if !v.is_finite() {
+                return false;
+            }
+            sq += (v as f64) * (v as f64);
+        }
+        sq.sqrt() <= self.policy.clip_norm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::shape::ModelShape;
+
+    fn params_with(v: f32) -> ModelParams {
+        let shape = ModelShape::mlp("guard-test", 4, 3, 2);
+        let mut p = ModelParams::zeros(&shape);
+        for x in p.as_mut_slice() {
+            *x = v;
+        }
+        p
+    }
+
+    #[test]
+    fn weather_specs_parse_and_label() {
+        let cases: &[(&str, WeatherSpec)] = &[
+            ("calm", WeatherSpec::Calm),
+            (
+                "storm",
+                WeatherSpec::Storm {
+                    spike: 4.0,
+                    window: 3,
+                },
+            ),
+            (
+                "storm:2.5",
+                WeatherSpec::Storm {
+                    spike: 2.5,
+                    window: 3,
+                },
+            ),
+            (
+                "storm:2.5:4",
+                WeatherSpec::Storm {
+                    spike: 2.5,
+                    window: 4,
+                },
+            ),
+            (
+                "outage:1:2",
+                WeatherSpec::Outage {
+                    regions: 1,
+                    window: 2,
+                },
+            ),
+            ("flaky:0.3", WeatherSpec::Flaky { rate: 0.3 }),
+            ("byzantine:0.2", WeatherSpec::Byzantine { frac: 0.2 }),
+        ];
+        for (s, want) in cases {
+            let got: WeatherSpec = s.parse().unwrap();
+            assert_eq!(got, *want, "{s}");
+        }
+        assert_eq!(WeatherSpec::Calm.file_tag(), "");
+        assert_eq!(
+            "byzantine:0.2".parse::<WeatherSpec>().unwrap().file_tag(),
+            "_byz0.2"
+        );
+        assert_eq!(
+            "outage:1:2".parse::<WeatherSpec>().unwrap().label(),
+            "outage1x2"
+        );
+    }
+
+    #[test]
+    fn malformed_weather_specs_rejected() {
+        for s in [
+            "gale",
+            "storm:0",
+            "storm:-1",
+            "storm:4:0",
+            "storm:inf",
+            "outage",
+            "outage:3",
+            "outage:0:2",
+            "outage:1:0",
+            "flaky",
+            "flaky:1.5",
+            "flaky:-0.1",
+            "byzantine",
+            "byzantine:1.5",
+            "byzantine:nan",
+            "calm:1",
+        ] {
+            assert!(s.parse::<WeatherSpec>().is_err(), "`{s}` should not parse");
+        }
+    }
+
+    #[test]
+    fn guard_policy_parses_and_validates() {
+        let d: GuardPolicy = "on".parse().unwrap();
+        assert_eq!(d, GuardPolicy::default());
+        let off: GuardPolicy = "off".parse().unwrap();
+        assert!(!off.enabled);
+        let clip: GuardPolicy = "on:50".parse().unwrap();
+        assert_eq!(clip.clip_norm, 50.0);
+        assert_eq!(clip.trim_frac, 0.0);
+        let full: GuardPolicy = "on:50:0.25".parse().unwrap();
+        assert_eq!(full.trim_frac, 0.25);
+        for s in ["on:0", "on:-1", "on:inf", "on:50:0.5", "on:50:-0.1", "maybe", "onn"] {
+            assert!(s.parse::<GuardPolicy>().is_err(), "`{s}` should not parse");
+        }
+    }
+
+    #[test]
+    fn calm_is_the_identity_forecast() {
+        let eng = WeatherEngine::new(WeatherSpec::Calm, 7);
+        for round in 0..10 {
+            let wx = eng.round_weather(round, 4, 16);
+            assert!(!wx.perturbed);
+            assert!(wx.dark_regions.is_empty());
+            assert!(wx.spiked_shards.is_empty());
+            assert_eq!(wx.spike, 1.0);
+            assert_eq!(wx.byzantine_frac, 0.0);
+            assert_eq!(wx.flaky_rate, 0.0);
+        }
+    }
+
+    #[test]
+    fn outage_windows_alternate_and_round_zero_is_clear() {
+        let eng = WeatherEngine::new(
+            WeatherSpec::Outage {
+                regions: 1,
+                window: 2,
+            },
+            42,
+        );
+        let active: Vec<bool> = (0..9)
+            .map(|r| !eng.round_weather(r, 4, 16).dark_regions.is_empty())
+            .collect();
+        // round 0 clear, then 2 on / 2 off
+        assert_eq!(
+            active,
+            vec![false, true, true, false, false, true, true, false, false]
+        );
+        // deterministic: same seed ⇒ same dark set; a window shares one draw
+        let a = eng.round_weather(1, 4, 16);
+        let b = eng.round_weather(2, 4, 16);
+        assert_eq!(a.dark_regions, b.dark_regions);
+        assert_eq!(a, eng.round_weather(1, 4, 16));
+        assert!(a.dark_regions.iter().all(|&r| r < 4));
+    }
+
+    #[test]
+    fn outage_never_darkens_the_whole_fleet() {
+        let eng = WeatherEngine::new(
+            WeatherSpec::Outage {
+                regions: 5,
+                window: 1,
+            },
+            3,
+        );
+        let wx = eng.round_weather(1, 3, 6);
+        assert_eq!(wx.dark_regions.len(), 2); // 3 regions → at most 2 dark
+        // single-region fleet: outage cannot bite at all
+        let wx1 = eng.round_weather(1, 1, 6);
+        assert!(wx1.dark_regions.is_empty());
+        assert!(!wx1.perturbed);
+    }
+
+    #[test]
+    fn storm_spikes_a_quarter_of_shards() {
+        let eng = WeatherEngine::new(
+            WeatherSpec::Storm {
+                spike: 3.0,
+                window: 2,
+            },
+            9,
+        );
+        let wx = eng.round_weather(1, 2, 16);
+        assert_eq!(wx.spiked_shards.len(), 4);
+        assert_eq!(wx.spike, 3.0);
+        assert!(wx.perturbed);
+        for s in 0..16 {
+            let f = wx.shard_spike(s);
+            if wx.spiked_shards.contains(&s) {
+                assert_eq!(f, 3.0);
+            } else {
+                assert_eq!(f, 1.0);
+            }
+        }
+        // off-window round is calm
+        let off = eng.round_weather(3, 2, 16);
+        assert!(!off.perturbed);
+        assert_eq!(off.spike, 1.0);
+    }
+
+    #[test]
+    fn dark_shard_lookup_uses_the_region_map() {
+        let mut wx = RoundWeather::calm();
+        wx.dark_regions = vec![1];
+        let region_of_shard = [0, 0, 1, 1];
+        assert!(!wx.shard_is_dark(0, &region_of_shard));
+        assert!(wx.shard_is_dark(2, &region_of_shard));
+        assert!(wx.shard_is_dark(3, &region_of_shard));
+    }
+
+    #[test]
+    fn guard_admits_honest_and_rejects_poison() {
+        let guard = UpdateGuard::new(&GuardPolicy::default());
+        let honest = params_with(0.3);
+        assert!(guard.admit(&honest));
+        assert!(!guard.admit(&poison(&honest, 0))); // NaN
+        assert!(!guard.admit(&poison(&honest, 1))); // inf
+        assert!(!guard.admit(&poison(&honest, 2))); // ×1e6 norm
+        // disabled guard admits anything
+        let off = UpdateGuard::new(&GuardPolicy::off());
+        assert!(off.admit(&poison(&honest, 0)));
+        assert!(off.admit(&poison(&honest, 2)));
+    }
+
+    #[test]
+    fn guard_norm_bound_is_a_drop_threshold() {
+        let policy = GuardPolicy {
+            enabled: true,
+            clip_norm: 1.0,
+            trim_frac: 0.0,
+        };
+        let guard = UpdateGuard::new(&policy);
+        assert!(!guard.admit(&params_with(0.5))); // norm √n·0.5 > 1
+        let tiny = params_with(0.0);
+        assert!(guard.admit(&tiny));
+    }
+
+    #[test]
+    fn poison_kinds_cover_nan_inf_and_scale() {
+        let p = params_with(0.25);
+        assert!(poison(&p, 0).as_slice().iter().all(|v| v.is_nan()));
+        assert!(poison(&p, 1)
+            .as_slice()
+            .iter()
+            .all(|v| v.is_infinite() && *v > 0.0));
+        let scaled = poison(&p, 2);
+        assert!(scaled.as_slice().iter().all(|&v| v == 0.25e6));
+    }
+
+    #[test]
+    fn byzantine_rng_is_keyed_per_round_and_shard() {
+        let eng = WeatherEngine::new(WeatherSpec::Byzantine { frac: 0.5 }, 11);
+        let a = eng.byzantine_rng(1, 0).next_f64();
+        let b = eng.byzantine_rng(1, 1).next_f64();
+        let c = eng.byzantine_rng(2, 0).next_f64();
+        let a2 = eng.byzantine_rng(1, 0).next_f64();
+        assert_eq!(a, a2);
+        assert!(a != b || a != c); // streams differ
+    }
+}

@@ -27,7 +27,7 @@ use cnc_fl::exp::p2p_figs;
 use cnc_fl::exp::presets::{
     self, case, traditional_config, Backend, Method, CASES,
 };
-use cnc_fl::fleet;
+use cnc_fl::fleet::{self, GuardPolicy, WeatherSpec};
 use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
 use cnc_fl::netsim::channel::ChannelParams;
 use cnc_fl::netsim::topology::TopologyGen;
@@ -55,7 +55,7 @@ fn usage() -> String {
      \x20 run              one traditional-architecture training run\n\
      \x20 fleet            sharded/async fleet-engine run (Fleet10k/Fleet100k/\n\
      \x20                  Fleet10kWide/Fleet100kRegions; --regions/--churn/\n\
-     \x20                  --codec knobs)\n\
+     \x20                  --codec/--weather/--guard knobs)\n\
      \x20 p2p              one peer-to-peer training run\n\
      \x20 fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11\n\
      \x20                  regenerate that figure's CSV series\n\
@@ -277,6 +277,8 @@ fn run_fleet(args: &[String]) -> Result<()> {
         .opt("codec", Some("raw"), "wire codec: raw | quant8 | topk:FRAC")
         .opt("decay", Some("0.5"), "staleness weight decay in (0, 1]")
         .opt("churn", None, "inject churn: EVERY[:RATE] — every EVERY rounds replace RATE of the fleet (default rate 0.1)")
+        .opt("weather", Some("calm"), "calm|storm[:SPIKE[:W]]|outage:R:W|flaky:RATE|byzantine:FRAC")
+        .opt("guard", Some("on"), "update guard: on[:CLIP_NORM[:TRIM_FRAC]] | off")
         .opt("threads", Some("0"), "worker threads (0 = auto, 1 = serial)")
         .opt("seed", Some("0"), "experiment seed")
         .opt("out", Some("results"), "output directory")
@@ -311,6 +313,10 @@ fn run_fleet(args: &[String]) -> Result<()> {
     }
     let codec: PayloadCodec = m.str_("codec")?.parse()?;
     cfg.transport.codec = codec;
+    let weather: WeatherSpec = m.str_("weather")?.parse()?;
+    cfg.weather = weather;
+    let guard: GuardPolicy = m.str_("guard")?.parse()?;
+    cfg.guard = guard;
     cfg.threads = m.usize_("threads")?;
     cfg.verbose = m.bool_("verbose")?;
     cfg.validate()?;
@@ -329,29 +335,35 @@ fn run_fleet(args: &[String]) -> Result<()> {
         String::new()
     };
     let codec_tag = codec.file_tag();
+    let weather_tag = weather.file_tag();
     let label = format!(
-        "{}/{}/s{}k{}{}{}",
+        "{}/{}/s{}k{}{}{}{}",
         case.name,
         shape.name(),
         cfg.shards,
         cfg.max_staleness,
         region_tag,
-        codec_tag
+        codec_tag,
+        weather_tag
     );
     let h = fleet::run(&mut sys, trainer.as_mut(), &cfg, &label)?;
 
     let out = PathBuf::from(m.str_("out")?).join(format!(
-        "fleet_{}_{}_{}s_{}k{}{}.csv",
+        "fleet_{}_{}_{}s_{}k{}{}{}.csv",
         case.name,
         shape.name(),
         cfg.shards,
         cfg.max_staleness,
         region_tag,
-        codec_tag
+        codec_tag,
+        weather_tag
     ));
     h.write_csv(&out)?;
     let commits: usize = h.rounds.iter().map(|r| r.shards_committed).sum();
     let moves: usize = h.rounds.iter().map(|r| r.rebalance_moves).sum();
+    let rejected: usize = h.rounds.iter().map(|r| r.rejected_updates).sum();
+    let dark_rounds: usize =
+        h.rounds.iter().filter(|r| r.outage_regions > 0).count();
     let uplink_mb: f64 =
         h.rounds.iter().map(|r| r.uplink_bytes).sum::<usize>() as f64 / 1e6;
     let stale_mean: f64 = if h.rounds.is_empty() {
@@ -362,9 +374,11 @@ fn run_fleet(args: &[String]) -> Result<()> {
     };
     println!(
         "{label}: {} clients / {} shards / {} regions, model {} ({} params, \
-         {:.3} MB), codec {} ({:.3} MB/update), {} rounds, {} shard commits \
-         (mean staleness {stale_mean:.2}), {moves} rebalance moves, \
-         {uplink_mb:.1} MB uplinked, final accuracy {:.4} → {}",
+         {:.3} MB), codec {} ({:.3} MB/update), weather {} ({}), \
+         {} rounds, {} shard commits (mean staleness {stale_mean:.2}), \
+         {moves} rebalance moves, {rejected} updates rejected, \
+         {dark_rounds} dark rounds, {uplink_mb:.1} MB uplinked, \
+         final accuracy {:.4} → {}",
         case.num_clients,
         cfg.shards,
         cfg.regions,
@@ -373,6 +387,8 @@ fn run_fleet(args: &[String]) -> Result<()> {
         shape.payload_bytes() as f64 / 1e6,
         codec.label(),
         codec.payload_bytes_for(&shape) as f64 / 1e6,
+        cfg.weather.label(),
+        cfg.guard.label(),
         h.rounds.len(),
         commits,
         h.final_accuracy(),

@@ -64,6 +64,16 @@ pub struct RoundRecord {
     /// backhaul tiers crossed serially, each gated by its slowest
     /// transfer (`transport::RoundLedger::comm_delay_s`)
     pub comm_delay_s: f64,
+    /// client updates dropped by the fleet engine's update guard this
+    /// round (finite/norm rejections at the shard fold + trimmed-mean
+    /// drops at region accept; 0 for flat runs and calm weather)
+    pub rejected_updates: usize,
+    /// regions dark under outage weather this round (0 otherwise)
+    pub outage_regions: usize,
+    /// rounds from weather-event onset until accuracy re-crossed its
+    /// pre-event level, recorded once on the recovering round (0 on
+    /// every other round)
+    pub recovery_rounds: usize,
 }
 
 impl RoundRecord {
@@ -193,6 +203,9 @@ impl RunHistory {
             "backhaul_bytes",
             "broadcast_bytes",
             "comm_delay_s",
+            "rejected_updates",
+            "outage_regions",
+            "recovery_rounds",
         ]);
         let cum_local = self.cumulative(Metric::LocalDelayRound);
         let cum_tx = self.cumulative(Metric::TxDelayRound);
@@ -218,6 +231,9 @@ impl RunHistory {
                 r.backhaul_bytes as f64,
                 r.broadcast_bytes as f64,
                 r.comm_delay_s,
+                r.rejected_updates as f64,
+                r.outage_regions as f64,
+                r.recovery_rounds as f64,
             ]);
         }
         t
@@ -306,7 +322,8 @@ mod tests {
         assert!(header.ends_with(
             "shards_committed,staleness_mean,shard_spread_max_s,\
              regions_committed,rebalance_moves,\
-             uplink_bytes,backhaul_bytes,broadcast_bytes,comm_delay_s"
+             uplink_bytes,backhaul_bytes,broadcast_bytes,comm_delay_s,\
+             rejected_updates,outage_regions,recovery_rounds"
         ));
         let row = text.lines().nth(1).unwrap();
         assert!(row.contains(",3,0.5,2,2,7"), "{row}");
@@ -323,11 +340,29 @@ mod tests {
         h.push(r);
         let text = h.to_csv().to_string();
         let row = text.lines().nth(1).unwrap();
-        assert!(row.ends_with(",101770,2048,407080,1.25"), "{row}");
+        assert!(row.ends_with(",101770,2048,407080,1.25,0,0,0"), "{row}");
         // the flat default charges nothing
         let d = RoundRecord::default();
         assert_eq!(d.uplink_bytes, 0);
         assert_eq!(d.comm_delay_s, 0.0);
+    }
+
+    #[test]
+    fn weather_columns_round_trip_to_csv() {
+        let mut h = RunHistory::new("weather");
+        let mut r = rec(0, 0.4, &[1.0], &[0.5], &[0.1]);
+        r.rejected_updates = 13;
+        r.outage_regions = 2;
+        r.recovery_rounds = 4;
+        h.push(r);
+        let text = h.to_csv().to_string();
+        let row = text.lines().nth(1).unwrap();
+        assert!(row.ends_with(",13,2,4"), "{row}");
+        // calm/flat defaults report nothing
+        let d = RoundRecord::default();
+        assert_eq!(d.rejected_updates, 0);
+        assert_eq!(d.outage_regions, 0);
+        assert_eq!(d.recovery_rounds, 0);
     }
 
     #[test]

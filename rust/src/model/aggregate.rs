@@ -88,6 +88,24 @@ impl Aggregator {
         self.weight_sum
     }
 
+    /// L2 norm of the *mean* update this aggregator would produce
+    /// (`‖Σ wᵢ·xᵢ‖ / Σ wᵢ`), accumulated in f64 so adversarially scaled
+    /// f32 payloads can't overflow the statistic. 0.0 while empty. The
+    /// trimmed-mean guard (`fleet::fold_regions_guarded`) orders shard
+    /// partials by this.
+    pub fn mean_l2_norm(&self) -> f64 {
+        if self.count == 0 || self.weight_sum <= 0.0 {
+            return 0.0;
+        }
+        let sq: f64 = self
+            .acc
+            .as_slice()
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum();
+        sq.sqrt() / self.weight_sum
+    }
+
     /// Fold another aggregator's partial sums into this one — the root
     /// step of the hierarchical (two-level) aggregation in `fleet`.
     /// Panics when the partials' layouts differ.
@@ -287,6 +305,19 @@ mod tests {
         let m = agg.finish().unwrap();
         // (10·1 + 30·2) / 40 = 1.75
         assert!((m.tensor(3)[0] - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_l2_norm_is_weight_invariant_and_scales() {
+        let mut agg = Aggregator::new(&shape());
+        assert_eq!(agg.mean_l2_norm(), 0.0);
+        agg.push(&filled(2.0), 100);
+        let n = shape().param_count() as f64;
+        // mean update is uniformly 2.0 → norm 2·√n, independent of weight
+        assert!((agg.mean_l2_norm() - 2.0 * n.sqrt()).abs() < 1e-6 * n.sqrt());
+        let mut heavy = Aggregator::new(&shape());
+        heavy.push(&filled(2.0), 7);
+        assert!((heavy.mean_l2_norm() - agg.mean_l2_norm()).abs() < 1e-6 * n.sqrt());
     }
 
     #[test]

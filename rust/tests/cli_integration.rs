@@ -283,6 +283,56 @@ fn fleet_codec_flag_compresses_the_uplink_and_tags_the_csv() {
 }
 
 #[test]
+fn fleet_weather_flag_counts_rejections_and_tags_the_csv() {
+    // the CI byzantine smoke as a test: poisoned updates are rejected
+    // (nonzero rejected_updates column) in a weather-tagged CSV, and a
+    // malformed spec is refused up front by the parser
+    let out = tmpdir("fleet-weather");
+    let (ok, stdout, stderr) = run(&[
+        "fleet",
+        "--preset",
+        "Fleet10k",
+        "--rounds",
+        "3",
+        "--regions",
+        "2",
+        "--weather",
+        "byzantine:0.2",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("weather byz0.2"), "{stdout}");
+    let csv = std::fs::read_to_string(
+        out.join("fleet_Fleet10k_mlp-784_16s_2k_r2_byz0.2.csv"),
+    )
+    .unwrap();
+    let header = csv.lines().next().unwrap();
+    let col = header
+        .split(',')
+        .position(|c| c == "rejected_updates")
+        .expect("rejected_updates column");
+    let rejected: f64 = csv
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').nth(col).unwrap().parse::<f64>().unwrap())
+        .sum();
+    assert!(rejected > 0.0, "byzantine weather rejected nothing:\n{csv}");
+    // malformed weather and guard specs are rejected before the run
+    let (ok, _, stderr) = run(&[
+        "fleet", "--preset", "Fleet10k", "--rounds", "1", "--weather", "gale",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("weather"), "{stderr}");
+    let (ok, _, stderr) = run(&[
+        "fleet", "--preset", "Fleet10k", "--rounds", "1", "--guard", "on:0",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("guard"), "{stderr}");
+    let _ = std::fs::remove_dir_all(out);
+}
+
+#[test]
 fn run_codec_flag_works_on_the_traditional_engine() {
     let out = tmpdir("run-codec");
     let (ok, stdout, stderr) = run(&[

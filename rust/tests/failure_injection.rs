@@ -1,6 +1,9 @@
 //! Failure-injection tests: the coordinator must surface backend errors
-//! cleanly (no partial aggregation, no poisoned state) and the CNC
-//! decision layer must reject impossible topologies rather than hang.
+//! cleanly (no partial aggregation, no poisoned state), the CNC
+//! decision layer must reject impossible topologies rather than hang,
+//! and the fleet engine must survive hostile network weather — byzantine
+//! payloads never reach the global model, outages are accounted, and
+//! calm weather is bit-identical to a run with no weather machinery.
 
 use anyhow::{bail, Result};
 
@@ -11,7 +14,9 @@ use cnc_fl::cnc::CncSystem;
 use cnc_fl::coordinator::p2p::{self, P2pConfig};
 use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
 use cnc_fl::coordinator::{MockTrainer, Trainer};
+use cnc_fl::fleet::{self, FleetConfig, GuardPolicy, WeatherSpec};
 use cnc_fl::model::params::ModelParams;
+use cnc_fl::model::shape::ModelShape;
 use cnc_fl::netsim::channel::ChannelParams;
 use cnc_fl::netsim::compute::PowerProfile;
 use cnc_fl::netsim::topology::CostMatrix;
@@ -202,4 +207,155 @@ fn failed_round_leaves_no_partial_bus_round() {
         m,
         cnc_fl::cnc::Announcement::UpdatesCollected { .. }
     )));
+}
+
+// ---------------------------------------------------------------- fleet
+// weather: the hostile-network gate for the async fleet engine
+
+fn fleet_cfg(rounds: usize, shards: usize, max_staleness: usize) -> FleetConfig {
+    FleetConfig {
+        rounds,
+        shards,
+        max_staleness,
+        cohort_size: 8,
+        n_rb: 8,
+        cohort_strategy: CohortStrategy::PowerGrouping { m: 5 },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn weather_runs_are_deterministic_per_seed() {
+    for spec in ["byzantine:0.5", "flaky:0.3", "outage:1:2", "storm:6:2"] {
+        let mut c = fleet_cfg(5, 4, 1);
+        c.regions = 2;
+        c.weather = spec.parse().unwrap();
+        let csv_of = || {
+            let mut s = system(40);
+            let mut t = MockTrainer::new(40, 600);
+            fleet::run(&mut s, &mut t, &c, "wx").unwrap().to_csv().to_string()
+        };
+        // identical seed → identical CSV, including the weather columns
+        assert_eq!(csv_of(), csv_of(), "{spec}");
+    }
+}
+
+#[test]
+fn calm_weather_is_bitwise_identical_to_a_guardless_run() {
+    // the weather machinery must be a strict no-op under calm skies: the
+    // guard admits without touching values and calm draws no RNG, so a
+    // guarded serial run, a guarded parallel run, and a guard-off run
+    // all land on the same bits for every shape preset
+    for name in ["mlp-small", "mlp-784", "mlp-wide"] {
+        let shape = ModelShape::preset(name).unwrap();
+        let run_one = |threads: usize, guard: GuardPolicy| {
+            let mut s = system(40);
+            let mut t = MockTrainer::with_shape(40, 600, &shape);
+            let mut c = fleet_cfg(4, 4, 1);
+            c.threads = threads;
+            c.guard = guard;
+            fleet::run_with_model(&mut s, &mut t, &c, "calm").unwrap()
+        };
+        let (h_ser, g_ser) = run_one(1, GuardPolicy::default());
+        let (h_par, g_par) = run_one(4, GuardPolicy::default());
+        let (h_off, g_off) = run_one(1, GuardPolicy::off());
+        for (i, x) in g_ser.as_slice().iter().enumerate() {
+            assert_eq!(x.to_bits(), g_par.as_slice()[i].to_bits(), "{name} ∥");
+            assert_eq!(x.to_bits(), g_off.as_slice()[i].to_bits(), "{name} off");
+        }
+        let csv = h_ser.to_csv().to_string();
+        assert_eq!(csv, h_par.to_csv().to_string(), "{name} ∥");
+        assert_eq!(csv, h_off.to_csv().to_string(), "{name} off");
+    }
+}
+
+#[test]
+fn byzantine_updates_never_reach_the_global_model() {
+    // every trained slot after round 0 is poisoned; the guard must drop
+    // them all and the global model must stay finite every round
+    let mut c = fleet_cfg(4, 2, 0);
+    c.weather = "byzantine:1.0".parse().unwrap();
+    let mut s = system(40);
+    let mut t = MockTrainer::new(40, 600);
+    let (h, g) = fleet::run_with_model(&mut s, &mut t, &c, "byz").unwrap();
+    assert!(g.as_slice().iter().all(|v| v.is_finite()));
+    assert_eq!(h.rounds[0].rejected_updates, 0); // baseline round is exempt
+    let rejected: usize = h.rounds.iter().map(|r| r.rejected_updates).sum();
+    assert_eq!(rejected, (h.rounds.len() - 1) * c.cohort_size);
+    for r in &h.rounds {
+        assert!(r.accuracy.is_finite());
+        if r.round > 0 {
+            assert_eq!(r.shards_committed, 0);
+        }
+    }
+}
+
+#[test]
+fn guard_off_lets_byzantine_updates_poison_the_global() {
+    // the defenseless control: with the guard disabled the same storm
+    // corrupts the global model — this is what the guard is for
+    let mut c = fleet_cfg(3, 2, 0);
+    c.weather = "byzantine:1.0".parse().unwrap();
+    c.guard = GuardPolicy::off();
+    let mut s = system(40);
+    let mut t = MockTrainer::new(40, 600);
+    let (h, g) = fleet::run_with_model(&mut s, &mut t, &c, "byz-off").unwrap();
+    assert_eq!(h.rounds.iter().map(|r| r.rejected_updates).sum::<usize>(), 0);
+    assert!(g.as_slice().iter().any(|v| !v.is_finite() || v.abs() > 1e3));
+}
+
+#[test]
+fn all_rejected_updates_keep_the_previous_global_bit_identical() {
+    // clip so tight even honest updates bounce: the root keeps the
+    // previous global verbatim, still emits a CSV row per round, counts
+    // the whole cohort as rejected, and never reports NaN accuracy
+    let mut c = fleet_cfg(3, 2, 0);
+    c.guard = GuardPolicy {
+        enabled: true,
+        clip_norm: 1e-12,
+        trim_frac: 0.0,
+    };
+    let mut s = system(40);
+    let mut t = MockTrainer::new(40, 600);
+    let (h, g) = fleet::run_with_model(&mut s, &mut t, &c, "reject-all").unwrap();
+    let init = t.init_params().unwrap();
+    for (x, y) in g.as_slice().iter().zip(init.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert_eq!(h.rounds.len(), 3);
+    for r in &h.rounds {
+        assert_eq!(r.shards_committed, 0);
+        assert_eq!(r.rejected_updates, c.cohort_size);
+        assert!(!r.accuracy.is_nan());
+        assert_eq!(r.accuracy, 0.0);
+    }
+}
+
+#[test]
+fn outage_rounds_and_recovery_reach_the_csv() {
+    let mut c = fleet_cfg(8, 4, 1);
+    c.regions = 2;
+    c.weather = "outage:1:2".parse().unwrap();
+    let mut s = system(40);
+    let mut t = MockTrainer::new(40, 600);
+    let h = fleet::run(&mut s, &mut t, &c, "outage").unwrap();
+    assert_eq!(h.rounds[0].outage_regions, 0); // round 0 is always clear
+    assert!(h.rounds.iter().any(|r| r.outage_regions == 1));
+    assert!(h.rounds.iter().any(|r| r.recovery_rounds > 0));
+    let header = h.to_csv().to_string();
+    let header = header.lines().next().unwrap().to_string();
+    assert!(header.ends_with("rejected_updates,outage_regions,recovery_rounds"));
+}
+
+#[test]
+fn malformed_weather_and_guard_specs_are_rejected() {
+    for bad in [
+        "", "gale", "outage:0:2", "outage:1:0", "outage:1", "byzantine:1.5",
+        "byzantine", "flaky:-0.1", "flaky", "storm:0", "storm:4:0", "calm:1",
+    ] {
+        assert!(bad.parse::<WeatherSpec>().is_err(), "`{bad}` must not parse");
+    }
+    for bad in ["", "onn", "on:0", "on:nan", "on:1e6:0.5", "off:1"] {
+        assert!(bad.parse::<GuardPolicy>().is_err(), "`{bad}` must not parse");
+    }
 }
