@@ -1,0 +1,83 @@
+//! Observer overhead on the fleet engine: the same 2-round mock run
+//! with observability off (disabled observer — the default path) versus
+//! fully on (tracer + registry + in-memory JSONL sink), at 10³ and 10⁴
+//! clients. The acceptance bar is tracer overhead under ~5 % of the
+//! round loop; results also land in `BENCH_obs.json` for the
+//! perf-trajectory series (like `bench_fleet`'s `BENCH_weather.json`).
+//!
+//! Run: `cargo bench --bench bench_obs`
+
+use cnc_fl::cnc::optimize::CohortStrategy;
+use cnc_fl::cnc::CncSystem;
+use cnc_fl::coordinator::MockTrainer;
+use cnc_fl::fleet::{self, FleetConfig};
+use cnc_fl::netsim::channel::ChannelParams;
+use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::obs::{Observer, TraceSink};
+use cnc_fl::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::coarse();
+    println!("# bench_obs — observability-plane overhead, fleet engine\n");
+    let mut rows: Vec<String> = Vec::new();
+
+    for &u in &[1_000usize, 10_000] {
+        let cohort = (u / 100).clamp(8, 200);
+        let shards = (u / 625).clamp(2, 16);
+        let cfg = FleetConfig {
+            rounds: 2,
+            shards,
+            max_staleness: 1,
+            cohort_size: cohort,
+            n_rb: cohort,
+            cohort_strategy: CohortStrategy::PowerGrouping { m: 5 },
+            threads: 1,
+            ..Default::default()
+        };
+        let mut channel = ChannelParams::default();
+        channel.fading_samples = 2;
+        let mut sys = CncSystem::bootstrap(
+            u,
+            600,
+            1,
+            PowerProfile::Bimodal,
+            channel,
+            0xB0B5,
+        );
+        let mut trainer = MockTrainer::new(u, 600);
+
+        let off = b.bench(&format!("fleet 2r off   {u:>6} clients"), || {
+            black_box(
+                fleet::run(&mut sys, &mut trainer, &cfg, "off")
+                    .unwrap()
+                    .final_accuracy(),
+            )
+        });
+        let on = b.bench(&format!("fleet 2r trace {u:>6} clients"), || {
+            let mut obs = Observer::with_sink(TraceSink::in_memory());
+            black_box(
+                fleet::run_traced(&mut sys, &mut trainer, &cfg, "on", &mut obs)
+                    .unwrap()
+                    .final_accuracy(),
+            )
+        });
+        let overhead_pct =
+            (on.median_ns - off.median_ns) / off.median_ns * 100.0;
+        println!("  → overhead {overhead_pct:+.2} %\n");
+        rows.push(format!(
+            "    {{\"clients\": {u}, \"shards\": {shards}, \"cohort\": {cohort}, \
+             \"off_median_ns\": {:.1}, \"on_median_ns\": {:.1}, \
+             \"overhead_pct\": {overhead_pct:.2}}}",
+            off.median_ns, on.median_ns
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_obs/fleet_trace_overhead\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_obs.json", &json) {
+        Ok(()) => println!("wrote BENCH_obs.json"),
+        Err(e) => eprintln!("BENCH_obs.json not written: {e}"),
+    }
+}

@@ -78,27 +78,76 @@ pub enum Announcement {
     },
 }
 
+impl Announcement {
+    /// The round the message belongs to.
+    pub fn round(&self) -> usize {
+        match self {
+            Announcement::ResourceReport { round, .. }
+            | Announcement::TraditionalDecision { round, .. }
+            | Announcement::P2pDecision { round, .. }
+            | Announcement::ModelBroadcast { round, .. }
+            | Announcement::UpdatesCollected { round, .. }
+            | Announcement::ShardDecision { round, .. }
+            | Announcement::ShardCommit { round, .. }
+            | Announcement::RegionCommit { round, .. }
+            | Announcement::FleetRebalanced { round, .. } => *round,
+        }
+    }
+
+    /// Snake-case message-kind name (trace events, flow assertions).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Announcement::ResourceReport { .. } => "resource_report",
+            Announcement::TraditionalDecision { .. } => "traditional_decision",
+            Announcement::P2pDecision { .. } => "p2p_decision",
+            Announcement::ModelBroadcast { .. } => "model_broadcast",
+            Announcement::UpdatesCollected { .. } => "updates_collected",
+            Announcement::ShardDecision { .. } => "shard_decision",
+            Announcement::ShardCommit { .. } => "shard_commit",
+            Announcement::RegionCommit { .. } => "region_commit",
+            Announcement::FleetRebalanced { .. } => "fleet_rebalanced",
+        }
+    }
+}
+
+/// Cap on the staging buffer of evicted messages between observer
+/// drains — keeps a sink-less or slow-draining run bounded too.
+const EVICTED_CAP: usize = 4096;
+
 /// The bus: FIFO delivery + a bounded audit log.
 #[derive(Debug)]
 pub struct AnnouncementBus {
     log: VecDeque<Announcement>,
     capacity: usize,
     published: usize,
+    log_evictions: bool,
+    evicted: VecDeque<Announcement>,
 }
 
 impl AnnouncementBus {
+    /// A bus retaining the last `capacity` messages for audit;
+    /// `capacity == 0` means unbounded (keep everything).
     pub fn new(capacity: usize) -> Self {
         AnnouncementBus {
             log: VecDeque::new(),
-            capacity: capacity.max(1),
+            capacity,
             published: 0,
+            log_evictions: false,
+            evicted: VecDeque::new(),
         }
     }
 
     /// Route a message (keeps the last `capacity` for inspection).
     pub fn publish(&mut self, msg: Announcement) {
-        if self.log.len() == self.capacity {
-            self.log.pop_front();
+        if self.capacity > 0 && self.log.len() == self.capacity {
+            if let Some(old) = self.log.pop_front() {
+                if self.log_evictions {
+                    if self.evicted.len() == EVICTED_CAP {
+                        self.evicted.pop_front();
+                    }
+                    self.evicted.push_back(old);
+                }
+            }
         }
         self.log.push_back(msg);
         self.published += 1;
@@ -109,6 +158,26 @@ impl AnnouncementBus {
         self.published
     }
 
+    /// The configured audit-ring capacity (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Stage messages the ring evicts so an observer can route them to
+    /// its trace sink ([`take_evicted`](Self::take_evicted)). Off by
+    /// default: without a consumer, staging would just be a second ring.
+    pub fn set_log_evictions(&mut self, on: bool) {
+        self.log_evictions = on;
+        if !on {
+            self.evicted.clear();
+        }
+    }
+
+    /// Drain the staged evicted messages, oldest first.
+    pub fn take_evicted(&mut self) -> Vec<Announcement> {
+        self.evicted.drain(..).collect()
+    }
+
     /// The retained audit log, oldest first.
     pub fn audit(&self) -> impl Iterator<Item = &Announcement> {
         self.log.iter()
@@ -116,20 +185,7 @@ impl AnnouncementBus {
 
     /// Messages of the current round (for flow assertions).
     pub fn round_messages(&self, round: usize) -> Vec<&Announcement> {
-        self.log
-            .iter()
-            .filter(|m| match m {
-                Announcement::ResourceReport { round: r, .. }
-                | Announcement::TraditionalDecision { round: r, .. }
-                | Announcement::P2pDecision { round: r, .. }
-                | Announcement::ModelBroadcast { round: r, .. }
-                | Announcement::UpdatesCollected { round: r, .. }
-                | Announcement::ShardDecision { round: r, .. }
-                | Announcement::ShardCommit { round: r, .. }
-                | Announcement::RegionCommit { round: r, .. }
-                | Announcement::FleetRebalanced { round: r, .. } => *r == round,
-            })
-            .collect()
+        self.log.iter().filter(|m| m.round() == round).collect()
     }
 }
 
@@ -174,6 +230,64 @@ mod tests {
             bus.audit().next(),
             Some(&Announcement::UpdatesCollected { round: 7, count: 1 })
         );
+    }
+
+    #[test]
+    fn zero_capacity_means_unbounded() {
+        let mut bus = AnnouncementBus::new(0);
+        for round in 0..10_000 {
+            bus.publish(Announcement::UpdatesCollected { round, count: 1 });
+        }
+        assert_eq!(bus.audit().count(), 10_000);
+        assert_eq!(bus.published(), 10_000);
+        assert_eq!(bus.capacity(), 0);
+        assert!(bus.take_evicted().is_empty());
+    }
+
+    #[test]
+    fn eviction_log_stages_evicted_messages_in_order() {
+        let mut bus = AnnouncementBus::new(3);
+        bus.set_log_evictions(true);
+        for round in 0..10 {
+            bus.publish(Announcement::UpdatesCollected { round, count: 1 });
+        }
+        let evicted = bus.take_evicted();
+        assert_eq!(evicted.len(), 7);
+        assert_eq!(evicted[0].round(), 0);
+        assert_eq!(evicted[6].round(), 6);
+        assert_eq!(evicted[0].kind(), "updates_collected");
+        // drained — and turning logging off clears any stragglers
+        assert!(bus.take_evicted().is_empty());
+        bus.publish(Announcement::UpdatesCollected {
+            round: 10,
+            count: 1,
+        });
+        bus.set_log_evictions(false);
+        bus.publish(Announcement::UpdatesCollected {
+            round: 11,
+            count: 1,
+        });
+        assert!(bus.take_evicted().is_empty());
+    }
+
+    #[test]
+    fn kind_and_round_accessors() {
+        let m = Announcement::ShardCommit {
+            round: 5,
+            shard: 2,
+            staleness: 1,
+            bytes: 64,
+        };
+        assert_eq!(m.round(), 5);
+        assert_eq!(m.kind(), "shard_commit");
+        let m = Announcement::FleetRebalanced {
+            round: 3,
+            joined: 1,
+            left: 2,
+            moved: 0,
+        };
+        assert_eq!(m.round(), 3);
+        assert_eq!(m.kind(), "fleet_rebalanced");
     }
 
     #[test]

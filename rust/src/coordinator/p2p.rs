@@ -41,6 +41,7 @@ use crate::model::aggregate::Aggregator;
 use crate::model::compress::PayloadCodec;
 use crate::model::params::ModelParams;
 use crate::netsim::topology::CostMatrix;
+use crate::obs::{Observer, Phase};
 use crate::runtime::ParallelExecutor;
 use crate::transport::{RoundLedger, TransportConfig, TransportPlan};
 use crate::util::rng::Pcg64;
@@ -133,6 +134,18 @@ pub fn run(
     Ok(run_with_model(sys, trainer, g, cfg, label)?.0)
 }
 
+/// [`run`] with an observability plane attached (`--trace`).
+pub fn run_traced(
+    sys: &mut CncSystem,
+    trainer: &mut dyn Trainer,
+    g: &CostMatrix,
+    cfg: &P2pConfig,
+    label: &str,
+    obs: &mut Observer,
+) -> Result<RunHistory> {
+    Ok(run_with_model_traced(sys, trainer, g, cfg, label, obs)?.0)
+}
+
 /// Run the full P2P training, returning the history and the final model.
 pub fn run_with_model(
     sys: &mut CncSystem,
@@ -141,16 +154,35 @@ pub fn run_with_model(
     cfg: &P2pConfig,
     label: &str,
 ) -> Result<(RunHistory, ModelParams)> {
+    run_with_model_traced(sys, trainer, g, cfg, label, &mut Observer::disabled())
+}
+
+/// [`run_with_model`] with an observability plane attached. A disabled
+/// observer makes every hook a no-op; outputs are bit-identical either
+/// way (pinned by `tests/obs_props.rs`).
+pub fn run_with_model_traced(
+    sys: &mut CncSystem,
+    trainer: &mut dyn Trainer,
+    g: &CostMatrix,
+    cfg: &P2pConfig,
+    label: &str,
+    obs: &mut Observer,
+) -> Result<(RunHistory, ModelParams)> {
     let mut history = RunHistory::new(label);
     let mut global = trainer.init_params()?;
     let executor = ParallelExecutor::new(cfg.threads);
     // P2P charges chain transmissions in the Eq (7) relative cost units;
     // the transport plan sizes the wire bytes and applies the codec
     let plan = TransportPlan::new(global.shape(), &cfg.transport)?;
+    if obs.has_sink() {
+        sys.bus.set_log_evictions(true);
+    }
+    obs.run_start("p2p", label, cfg.rounds);
 
     for round in 0..cfg.rounds {
         let round_rng = Pcg64::new(cfg.seed, 0x9292).split(&format!("round/{round}"));
 
+        let sp = obs.tracer.begin(Phase::Decide);
         sys.announce_resources(round);
         let decision = sys.optimizer.decide_p2p(
             &sys.pool,
@@ -163,6 +195,7 @@ pub fn run_with_model(
             round,
             parts: decision.parts.iter().map(|p| p.order.clone()).collect(),
         });
+        obs.tracer.end(sp);
 
         // summed data size N_te per chain, gathered up front so the
         // training fan-out only needs the shared trainer view
@@ -175,8 +208,9 @@ pub fn run_with_model(
         // chain training: serial along each path; chains independent.
         // Sub-models stream into the aggregator in part order on both
         // the serial and parallel paths (identical fold order).
-        let t0 = std::time::Instant::now();
+        let train_sp = obs.tracer.begin_timed(Phase::Train);
         let n_parts = decision.parts.len();
+        let sp = obs.tracer.begin(Phase::Broadcast);
         let mut ledger = RoundLedger::new();
         // downlink: the CNC hands the current global to each chain head;
         // uplink: one codec-sized forward per hop (peer → peer, and the
@@ -184,6 +218,7 @@ pub fn run_with_model(
         ledger.record(plan.broadcast(n_parts));
         let hops: usize = decision.parts.iter().map(|p| p.order.len()).sum();
         ledger.record(plan.p2p_hops(hops));
+        obs.tracer.end(sp);
         let mut agg = Aggregator::new(global.shape());
         let mut loss_sum = 0.0f64;
         let mut trained = 0usize;
@@ -222,20 +257,26 @@ pub fn run_with_model(
                 reduce(chain)?;
             }
         }
-        let compute_wall_s = t0.elapsed().as_secs_f64();
+        let compute_wall_s = obs.tracer.end(train_sp);
+        let sp = obs.tracer.begin(Phase::Commit);
         sys.bus.publish(Announcement::UpdatesCollected {
             round,
             count: agg.count(),
         });
+        obs.tracer.end(sp);
 
         // line 20: streamed weighted merge of the E sub-models
+        let sp = obs.tracer.begin(Phase::Fold);
         global = agg.finish()?;
+        obs.tracer.end(sp);
 
+        let sp = obs.tracer.begin(Phase::Eval);
         let accuracy = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
             trainer.evaluate(&global)?
         } else {
             history.final_accuracy()
         };
+        obs.tracer.end(sp);
 
         // per-part chain delays (serial within a part) + path costs
         let local_delays_s: Vec<f64> = decision
@@ -269,8 +310,12 @@ pub fn run_with_model(
                 rec.tx_energy_round_j(),
             );
         }
+        obs.drain_bus(&mut sys.bus);
+        obs.end_round(&rec);
         history.push(rec);
     }
+    obs.run_end(cfg.rounds);
+    sys.bus.set_log_evictions(false);
     Ok((history, global))
 }
 

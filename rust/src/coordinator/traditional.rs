@@ -31,6 +31,7 @@ use crate::coordinator::trainer::Trainer;
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::model::aggregate::Aggregator;
 use crate::model::params::ModelParams;
+use crate::obs::{Observer, Phase};
 use crate::runtime::ParallelExecutor;
 use crate::transport::{RoundLedger, TransportConfig, TransportPlan};
 use crate::util::rng::Pcg64;
@@ -101,6 +102,17 @@ pub fn run(
     Ok(run_with_model(sys, trainer, cfg, label)?.0)
 }
 
+/// [`run`] with an observability plane attached (`--trace`).
+pub fn run_traced(
+    sys: &mut CncSystem,
+    trainer: &mut dyn Trainer,
+    cfg: &TraditionalConfig,
+    label: &str,
+    obs: &mut Observer,
+) -> Result<RunHistory> {
+    Ok(run_with_model_traced(sys, trainer, cfg, label, obs)?.0)
+}
+
 /// Run the full traditional-architecture training, returning the history
 /// and the trained global model.
 pub fn run_with_model(
@@ -108,6 +120,20 @@ pub fn run_with_model(
     trainer: &mut dyn Trainer,
     cfg: &TraditionalConfig,
     label: &str,
+) -> Result<(RunHistory, ModelParams)> {
+    run_with_model_traced(sys, trainer, cfg, label, &mut Observer::disabled())
+}
+
+/// [`run_with_model`] with an observability plane attached. A disabled
+/// observer makes this exactly [`run_with_model`]: every hook is a
+/// no-op and the outputs are bit-identical (pinned by
+/// `tests/obs_props.rs`).
+pub fn run_with_model_traced(
+    sys: &mut CncSystem,
+    trainer: &mut dyn Trainer,
+    cfg: &TraditionalConfig,
+    label: &str,
+    obs: &mut Observer,
 ) -> Result<(RunHistory, ModelParams)> {
     let global = trainer.init_params()?;
 
@@ -118,7 +144,7 @@ pub fn run_with_model(
     let plan = TransportPlan::new(global.shape(), &cfg.transport)?;
     let base_payload_bytes = sys.pool.channel.payload_bytes;
     plan.charge_channel(&mut sys.pool.channel);
-    let outcome = run_rounds(sys, trainer, cfg, label, &plan, global);
+    let outcome = run_rounds(sys, trainer, cfg, label, &plan, global, obs);
     sys.pool.channel.payload_bytes = base_payload_bytes;
     outcome
 }
@@ -126,6 +152,7 @@ pub fn run_with_model(
 /// The engine's round loop, factored out of [`run_with_model`] so the
 /// caller can restore the codec-charged channel no matter how the loop
 /// exits.
+#[allow(clippy::too_many_arguments)]
 fn run_rounds(
     sys: &mut CncSystem,
     trainer: &mut dyn Trainer,
@@ -133,14 +160,20 @@ fn run_rounds(
     label: &str,
     plan: &TransportPlan,
     mut global: ModelParams,
+    obs: &mut Observer,
 ) -> Result<(RunHistory, ModelParams)> {
     let mut history = RunHistory::new(label);
     let executor = ParallelExecutor::new(cfg.threads);
+    if obs.has_sink() {
+        sys.bus.set_log_evictions(true);
+    }
+    obs.run_start("traditional", label, cfg.rounds);
 
     for round in 0..cfg.rounds {
         let round_rng = round_rng(cfg.seed, round);
 
         // CNC flow: resource report → decision → broadcast
+        let sp = obs.tracer.begin(Phase::Decide);
         sys.announce_resources(round);
         let decision = sys.optimizer.decide_traditional(
             &sys.pool,
@@ -155,6 +188,8 @@ fn run_rounds(
             cohort: decision.cohort.clone(),
             rb_of_client: decision.rb_of_client.clone(),
         });
+        obs.tracer.end(sp);
+        let sp = obs.tracer.begin(Phase::Broadcast);
         let mut ledger = RoundLedger::new();
         let down = plan.broadcast(1);
         sys.bus.publish(Announcement::ModelBroadcast {
@@ -163,6 +198,7 @@ fn run_rounds(
         });
         ledger.record(down);
         ledger.record(plan.uplink(&decision.tx_delays_s, &decision.tx_energies_j));
+        obs.tracer.end(sp);
 
         // dropout model: shared `coordinator::cohort_survivors` filter
         // (survivors keep their cohort slot order)
@@ -183,7 +219,7 @@ fn run_rounds(
         // (identical fold order on the serial and parallel paths) — the
         // shared `coordinator::train_cohort` path, same as the fleet
         // engine's
-        let t0 = std::time::Instant::now();
+        let sp = obs.tracer.begin_timed(Phase::Train);
         let mut agg = Aggregator::new(global.shape());
         let loss_sum = crate::coordinator::train_cohort(
             trainer,
@@ -195,22 +231,28 @@ fn run_rounds(
             plan.codec(),
             |upd, weight| agg.push(upd, weight),
         )?;
-        let compute_wall_s = t0.elapsed().as_secs_f64();
+        let compute_wall_s = obs.tracer.end(sp);
+        let sp = obs.tracer.begin(Phase::Commit);
         let collected = agg.count();
         sys.bus.publish(Announcement::UpdatesCollected {
             round,
             count: collected,
         });
+        obs.tracer.end(sp);
 
         // aggregation (Eq 1 by streaming weighted average)
+        let sp = obs.tracer.begin(Phase::Fold);
         global = agg.finish()?;
+        obs.tracer.end(sp);
 
         // evaluation
+        let sp = obs.tracer.begin(Phase::Eval);
         let accuracy = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
             trainer.evaluate(&global)?
         } else {
             history.final_accuracy()
         };
+        obs.tracer.end(sp);
 
         let rec = RoundRecord {
             round,
@@ -237,8 +279,12 @@ fn run_rounds(
                 rec.tx_energy_round_j(),
             );
         }
+        obs.drain_bus(&mut sys.bus);
+        obs.end_round(&rec);
         history.push(rec);
     }
+    obs.run_end(cfg.rounds);
+    sys.bus.set_log_evictions(false);
     Ok((history, global))
 }
 

@@ -90,6 +90,7 @@ use crate::fleet::weather::{
 };
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::model::params::ModelParams;
+use crate::obs::{Observer, Phase};
 use crate::runtime::ParallelExecutor;
 use crate::transport::{RoundLedger, Transfer, TransportConfig, TransportPlan};
 use crate::util::rng::Pcg64;
@@ -302,6 +303,18 @@ pub fn run(
     Ok(run_with_model(sys, trainer, cfg, label)?.0)
 }
 
+/// [`run`] with an [`Observer`] attached: phase spans, delay
+/// histograms and (when a sink is wired) streaming JSONL telemetry.
+pub fn run_traced(
+    sys: &mut CncSystem,
+    trainer: &mut dyn Trainer,
+    cfg: &FleetConfig,
+    label: &str,
+    obs: &mut Observer,
+) -> Result<RunHistory> {
+    Ok(run_with_model_traced(sys, trainer, cfg, label, obs)?.0)
+}
+
 /// Run the sharded/async fleet engine, returning the history and the
 /// final global model.
 pub fn run_with_model(
@@ -309,6 +322,19 @@ pub fn run_with_model(
     trainer: &mut dyn Trainer,
     cfg: &FleetConfig,
     label: &str,
+) -> Result<(RunHistory, ModelParams)> {
+    run_with_model_traced(sys, trainer, cfg, label, &mut Observer::disabled())
+}
+
+/// [`run_with_model`] with an [`Observer`] attached. The disabled
+/// observer is a strict no-op: every engine output is bit-identical to
+/// the untraced path.
+pub fn run_with_model_traced(
+    sys: &mut CncSystem,
+    trainer: &mut dyn Trainer,
+    cfg: &FleetConfig,
+    label: &str,
+    obs: &mut Observer,
 ) -> Result<(RunHistory, ModelParams)> {
     cfg.validate()?;
     let u = sys.pool.fleet.num_clients();
@@ -336,7 +362,7 @@ pub fn run_with_model(
     let plan = TransportPlan::new(global.shape(), &cfg.transport)?;
     let base_payload_bytes = sys.pool.channel.payload_bytes;
     plan.charge_channel(&mut sys.pool.channel);
-    let outcome = run_rounds(sys, trainer, cfg, label, &plan, global);
+    let outcome = run_rounds(sys, trainer, cfg, label, &plan, global, obs);
     sys.pool.channel.payload_bytes = base_payload_bytes;
     outcome
 }
@@ -344,6 +370,7 @@ pub fn run_with_model(
 /// The engine's round loop, factored out of [`run_with_model`] so the
 /// caller can restore the codec-charged channel no matter how the loop
 /// exits.
+#[allow(clippy::too_many_arguments)]
 fn run_rounds(
     sys: &mut CncSystem,
     trainer: &mut dyn Trainer,
@@ -351,6 +378,7 @@ fn run_rounds(
     label: &str,
     plan: &TransportPlan,
     mut global: ModelParams,
+    obs: &mut Observer,
 ) -> Result<(RunHistory, ModelParams)> {
     let mut topology = FleetTopology::build(
         &sys.pool,
@@ -386,11 +414,29 @@ fn run_rounds(
     let mut pending: Vec<Option<PendingJob>> = Vec::new();
     pending.resize_with(k, || None);
 
+    if obs.has_sink() {
+        sys.bus.set_log_evictions(true);
+    }
+    obs.run_start("fleet", label, cfg.rounds);
+
     for round in 0..cfg.rounds {
         // the round's weather forecast — a pure function of
         // (spec, seed, round), so runs stay seed-deterministic; calm
         // draws no randomness and perturbs nothing below
+        let sp = obs.tracer.begin(Phase::Weather);
         let wx = weather.round_weather(round, cfg.regions, k);
+        obs.tracer.end(sp);
+        if wx.perturbed {
+            obs.weather_event(
+                round,
+                wx.kind(),
+                &wx.dark_regions,
+                &wx.spiked_shards,
+                wx.spike,
+                wx.flaky_rate,
+                wx.byzantine_frac,
+            );
+        }
 
         // 0. churn: replace part of the fleet and rebuild the strata,
         //    re-deriving the proportional splits and cadences. Flaky
@@ -401,7 +447,9 @@ fn run_rounds(
             && round > 0
             && round % cfg.churn_every == 0
             && cfg.churn_rate > 0.0;
-        if scheduled_churn || wx.flaky_rate > 0.0 {
+        let churned = scheduled_churn || wx.flaky_rate > 0.0;
+        let sp = obs.tracer.begin(Phase::Churn);
+        if churned {
             if scheduled_churn {
                 let diff = topology.churn(
                     &mut sys.pool,
@@ -430,10 +478,15 @@ fn run_rounds(
                     moved: diff.moved,
                 });
             }
+        }
+        obs.tracer.end(sp);
+        let sp = obs.tracer.begin(Phase::Rebalance);
+        if churned {
             cohorts = split_proportional(cfg.cohort_size, &topology.sizes());
             n_rbs = rb_split(&cohorts);
             periods = shard_periods(&topology, cfg.max_staleness);
         }
+        obs.tracer.end(sp);
 
         // a straggler storm stretches the spiked shards' cadences for
         // this round's job starts; off-window rounds use the base periods
@@ -445,6 +498,7 @@ fn run_rounds(
             &stormy_periods
         };
 
+        let sp = obs.tracer.begin(Phase::Decide);
         sys.announce_resources(round);
 
         // 1. idle shards fetch the current global model and start a job:
@@ -472,6 +526,8 @@ fn run_rounds(
             &rngs,
             &executor,
         )?;
+        obs.tracer.end(sp);
+        let sp = obs.tracer.begin(Phase::Broadcast);
         let mut ledger = RoundLedger::new();
         if !idle.is_empty() {
             // downlink: the dense global model to every shard fetching a
@@ -483,6 +539,7 @@ fn run_rounds(
             });
             ledger.record(down);
         }
+        obs.tracer.end(sp);
 
         // 2. train every started job now, against the current global —
         //    the shared `coordinator::train_cohort` path (slot-ordered
@@ -507,7 +564,7 @@ fn run_rounds(
                     cfg.tx_deadline_s.unwrap_or(f64::NAN)
                 );
             }
-            let t0 = std::time::Instant::now();
+            let sp = obs.tracer.begin_timed(Phase::Train);
             let mut update = ShardUpdate::new(global.shape(), d.shard, round);
             // byzantine weather swaps a fraction of updates for poisoned
             // payloads right at the wire point; the guard then decides
@@ -543,7 +600,10 @@ fn run_rounds(
                     }
                 },
             )?;
-            let wall_s = t0.elapsed().as_secs_f64();
+            let wall_s = obs.tracer.end(sp);
+            if update.rejected_updates > 0 {
+                obs.guard_reject(round, d.shard, update.rejected_updates);
+            }
             // a storm-spiked stratum reports spiked Eq (8) telemetry
             let spike = wx.shard_spike(d.shard);
             let mut local_delays_s = d.decision.local_delays_s;
@@ -579,6 +639,7 @@ fn run_rounds(
         //    run end, and a flushed update's staleness can only be
         //    *smaller* than its period's, so it always clears the bound.
         let flush = round + 1 == cfg.rounds;
+        let sp = obs.tracer.begin(Phase::Guard);
         // a dark shard holds its in-flight job (even at flush — a dark
         // region cannot reach the backhaul): the update ages through the
         // outage and faces the staleness bound when the region comes back
@@ -600,6 +661,8 @@ fn run_rounds(
         } else {
             0.0
         };
+        obs.tracer.end(sp);
+        let sp = obs.tracer.begin(Phase::Fold);
         let (root, accepts) = {
             let due_refs: Vec<Vec<&ShardUpdate>> = topology
                 .regions
@@ -621,7 +684,9 @@ fn run_rounds(
                 &executor,
             )?
         };
+        obs.tracer.end(sp);
 
+        let sp = obs.tracer.begin(Phase::Commit);
         let mut loss_sum = 0.0f64;
         let mut collected = 0usize;
         let mut dropouts = 0usize;
@@ -680,9 +745,11 @@ fn run_rounds(
         // a round that accepted nothing keeps the previous global —
         // never an error out of the engine (fleet::hierarchy)
         global = root.finish_or_keep(global);
+        obs.tracer.end(sp);
 
         // 4. evaluate + record (a commit-free round keeps the previous
         //    global, so its accuracy/loss carry over)
+        let sp = obs.tracer.begin(Phase::Eval);
         let accuracy = if shards_committed > 0
             && (round % cfg.eval_every == 0 || round + 1 == cfg.rounds)
         {
@@ -690,6 +757,7 @@ fn run_rounds(
         } else {
             history.final_accuracy()
         };
+        obs.tracer.end(sp);
         let train_loss = if shards_committed > 0 {
             loss_sum / collected as f64
         } else {
@@ -745,8 +813,12 @@ fn run_rounds(
                 rec.outage_regions,
             );
         }
+        obs.drain_bus(&mut sys.bus);
+        obs.end_round(&rec);
         history.push(rec);
     }
+    obs.run_end(cfg.rounds);
+    sys.bus.set_log_evictions(false);
     Ok((history, global))
 }
 

@@ -40,7 +40,10 @@ pub mod hierarchy;
 pub mod registry;
 pub mod weather;
 
-pub use async_round::{run, run_with_model, shard_periods, FleetConfig};
+pub use async_round::{
+    run, run_traced, run_with_model, run_with_model_traced, shard_periods,
+    FleetConfig,
+};
 pub use hierarchy::{
     fold_regions, fold_regions_guarded, RegionAggregator, RegionUpdate,
     RootAggregator, ShardUpdate,

@@ -259,6 +259,21 @@ impl RoundWeather {
             1.0
         }
     }
+
+    /// Which weather is biting this round — the trace-event kind.
+    pub fn kind(&self) -> &'static str {
+        if !self.dark_regions.is_empty() {
+            "outage"
+        } else if !self.spiked_shards.is_empty() {
+            "storm"
+        } else if self.flaky_rate > 0.0 {
+            "flaky"
+        } else if self.byzantine_frac > 0.0 {
+            "byzantine"
+        } else {
+            "clear"
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -709,6 +724,24 @@ mod tests {
         let off = eng.round_weather(3, 2, 16);
         assert!(!off.perturbed);
         assert_eq!(off.spike, 1.0);
+    }
+
+    #[test]
+    fn round_weather_kind_names_the_active_regime() {
+        assert_eq!(RoundWeather::calm().kind(), "clear");
+        let mut wx = RoundWeather::calm();
+        wx.dark_regions = vec![1];
+        assert_eq!(wx.kind(), "outage");
+        let mut wx = RoundWeather::calm();
+        wx.spiked_shards = vec![0];
+        wx.spike = 4.0;
+        assert_eq!(wx.kind(), "storm");
+        let mut wx = RoundWeather::calm();
+        wx.flaky_rate = 0.2;
+        assert_eq!(wx.kind(), "flaky");
+        let mut wx = RoundWeather::calm();
+        wx.byzantine_frac = 0.1;
+        assert_eq!(wx.kind(), "byzantine");
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod netsim;
+pub mod obs;
 pub mod runtime;
 pub mod scheduler;
 pub mod transport;

@@ -27,12 +27,14 @@ use cnc_fl::exp::p2p_figs;
 use cnc_fl::exp::presets::{
     self, case, traditional_config, Backend, Method, CASES,
 };
+use cnc_fl::cnc::announce::AnnouncementBus;
 use cnc_fl::fleet::{self, GuardPolicy, WeatherSpec};
 use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
 use cnc_fl::netsim::channel::ChannelParams;
 use cnc_fl::netsim::topology::TopologyGen;
+use cnc_fl::obs::{Observer, TraceSink};
 use cnc_fl::transport::PayloadCodec;
-use cnc_fl::util::cli::Command;
+use cnc_fl::util::cli::{Command, Matches};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -74,6 +76,38 @@ fn fig_command(name: &'static str) -> Command {
         .opt("out", Some("results"), "output directory")
         .opt("cases", Some("Pr1,Pr2,Pr3"), "comma-separated Table 2 cases")
         .switch("verbose", "per-round progress on stderr")
+}
+
+/// Resolve the `--trace [PATH]` switch: absent → no sink, bare
+/// `--trace` → the run's default tagged path, `--trace=PATH` → PATH.
+fn trace_path(m: &Matches, default: String) -> Option<String> {
+    match m.get("trace") {
+        None | Some("false") => None,
+        Some("true") => Some(default),
+        Some(p) => Some(p.to_string()),
+    }
+}
+
+/// Build the run's observer: histograms/spans always on for the CLI
+/// (the delay rollup prints in the summary), JSONL sink only with
+/// `--trace`.
+fn make_observer(m: &Matches, default_trace: String) -> Result<Observer> {
+    Ok(match trace_path(m, default_trace) {
+        Some(p) => Observer::with_sink(TraceSink::create(&p)?),
+        None => Observer::enabled(),
+    })
+}
+
+/// Print the observer's rollup + trace-file summary lines and surface
+/// any latched sink write error.
+fn finish_observer(obs: &mut Observer) -> Result<()> {
+    if let Some(rollup) = obs.summary() {
+        println!("delay rollup: {rollup}");
+    }
+    if let Some((path, events)) = obs.finish()? {
+        println!("trace → {path} ({events} events)");
+    }
+    Ok(())
 }
 
 fn parse_backend(s: &str) -> Result<Backend> {
@@ -216,6 +250,7 @@ fn run_traditional(args: &[String]) -> Result<()> {
         .opt("codec", Some("raw"), "wire codec: raw | quant8 | topk:FRAC")
         .opt("seed", Some("0"), "experiment seed")
         .opt("out", Some("results"), "output directory")
+        .switch("trace", "stream JSONL telemetry (bare --trace: default path; --trace=PATH)")
         .switch("verbose", "per-round progress on stderr");
     let m = cmd.parse(args)?;
     let c = case(m.str_("case")?)?;
@@ -246,7 +281,19 @@ fn run_traditional(args: &[String]) -> Result<()> {
         presets::make_trainer(&backend, &c, split, seed, shape_override.as_ref())?;
     let codec_tag = codec.file_tag();
     let label = format!("{}/{}{}", c.name, method.label(), codec_tag);
-    let h = traditional::run(&mut sys, trainer.as_mut(), &cfg, &label)?;
+    let default_trace = PathBuf::from(m.str_("out")?)
+        .join(format!(
+            "trace_run_{}_{}_{}{}.jsonl",
+            c.name,
+            method.label(),
+            figures::split_tag(split),
+            codec_tag
+        ))
+        .display()
+        .to_string();
+    let mut obs = make_observer(&m, default_trace)?;
+    let h =
+        traditional::run_traced(&mut sys, trainer.as_mut(), &cfg, &label, &mut obs)?;
 
     let out = PathBuf::from(m.str_("out")?).join(format!(
         "run_{}_{}_{}{}.csv",
@@ -262,6 +309,7 @@ fn run_traditional(args: &[String]) -> Result<()> {
         h.final_accuracy(),
         out.display()
     );
+    finish_observer(&mut obs)?;
     Ok(())
 }
 
@@ -280,8 +328,10 @@ fn run_fleet(args: &[String]) -> Result<()> {
         .opt("weather", Some("calm"), "calm|storm[:SPIKE[:W]]|outage:R:W|flaky:RATE|byzantine:FRAC")
         .opt("guard", Some("on"), "update guard: on[:CLIP_NORM[:TRIM_FRAC]] | off")
         .opt("threads", Some("0"), "worker threads (0 = auto, 1 = serial)")
+        .opt("bus-cap", Some("4096"), "announcement-bus ring capacity (0 = unbounded)")
         .opt("seed", Some("0"), "experiment seed")
         .opt("out", Some("results"), "output directory")
+        .switch("trace", "stream JSONL telemetry (bare --trace: default path; --trace=PATH)")
         .switch("verbose", "per-round progress on stderr");
     let m = cmd.parse(args)?;
     let case_name = match m.get("preset") {
@@ -327,6 +377,7 @@ fn run_fleet(args: &[String]) -> Result<()> {
     };
 
     let mut sys = presets::bootstrap_fleet_case(&case, &shape, cfg.seed);
+    sys.bus = AnnouncementBus::new(m.usize_("bus-cap")?);
     let mut trainer = presets::make_fleet_trainer(&case, Some(&shape))?;
     // region-less raw runs keep the PR-2 label/file naming
     let region_tag = if cfg.regions > 1 {
@@ -346,7 +397,21 @@ fn run_fleet(args: &[String]) -> Result<()> {
         codec_tag,
         weather_tag
     );
-    let h = fleet::run(&mut sys, trainer.as_mut(), &cfg, &label)?;
+    let default_trace = PathBuf::from(m.str_("out")?)
+        .join(format!(
+            "trace_fleet_{}_{}_{}s_{}k{}{}{}.jsonl",
+            case.name,
+            shape.name(),
+            cfg.shards,
+            cfg.max_staleness,
+            region_tag,
+            codec_tag,
+            weather_tag
+        ))
+        .display()
+        .to_string();
+    let mut obs = make_observer(&m, default_trace)?;
+    let h = fleet::run_traced(&mut sys, trainer.as_mut(), &cfg, &label, &mut obs)?;
 
     let out = PathBuf::from(m.str_("out")?).join(format!(
         "fleet_{}_{}_{}s_{}k{}{}{}.csv",
@@ -394,6 +459,7 @@ fn run_fleet(args: &[String]) -> Result<()> {
         h.final_accuracy(),
         out.display()
     );
+    finish_observer(&mut obs)?;
     Ok(())
 }
 

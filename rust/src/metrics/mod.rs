@@ -114,6 +114,26 @@ impl RoundRecord {
         stats::max(&self.shard_spreads_s)
     }
 
+    /// Quantile of this round's per-client local delays (0.0 when the
+    /// round trained nobody) — the CSV's p50/p95/p99 columns and the
+    /// trace sink's round events both read here, so file and stream
+    /// agree exactly.
+    pub fn local_delay_q_s(&self, q: f64) -> f64 {
+        if self.local_delays_s.is_empty() {
+            return 0.0;
+        }
+        stats::quantile(&self.local_delays_s, q)
+    }
+
+    /// Quantile of this round's per-client uplink delays (0.0 when
+    /// nothing was transmitted).
+    pub fn tx_delay_q_s(&self, q: f64) -> f64 {
+        if self.tx_delays_s.is_empty() {
+            return 0.0;
+        }
+        stats::quantile(&self.tx_delays_s, q)
+    }
+
     /// Total transmission energy of the round (Eq 5's objective).
     pub fn tx_energy_round_j(&self) -> f64 {
         self.tx_energies_j.iter().sum()
@@ -206,6 +226,12 @@ impl RunHistory {
             "rejected_updates",
             "outage_regions",
             "recovery_rounds",
+            "local_delay_p50_s",
+            "local_delay_p95_s",
+            "local_delay_p99_s",
+            "tx_delay_p50_s",
+            "tx_delay_p95_s",
+            "tx_delay_p99_s",
         ]);
         let cum_local = self.cumulative(Metric::LocalDelayRound);
         let cum_tx = self.cumulative(Metric::TxDelayRound);
@@ -234,6 +260,12 @@ impl RunHistory {
                 r.rejected_updates as f64,
                 r.outage_regions as f64,
                 r.recovery_rounds as f64,
+                r.local_delay_q_s(0.5),
+                r.local_delay_q_s(0.95),
+                r.local_delay_q_s(0.99),
+                r.tx_delay_q_s(0.5),
+                r.tx_delay_q_s(0.95),
+                r.tx_delay_q_s(0.99),
             ]);
         }
         t
@@ -323,7 +355,9 @@ mod tests {
             "shards_committed,staleness_mean,shard_spread_max_s,\
              regions_committed,rebalance_moves,\
              uplink_bytes,backhaul_bytes,broadcast_bytes,comm_delay_s,\
-             rejected_updates,outage_regions,recovery_rounds"
+             rejected_updates,outage_regions,recovery_rounds,\
+             local_delay_p50_s,local_delay_p95_s,local_delay_p99_s,\
+             tx_delay_p50_s,tx_delay_p95_s,tx_delay_p99_s"
         ));
         let row = text.lines().nth(1).unwrap();
         assert!(row.contains(",3,0.5,2,2,7"), "{row}");
@@ -340,7 +374,10 @@ mod tests {
         h.push(r);
         let text = h.to_csv().to_string();
         let row = text.lines().nth(1).unwrap();
-        assert!(row.ends_with(",101770,2048,407080,1.25,0,0,0"), "{row}");
+        assert!(
+            row.ends_with(",101770,2048,407080,1.25,0,0,0,1,1,1,0.5,0.5,0.5"),
+            "{row}"
+        );
         // the flat default charges nothing
         let d = RoundRecord::default();
         assert_eq!(d.uplink_bytes, 0);
@@ -357,12 +394,38 @@ mod tests {
         h.push(r);
         let text = h.to_csv().to_string();
         let row = text.lines().nth(1).unwrap();
-        assert!(row.ends_with(",13,2,4"), "{row}");
+        assert!(row.ends_with(",13,2,4,1,1,1,0.5,0.5,0.5"), "{row}");
         // calm/flat defaults report nothing
         let d = RoundRecord::default();
         assert_eq!(d.rejected_updates, 0);
         assert_eq!(d.outage_regions, 0);
         assert_eq!(d.recovery_rounds, 0);
+    }
+
+    #[test]
+    fn delay_percentiles_match_stats_quantile() {
+        let local = [1.0, 4.0, 2.0, 8.0, 0.5];
+        let tx = [0.25, 0.75, 0.5];
+        let r = rec(0, 0.5, &local, &tx, &[0.1]);
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(r.local_delay_q_s(q), stats::quantile(&local, q));
+            assert_eq!(r.tx_delay_q_s(q), stats::quantile(&tx, q));
+        }
+        // an empty round reports zero, not a panic
+        let d = RoundRecord::default();
+        assert_eq!(d.local_delay_q_s(0.5), 0.0);
+        assert_eq!(d.tx_delay_q_s(0.99), 0.0);
+        // and the columns land in the CSV
+        let mut h = RunHistory::new("q");
+        h.push(rec(0, 0.5, &local, &tx, &[0.1]));
+        let text = h.to_csv().to_string();
+        let header = text.lines().next().unwrap();
+        assert!(header.ends_with(
+            "local_delay_p50_s,local_delay_p95_s,local_delay_p99_s,\
+             tx_delay_p50_s,tx_delay_p95_s,tx_delay_p99_s"
+        ));
+        let row = text.lines().nth(1).unwrap();
+        assert!(row.ends_with(",2,7.2,7.84,0.5,0.725,0.745"), "{row}");
     }
 
     #[test]

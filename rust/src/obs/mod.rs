@@ -1,0 +1,404 @@
+//! Observability plane: phase tracing, metric aggregation, and a
+//! streaming JSONL telemetry sink.
+//!
+//! The paper's premise is that CNC works because the network is
+//! *computing-measurable and perceptible* (§II) — the orchestrator can
+//! only guide training if it can see per-device delay, load, and
+//! transfer behavior. This module is that measurement layer for the
+//! simulator: a [`Tracer`] decomposing each round's wall-clock into
+//! phases, a [`MetricsRegistry`] holding delay/staleness distributions
+//! in O(1) memory, and a [`TraceSink`] streaming one JSON event per
+//! round/phase/weather-event/guard-rejection as it happens.
+//!
+//! The whole plane hangs off one [`Observer`] handle threaded through
+//! the engines. The contract that keeps the default path honest:
+//! a **disabled observer is a no-op** — no clock reads (except the
+//! train span, which pre-dates the tracer), no allocation, no event
+//! writes — so every engine output is bit-identical with observability
+//! off, pinned by `tests/obs_props.rs`.
+
+pub mod registry;
+pub mod sink;
+pub mod trace;
+
+pub use registry::{Histogram, MetricsRegistry};
+pub use sink::TraceSink;
+pub use trace::{Phase, Span, Tracer, PHASES};
+
+use anyhow::Result;
+
+use crate::cnc::announce::AnnouncementBus;
+use crate::metrics::RoundRecord;
+
+/// The engines' single observability handle.
+pub struct Observer {
+    enabled: bool,
+    pub tracer: Tracer,
+    pub registry: MetricsRegistry,
+    sink: Option<TraceSink>,
+}
+
+impl Observer {
+    /// The default: everything off, every hook a no-op.
+    pub fn disabled() -> Self {
+        Observer {
+            enabled: false,
+            tracer: Tracer::disabled(),
+            registry: MetricsRegistry::new(),
+            sink: None,
+        }
+    }
+
+    /// Tracer + registry on (per-round phase timing and run rollups),
+    /// no event stream.
+    pub fn enabled() -> Self {
+        Observer {
+            enabled: true,
+            tracer: Tracer::enabled(),
+            registry: MetricsRegistry::new(),
+            sink: None,
+        }
+    }
+
+    /// Fully on: tracing, aggregation, and a JSONL event stream.
+    pub fn with_sink(sink: TraceSink) -> Self {
+        Observer {
+            sink: Some(sink),
+            ..Observer::enabled()
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn has_sink(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Emit the run-header event.
+    pub fn run_start(&mut self, engine: &str, label: &str, rounds: usize) {
+        if let Some(s) = &mut self.sink {
+            s.begin("run_start");
+            s.field_str("engine", engine);
+            s.field_str("label", label);
+            s.field_int("rounds", rounds as i64);
+            s.end_event();
+        }
+    }
+
+    /// Record a weather forecast that perturbs a round. Takes
+    /// primitives rather than `RoundWeather` so `obs` stays decoupled
+    /// from the fleet types.
+    #[allow(clippy::too_many_arguments)]
+    pub fn weather_event(
+        &mut self,
+        round: usize,
+        kind: &str,
+        dark_regions: &[usize],
+        spiked_shards: &[usize],
+        spike: f64,
+        flaky_rate: f64,
+        byzantine_frac: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.registry.counter_add("weather_events", 1);
+        if let Some(s) = &mut self.sink {
+            s.begin("weather");
+            s.field_int("round", round as i64);
+            s.field_str("kind", kind);
+            if !dark_regions.is_empty() {
+                s.field_arr_usize("dark_regions", dark_regions);
+            }
+            if !spiked_shards.is_empty() {
+                s.field_arr_usize("spiked_shards", spiked_shards);
+                s.field_num("spike", spike);
+            }
+            if flaky_rate > 0.0 {
+                s.field_num("flaky_rate", flaky_rate);
+            }
+            if byzantine_frac > 0.0 {
+                s.field_num("byzantine_frac", byzantine_frac);
+            }
+            s.end_event();
+        }
+    }
+
+    /// Record update-guard rejections at one shard's fold.
+    pub fn guard_reject(&mut self, round: usize, shard: usize, rejected: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.registry
+            .counter_add("guard_rejections", rejected as u64);
+        if let Some(s) = &mut self.sink {
+            s.begin("guard_reject");
+            s.field_int("round", round as i64);
+            s.field_int("shard", shard as i64);
+            s.field_int("rejected", rejected as i64);
+            s.end_event();
+        }
+    }
+
+    /// Route messages the bounded `AnnouncementBus` evicted from its
+    /// audit ring into the event stream, so long runs keep a full
+    /// audit trail on disk while the in-memory ring stays small.
+    pub fn drain_bus(&mut self, bus: &mut AnnouncementBus) {
+        if self.sink.is_none() {
+            return;
+        }
+        let evicted = bus.take_evicted();
+        if evicted.is_empty() {
+            return;
+        }
+        self.registry
+            .counter_add("bus_evictions", evicted.len() as u64);
+        if let Some(s) = &mut self.sink {
+            for msg in &evicted {
+                s.begin("bus_evict");
+                s.field_int("round", msg.round() as i64);
+                s.field_str("kind", msg.kind());
+                s.end_event();
+            }
+        }
+    }
+
+    /// Close out a round: fold the record's delay samples into the
+    /// registry histograms, snapshot the tracer, and emit one phase
+    /// event per phase plus one round event.
+    pub fn end_round(&mut self, rec: &RoundRecord) {
+        if !self.enabled {
+            return;
+        }
+        for &d in &rec.local_delays_s {
+            self.registry.observe("local_delay_s", d);
+        }
+        for &d in &rec.tx_delays_s {
+            self.registry.observe("tx_delay_s", d);
+        }
+        for &d in &rec.shard_spreads_s {
+            self.registry.observe("shard_spread_s", d);
+        }
+        if rec.shards_committed > 0 {
+            self.registry.observe("staleness", rec.staleness_mean);
+        }
+        self.registry
+            .counter_add("rejected_updates", rec.rejected_updates as u64);
+        self.registry.counter_add("dropouts", rec.dropouts as u64);
+        self.registry.gauge_set("accuracy", rec.accuracy);
+        self.registry.gauge_set("train_loss", rec.train_loss);
+
+        let phases = self.tracer.finish_round();
+        if let Some(s) = &mut self.sink {
+            for (phase, dur) in PHASES.iter().zip(phases.iter()) {
+                s.begin("phase");
+                s.field_int("round", rec.round as i64);
+                s.field_str("phase", phase.name());
+                s.field_num("dur_s", *dur);
+                s.end_event();
+            }
+            s.begin("round");
+            s.field_int("round", rec.round as i64);
+            s.field_num("accuracy", rec.accuracy);
+            s.field_num("train_loss", rec.train_loss);
+            s.field_num("local_delay_p50_s", rec.local_delay_q_s(0.5));
+            s.field_num("local_delay_p95_s", rec.local_delay_q_s(0.95));
+            s.field_num("local_delay_p99_s", rec.local_delay_q_s(0.99));
+            s.field_num("tx_delay_p50_s", rec.tx_delay_q_s(0.5));
+            s.field_num("tx_delay_p99_s", rec.tx_delay_q_s(0.99));
+            s.field_num("comm_delay_s", rec.comm_delay_s);
+            s.field_num("compute_wall_s", rec.compute_wall_s);
+            s.field_int("shards_committed", rec.shards_committed as i64);
+            s.field_int("regions_committed", rec.regions_committed as i64);
+            s.field_int("rejected_updates", rec.rejected_updates as i64);
+            s.field_int("dropouts", rec.dropouts as i64);
+            s.end_event();
+        }
+    }
+
+    /// Emit the run-footer event (run totals per phase).
+    pub fn run_end(&mut self, rounds: usize) {
+        if let Some(s) = &mut self.sink {
+            let totals = *self.tracer.totals();
+            s.begin("run_end");
+            s.field_int("rounds", rounds as i64);
+            for (phase, total) in PHASES.iter().zip(totals.iter()) {
+                s.field_num(&format!("total_{}_s", phase.name()), *total);
+            }
+            s.end_event();
+        }
+    }
+
+    /// Run-level delay rollup for the CLI summary line, from the
+    /// registry histograms. `None` when disabled or nothing observed.
+    pub fn summary(&self) -> Option<String> {
+        if !self.enabled {
+            return None;
+        }
+        let h = self.registry.histogram("local_delay_s")?;
+        if h.count() == 0 {
+            return None;
+        }
+        let mut out = format!(
+            "local p50/p95/p99 {:.3}/{:.3}/{:.3} s",
+            h.quantile(0.5),
+            h.quantile(0.95),
+            h.quantile(0.99),
+        );
+        if let Some(tx) = self.registry.histogram("tx_delay_s") {
+            if tx.count() > 0 {
+                out.push_str(&format!(
+                    " · tx p50/p99 {:.3}/{:.3} s",
+                    tx.quantile(0.5),
+                    tx.quantile(0.99),
+                ));
+            }
+        }
+        let rej = self.registry.counter("rejected_updates");
+        if rej > 0 {
+            out.push_str(&format!(" · rejected {rej}"));
+        }
+        Some(out)
+    }
+
+    /// Flush the sink; returns `(path, events)` for file sinks so the
+    /// CLI can report where the trace went.
+    pub fn finish(&mut self) -> Result<Option<(String, usize)>> {
+        match &mut self.sink {
+            Some(s) => {
+                let events = s.events();
+                let path = s.path().map(|p| p.to_string());
+                s.finish()?;
+                Ok(path.map(|p| (p, events)))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// The buffered stream of an in-memory sink (tests).
+    pub fn sink_buffer(&self) -> Option<String> {
+        self.sink.as_ref().and_then(|s| s.buffer_utf8())
+    }
+}
+
+impl Default for Observer {
+    fn default() -> Self {
+        Observer::disabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn sample_record(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            accuracy: 0.5,
+            train_loss: 1.0,
+            local_delays_s: vec![1.0, 2.0, 4.0],
+            tx_delays_s: vec![0.5, 0.25],
+            shard_spreads_s: vec![0.1],
+            shards_committed: 2,
+            staleness_mean: 0.5,
+            rejected_updates: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn disabled_observer_is_a_no_op() {
+        let mut obs = Observer::disabled();
+        assert!(!obs.is_enabled());
+        assert!(!obs.has_sink());
+        obs.run_start("fleet", "x", 2);
+        obs.weather_event(1, "storm", &[], &[0], 4.0, 0.0, 0.0);
+        obs.guard_reject(1, 0, 5);
+        obs.end_round(&sample_record(0));
+        obs.run_end(1);
+        assert!(obs.summary().is_none());
+        assert_eq!(obs.registry.counter("rejected_updates"), 0);
+        assert_eq!(obs.finish().unwrap(), None);
+    }
+
+    #[test]
+    fn end_round_feeds_registry_and_emits_events() {
+        let mut obs = Observer::with_sink(TraceSink::in_memory());
+        obs.run_start("fleet", "lbl", 2);
+        for round in 0..2 {
+            obs.end_round(&sample_record(round));
+        }
+        obs.run_end(2);
+        assert_eq!(
+            obs.registry.histogram("local_delay_s").unwrap().count(),
+            6
+        );
+        assert_eq!(obs.registry.counter("rejected_updates"), 6);
+        assert_eq!(obs.registry.gauge("accuracy"), Some(0.5));
+        let text = obs.sink_buffer().unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // run_start + 2 × (10 phases + 1 round) + run_end
+        assert_eq!(lines.len(), 1 + 2 * (PHASES.len() + 1) + 1);
+        let mut phase_events = 0;
+        for line in &lines {
+            let j = Json::parse(line).unwrap();
+            if j.get("t").unwrap().as_str().unwrap() == "phase" {
+                phase_events += 1;
+            }
+        }
+        assert_eq!(phase_events, 2 * PHASES.len());
+        let summary = obs.summary().unwrap();
+        assert!(summary.contains("p50/p95/p99"), "{summary}");
+        assert!(summary.contains("rejected 6"), "{summary}");
+    }
+
+    #[test]
+    fn weather_and_guard_events_are_structured() {
+        let mut obs = Observer::with_sink(TraceSink::in_memory());
+        obs.weather_event(3, "outage", &[1, 2], &[], 1.0, 0.0, 0.0);
+        obs.guard_reject(3, 7, 4);
+        let text = obs.sink_buffer().unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let wx = Json::parse(lines[0]).unwrap();
+        assert_eq!(wx.get("t").unwrap().as_str().unwrap(), "weather");
+        assert_eq!(wx.get("kind").unwrap().as_str().unwrap(), "outage");
+        assert_eq!(
+            wx.get("dark_regions").unwrap().as_usize_vec().unwrap(),
+            vec![1, 2]
+        );
+        let gr = Json::parse(lines[1]).unwrap();
+        assert_eq!(gr.get("t").unwrap().as_str().unwrap(), "guard_reject");
+        assert_eq!(gr.get("shard").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(gr.get("rejected").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(obs.registry.counter("guard_rejections"), 4);
+    }
+
+    #[test]
+    fn drain_bus_routes_evictions_to_the_stream() {
+        use crate::cnc::announce::Announcement;
+        let mut bus = AnnouncementBus::new(2);
+        bus.set_log_evictions(true);
+        for round in 0..5 {
+            bus.publish(Announcement::UpdatesCollected { round, count: 1 });
+        }
+        let mut obs = Observer::with_sink(TraceSink::in_memory());
+        obs.drain_bus(&mut bus);
+        assert_eq!(obs.registry.counter("bus_evictions"), 3);
+        let text = obs.sink_buffer().unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let j = Json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("t").unwrap().as_str().unwrap(), "bus_evict");
+        assert_eq!(j.get("round").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(
+            j.get("kind").unwrap().as_str().unwrap(),
+            "updates_collected"
+        );
+        // drained: a second call emits nothing
+        obs.drain_bus(&mut bus);
+        assert_eq!(obs.sink_buffer().unwrap().lines().count(), 3);
+    }
+}

@@ -1,0 +1,284 @@
+//! Metrics registry: counters, gauges, and fixed-bucket log-scale
+//! histograms.
+//!
+//! The histograms are the aggregation point for the simulator's delay
+//! distributions (local compute delay, transmission delay, shard
+//! spread, staleness): O(1) memory per metric regardless of run
+//! length, so a million-round run can track its delay distribution
+//! without buffering samples. Buckets are log-spaced — 8 per decade
+//! across 1e-6..1e6 — which bounds the relative quantile error at
+//! one bucket width (×10^(1/8) ≈ 1.33); exact min/max/sum are kept on
+//! the side so degenerate (constant) streams report exactly.
+
+use std::collections::BTreeMap;
+
+/// Sub-buckets per decade.
+const SUB: usize = 8;
+/// Lowest decade covered (values below 10^MIN_DECADE land in the
+/// underflow bucket).
+const MIN_DECADE: i32 = -6;
+/// One past the highest decade covered.
+const MAX_DECADE: i32 = 6;
+/// Log-spaced buckets between the decades.
+const SPAN: usize = ((MAX_DECADE - MIN_DECADE) as usize) * SUB;
+/// underflow + SPAN + overflow.
+const N_BUCKETS: usize = SPAN + 2;
+
+/// A fixed-size log-scale histogram over positive values.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket for `v`: 0 is underflow (anything ≤ 1e-6, including
+    /// zero and negatives), `N_BUCKETS - 1` is overflow (≥ 1e6).
+    fn bucket_index(v: f64) -> usize {
+        if v <= 10f64.powi(MIN_DECADE) {
+            return 0;
+        }
+        if v >= 10f64.powi(MAX_DECADE) {
+            return N_BUCKETS - 1;
+        }
+        let pos = (v.log10() - MIN_DECADE as f64) * SUB as f64;
+        (pos.floor() as usize).min(SPAN - 1) + 1
+    }
+
+    /// Representative value for a bucket: geometric midpoint of its
+    /// log-scale range (underflow/overflow report the observed
+    /// min/max, which are exact).
+    fn bucket_value(&self, i: usize) -> f64 {
+        if i == 0 {
+            return self.min;
+        }
+        if i == N_BUCKETS - 1 {
+            return self.max;
+        }
+        10f64.powf(MIN_DECADE as f64 + ((i - 1) as f64 + 0.5) / SUB as f64)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate quantile (`q` in [0, 1]): walks the cumulative
+    /// bucket counts to the target rank and reports the bucket's
+    /// geometric midpoint, clamped into the exact observed [min, max]
+    /// — so constant streams and extreme quantiles are exact.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return self.bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// Named counters, gauges, and histograms. `BTreeMap` keys give the
+/// summary rollup a deterministic order.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter_add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    /// One bucket width: the bound on relative quantile error.
+    const BUCKET_RATIO: f64 = 1.334; // 10^(1/8) ≈ 1.3335
+
+    #[test]
+    fn quantiles_track_exact_within_a_bucket_width() {
+        let mut h = Histogram::new();
+        // log-uniform-ish spread of delays: 1 ms .. 100 s
+        let xs: Vec<f64> =
+            (1..=400).map(|i| 0.001 * 1.03f64.powi(i)).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        for q in [0.5, 0.95, 0.99] {
+            let exact = stats::quantile(&xs, q);
+            let approx = h.quantile(q);
+            assert!(
+                approx <= exact * BUCKET_RATIO
+                    && approx >= exact / BUCKET_RATIO,
+                "q={q}: approx {approx} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn constant_stream_is_exact_at_every_quantile() {
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(0.25);
+        }
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.25);
+        }
+        assert_eq!(h.min(), 0.25);
+        assert_eq!(h.max(), 0.25);
+        assert_eq!(h.mean(), 0.25);
+    }
+
+    #[test]
+    fn min_max_mean_are_exact() {
+        let mut h = Histogram::new();
+        for x in [0.5, 3.0, 0.001, 42.0] {
+            h.record(x);
+        }
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 42.0);
+        assert!((h.mean() - 45.501 / 4.0).abs() < 1e-12);
+        assert_eq!(h.count(), 4);
+    }
+
+    #[test]
+    fn under_and_overflow_report_observed_extremes() {
+        let mut h = Histogram::new();
+        h.record(0.0); // underflow bucket
+        h.record(1e-9);
+        h.record(1e9); // overflow bucket
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.01), 0.0); // underflow → observed min
+        assert_eq!(h.quantile(1.0), 1e9); // overflow → observed max
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        h.record(1.0);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn registry_counters_gauges_histograms() {
+        let mut r = MetricsRegistry::new();
+        r.counter_add("rejected_updates", 3);
+        r.counter_add("rejected_updates", 2);
+        assert_eq!(r.counter("rejected_updates"), 5);
+        assert_eq!(r.counter("missing"), 0);
+        r.gauge_set("accuracy", 0.9);
+        r.gauge_set("accuracy", 0.95);
+        assert_eq!(r.gauge("accuracy"), Some(0.95));
+        assert_eq!(r.gauge("missing"), None);
+        r.observe("local_delay_s", 1.0);
+        r.observe("local_delay_s", 1.0);
+        assert_eq!(r.histogram("local_delay_s").unwrap().count(), 2);
+        assert!(r.histogram("missing").is_none());
+    }
+}

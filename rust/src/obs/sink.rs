@@ -1,0 +1,241 @@
+//! Streaming JSONL trace sink.
+//!
+//! One JSON object per line, appended as events happen — no value-tree
+//! buffering (the `Json` enum allocates a `BTreeMap` per object, which
+//! the ROADMAP flags as fatal for million-round runs). Events are
+//! assembled into a reused line buffer with the same escaping and
+//! number formatting as `util::json`, so every emitted line parses
+//! back through `Json::parse` bit-for-bit.
+//!
+//! IO errors are latched rather than propagated per-event: the engines
+//! must not change behavior because a disk filled mid-run, so writes
+//! after the first failure become no-ops and `finish()` surfaces the
+//! latched error once at the end.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::write_escaped;
+
+enum Target {
+    File(BufWriter<File>),
+    Memory(Vec<u8>),
+}
+
+/// An append-only JSONL event writer.
+pub struct TraceSink {
+    target: Target,
+    line: String,
+    events: usize,
+    error: Option<String>,
+    path: Option<String>,
+}
+
+impl TraceSink {
+    /// Open (create/truncate) a trace file, creating parent dirs.
+    pub fn create(path: &str) -> Result<Self> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let f = File::create(path)
+            .with_context(|| format!("creating trace file {path}"))?;
+        Ok(TraceSink {
+            target: Target::File(BufWriter::new(f)),
+            line: String::new(),
+            events: 0,
+            error: None,
+            path: Some(path.to_string()),
+        })
+    }
+
+    /// An in-memory sink — for tests and benches.
+    pub fn in_memory() -> Self {
+        TraceSink {
+            target: Target::Memory(Vec::new()),
+            line: String::new(),
+            events: 0,
+            error: None,
+            path: None,
+        }
+    }
+
+    /// Start an event of type `t` (`{"t":"<t>"` ...).
+    pub fn begin(&mut self, t: &str) {
+        self.line.clear();
+        self.line.push_str("{\"t\":");
+        write_escaped(&mut self.line, t);
+    }
+
+    pub fn field_str(&mut self, key: &str, v: &str) {
+        self.line.push(',');
+        write_escaped(&mut self.line, key);
+        self.line.push(':');
+        write_escaped(&mut self.line, v);
+    }
+
+    pub fn field_int(&mut self, key: &str, v: i64) {
+        self.line.push(',');
+        write_escaped(&mut self.line, key);
+        let _ = write!(self.line, ":{v}");
+    }
+
+    /// Number formatting matches `Json::Num` serialization, so parsed
+    /// lines round-trip exactly. Non-finite values become `null`.
+    pub fn field_num(&mut self, key: &str, v: f64) {
+        self.line.push(',');
+        write_escaped(&mut self.line, key);
+        self.line.push(':');
+        if !v.is_finite() {
+            self.line.push_str("null");
+        } else if v.fract() == 0.0 && v.abs() < 1e15 {
+            let _ = write!(self.line, "{}", v as i64);
+        } else {
+            let _ = write!(self.line, "{v}");
+        }
+    }
+
+    pub fn field_bool(&mut self, key: &str, v: bool) {
+        self.line.push(',');
+        write_escaped(&mut self.line, key);
+        self.line.push(':');
+        self.line.push_str(if v { "true" } else { "false" });
+    }
+
+    pub fn field_arr_usize(&mut self, key: &str, vs: &[usize]) {
+        self.line.push(',');
+        write_escaped(&mut self.line, key);
+        self.line.push_str(":[");
+        for (i, v) in vs.iter().enumerate() {
+            if i > 0 {
+                self.line.push(',');
+            }
+            let _ = write!(self.line, "{v}");
+        }
+        self.line.push(']');
+    }
+
+    /// Close and flush the current event as one line.
+    pub fn end_event(&mut self) {
+        self.line.push_str("}\n");
+        if self.error.is_none() {
+            let res = match &mut self.target {
+                Target::File(w) => w.write_all(self.line.as_bytes()),
+                Target::Memory(buf) => {
+                    buf.extend_from_slice(self.line.as_bytes());
+                    Ok(())
+                }
+            };
+            if let Err(e) = res {
+                self.error = Some(e.to_string());
+            }
+        }
+        self.events += 1;
+    }
+
+    /// Events emitted (counted even after a latched write error).
+    pub fn events(&self) -> usize {
+        self.events
+    }
+
+    pub fn path(&self) -> Option<&str> {
+        self.path.as_deref()
+    }
+
+    /// The buffered stream of an in-memory sink.
+    pub fn buffer_utf8(&self) -> Option<String> {
+        match &self.target {
+            Target::Memory(buf) => {
+                Some(String::from_utf8_lossy(buf).into_owned())
+            }
+            Target::File(_) => None,
+        }
+    }
+
+    /// Flush and surface any latched write error.
+    pub fn finish(&mut self) -> Result<()> {
+        if let Target::File(w) = &mut self.target {
+            if let Err(e) = w.flush() {
+                self.error.get_or_insert_with(|| e.to_string());
+            }
+        }
+        match self.error.take() {
+            Some(e) => Err(anyhow!("trace sink write failed: {e}")),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn events_parse_back_as_json_lines() {
+        let mut s = TraceSink::in_memory();
+        s.begin("phase");
+        s.field_int("round", 3);
+        s.field_str("phase", "train");
+        s.field_num("dur_s", 0.25);
+        s.end_event();
+        s.begin("weather");
+        s.field_arr_usize("dark_regions", &[0, 2]);
+        s.field_bool("perturbed", true);
+        s.field_num("whole", 2.0);
+        s.field_num("bad", f64::NAN);
+        s.end_event();
+        assert_eq!(s.events(), 2);
+        let text = s.buffer_utf8().unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let e0 = Json::parse(lines[0]).unwrap();
+        assert_eq!(e0.get("t").unwrap().as_str().unwrap(), "phase");
+        assert_eq!(e0.get("round").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(e0.get("dur_s").unwrap().as_f64().unwrap(), 0.25);
+        let e1 = Json::parse(lines[1]).unwrap();
+        assert_eq!(
+            e1.get("dark_regions").unwrap().as_usize_vec().unwrap(),
+            vec![0, 2]
+        );
+        assert!(e1.get("perturbed").unwrap().as_bool().unwrap());
+        // whole floats serialize without a decimal point, like Json::Num
+        assert!(lines[1].contains("\"whole\":2,"));
+        assert_eq!(e1.get("bad"), Some(&Json::Null));
+        s.finish().unwrap();
+    }
+
+    #[test]
+    fn strings_are_escaped() {
+        let mut s = TraceSink::in_memory();
+        s.begin("note");
+        s.field_str("msg", "a\"b\nc");
+        s.end_event();
+        let text = s.buffer_utf8().unwrap();
+        let j = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(j.get("msg").unwrap().as_str().unwrap(), "a\"b\nc");
+    }
+
+    #[test]
+    fn file_sink_writes_and_reports_path() {
+        let dir = std::env::temp_dir().join("obs_sink_test");
+        let path = dir.join("t.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let mut s = TraceSink::create(&path_s).unwrap();
+        assert_eq!(s.path(), Some(path_s.as_str()));
+        assert!(s.buffer_utf8().is_none());
+        s.begin("run_start");
+        s.field_str("engine", "fleet");
+        s.end_event();
+        s.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        Json::parse(text.lines().next().unwrap()).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

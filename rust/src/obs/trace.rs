@@ -1,0 +1,257 @@
+//! Phase-level round tracer.
+//!
+//! Every engine round decomposes into a fixed set of phases (decide,
+//! churn, rebalance, broadcast, train, weather, guard, fold, commit,
+//! eval). The tracer measures wall-clock per phase per round with a
+//! span API cheap enough to leave in the hot path: when disabled,
+//! `begin` performs no clock read and `end` is a branch on a `None` —
+//! the traced engines stay bit-identical to the untraced ones because
+//! no simulated quantity ever depends on these timings.
+//!
+//! The one exception is `begin_timed`, used for the train phase: the
+//! pre-tracer engines already read `Instant::now()` around training to
+//! populate `compute_wall_s`, so the train span *always* reads the
+//! clock and `end` returns the elapsed seconds for the record — same
+//! two clock reads as before, whether tracing is on or off.
+
+use std::time::Instant;
+
+/// The phases a round can spend wall-clock in. Engines use a subset:
+/// the flat coordinators have no churn/rebalance/weather/guard work,
+/// the fleet engine uses all ten.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Decide,
+    Churn,
+    Rebalance,
+    Broadcast,
+    Train,
+    Weather,
+    Guard,
+    Fold,
+    Commit,
+    Eval,
+}
+
+/// All phases, in fixed emission order (trace events and per-round
+/// snapshots use this ordering).
+pub const PHASES: [Phase; 10] = [
+    Phase::Decide,
+    Phase::Churn,
+    Phase::Rebalance,
+    Phase::Broadcast,
+    Phase::Train,
+    Phase::Weather,
+    Phase::Guard,
+    Phase::Fold,
+    Phase::Commit,
+    Phase::Eval,
+];
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Decide => "decide",
+            Phase::Churn => "churn",
+            Phase::Rebalance => "rebalance",
+            Phase::Broadcast => "broadcast",
+            Phase::Train => "train",
+            Phase::Weather => "weather",
+            Phase::Guard => "guard",
+            Phase::Fold => "fold",
+            Phase::Commit => "commit",
+            Phase::Eval => "eval",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Phase::Decide => 0,
+            Phase::Churn => 1,
+            Phase::Rebalance => 2,
+            Phase::Broadcast => 3,
+            Phase::Train => 4,
+            Phase::Weather => 5,
+            Phase::Guard => 6,
+            Phase::Fold => 7,
+            Phase::Commit => 8,
+            Phase::Eval => 9,
+        }
+    }
+}
+
+/// An open phase span. Not `Drop`-based: the engines close spans
+/// explicitly (`tracer.end(span)`) so the train span can return its
+/// elapsed time for `compute_wall_s`.
+#[must_use]
+pub struct Span {
+    phase: Phase,
+    t0: Option<Instant>,
+}
+
+/// Accumulates per-phase wall-clock for the current round plus
+/// run-level totals.
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    enabled: bool,
+    round: [f64; PHASES.len()],
+    totals: [f64; PHASES.len()],
+    rounds: usize,
+}
+
+impl Tracer {
+    /// The no-op tracer: `begin` never reads the clock, `end` never
+    /// accumulates.
+    pub fn disabled() -> Self {
+        Tracer {
+            enabled: false,
+            round: [0.0; PHASES.len()],
+            totals: [0.0; PHASES.len()],
+            rounds: 0,
+        }
+    }
+
+    pub fn enabled() -> Self {
+        Tracer {
+            enabled: true,
+            ..Tracer::disabled()
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Open a span; no clock read when disabled.
+    pub fn begin(&self, phase: Phase) -> Span {
+        Span {
+            phase,
+            t0: if self.enabled { Some(Instant::now()) } else { None },
+        }
+    }
+
+    /// Open a span that always reads the clock — for the train phase,
+    /// whose elapsed time feeds `compute_wall_s` even with tracing off
+    /// (the pre-tracer engines timed training the same way).
+    pub fn begin_timed(&self, phase: Phase) -> Span {
+        Span {
+            phase,
+            t0: Some(Instant::now()),
+        }
+    }
+
+    /// Close a span, returning its elapsed seconds (0.0 if the span
+    /// never read the clock). Accumulates only when enabled.
+    pub fn end(&mut self, span: Span) -> f64 {
+        let dur = match span.t0 {
+            Some(t0) => t0.elapsed().as_secs_f64(),
+            None => 0.0,
+        };
+        if self.enabled {
+            self.round[span.phase.idx()] += dur;
+        }
+        dur
+    }
+
+    /// Attribute already-measured time to a phase (e.g. parallel train
+    /// wall-clock measured by the executor).
+    pub fn add(&mut self, phase: Phase, dur_s: f64) {
+        if self.enabled {
+            self.round[phase.idx()] += dur_s;
+        }
+    }
+
+    /// Close out the round: returns the per-phase snapshot (ordered as
+    /// [`PHASES`]), folds it into the run totals, and resets the round
+    /// accumulator.
+    pub fn finish_round(&mut self) -> [f64; PHASES.len()] {
+        let snap = self.round;
+        if self.enabled {
+            for (t, r) in self.totals.iter_mut().zip(snap.iter()) {
+                *t += r;
+            }
+            self.rounds += 1;
+            self.round = [0.0; PHASES.len()];
+        }
+        snap
+    }
+
+    /// Run-level per-phase totals (ordered as [`PHASES`]).
+    pub fn totals(&self) -> &[f64; PHASES.len()] {
+        &self.totals
+    }
+
+    /// Rounds finished while enabled.
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_read_no_clock_and_accumulate_nothing() {
+        let mut t = Tracer::disabled();
+        let sp = t.begin(Phase::Fold);
+        assert!(sp.t0.is_none());
+        assert_eq!(t.end(sp), 0.0);
+        t.add(Phase::Eval, 5.0);
+        let snap = t.finish_round();
+        assert_eq!(snap, [0.0; PHASES.len()]);
+        assert_eq!(t.rounds(), 0);
+    }
+
+    #[test]
+    fn begin_timed_measures_even_when_disabled() {
+        let mut t = Tracer::disabled();
+        let sp = t.begin_timed(Phase::Train);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let dur = t.end(sp);
+        assert!(dur > 0.0);
+        // ...but still accumulates nothing
+        assert_eq!(t.finish_round(), [0.0; PHASES.len()]);
+    }
+
+    #[test]
+    fn enabled_tracer_accumulates_per_phase_and_totals() {
+        let mut t = Tracer::enabled();
+        let sp = t.begin(Phase::Decide);
+        assert!(sp.t0.is_some());
+        t.end(sp);
+        t.add(Phase::Train, 1.5);
+        let snap = t.finish_round();
+        assert!(snap[Phase::Decide.idx()] >= 0.0);
+        assert_eq!(snap[Phase::Train.idx()], 1.5);
+        assert_eq!(t.rounds(), 1);
+        t.add(Phase::Train, 0.5);
+        t.finish_round();
+        assert_eq!(t.rounds(), 2);
+        assert_eq!(t.totals()[Phase::Train.idx()], 2.0);
+    }
+
+    #[test]
+    fn phase_names_and_order_are_stable() {
+        assert_eq!(PHASES.len(), 10);
+        let names: Vec<_> = PHASES.iter().map(|p| p.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "decide",
+                "churn",
+                "rebalance",
+                "broadcast",
+                "train",
+                "weather",
+                "guard",
+                "fold",
+                "commit",
+                "eval"
+            ]
+        );
+        for (i, p) in PHASES.iter().enumerate() {
+            assert_eq!(p.idx(), i);
+        }
+    }
+}

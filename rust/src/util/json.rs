@@ -210,7 +210,9 @@ pub fn arr_f64(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// JSON-escape `s` (with surrounding quotes) into `out`. Shared with the
+/// streaming `obs::sink`, which writes events without building a value tree.
+pub(crate) fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {

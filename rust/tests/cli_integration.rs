@@ -333,6 +333,59 @@ fn fleet_weather_flag_counts_rejections_and_tags_the_csv() {
 }
 
 #[test]
+fn fleet_trace_flag_streams_jsonl_and_prints_the_rollup() {
+    // the observability plane end-to-end: bare `--trace` writes the
+    // default-tagged JSONL next to the CSV, every line is an object
+    // with a "t" tag, phase spans cover each round, and the summary
+    // reports the delay rollup plus the trace destination
+    let out = tmpdir("fleet-trace");
+    let (ok, stdout, stderr) = run(&[
+        "fleet",
+        "--preset",
+        "Fleet10k",
+        "--rounds",
+        "2",
+        "--trace",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("delay rollup: local p50/p95/p99"), "{stdout}");
+    assert!(stdout.contains("trace →"), "{stdout}");
+    let trace = std::fs::read_to_string(
+        out.join("trace_fleet_Fleet10k_mlp-784_16s_2k.jsonl"),
+    )
+    .unwrap();
+    let mut phases = 0usize;
+    for line in trace.lines() {
+        assert!(
+            line.starts_with("{\"t\":\"") && line.ends_with('}'),
+            "not an event object: {line}"
+        );
+        if line.starts_with("{\"t\":\"phase\"") {
+            phases += 1;
+        }
+    }
+    assert!(phases > 0, "no phase events:\n{trace}");
+    // explicit path form: --trace=PATH lands the stream there instead
+    let explicit = out.join("custom.jsonl");
+    let arg = format!("--trace={}", explicit.display());
+    let (ok, stdout, stderr) = run(&[
+        "fleet",
+        "--preset",
+        "Fleet10k",
+        "--rounds",
+        "1",
+        &arg,
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(explicit.exists());
+    let _ = std::fs::remove_dir_all(out);
+}
+
+#[test]
 fn run_codec_flag_works_on_the_traditional_engine() {
     let out = tmpdir("run-codec");
     let (ok, stdout, stderr) = run(&[

@@ -1,0 +1,252 @@
+//! Observability-plane contracts: the disabled/enabled observer must
+//! never change engine outputs (CSV bitwise identity, tracing on or
+//! off), the JSONL stream must be valid line-JSON with the promised
+//! event shape, bus evictions must reach the stream, and the mock
+//! path must populate `compute_wall_s` from the train span.
+
+use cnc_fl::cnc::announce::AnnouncementBus;
+use cnc_fl::cnc::optimize::CohortStrategy;
+use cnc_fl::cnc::CncSystem;
+use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
+use cnc_fl::coordinator::MockTrainer;
+use cnc_fl::fleet::{self, FleetConfig};
+use cnc_fl::model::shape::ModelShape;
+use cnc_fl::netsim::channel::ChannelParams;
+use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::obs::{Observer, TraceSink, PHASES};
+use cnc_fl::util::json::Json;
+
+fn system(n: usize) -> CncSystem {
+    let mut ch = ChannelParams::default();
+    ch.fading_samples = 2;
+    CncSystem::bootstrap(n, 600, 1, PowerProfile::Bimodal, ch, 0)
+}
+
+fn fleet_cfg(rounds: usize, shards: usize, threads: usize) -> FleetConfig {
+    FleetConfig {
+        rounds,
+        shards,
+        max_staleness: 1,
+        cohort_size: 8,
+        n_rb: 8,
+        cohort_strategy: CohortStrategy::PowerGrouping { m: 5 },
+        threads,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trace off (and on) ⇒ engine outputs bitwise identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_csv_is_bitwise_identical_with_tracing_on_or_off() {
+    // the tracer only reads clocks and the sink only writes its own
+    // stream; neither may leak into the engine's outputs — pinned for
+    // three shape presets, serial and parallel
+    for name in ["mlp-small", "mlp-784", "mlp-wide"] {
+        let shape = ModelShape::preset(name).unwrap();
+        for threads in [1usize, 4] {
+            let run_one = |obs: &mut Observer| {
+                let mut s = system(40);
+                let mut t = MockTrainer::with_shape(40, 600, &shape);
+                let cfg = fleet_cfg(4, 4, threads);
+                fleet::run_traced(&mut s, &mut t, &cfg, "obs", obs)
+                    .unwrap()
+                    .to_csv()
+                    .to_string()
+            };
+            let plain = run_one(&mut Observer::disabled());
+            let enabled = run_one(&mut Observer::enabled());
+            let sunk =
+                run_one(&mut Observer::with_sink(TraceSink::in_memory()));
+            assert_eq!(plain, enabled, "{name} t{threads}: enabled differs");
+            assert_eq!(plain, sunk, "{name} t{threads}: sink differs");
+        }
+    }
+}
+
+#[test]
+fn traditional_csv_is_bitwise_identical_with_tracing_on_or_off() {
+    let run_one = |obs: &mut Observer| {
+        let mut s = system(20);
+        let mut t = MockTrainer::new(20, 600);
+        let cfg = TraditionalConfig {
+            rounds: 3,
+            cohort_size: 6,
+            n_rb: 6,
+            ..Default::default()
+        };
+        traditional::run_traced(&mut s, &mut t, &cfg, "obs", obs)
+            .unwrap()
+            .to_csv()
+            .to_string()
+    };
+    let plain = run_one(&mut Observer::disabled());
+    let sunk = run_one(&mut Observer::with_sink(TraceSink::in_memory()));
+    assert_eq!(plain, sunk);
+}
+
+// ---------------------------------------------------------------------------
+// the JSONL stream: parseable, with the promised event counts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_trace_stream_round_trips_as_line_json() {
+    let rounds = 4usize;
+    let mut s = system(40);
+    let mut t = MockTrainer::new(40, 600);
+    let cfg = fleet_cfg(rounds, 4, 1);
+    let mut obs = Observer::with_sink(TraceSink::in_memory());
+    fleet::run_traced(&mut s, &mut t, &cfg, "trace", &mut obs).unwrap();
+    let text = obs.sink_buffer().unwrap();
+
+    let mut phase_events = 0usize;
+    let mut round_events = 0usize;
+    let mut run_start = 0usize;
+    let mut run_end = 0usize;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap_or_else(|e| {
+            panic!("unparseable trace line `{line}`: {e}")
+        });
+        match j.get("t").unwrap().as_str().unwrap() {
+            "phase" => {
+                phase_events += 1;
+                assert!(j.get("round").is_some(), "{line}");
+                let name = j.get("phase").unwrap().as_str().unwrap();
+                assert!(
+                    PHASES.iter().any(|p| p.name() == name),
+                    "unknown phase `{name}`"
+                );
+                assert!(j.get("dur_s").is_some(), "{line}");
+            }
+            "round" => {
+                round_events += 1;
+                assert!(j.get("local_delay_p50_s").is_some(), "{line}");
+                assert!(j.get("compute_wall_s").is_some(), "{line}");
+            }
+            "run_start" => {
+                run_start += 1;
+                assert_eq!(
+                    j.get("engine").unwrap().as_str().unwrap(),
+                    "fleet"
+                );
+            }
+            "run_end" => run_end += 1,
+            _ => {}
+        }
+    }
+    // one span event per phase per round, one round event per round
+    assert_eq!(phase_events, rounds * PHASES.len());
+    assert_eq!(round_events, rounds);
+    assert_eq!(run_start, 1);
+    assert_eq!(run_end, 1);
+}
+
+#[test]
+fn byzantine_run_streams_guard_rejection_events() {
+    let mut s = system(40);
+    let mut t = MockTrainer::new(40, 600);
+    let mut cfg = fleet_cfg(4, 2, 1);
+    cfg.max_staleness = 0;
+    cfg.weather = "byzantine:1.0".parse().unwrap();
+    let mut obs = Observer::with_sink(TraceSink::in_memory());
+    let h = fleet::run_traced(&mut s, &mut t, &cfg, "byz", &mut obs).unwrap();
+    let rejected: usize = h.rounds.iter().map(|r| r.rejected_updates).sum();
+    assert!(rejected > 0, "byzantine:1.0 must reject something");
+
+    let text = obs.sink_buffer().unwrap();
+    let mut weather_events = 0usize;
+    let mut guard_rejected = 0usize;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap();
+        match j.get("t").unwrap().as_str().unwrap() {
+            "weather" => {
+                weather_events += 1;
+                assert_eq!(
+                    j.get("kind").unwrap().as_str().unwrap(),
+                    "byzantine"
+                );
+            }
+            "guard_reject" => {
+                guard_rejected +=
+                    j.get("rejected").unwrap().as_usize().unwrap();
+            }
+            _ => {}
+        }
+    }
+    assert!(weather_events > 0, "perturbed rounds must stream weather");
+    // shard-level rejections stream as they happen; the history's column
+    // counts them on commit, so the stream can only see more or equal
+    assert!(
+        guard_rejected >= rejected,
+        "streamed {guard_rejected} < recorded {rejected}"
+    );
+    assert_eq!(obs.registry.counter("guard_rejections") as usize, guard_rejected);
+}
+
+// ---------------------------------------------------------------------------
+// bounded bus: evictions route through the stream
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bus_evictions_route_through_the_trace_stream() {
+    let mut s = system(40);
+    // a tiny audit ring: a 4-shard round publishes far more than 2
+    // messages, so the engine must stage evictions for the sink
+    s.bus = AnnouncementBus::new(2);
+    let mut t = MockTrainer::new(40, 600);
+    let cfg = fleet_cfg(3, 4, 1);
+    let mut obs = Observer::with_sink(TraceSink::in_memory());
+    fleet::run_traced(&mut s, &mut t, &cfg, "evict", &mut obs).unwrap();
+    let text = obs.sink_buffer().unwrap();
+    let evicts = text
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .filter(|j| j.get("t").unwrap().as_str().unwrap() == "bus_evict")
+        .count();
+    assert!(evicts > 0, "capacity-2 bus must evict into the stream");
+    assert_eq!(obs.registry.counter("bus_evictions") as usize, evicts);
+    // the ring itself stays bounded
+    assert!(s.bus.audit().count() <= 2);
+    // without a sink the engine leaves eviction staging off: nothing
+    // accumulates in the staging buffer on the default path
+    let mut s2 = system(40);
+    s2.bus = AnnouncementBus::new(2);
+    let mut t2 = MockTrainer::new(40, 600);
+    fleet::run(&mut s2, &mut t2, &cfg, "plain").unwrap();
+    assert!(s2.bus.take_evicted().is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// compute_wall_s: populated from the train span on the mock path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mock_path_populates_compute_wall_s() {
+    let mut s = system(20);
+    let mut t = MockTrainer::new(20, 600);
+    let cfg = TraditionalConfig {
+        rounds: 2,
+        cohort_size: 6,
+        n_rb: 6,
+        ..Default::default()
+    };
+    let h = traditional::run(&mut s, &mut t, &cfg, "wall").unwrap();
+    for r in &h.rounds {
+        assert!(
+            r.compute_wall_s > 0.0,
+            "round {}: compute_wall_s = {}",
+            r.round,
+            r.compute_wall_s
+        );
+    }
+
+    let mut s = system(40);
+    let mut t = MockTrainer::new(40, 600);
+    let h = fleet::run(&mut s, &mut t, &fleet_cfg(2, 2, 1), "wall").unwrap();
+    assert!(
+        h.rounds.iter().any(|r| r.compute_wall_s > 0.0),
+        "no fleet round recorded train wall-clock"
+    );
+}
