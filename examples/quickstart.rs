@@ -18,7 +18,7 @@
 
 use anyhow::Result;
 
-use cnc_fl::cnc::optimize::{CohortStrategy, RbStrategy};
+use cnc_fl::cnc::optimize::CohortStrategy;
 use cnc_fl::cnc::CncSystem;
 use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
 use cnc_fl::coordinator::{MockTrainer, PjrtTrainer};
@@ -75,17 +75,7 @@ fn pjrt_scenario(store: ArtifactStore, rounds: usize) -> Result<()> {
     );
     let cfg = TraditionalConfig {
         rounds,
-        cohort_size: 10,
-        n_rb: 10,
-        epoch_local: 1,
-        cohort_strategy: CohortStrategy::PowerGrouping { m: 10 },
-        rb_strategy: RbStrategy::HungarianEnergy,
-        eval_every: 1,
-        tx_deadline_s: None,
-        threads: 0,
-        seed: 0,
-        verbose: false,
-        transport: Default::default(),
+        ..Default::default()
     };
     println!("\ntraining {rounds} global rounds (Pr1, CNC optimization, IID) …");
     let (h, global) =

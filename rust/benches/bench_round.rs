@@ -9,9 +9,7 @@
 
 use std::path::PathBuf;
 
-use cnc_fl::cnc::optimize::{
-    CohortStrategy, PartitionStrategy, PathStrategy, RbStrategy,
-};
+use cnc_fl::cnc::optimize::{PartitionStrategy, PathStrategy};
 use cnc_fl::cnc::CncSystem;
 use cnc_fl::coordinator::p2p::{self, P2pConfig};
 use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
@@ -51,17 +49,7 @@ fn system(n: usize) -> CncSystem {
 fn trad_cfg(rounds: usize) -> TraditionalConfig {
     TraditionalConfig {
         rounds,
-        cohort_size: 10,
-        n_rb: 10,
-        epoch_local: 1,
-        cohort_strategy: CohortStrategy::PowerGrouping { m: 10 },
-        rb_strategy: RbStrategy::HungarianEnergy,
-        eval_every: 1,
-        tx_deadline_s: None,
-        threads: 0,
-        transport: Default::default(),
-        seed: 0,
-        verbose: false,
+        ..Default::default()
     }
 }
 
@@ -93,14 +81,7 @@ fn main() {
     let mut p2p_trainer = pjrt_trainer(20).unwrap();
     let p2p_cfg = P2pConfig {
         rounds: 1,
-        partition_strategy: PartitionStrategy::BalancedDelay { e: 4 },
-        path_strategy: PathStrategy::Greedy,
-        epoch_local: 1,
-        eval_every: 1,
-        threads: 0,
-        seed: 0,
-        verbose: false,
-        transport: Default::default(),
+        ..Default::default()
     };
     b.bench("p2p round exp-1 (20 clients E=4, PJRT)", || {
         let mut sys = system(20);
@@ -114,12 +95,7 @@ fn main() {
         rounds: 1,
         partition_strategy: PartitionStrategy::All,
         path_strategy: PathStrategy::ExactTsp,
-        epoch_local: 1,
-        eval_every: 1,
-        threads: 0,
-        seed: 0,
-        verbose: false,
-        transport: Default::default(),
+        ..Default::default()
     };
     b.bench("p2p round exp-2 (8 clients TSP, PJRT)", || {
         let mut sys = system(8);
@@ -132,14 +108,7 @@ fn main() {
         let g = TopologyGen::full(28, 1.0, 10.0, &mut rng);
         let cfg = P2pConfig {
             rounds: 1,
-            partition_strategy: PartitionStrategy::BalancedDelay { e: 4 },
-            path_strategy: PathStrategy::Greedy,
-            epoch_local: 1,
-            eval_every: 1,
-            threads: 0,
-            seed: 0,
-            verbose: false,
-            transport: Default::default(),
+            ..Default::default()
         };
         b.bench("p2p round fig11 (28 clients, mock)", || {
             let mut sys = system(28);

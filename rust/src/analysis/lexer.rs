@@ -1,0 +1,345 @@
+//! A minimal Rust-aware lexer for the `cnclint` pass: blanks comments,
+//! string/raw-string/byte-string and char literals out of a source file
+//! so the rules scan *code* without tripping on tokens inside literals,
+//! while handing the stripped pieces (string bodies, comment text) to
+//! the rules that do need them (split-label uniqueness, CSV schema
+//! sync, allow-marker suppressions).
+//!
+//! This is deliberately not a full lexer. It tracks exactly the states
+//! that matter for masking: nested block comments, raw-string hash
+//! fences (`r#"…"#`, any fence width), escapes inside strings and
+//! chars, and the lifetime-vs-char-literal ambiguity (`'a` vs `'a'`).
+//! Masked content is replaced with spaces (delimiters and newlines are
+//! kept), so every surviving token keeps its exact line and column.
+
+/// One string literal: the body as written (escapes untouched) plus the
+/// 1-based line and 0-based char column of its opening quote.
+#[derive(Debug)]
+pub struct StrLit {
+    pub line: usize,
+    pub col: usize,
+    pub text: String,
+}
+
+/// One comment (line or block) and the 1-based line it starts on. Line
+/// comments store the text after `//`; block comments their interior.
+#[derive(Debug)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// The masked view of one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    /// Source lines with comment/string/char bodies blanked to spaces.
+    pub lines: Vec<String>,
+    pub strings: Vec<StrLit>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into its masked form. Unterminated literals/comments mask
+/// through end-of-file rather than erroring — the compiler owns syntax
+/// errors; the lint only needs to never misread well-formed code.
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = String::with_capacity(src.len());
+    let mut strings = Vec::new();
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut col = 0usize;
+
+    // Push a char through to the masked output, tracking line/column.
+    macro_rules! emit {
+        ($c:expr) => {{
+            let c: char = $c;
+            out.push(c);
+            if c == '\n' {
+                line += 1;
+                col = 0;
+            } else {
+                col += 1;
+            }
+        }};
+    }
+    // Mask a char: newlines survive (line structure is load-bearing),
+    // everything else becomes a space.
+    macro_rules! blank {
+        ($c:expr) => {
+            emit!(if $c == '\n' { '\n' } else { ' ' })
+        };
+    }
+
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        let prev_ident = i > 0 && is_ident(cs[i - 1]);
+
+        // ---- comments -------------------------------------------------
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start_line = line;
+            let mut text = String::new();
+            while i < n && cs[i] != '\n' {
+                text.push(cs[i]);
+                blank!(cs[i]);
+                i += 1;
+            }
+            comments.push(Comment {
+                line: start_line,
+                text: text.trim_start_matches('/').trim().to_string(),
+            });
+            continue;
+        }
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let start_line = line;
+            let mut depth = 0usize;
+            let mut text = String::new();
+            while i < n {
+                if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    blank!(cs[i]);
+                    blank!(cs[i + 1]);
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    blank!(cs[i]);
+                    blank!(cs[i + 1]);
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    text.push(cs[i]);
+                    blank!(cs[i]);
+                    i += 1;
+                }
+            }
+            comments.push(Comment {
+                line: start_line,
+                text: text.trim().to_string(),
+            });
+            continue;
+        }
+
+        // ---- raw / byte strings: r"…", r#"…"#, b"…", br#"…"# ----------
+        if (c == 'r' || c == 'b') && !prev_ident {
+            let mut j = i;
+            if cs[j] == 'b' && j + 1 < n && cs[j + 1] == 'r' {
+                j += 2;
+            } else if cs[j] == 'r' || cs[j] == 'b' {
+                j += 1;
+            }
+            let raw = cs[i..j].contains(&'r');
+            let mut fence = 0usize;
+            while raw && j < n && cs[j] == '#' {
+                fence += 1;
+                j += 1;
+            }
+            if j < n && cs[j] == '"' && (raw || fence == 0) {
+                // emit prefix + fence + opening quote verbatim
+                while i <= j {
+                    emit!(cs[i]);
+                    i += 1;
+                }
+                let (s_line, s_col) = (line, col.saturating_sub(1));
+                let mut text = String::new();
+                while i < n {
+                    if cs[i] == '"' && !raw {
+                        break;
+                    }
+                    if cs[i] == '"' && raw {
+                        // closing quote must carry the full fence
+                        let hashes = cs[i + 1..]
+                            .iter()
+                            .take(fence)
+                            .filter(|&&h| h == '#')
+                            .count();
+                        if hashes == fence {
+                            break;
+                        }
+                    }
+                    if cs[i] == '\\' && !raw && i + 1 < n {
+                        text.push(cs[i]);
+                        text.push(cs[i + 1]);
+                        blank!(cs[i]);
+                        blank!(cs[i + 1]);
+                        i += 2;
+                        continue;
+                    }
+                    text.push(cs[i]);
+                    blank!(cs[i]);
+                    i += 1;
+                }
+                // closing quote + fence
+                if i < n {
+                    emit!(cs[i]);
+                    i += 1;
+                }
+                for _ in 0..fence {
+                    if i < n && cs[i] == '#' {
+                        emit!(cs[i]);
+                        i += 1;
+                    }
+                }
+                strings.push(StrLit {
+                    line: s_line,
+                    col: s_col,
+                    text,
+                });
+                continue;
+            }
+            // `b'x'` byte char
+            if cs[i] == 'b' && i + 1 < n && cs[i + 1] == '\'' {
+                emit!(cs[i]);
+                i += 1;
+                // fall through to char handling below
+            } else {
+                emit!(c);
+                i += 1;
+                continue;
+            }
+        }
+
+        // ---- plain strings --------------------------------------------
+        if cs[i] == '"' {
+            emit!(cs[i]);
+            i += 1;
+            let (s_line, s_col) = (line, col.saturating_sub(1));
+            let mut text = String::new();
+            while i < n && cs[i] != '"' {
+                if cs[i] == '\\' && i + 1 < n {
+                    text.push(cs[i]);
+                    text.push(cs[i + 1]);
+                    blank!(cs[i]);
+                    blank!(cs[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                text.push(cs[i]);
+                blank!(cs[i]);
+                i += 1;
+            }
+            if i < n {
+                emit!(cs[i]); // closing quote
+                i += 1;
+            }
+            strings.push(StrLit {
+                line: s_line,
+                col: s_col,
+                text,
+            });
+            continue;
+        }
+
+        // ---- char literal vs lifetime ---------------------------------
+        if cs[i] == '\'' {
+            let escaped = i + 1 < n && cs[i + 1] == '\\';
+            let single = i + 2 < n && cs[i + 1] != '\'' && cs[i + 2] == '\'';
+            if escaped || single {
+                emit!(cs[i]);
+                i += 1;
+                while i < n && cs[i] != '\'' {
+                    blank!(cs[i]);
+                    i += 1;
+                }
+                if i < n {
+                    emit!(cs[i]);
+                    i += 1;
+                }
+            } else {
+                // a lifetime (`'a`, `'static`): plain code, keep it
+                emit!(cs[i]);
+                i += 1;
+            }
+            continue;
+        }
+
+        emit!(c);
+        i += 1;
+    }
+
+    Lexed {
+        lines: out.split('\n').map(str::to_string).collect(),
+        strings,
+        comments,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code(src: &str) -> String {
+        lex(src).lines.join("\n")
+    }
+
+    #[test]
+    fn line_and_block_comments_are_blanked() {
+        let c = code("let x = 1; // Instant::now\n/* SystemTime */ let y = 2;");
+        assert!(!c.contains("Instant"));
+        assert!(!c.contains("SystemTime"));
+        assert!(c.contains("let x = 1;"));
+        assert!(c.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_at_the_right_depth() {
+        let c = code("/* a /* b */ still masked */ let z = 3;");
+        assert!(!c.contains("still"));
+        assert!(c.contains("let z = 3;"));
+    }
+
+    #[test]
+    fn string_bodies_are_masked_but_recorded() {
+        let l = lex("let s = \"thread_rng // not a comment\"; let t = 1;");
+        let c = l.lines.join("\n");
+        assert!(!c.contains("thread_rng"));
+        assert!(!c.contains("not a comment"));
+        assert!(c.contains("let t = 1;"));
+        assert_eq!(l.strings.len(), 1);
+        assert_eq!(l.strings[0].text, "thread_rng // not a comment");
+        assert_eq!(l.comments.len(), 0);
+    }
+
+    #[test]
+    fn raw_strings_keep_their_fence_and_ignore_escapes() {
+        let l = lex("let s = r#\"a \\ \"quote\" b\"#; let u = 9;");
+        assert_eq!(l.strings.len(), 1);
+        assert_eq!(l.strings[0].text, "a \\ \"quote\" b");
+        assert!(l.lines.join("\n").contains("let u = 9;"));
+    }
+
+    #[test]
+    fn lifetimes_survive_but_char_literals_are_masked() {
+        let c = code("fn f<'a>(x: &'a str) -> char { 'y' }");
+        assert!(c.contains("fn f<'a>(x: &'a str)"));
+        assert!(!c.contains('y'), "char body must be masked: {c}");
+    }
+
+    #[test]
+    fn escaped_char_literals_do_not_eat_the_rest_of_the_line() {
+        let c = code("let nl = '\\n'; let q = '\\''; let k = 7;");
+        assert!(c.contains("let k = 7;"));
+    }
+
+    #[test]
+    fn column_of_string_start_points_at_the_opening_quote() {
+        let l = lex("ab.split(\"seed\")");
+        assert_eq!(l.strings[0].col, 9);
+        assert_eq!(l.strings[0].line, 1);
+        assert_eq!(&l.lines[0][9..10], "\"");
+    }
+
+    #[test]
+    fn identifiers_ending_in_r_or_b_are_not_raw_string_prefixes() {
+        let l = lex("let var = other\"\";"); // pathological but must not panic
+        assert_eq!(l.strings.len(), 1);
+        let c = code("let br2 = br_count;");
+        assert!(c.contains("br_count"));
+    }
+}

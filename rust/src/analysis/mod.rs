@@ -1,0 +1,288 @@
+//! `cnclint` — an in-repo determinism & invariant lint over the crate's
+//! own source tree.
+//!
+//! Every contract this reproduction rests on — serial ≡ parallel,
+//! traced ≡ untraced, calm ≡ baseline, raw codec ≡ the pre-transport
+//! engines — is a *determinism* claim, and until now each PR protected
+//! those claims by hand-auditing the source. This module mechanizes the
+//! audits as six rules over a masked (comment/string/char-stripped,
+//! see [`lexer`]) view of the code:
+//!
+//! | rule | invariant |
+//! |---|---|
+//! | `no-unordered-iter` | no `HashMap`/`HashSet` iteration in engine modules (fleet/coordinator/transport/model) — hash order is nondeterministic across runs |
+//! | `no-wall-clock` | `Instant::now`/`SystemTime` only in the four clock-owning files — anywhere else breaks traced ≡ untraced bit-identity |
+//! | `no-ambient-rng` | no `thread_rng`/`rand::random`; `Pcg64::split` labels unique within a module so streams can't collide |
+//! | `no-unwrap-in-lib` | no `.unwrap()`/`.expect()` in non-test engine code — propagate or state the invariant |
+//! | `config-literal-exhaustive` | config struct literals outside their defining module end in `..Default::default()` |
+//! | `csv-schema-sync` | `RoundRecord` fields ↔ `metrics::to_csv` header ↔ the README "CSV schema" table agree |
+//!
+//! Exemptions are inline and reviewable: on the offending line, or
+//! alone on the line directly above it, write a line comment holding
+//! the `cnclint:` prefix followed by ` allow(rule-id): <non-empty
+//! reason>`. A suppression without a reason is itself a finding.
+//!
+//! Run as `cargo run --release --bin cnclint` (writes
+//! `BENCH_lint.json`) or let `tests/static_analysis.rs` gate it in
+//! tier-1.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub mod lexer;
+mod rules;
+
+use lexer::Lexed;
+
+/// The six shipped rule ids, in reporting order.
+pub const RULE_IDS: [&str; 6] = [
+    "no-unordered-iter",
+    "no-wall-clock",
+    "no-ambient-rng",
+    "no-unwrap-in-lib",
+    "config-literal-exhaustive",
+    "csv-schema-sync",
+];
+
+/// Engine-level rule id for malformed `cnclint:` comments (always an
+/// error; not suppressible).
+pub const SUPPRESSION_SYNTAX: &str = "suppression-syntax";
+
+/// One lint hit: `file:line · rule-id · message`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} · {} · {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// A parsed allow(rule) marker (see the module docs for the comment
+/// syntax the parser accepts).
+#[derive(Debug)]
+pub struct Suppression {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// One source file, lexed and ready for the rules.
+pub struct FileData {
+    /// `/`-separated path relative to `rust/` (`src/…`, `tests/…`,
+    /// `benches/…`) or the repo root (`examples/…`).
+    pub path: String,
+    pub lexed: Lexed,
+    /// 1-based line of the file's first `#[cfg(test)]`; code at or
+    /// after it is test code (this tree's convention: one trailing
+    /// tests module per file).
+    pub test_start: Option<usize>,
+    pub suppressions: Vec<Suppression>,
+    /// Malformed suppression markers found while parsing.
+    syntax_errors: Vec<Finding>,
+}
+
+impl FileData {
+    pub fn new(path: impl Into<String>, source: &str) -> FileData {
+        let path = path.into();
+        let lexed = lexer::lex(source);
+        let test_start = lexed
+            .lines
+            .iter()
+            .position(|l| l.trim() == "#[cfg(test)]")
+            .map(|i| i + 1);
+        let (suppressions, syntax_errors) = parse_suppressions(&path, &lexed);
+        FileData {
+            path,
+            lexed,
+            test_start,
+            suppressions,
+            syntax_errors,
+        }
+    }
+
+    /// Is this (1-based) line library code, i.e. before `#[cfg(test)]`?
+    pub fn is_lib_line(&self, line: usize) -> bool {
+        self.test_start.map_or(true, |t| line < t)
+    }
+
+    /// Masked lines with 1-based numbers.
+    pub fn numbered(&self) -> impl Iterator<Item = (usize, &str)> {
+        self.lexed
+            .lines
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (i + 1, l.as_str()))
+    }
+}
+
+fn parse_suppressions(path: &str, lexed: &Lexed) -> (Vec<Suppression>, Vec<Finding>) {
+    let mut sup = Vec::new();
+    let mut bad = Vec::new();
+    for c in &lexed.comments {
+        for (at, _) in c.text.match_indices("cnclint: allow(") {
+            let rest = &c.text[at + "cnclint: allow(".len()..];
+            let Some(close) = rest.find(')') else {
+                bad.push(Finding {
+                    file: path.to_string(),
+                    line: c.line,
+                    rule: SUPPRESSION_SYNTAX,
+                    msg: "unclosed `cnclint: allow(` marker".to_string(),
+                });
+                continue;
+            };
+            let rule = rest[..close].trim().to_string();
+            let after = &rest[close + 1..];
+            let reason = after
+                .strip_prefix(':')
+                .map(|r| r.split("cnclint:").next().unwrap_or("").trim().to_string())
+                .unwrap_or_default();
+            if !RULE_IDS.contains(&rule.as_str()) {
+                bad.push(Finding {
+                    file: path.to_string(),
+                    line: c.line,
+                    rule: SUPPRESSION_SYNTAX,
+                    msg: format!("allow() names unknown rule `{rule}` ({RULE_IDS:?})"),
+                });
+            } else if reason.is_empty() {
+                bad.push(Finding {
+                    file: path.to_string(),
+                    line: c.line,
+                    rule: SUPPRESSION_SYNTAX,
+                    msg: format!(
+                        "allow({rule}) without a reason — write \
+                         `cnclint: allow({rule}): <why this is sound>`"
+                    ),
+                });
+            } else {
+                sup.push(Suppression {
+                    line: c.line,
+                    rule,
+                    reason,
+                });
+            }
+        }
+    }
+    (sup, bad)
+}
+
+/// The result of one lint run.
+pub struct Report {
+    /// Unsuppressed findings (plus any malformed-suppression errors).
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Valid `allow(...)` markers present in the tree (the
+    /// suppression-creep series tracked by `BENCH_lint.json`).
+    pub suppressions_in_tree: usize,
+    pub rules_run: usize,
+}
+
+/// Run every rule over an in-memory file set (fixtures use this
+/// directly; [`analyze_tree`] feeds it the real tree). `readme` is the
+/// repo README for `csv-schema-sync`.
+pub fn analyze_files(files: &[FileData], readme: Option<&str>) -> Report {
+    let mut raw: Vec<Finding> = Vec::new();
+    for f in files {
+        rules::no_unordered_iter(f, &mut raw);
+        rules::no_wall_clock(f, &mut raw);
+        rules::no_ambient_rng(f, &mut raw);
+        rules::no_unwrap_in_lib(f, &mut raw);
+        rules::config_literal_exhaustive(f, &mut raw);
+    }
+    rules::csv_schema_sync(files, readme, &mut raw);
+
+    let mut findings: Vec<Finding> = raw
+        .into_iter()
+        .filter(|fi| !is_suppressed(files, fi))
+        .collect();
+    for f in files {
+        findings.extend(f.syntax_errors.iter().cloned());
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+
+    Report {
+        findings,
+        files_scanned: files.len(),
+        suppressions_in_tree: files.iter().map(|f| f.suppressions.len()).sum(),
+        rules_run: RULE_IDS.len(),
+    }
+}
+
+/// A finding is suppressed by a matching `allow` on its own line, or
+/// alone on the line directly above it.
+fn is_suppressed(files: &[FileData], fi: &Finding) -> bool {
+    let Some(f) = files.iter().find(|f| f.path == fi.file) else {
+        return false;
+    };
+    f.suppressions.iter().any(|s| {
+        s.rule == fi.rule
+            && (s.line == fi.line
+                || (s.line + 1 == fi.line && line_is_comment_only(f, s.line)))
+    })
+}
+
+fn line_is_comment_only(f: &FileData, line: usize) -> bool {
+    f.lexed
+        .lines
+        .get(line - 1)
+        .is_some_and(|l| l.trim().is_empty())
+}
+
+/// Lint the real tree: `src/`, `tests/`, `benches/` under `rust_root`
+/// plus the repo-level `examples/`, with the repo README for the CSV
+/// schema rule. Directories named `fixtures` hold deliberate rule
+/// violations for the analyzer's own tests and are skipped.
+pub fn analyze_tree(rust_root: &Path) -> Result<Report> {
+    let roots: [(&str, PathBuf); 4] = [
+        ("src", rust_root.join("src")),
+        ("tests", rust_root.join("tests")),
+        ("benches", rust_root.join("benches")),
+        ("examples", rust_root.join("../examples")),
+    ];
+    let mut files = Vec::new();
+    for (label, dir) in &roots {
+        let mut paths = Vec::new();
+        collect_rs(dir, &mut paths).with_context(|| format!("walking {}", dir.display()))?;
+        paths.sort();
+        for p in paths {
+            let rel = p
+                .strip_prefix(dir)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            let src = fs::read_to_string(&p)
+                .with_context(|| format!("reading {}", p.display()))?;
+            files.push(FileData::new(format!("{label}/{rel}"), &src));
+        }
+    }
+    let readme = fs::read_to_string(rust_root.join("../README.md")).ok();
+    Ok(analyze_files(&files, readme.as_deref()))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            if p.file_name().is_some_and(|n| n == "fixtures") {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

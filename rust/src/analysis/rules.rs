@@ -1,0 +1,657 @@
+//! The six `cnclint` rules. Each scans the masked view produced by
+//! [`super::lexer`] — comments and literal bodies are already spaces,
+//! so a token hit here is a hit in *code*.
+
+use std::collections::BTreeMap;
+
+use super::{FileData, Finding};
+
+fn byte_is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offsets of `needle` in `hay`, requiring an identifier boundary
+/// on every needle edge that is itself an identifier character (so
+/// `SystemTime` does not hit `SystemTimeError`, but `.unwrap()` may sit
+/// directly after `x`).
+fn token_hits(hay: &str, needle: &str) -> Vec<usize> {
+    let hb = hay.as_bytes();
+    let nb = needle.as_bytes();
+    let mut out = Vec::new();
+    if nb.is_empty() {
+        return out;
+    }
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(needle) {
+        let at = from + p;
+        let end = at + nb.len();
+        let pre_ok = !byte_is_ident(nb[0]) || at == 0 || !byte_is_ident(hb[at - 1]);
+        let post_ok =
+            !byte_is_ident(nb[nb.len() - 1]) || end == hb.len() || !byte_is_ident(hb[end]);
+        if pre_ok && post_ok {
+            out.push(at);
+        }
+        from = at + 1;
+    }
+    out
+}
+
+/// The identifier word `s` ends with (empty if it ends in punctuation).
+fn trailing_word(s: &str) -> &str {
+    let b = s.as_bytes();
+    let mut i = b.len();
+    while i > 0 && byte_is_ident(b[i - 1]) {
+        i -= 1;
+    }
+    &s[i..]
+}
+
+fn finding(f: &FileData, line: usize, rule: &'static str, msg: String) -> Finding {
+    Finding {
+        file: f.path.clone(),
+        line,
+        rule,
+        msg,
+    }
+}
+
+/// Engine modules whose internals must be deterministic and
+/// panic-free: the dirs `no-unordered-iter` and `no-unwrap-in-lib`
+/// police.
+const ENGINE_DIRS: [&str; 4] = [
+    "src/fleet/",
+    "src/coordinator/",
+    "src/transport/",
+    "src/model/",
+];
+
+fn in_engine_dirs(f: &FileData) -> bool {
+    ENGINE_DIRS.iter().any(|d| f.path.starts_with(d))
+}
+
+// ---------------------------------------------------------------------
+// no-unordered-iter
+// ---------------------------------------------------------------------
+
+/// Methods whose results observe hash order.
+const ITER_METHODS: [&str; 8] = [
+    ".iter()",
+    ".iter_mut()",
+    ".into_iter()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".retain(",
+];
+
+/// Iterating a `HashMap`/`HashSet` yields hash order — nondeterministic
+/// across processes, so any fold/commit path that consumes it breaks
+/// the serial ≡ parallel and run-to-run bit-identity contracts. The
+/// rule binds names declared or annotated with those types in the file,
+/// then flags iteration over a bound name in library code.
+pub fn no_unordered_iter(f: &FileData, out: &mut Vec<Finding>) {
+    if !in_engine_dirs(f) {
+        return;
+    }
+    // pass 1: names bound to a hash container anywhere in the file
+    // (let/field/param annotations and direct constructor assignments)
+    let mut bound: BTreeMap<String, &'static str> = BTreeMap::new();
+    for (_ln, line) in f.numbered() {
+        let t = line.trim_start();
+        if t.starts_with("use ") || t.starts_with("pub use ") {
+            continue;
+        }
+        for ty in ["HashMap", "HashSet"] {
+            for at in token_hits(line, ty) {
+                let pre = line[..at].trim_end();
+                if pre.ends_with("->") {
+                    continue; // return type: nothing to bind
+                }
+                let Some(sep) = pre.rfind([':', '=']) else {
+                    continue;
+                };
+                let name = trailing_word(pre[..sep].trim_end());
+                if name.is_empty()
+                    || name.chars().next().is_some_and(|c| c.is_ascii_digit())
+                    || matches!(name, "let" | "mut" | "pub" | "fn" | "in" | "where")
+                {
+                    continue;
+                }
+                bound.insert(name.to_string(), ty);
+            }
+        }
+    }
+    // pass 2: iteration over a bound name in non-test code
+    for (ln, line) in f.numbered() {
+        if !f.is_lib_line(ln) {
+            break;
+        }
+        for (name, ty) in &bound {
+            for m in ITER_METHODS {
+                let pat = format!("{name}{m}");
+                if !token_hits(line, &pat).is_empty() {
+                    out.push(finding(
+                        f,
+                        ln,
+                        "no-unordered-iter",
+                        format!(
+                            "`{name}{m}…` iterates a {ty} — hash order is \
+                             nondeterministic; sort first, use an ordered \
+                             container, or suppress an order-independent use"
+                        ),
+                    ));
+                }
+            }
+        }
+        // `for x in [&[mut ]]name {` — direct IntoIterator over the container
+        for at in token_hits(line, "for") {
+            let rest = &line[at + 3..];
+            let Some(inp) = rest.find(" in ") else {
+                continue;
+            };
+            let mut expr = rest[inp + 4..].trim_start();
+            expr = expr.trim_start_matches('&');
+            expr = expr.strip_prefix("mut ").unwrap_or(expr).trim_start();
+            let root = trailing_word_prefix(expr);
+            let after = expr[root.len()..].trim_start();
+            let direct = after.is_empty() || after.starts_with('{');
+            if direct && bound.contains_key(root) {
+                out.push(finding(
+                    f,
+                    ln,
+                    "no-unordered-iter",
+                    format!(
+                        "`for … in {root}` iterates a {} — hash order is \
+                         nondeterministic; sort first, use an ordered \
+                         container, or suppress an order-independent use",
+                        bound[root]
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// The identifier word `s` starts with (empty if it starts with
+/// punctuation).
+fn trailing_word_prefix(s: &str) -> &str {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    while i < b.len() && byte_is_ident(b[i]) {
+        i += 1;
+    }
+    &s[..i]
+}
+
+// ---------------------------------------------------------------------
+// no-wall-clock
+// ---------------------------------------------------------------------
+
+/// The only files allowed to read a wall clock: the trace sink (host
+/// timestamps are explicitly non-replayable), the bench harness, the
+/// buffer-pool diagnostics, and the executor's busy-wait shim. A clock
+/// read anywhere else leaks host time into round state and breaks
+/// traced ≡ untraced bit-identity.
+const CLOCK_FILES: [&str; 4] = [
+    "src/obs/trace.rs",
+    "src/util/bench.rs",
+    "src/util/pool.rs",
+    "src/runtime/executor.rs",
+];
+
+pub fn no_wall_clock(f: &FileData, out: &mut Vec<Finding>) {
+    if !f.path.starts_with("src/") || CLOCK_FILES.contains(&f.path.as_str()) {
+        return;
+    }
+    for (ln, line) in f.numbered() {
+        for tok in ["Instant::now", "SystemTime"] {
+            for _ in token_hits(line, tok) {
+                out.push(finding(
+                    f,
+                    ln,
+                    "no-wall-clock",
+                    format!(
+                        "`{tok}` outside the clock-owning files \
+                         ({CLOCK_FILES:?}) — derive delays from the \
+                         netsim/delay models so runs stay replayable"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// no-ambient-rng
+// ---------------------------------------------------------------------
+
+/// Every random draw must come from the seeded splittable `Pcg64`
+/// tree. Ambient generators (`thread_rng`, `rand::random`) are banned
+/// outright, and two `split(<literal>)` calls with the same label in
+/// one module's library code would hand two call sites the same
+/// stream — flagged so collisions can't silently correlate draws.
+pub fn no_ambient_rng(f: &FileData, out: &mut Vec<Finding>) {
+    for (ln, line) in f.numbered() {
+        for tok in ["thread_rng", "rand::random"] {
+            for _ in token_hits(line, tok) {
+                out.push(finding(
+                    f,
+                    ln,
+                    "no-ambient-rng",
+                    format!(
+                        "`{tok}` is ambient (unseeded) randomness — split a \
+                         labelled stream off the run's Pcg64 instead"
+                    ),
+                ));
+            }
+        }
+    }
+    if !f.path.starts_with("src/") {
+        return;
+    }
+    let mut seen: BTreeMap<&str, usize> = BTreeMap::new();
+    for s in &f.lexed.strings {
+        if !f.is_lib_line(s.line) {
+            continue;
+        }
+        let Some(line) = f.lexed.lines.get(s.line - 1) else {
+            continue;
+        };
+        if s.col > line.len() || !line[..s.col].ends_with(".split(") {
+            continue;
+        }
+        if let Some(first) = seen.get(s.text.as_str()) {
+            out.push(finding(
+                f,
+                s.line,
+                "no-ambient-rng",
+                format!(
+                    "split label \"{}\" already used at line {first} in this \
+                     module — colliding labels yield the same Pcg64 stream; \
+                     hoist the split or pick a distinct label",
+                    s.text
+                ),
+            ));
+        } else {
+            seen.insert(s.text.as_str(), s.line);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// no-unwrap-in-lib
+// ---------------------------------------------------------------------
+
+/// Engine code runs inside long fleet simulations; a panic tears down
+/// the whole run. Library paths must propagate with `?`/`Result`, or
+/// carry a suppression stating the invariant that makes the panic
+/// unreachable.
+pub fn no_unwrap_in_lib(f: &FileData, out: &mut Vec<Finding>) {
+    if !in_engine_dirs(f) {
+        return;
+    }
+    for (ln, line) in f.numbered() {
+        if !f.is_lib_line(ln) {
+            break;
+        }
+        for tok in [".unwrap()", ".expect("] {
+            for _ in token_hits(line, tok) {
+                out.push(finding(
+                    f,
+                    ln,
+                    "no-unwrap-in-lib",
+                    format!(
+                        "`{tok}…` in engine library code — propagate with \
+                         `?` and context, or suppress with the invariant \
+                         that makes this unreachable"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// config-literal-exhaustive
+// ---------------------------------------------------------------------
+
+/// Config struct literals outside the defining module must end in
+/// `..Default::default()`: PRs 3–7 each hand-audited every literal site
+/// after adding a field; with functional update syntax a new field
+/// cannot break or silently mis-default a call site.
+const CONFIG_TYPES: [&str; 3] = ["FleetConfig", "TraditionalConfig", "P2pConfig"];
+
+pub fn config_literal_exhaustive(f: &FileData, out: &mut Vec<Finding>) {
+    let joined = f.lexed.lines.join("\n");
+    let jb = joined.as_bytes();
+    for ty in CONFIG_TYPES {
+        // the defining module (struct decl + its Default impl) is exempt
+        let defines = !token_hits(&joined, &format!("struct {ty}")).is_empty();
+        if defines {
+            continue;
+        }
+        for at in token_hits(&joined, ty) {
+            let pre = joined[..at].trim_end();
+            if pre.ends_with("->") {
+                continue; // fn return type
+            }
+            if matches!(
+                trailing_word(pre),
+                "struct" | "impl" | "for" | "dyn" | "as" | "enum" | "trait" | "use" | "mod"
+            ) {
+                continue;
+            }
+            // next non-whitespace char must open a literal body
+            let mut j = at + ty.len();
+            while j < jb.len() && (jb[j] as char).is_whitespace() {
+                j += 1;
+            }
+            if j >= jb.len() || jb[j] != b'{' {
+                continue;
+            }
+            // scan the literal body for a depth-1 `..` (functional update)
+            let mut depth = 0i32;
+            let mut k = j;
+            let mut has_rest = false;
+            while k < jb.len() {
+                match jb[k] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    b'.' if depth == 1
+                        && k + 1 < jb.len()
+                        && jb[k + 1] == b'.'
+                        && jb[k - 1] != b'.'
+                        && jb.get(k + 2) != Some(&b'.')
+                        && jb.get(k + 2) != Some(&b'=') =>
+                    {
+                        has_rest = true;
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            if !has_rest {
+                let ln = joined[..at].bytes().filter(|&b| b == b'\n').count() + 1;
+                out.push(finding(
+                    f,
+                    ln,
+                    "config-literal-exhaustive",
+                    format!(
+                        "`{ty} {{ … }}` outside its defining module without \
+                         `..Default::default()` — exhaustive literals break \
+                         (or silently mis-default) when a field is added"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// csv-schema-sync
+// ---------------------------------------------------------------------
+
+/// Three views of the per-round schema must agree: the `RoundRecord`
+/// fields, the `to_csv` header in the same file, and the README's
+/// "CSV schema" table. Fields and columns are matched by stem (unit
+/// suffixes, stat affixes like `cum_`/`_max`/`_p95`, and plurals
+/// stripped); the README table must list the header verbatim, in order.
+pub fn csv_schema_sync(files: &[FileData], readme: Option<&str>, out: &mut Vec<Finding>) {
+    let Some(rf) = files
+        .iter()
+        .find(|f| f.lexed.lines.iter().any(|l| !token_hits(l, "struct RoundRecord").is_empty()))
+    else {
+        return;
+    };
+    let fields = record_fields(rf);
+    let Some(cols) = header_columns(rf) else {
+        out.push(finding(
+            rf,
+            1,
+            "csv-schema-sync",
+            "file defines RoundRecord but no CsvTable::new header was found".to_string(),
+        ));
+        return;
+    };
+
+    for (cname, cline) in &cols {
+        if !fields.iter().any(|(fname, _)| stem(fname) == stem(cname)) {
+            out.push(finding(
+                rf,
+                *cline,
+                "csv-schema-sync",
+                format!("CSV column `{cname}` matches no RoundRecord field"),
+            ));
+        }
+    }
+    for (fname, fline) in &fields {
+        if !cols.iter().any(|(cname, _)| stem(cname) == stem(fname)) {
+            out.push(finding(
+                rf,
+                *fline,
+                "csv-schema-sync",
+                format!(
+                    "RoundRecord field `{fname}` is not represented in the \
+                     to_csv header — add a column, or suppress naming the \
+                     path that does report it"
+                ),
+            ));
+        }
+    }
+
+    let Some(md) = readme else {
+        return;
+    };
+    let Some(rows) = readme_columns(md) else {
+        out.push(Finding {
+            file: "README.md".to_string(),
+            line: 1,
+            rule: "csv-schema-sync",
+            msg: "README has no `## CSV schema` section mirroring the to_csv header".to_string(),
+        });
+        return;
+    };
+    for i in 0..rows.len().max(cols.len()) {
+        match (rows.get(i), cols.get(i)) {
+            (Some((r, rln)), Some((c, _))) if r != c => {
+                out.push(Finding {
+                    file: "README.md".to_string(),
+                    line: *rln,
+                    rule: "csv-schema-sync",
+                    msg: format!(
+                        "README CSV schema row {} is `{r}` but to_csv column {} is `{c}`",
+                        i + 1,
+                        i + 1
+                    ),
+                });
+                return;
+            }
+            (None, Some((c, _))) => {
+                out.push(Finding {
+                    file: "README.md".to_string(),
+                    line: rows.last().map_or(1, |(_, l)| *l),
+                    rule: "csv-schema-sync",
+                    msg: format!("README CSV schema table is missing column `{c}`"),
+                });
+                return;
+            }
+            (Some((r, rln)), None) => {
+                out.push(Finding {
+                    file: "README.md".to_string(),
+                    line: *rln,
+                    rule: "csv-schema-sync",
+                    msg: format!("README CSV schema table lists `{r}`, which to_csv does not emit"),
+                });
+                return;
+            }
+            _ => {}
+        }
+    }
+}
+
+/// `pub` fields of the `RoundRecord` struct with their lines.
+fn record_fields(f: &FileData) -> Vec<(String, usize)> {
+    let Some(decl) = f
+        .numbered()
+        .find(|(_, l)| !token_hits(l, "struct RoundRecord").is_empty())
+        .map(|(ln, _)| ln)
+    else {
+        return Vec::new();
+    };
+    let mut fields = Vec::new();
+    let mut depth = 0i32;
+    for (ln, line) in f.numbered().skip(decl - 1) {
+        let depth_before = depth;
+        for c in line.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if ln > decl && depth_before == 1 && depth == 1 {
+            let t = line.trim_start();
+            if let Some(rest) = t.strip_prefix("pub ") {
+                if let Some(colon) = rest.find(':') {
+                    let name = rest[..colon].trim();
+                    if !name.is_empty() && name.bytes().all(byte_is_ident) {
+                        fields.push((name.to_string(), ln));
+                    }
+                }
+            }
+        }
+        if ln > decl && depth == 0 {
+            break;
+        }
+    }
+    fields
+}
+
+/// Columns of the first `CsvTable::new(&[…])` header in the record
+/// file, with their lines.
+fn header_columns(f: &FileData) -> Option<Vec<(String, usize)>> {
+    let start = f
+        .numbered()
+        .find(|(_, l)| l.contains("CsvTable::new"))
+        .map(|(ln, _)| ln)?;
+    let end = f
+        .numbered()
+        .skip(start - 1)
+        .find(|(_, l)| l.contains(']'))
+        .map(|(ln, _)| ln)?;
+    let cols: Vec<(String, usize)> = f
+        .lexed
+        .strings
+        .iter()
+        .filter(|s| s.line >= start && s.line <= end)
+        .map(|s| (s.text.clone(), s.line))
+        .collect();
+    Some(cols)
+}
+
+/// Reduce a field or column name to a comparable stem: drop the `cum_`
+/// prefix, `_s`/`_j` unit suffixes, stat suffixes, then depluralize
+/// (`energies` → `energy`, `delays` → `delay`).
+fn stem(name: &str) -> String {
+    let mut s = name.strip_prefix("cum_").unwrap_or(name);
+    for unit in ["_s", "_j"] {
+        if let Some(t) = s.strip_suffix(unit) {
+            s = t;
+        }
+    }
+    for stat in ["_max", "_diff", "_sum", "_p50", "_p95", "_p99"] {
+        if let Some(t) = s.strip_suffix(stat) {
+            s = t;
+        }
+    }
+    for unit in ["_s", "_j"] {
+        if let Some(t) = s.strip_suffix(unit) {
+            s = t;
+        }
+    }
+    if let Some(t) = s.strip_suffix("ies") {
+        return format!("{t}y");
+    }
+    if s.len() > 1 && s.ends_with('s') && !s.ends_with("ss") {
+        return s[..s.len() - 1].to_string();
+    }
+    s.to_string()
+}
+
+/// First-cell names of the README's `## CSV schema` table (backticks
+/// stripped), or None if the section is absent.
+fn readme_columns(md: &str) -> Option<Vec<(String, usize)>> {
+    let mut in_section = false;
+    let mut found = false;
+    let mut rows = Vec::new();
+    for (i, raw) in md.lines().enumerate() {
+        let t = raw.trim();
+        if t.starts_with("## ") {
+            in_section = t == "## CSV schema";
+            found |= in_section;
+            continue;
+        }
+        if !in_section || !t.starts_with('|') {
+            continue;
+        }
+        let first = t
+            .trim_start_matches('|')
+            .split('|')
+            .next()
+            .unwrap_or("")
+            .trim();
+        if first.is_empty() || first.chars().all(|c| matches!(c, '-' | ':' | ' ')) {
+            continue; // separator row
+        }
+        let name = first.trim_matches('`');
+        if name == "column" {
+            continue; // header row
+        }
+        rows.push((name.to_string(), i + 1));
+    }
+    if found {
+        Some(rows)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stems_line_up_across_units_stats_and_plurals() {
+        assert_eq!(stem("local_delays_s"), stem("local_delay_max_s"));
+        assert_eq!(stem("local_delays_s"), stem("cum_local_delay_s"));
+        assert_eq!(stem("tx_energies_j"), stem("tx_energy_sum_j"));
+        assert_eq!(stem("tx_delays_s"), stem("tx_delay_p95_s"));
+        assert_eq!(stem("staleness_mean"), stem("staleness_mean"));
+        assert_eq!(stem("rebalance_moves"), stem("rebalance_moves"));
+        assert_ne!(stem("round"), stem("recovery_rounds"));
+        assert_ne!(stem("compute_wall_s"), stem("comm_delay_s"));
+    }
+
+    #[test]
+    fn token_hits_respect_identifier_boundaries() {
+        assert_eq!(token_hits("SystemTimeError", "SystemTime").len(), 0);
+        assert_eq!(token_hits("let t = SystemTime::now();", "SystemTime").len(), 1);
+        assert_eq!(token_hits("x.unwrap_or(0)", ".unwrap()").len(), 0);
+        assert_eq!(token_hits("x.unwrap()", ".unwrap()").len(), 1);
+        assert_eq!(token_hits("my_rand::random()", "rand::random").len(), 0);
+    }
+
+    #[test]
+    fn trailing_words() {
+        assert_eq!(trailing_word("impl Default for"), "for");
+        assert_eq!(trailing_word("fn build() ->"), "");
+        assert_eq!(trailing_word_prefix("pool {"), "pool");
+        assert_eq!(trailing_word_prefix("&pool"), "");
+    }
+}

@@ -1,0 +1,53 @@
+//! `cnclint` CLI: run the in-repo determinism & invariant lint over the
+//! crate's own source tree and write the `BENCH_lint.json` artifact so
+//! suppression creep stays visible across re-anchors.
+//!
+//! Exit status: 0 on a clean tree, 1 if any unsuppressed finding
+//! remains (CI treats that as a failed step, same as the test gate).
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use cnc_fl::analysis;
+
+fn main() -> ExitCode {
+    let rust_root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = match analysis::analyze_tree(rust_root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("cnclint: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    for f in &report.findings {
+        println!("{f}");
+    }
+
+    let json = format!(
+        "{{\"bench\": \"cnclint\", \"rows\": [{{\"rules_run\": {}, \
+         \"files_scanned\": {}, \"findings\": {}, \
+         \"suppressions_in_tree\": {}}}]}}\n",
+        report.rules_run,
+        report.files_scanned,
+        report.findings.len(),
+        report.suppressions_in_tree
+    );
+    if let Err(e) = std::fs::write("BENCH_lint.json", &json) {
+        eprintln!("cnclint: writing BENCH_lint.json: {e}");
+        return ExitCode::FAILURE;
+    }
+
+    eprintln!(
+        "cnclint: {} rules over {} files — {} finding(s), {} suppression(s) in tree",
+        report.rules_run,
+        report.files_scanned,
+        report.findings.len(),
+        report.suppressions_in_tree
+    );
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -131,7 +131,11 @@ impl SchedulingOptimizer {
         if n_rb < cohort_size {
             bail!("need at least as many RBs ({n_rb}) as cohort members ({cohort_size})");
         }
-        // 1. cohort
+        // 1. cohort — one shared stream for the sampling arms: `split`
+        // is pure (a label hash), so hoisting it above the match is
+        // bitwise-identical to splitting inside each arm, and keeps the
+        // label unique in this module (cnclint no-ambient-rng).
+        let mut cohort_rng = round_rng.split("cohort");
         let cohort = match cohort_strategy {
             CohortStrategy::PowerGrouping { m } => {
                 // Shard-local pools can be smaller than the fleet-derived
@@ -142,14 +146,13 @@ impl SchedulingOptimizer {
                 if self.groups.is_none() {
                     self.groups = Some(PowerGroups::build(&pool.fleet, m));
                 }
-                self.groups.as_ref().unwrap().sample(
-                    &pool.fleet,
-                    cohort_size,
-                    &mut round_rng.split("cohort"),
-                )
+                self.groups
+                    .as_ref()
+                    .unwrap()
+                    .sample(&pool.fleet, cohort_size, &mut cohort_rng)
             }
             CohortStrategy::Uniform => {
-                random::uniform_sample(u, cohort_size, &mut round_rng.split("cohort"))
+                random::uniform_sample(u, cohort_size, &mut cohort_rng)
             }
             CohortStrategy::ProportionalFair { alpha } => {
                 if self.pf.is_none() {

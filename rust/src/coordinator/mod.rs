@@ -78,6 +78,7 @@ pub(crate) fn train_cohort(
     let parallel =
         executor.threads() > 1 && active.len() > 1 && trainer.as_shared().is_some();
     if parallel {
+        // cnclint: allow(no-unwrap-in-lib): `parallel` is only true when as_shared() returned Some
         let shared = trainer.as_shared().expect("checked above");
         executor.run_ordered(
             active.len(),

@@ -231,6 +231,7 @@ pub fn run_with_model_traced(
         let parallel =
             executor.threads() > 1 && n_parts > 1 && trainer.as_shared().is_some();
         if parallel {
+            // cnclint: allow(no-unwrap-in-lib): `parallel` is only true when as_shared() returned Some
             let shared = trainer.as_shared().expect("checked above");
             executor.run_ordered(
                 n_parts,

@@ -129,12 +129,9 @@ pub fn run_p2p_setting(
         rounds,
         partition_strategy: setting.partition.clone(),
         path_strategy: setting.path,
-        epoch_local: 1,
-        eval_every: 1,
-        threads: 0,
         seed: opts.seed,
         verbose: opts.verbose,
-        transport: Default::default(),
+        ..Default::default()
     };
     let label = format!("p2p/{}/{}", setting.tag, split_tag(split));
     p2p::run(&mut sys, trainer.as_mut(), g, &cfg, &label)

@@ -10,12 +10,11 @@ use crate::cnc::CncSystem;
 use crate::coordinator::traditional::TraditionalConfig;
 use crate::coordinator::trainer::{MockTrainer, PjrtTrainer, Trainer};
 use crate::data::{Partition, Split, SynthSpec};
-use crate::fleet::{FleetConfig, GuardPolicy, ShardBy, WeatherSpec};
+use crate::fleet::FleetConfig;
 use crate::model::shape::ModelShape;
 use crate::netsim::channel::ChannelParams;
 use crate::netsim::compute::PowerProfile;
 use crate::runtime::{ArtifactStore, Engine};
-use crate::transport::TransportConfig;
 
 /// Resolve a model-shape preset by name (`mlp-small` / `mlp-784` /
 /// `mlp-wide`) — the mock-backend model-size scenario axis.
@@ -197,29 +196,16 @@ pub fn fleet_config(
     FleetConfig {
         rounds: case.global_rounds,
         shards,
-        shard_by: ShardBy::Power,
         // a shard-count override shrinks the region tier with it
         regions: case.regions.clamp(1, shards),
-        region_by: ShardBy::Locality,
         max_staleness: case.max_staleness,
-        staleness_decay: 0.5,
         cohort_size: case.cohort_size,
         n_rb: case.cohort_size,
-        epoch_local: 1,
         cohort_strategy: CohortStrategy::PowerGrouping {
             m: default_m(shard_clients, shard_cohort),
         },
-        rb_strategy: RbStrategy::HungarianEnergy,
-        eval_every: 1,
-        tx_deadline_s: None,
-        churn_every: 0,
-        churn_rate: 0.1,
-        weather: WeatherSpec::Calm,
-        guard: GuardPolicy::default(),
-        threads: 0,
-        transport: TransportConfig::default(),
         seed,
-        verbose: false,
+        ..Default::default()
     }
 }
 
@@ -304,12 +290,8 @@ pub fn traditional_config(
         epoch_local: case.local_epoch,
         cohort_strategy,
         rb_strategy,
-        eval_every: 1,
-        tx_deadline_s: None,
-        threads: 0,
-        transport: TransportConfig::default(),
         seed,
-        verbose: false,
+        ..Default::default()
     }
 }
 

@@ -709,6 +709,7 @@ fn run_rounds(
                     bytes: plan.update_bytes(),
                 });
                 stale_max = stale_max.max(staleness);
+                // cnclint: allow(no-unwrap-in-lib): region accept lists only shards drawn from due_jobs this round
                 let job = due_jobs[shard].take().expect("accepted shard was due");
                 loss_sum += job.loss_sum;
                 collected += job.update.count();

@@ -401,6 +401,7 @@ pub fn fold_regions_guarded(
         },
     )?;
     for (bi, p) in partials.into_iter().enumerate() {
+        // cnclint: allow(no-unwrap-in-lib): run_ordered reduces every slot exactly once or returns Err above
         let (partial, acc) = p.expect("slot reduced");
         root.merge_region(&partial);
         accepts[busy[bi]] = acc;

@@ -380,6 +380,7 @@ impl FleetTopology {
     /// Diff the current assignment against a pre-rebuild snapshot.
     fn diff_from(&self, old: &HashMap<u64, usize>) -> ChurnDiff {
         let new_ids: HashSet<u64> = self.client_ids.iter().copied().collect();
+        // cnclint: allow(no-unordered-iter): counting departures — a fold over membership, order-independent
         let left = old.keys().filter(|id| !new_ids.contains(id)).count();
         let mut joined = 0usize;
         let mut moved = 0usize;
@@ -512,6 +513,7 @@ pub fn split_proportional(total: usize, sizes: &[usize]) -> Vec<usize> {
             };
             let donor = (0..k)
                 .max_by_key(|&i| shares[i])
+                // cnclint: allow(no-unwrap-in-lib): k ≥ 1 in this branch (total ≥ k and an empty share exists)
                 .expect("nonempty shares");
             if shares[donor] <= 1 {
                 break;
@@ -560,6 +562,7 @@ pub fn decide_traditional_sharded(
         |i| {
             let s = shard_ids[i];
             let shard = &fleet.shards[s];
+            // cnclint: allow(no-unwrap-in-lib): a poisoned optimizer mutex means a worker already panicked — propagate the abort
             let mut opt = optimizers[s].lock().expect("optimizer poisoned");
             let decision = opt.decide_traditional(
                 &shard.pool,
@@ -582,6 +585,7 @@ pub fn decide_traditional_sharded(
             Ok(())
         },
     )?;
+    // cnclint: allow(no-unwrap-in-lib): run_ordered reduces every slot exactly once or returns Err above
     Ok(out.into_iter().map(|d| d.expect("slot reduced")).collect())
 }
 
@@ -621,6 +625,7 @@ pub fn decide_p2p_sharded(
                     &built
                 }
             };
+            // cnclint: allow(no-unwrap-in-lib): a poisoned optimizer mutex means a worker already panicked — propagate the abort
             let mut opt = optimizers[s].lock().expect("optimizer poisoned");
             let mut d = opt.decide_p2p(
                 &shard.pool,
@@ -641,6 +646,7 @@ pub fn decide_p2p_sharded(
             Ok(())
         },
     )?;
+    // cnclint: allow(no-unwrap-in-lib): run_ordered reduces every slot exactly once or returns Err above
     Ok(out.into_iter().map(|d| d.expect("slot reduced")).collect())
 }
 

@@ -19,6 +19,7 @@
 //! Quick start: `cargo run --release --example quickstart` (after
 //! `make artifacts`).
 
+pub mod analysis;
 pub mod assign;
 pub mod cnc;
 pub mod coordinator;

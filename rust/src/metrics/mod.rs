@@ -30,9 +30,11 @@ pub struct RoundRecord {
     pub tx_energies_j: Vec<f64>,
     /// wall-clock spent in PJRT execute for this round (coordinator
     /// overhead diagnostics, §Perf)
+    // cnclint: allow(csv-schema-sync): host-time diagnostic, reported via the trace sink's round events, not the replayable CSV
     pub compute_wall_s: f64,
     /// clients whose update missed the uplink deadline and was excluded
     /// from aggregation (0 when no deadline is configured)
+    // cnclint: allow(csv-schema-sync): deadline-dropout count surfaces through RunHistory summaries, not the per-round CSV
     pub dropouts: usize,
     /// shard updates folded into the global model this round (0 for the
     /// flat coordinators, ≥ 0 under the `fleet` engine — an async round

@@ -61,13 +61,15 @@ impl ModelShape {
             bail!("model shape `{name}` has no tensors");
         }
         let mut offsets = Vec::with_capacity(tensors.len() + 1);
-        offsets.push(0usize);
+        let mut total = 0usize;
+        offsets.push(total);
         for (tname, dims) in &tensors {
             let elems: usize = dims.iter().product();
             if elems == 0 {
                 bail!("tensor `{tname}` of shape `{name}` has a zero dim: {dims:?}");
             }
-            offsets.push(offsets.last().unwrap() + elems);
+            total += elems;
+            offsets.push(total);
         }
         Ok(Arc::new(ModelShape {
             name,
@@ -93,6 +95,7 @@ impl ModelShape {
                 ("b2".to_string(), vec![classes]),
             ],
         )
+        // cnclint: allow(no-unwrap-in-lib): literal nonzero dims above — `new` can only reject a zero dim
         .expect("mlp dims are nonzero")
     }
 
@@ -125,6 +128,7 @@ impl ModelShape {
 
     /// Total scalar count across all tensors.
     pub fn param_count(&self) -> usize {
+        // cnclint: allow(no-unwrap-in-lib): `new` seeds offsets with 0, so the vec is never empty
         *self.offsets.last().unwrap()
     }
 

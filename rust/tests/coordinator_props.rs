@@ -3,9 +3,7 @@
 //! DESIGN.md calls out: cohort validity, routing validity, aggregation
 //! conservation, metric bookkeeping and strategy dominance.
 
-use cnc_fl::cnc::optimize::{
-    CohortStrategy, PartitionStrategy, PathStrategy, RbStrategy,
-};
+use cnc_fl::cnc::optimize::{CohortStrategy, PartitionStrategy, RbStrategy};
 use cnc_fl::cnc::CncSystem;
 use cnc_fl::coordinator::p2p::{self, P2pConfig};
 use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
@@ -35,17 +33,11 @@ fn traditional_rounds_always_complete_with_valid_metrics() {
                 rounds: 3,
                 cohort_size: n,
                 n_rb: n,
-                epoch_local: 1,
                 cohort_strategy: CohortStrategy::PowerGrouping {
                     m: (u / n).clamp(1, u),
                 },
-                rb_strategy: RbStrategy::HungarianEnergy,
-                eval_every: 1,
-                tx_deadline_s: None,
-                threads: 0,
                 seed: seed as u64,
-                verbose: false,
-                transport: Default::default(),
+                ..Default::default()
             };
             let h = traditional::run(&mut sys, &mut t, &cfg, "prop").unwrap();
             for r in &h.rounds {
@@ -81,13 +73,8 @@ fn p2p_every_client_visited_exactly_once_per_round() {
             let cfg = P2pConfig {
                 rounds: 2,
                 partition_strategy: PartitionStrategy::BalancedDelay { e },
-                path_strategy: PathStrategy::Greedy,
-                epoch_local: 1,
-                eval_every: 1,
-                threads: 0,
                 seed: seed as u64,
-                verbose: false,
-                transport: Default::default(),
+                ..Default::default()
             };
             p2p::run(&mut sys, &mut t, &g, &cfg, "prop").unwrap();
             prop_assert(
@@ -110,15 +97,11 @@ fn cnc_delay_spread_dominates_fedavg_across_seeds() {
                 rounds: 15,
                 cohort_size: 8,
                 n_rb: 8,
-                epoch_local: 1,
                 cohort_strategy: cs,
                 rb_strategy: rb,
                 eval_every: 15,
-                tx_deadline_s: None,
-                threads: 0,
                 seed,
-                verbose: false,
-                transport: Default::default(),
+                ..Default::default()
             };
             traditional::run(&mut sys, &mut t, &cfg, "x").unwrap()
         };
@@ -152,13 +135,9 @@ fn p2p_partition_count_bounds_round_chain_delay() {
             let cfg = P2pConfig {
                 rounds: 2,
                 partition_strategy: PartitionStrategy::BalancedDelay { e },
-                path_strategy: PathStrategy::Greedy,
-                epoch_local: 1,
                 eval_every: 2,
-                threads: 0,
                 seed,
-                verbose: false,
-                transport: Default::default(),
+                ..Default::default()
             };
             p2p::run(&mut sys, &mut t, &g, &cfg, "x").unwrap()
         };
@@ -186,15 +165,10 @@ fn aggregation_weights_are_conserved() {
                 rounds: 2,
                 cohort_size: (u / 3).max(1),
                 n_rb: (u / 3).max(1),
-                epoch_local: 1,
                 cohort_strategy: CohortStrategy::Uniform,
                 rb_strategy: RbStrategy::Random,
-                eval_every: 1,
-                tx_deadline_s: None,
-                threads: 0,
                 seed: seed as u64,
-                verbose: false,
-                transport: Default::default(),
+                ..Default::default()
             };
             let h = traditional::run(&mut sys, &mut t, &cfg, "agg").unwrap();
             // identity training → accuracy constant across rounds
@@ -220,15 +194,10 @@ fn bus_message_flow_is_exactly_four_per_traditional_round() {
                 rounds,
                 cohort_size: (u / 5).max(1),
                 n_rb: (u / 5).max(1),
-                epoch_local: 1,
                 cohort_strategy: CohortStrategy::Uniform,
                 rb_strategy: RbStrategy::Random,
-                eval_every: 1,
-                tx_deadline_s: None,
-                threads: 0,
                 seed: seed as u64,
-                verbose: false,
-                transport: Default::default(),
+                ..Default::default()
             };
             traditional::run(&mut sys, &mut t, &cfg, "bus").unwrap();
             prop_assert(

@@ -11,9 +11,7 @@
 use std::path::PathBuf;
 
 use cnc_fl::coordinator::{p2p, traditional, PjrtTrainer};
-use cnc_fl::cnc::optimize::{
-    CohortStrategy, PartitionStrategy, PathStrategy, RbStrategy,
-};
+use cnc_fl::cnc::optimize::{CohortStrategy, RbStrategy};
 use cnc_fl::cnc::CncSystem;
 use cnc_fl::coordinator::p2p::P2pConfig;
 use cnc_fl::coordinator::traditional::TraditionalConfig;
@@ -54,17 +52,8 @@ fn traditional_cnc_learns_iid() {
     let mut sys = system(100, 1);
     let cfg = TraditionalConfig {
         rounds: 15,
-        cohort_size: 10,
-        n_rb: 10,
-        epoch_local: 1,
-        cohort_strategy: CohortStrategy::PowerGrouping { m: 10 },
-        rb_strategy: RbStrategy::HungarianEnergy,
         eval_every: 5,
-        tx_deadline_s: None,
-        threads: 0,
-        seed: 0,
-        verbose: false,
-        transport: Default::default(),
+        ..Default::default()
     };
     let h = traditional::run(&mut sys, &mut t, &cfg, "e2e/iid").unwrap();
     assert_eq!(h.rounds.len(), 15);
@@ -80,17 +69,8 @@ fn traditional_cnc_learns_non_iid() {
     let mut sys = system(100, 1);
     let cfg = TraditionalConfig {
         rounds: 15,
-        cohort_size: 10,
-        n_rb: 10,
-        epoch_local: 1,
-        cohort_strategy: CohortStrategy::PowerGrouping { m: 10 },
-        rb_strategy: RbStrategy::HungarianEnergy,
         eval_every: 5,
-        tx_deadline_s: None,
-        threads: 0,
-        seed: 0,
-        verbose: false,
-        transport: Default::default(),
+        ..Default::default()
     };
     let h = traditional::run(&mut sys, &mut t, &cfg, "e2e/noniid").unwrap();
     let acc = h.final_accuracy();
@@ -106,14 +86,7 @@ fn p2p_chain_learns() {
     let g = TopologyGen::full(20, 1.0, 10.0, &mut rng);
     let cfg = P2pConfig {
         rounds: 3,
-        partition_strategy: PartitionStrategy::BalancedDelay { e: 4 },
-        path_strategy: PathStrategy::Greedy,
-        epoch_local: 1,
-        eval_every: 1,
-        threads: 0,
-        seed: 0,
-        verbose: false,
-        transport: Default::default(),
+        ..Default::default()
     };
     let h = p2p::run(&mut sys, &mut t, &g, &cfg, "e2e/p2p").unwrap();
     // every client trains each round → 3 rounds of 20 chains is plenty
@@ -127,17 +100,8 @@ fn cnc_and_fedavg_reach_similar_accuracy_but_cnc_cheaper() {
     let Some(mut t1) = trainer(100, Split::Iid) else { return };
     let base = TraditionalConfig {
         rounds: 8,
-        cohort_size: 10,
-        n_rb: 10,
-        epoch_local: 1,
-        cohort_strategy: CohortStrategy::PowerGrouping { m: 10 },
-        rb_strategy: RbStrategy::HungarianEnergy,
         eval_every: 4,
-        tx_deadline_s: None,
-        threads: 0,
-        seed: 0,
-        verbose: false,
-        transport: Default::default(),
+        ..Default::default()
     };
     let mut sys1 = system(100, 1);
     let h_cnc = traditional::run(&mut sys1, &mut t1, &base, "cnc").unwrap();
@@ -175,12 +139,7 @@ fn local_epochs_scale_compute_not_crash() {
         epoch_local: 5, // Pr2-style
         cohort_strategy: CohortStrategy::PowerGrouping { m: 20 },
         rb_strategy: RbStrategy::BottleneckDelay,
-        eval_every: 1,
-        tx_deadline_s: None,
-        threads: 0,
-        seed: 0,
-        verbose: false,
-        transport: Default::default(),
+        ..Default::default()
     };
     let h = traditional::run(&mut sys, &mut t, &cfg, "e2e/5ep").unwrap();
     assert_eq!(h.rounds.len(), 2);

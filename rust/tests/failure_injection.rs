@@ -7,9 +7,7 @@
 
 use anyhow::{bail, Result};
 
-use cnc_fl::cnc::optimize::{
-    CohortStrategy, PartitionStrategy, PathStrategy, RbStrategy,
-};
+use cnc_fl::cnc::optimize::{CohortStrategy, PartitionStrategy, RbStrategy};
 use cnc_fl::cnc::CncSystem;
 use cnc_fl::coordinator::p2p::{self, P2pConfig};
 use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
@@ -84,15 +82,9 @@ fn trad_cfg(rounds: usize, cohort: usize) -> TraditionalConfig {
         rounds,
         cohort_size: cohort,
         n_rb: cohort,
-        epoch_local: 1,
         cohort_strategy: CohortStrategy::Uniform,
         rb_strategy: RbStrategy::Random,
-        eval_every: 1,
-        tx_deadline_s: None,
-        threads: 0,
-        transport: Default::default(),
-        seed: 0,
-        verbose: false,
+        ..Default::default()
     }
 }
 
@@ -132,13 +124,7 @@ fn p2p_chain_failure_propagates() {
     let cfg = P2pConfig {
         rounds: 2,
         partition_strategy: PartitionStrategy::All,
-        path_strategy: PathStrategy::Greedy,
-        epoch_local: 1,
-        eval_every: 1,
-        threads: 0,
-        seed: 0,
-        verbose: false,
-        transport: Default::default(),
+        ..Default::default()
     };
     assert!(p2p::run(&mut sys, &mut t, &g, &cfg, "flaky").is_err());
 }
@@ -155,13 +141,7 @@ fn p2p_on_disconnected_topology_errors_not_hangs() {
     let cfg = P2pConfig {
         rounds: 1,
         partition_strategy: PartitionStrategy::All,
-        path_strategy: PathStrategy::Greedy,
-        epoch_local: 1,
-        eval_every: 1,
-        threads: 0,
-        seed: 0,
-        verbose: false,
-        transport: Default::default(),
+        ..Default::default()
     };
     let err = p2p::run(&mut sys, &mut t, &g, &cfg, "star").unwrap_err();
     assert!(err.to_string().contains("no feasible path"), "{err}");
@@ -175,13 +155,7 @@ fn p2p_wrong_topology_size_rejected() {
     let cfg = P2pConfig {
         rounds: 1,
         partition_strategy: PartitionStrategy::All,
-        path_strategy: PathStrategy::Greedy,
-        epoch_local: 1,
-        eval_every: 1,
-        threads: 0,
-        seed: 0,
-        verbose: false,
-        transport: Default::default(),
+        ..Default::default()
     };
     assert!(p2p::run(&mut sys, &mut t, &g, &cfg, "size").is_err());
 }

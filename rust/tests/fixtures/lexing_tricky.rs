@@ -1,0 +1,30 @@
+//! Lexer torture fixture: every determinism-hostile token below lives
+//! inside a comment, string, raw string, or char literal. The masked
+//! view must blank them all, so this file lints clean even though the
+//! analyzer tests scan it under an engine path (`src/fleet/…`).
+//! (Never compiled — the walker skips `fixtures/` directories.)
+
+/* block comment mentioning Instant::now and SystemTime
+   /* nested: thread_rng() and .unwrap() still masked */
+   back at depth one: rand::random */
+
+pub fn tricky() -> usize {
+    let url = "https://example.com // not a comment: Instant::now";
+    let re = r#"raw "quoted" \ backslash: .unwrap() and thread_rng"#;
+    let shout = r##"wider fence r#"inner"# mentioning SystemTime"##;
+    let bytes = b"byte string with .expect( inside";
+    let colon = ':'; // char literal, not a lifetime
+    let newline = '\n';
+    let quote = '\'';
+    fn lifetime_user<'a>(x: &'a str) -> &'a str {
+        x
+    }
+    let _ = lifetime_user(url);
+    url.len()
+        + re.len()
+        + shout.len()
+        + bytes.len()
+        + (colon as usize)
+        + (newline as usize)
+        + (quote as usize)
+}

@@ -1,0 +1,18 @@
+//! Regression fixture for no-ambient-rng split-label collisions.
+//!
+//! The lint's first sweep of the real tree found exactly one
+//! collision: `cnc/optimize.rs::decide_traditional` called
+//! `round_rng.split("cohort")` in both the PowerGrouping and the
+//! Uniform match arms — two call sites handed the same stream. The fix
+//! hoisted a single split above the match (`split` is a pure label
+//! hash, so the hoist is bitwise-identical). This file preserves the
+//! pre-fix shape so the rule keeps firing on it; the analyzer test
+//! scans it under a `src/` path and asserts exactly one finding.
+//! (Never compiled — the walker skips `fixtures/` directories.)
+
+pub fn decide(grouped: bool, round_rng: &Pcg64) -> Vec<usize> {
+    match grouped {
+        true => grouped_sample(&mut round_rng.split("cohort")),
+        false => uniform_sample(&mut round_rng.split("cohort")),
+    }
+}

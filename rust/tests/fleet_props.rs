@@ -87,13 +87,9 @@ fn one_shard_sync_fleet_equals_traditional_for_any_seed_and_width() {
                         n_rb: cohort,
                         epoch_local: 2,
                         cohort_strategy: CohortStrategy::PowerGrouping { m },
-                        rb_strategy: RbStrategy::HungarianEnergy,
-                        eval_every: 1,
-                        tx_deadline_s: None,
                         threads,
                         seed: seed as u64,
-                        verbose: false,
-                        transport: Default::default(),
+                        ..Default::default()
                     };
                     traditional::run(&mut sys, &mut t, &cfg, "flat").unwrap()
                 };

@@ -4,9 +4,7 @@
 
 use std::sync::Arc;
 
-use cnc_fl::cnc::optimize::{
-    CohortStrategy, PartitionStrategy, PathStrategy, RbStrategy,
-};
+use cnc_fl::cnc::optimize::{CohortStrategy, PartitionStrategy};
 use cnc_fl::cnc::CncSystem;
 use cnc_fl::coordinator::p2p::{self, P2pConfig};
 use cnc_fl::coordinator::traditional::{self, TraditionalConfig};
@@ -257,13 +255,9 @@ fn traditional_parallel_runs_equal_serial_for_any_seed() {
                     cohort_strategy: CohortStrategy::PowerGrouping {
                         m: (u / cohort).clamp(1, u),
                     },
-                    rb_strategy: RbStrategy::HungarianEnergy,
-                    eval_every: 1,
-                    tx_deadline_s: None,
                     threads,
                     seed: seed as u64,
-                    verbose: false,
-                    transport: Default::default(),
+                    ..Default::default()
                 };
                 traditional::run(&mut sys, &mut t, &cfg, "det").unwrap()
             };
@@ -293,13 +287,9 @@ fn p2p_parallel_runs_equal_serial_for_any_seed() {
                 let cfg = P2pConfig {
                     rounds: 2,
                     partition_strategy: PartitionStrategy::BalancedDelay { e },
-                    path_strategy: PathStrategy::Greedy,
-                    epoch_local: 1,
-                    eval_every: 1,
                     threads,
                     seed: seed as u64,
-                    verbose: false,
-                    transport: Default::default(),
+                    ..Default::default()
                 };
                 p2p::run(&mut sys, &mut t, &g, &cfg, "det").unwrap()
             };

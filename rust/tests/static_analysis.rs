@@ -1,0 +1,304 @@
+//! The cnclint gate (tier-1) plus coverage for the analyzer itself.
+//!
+//! `tree_is_clean` is the gate ISSUE 8 ships: it walks the real source
+//! tree and asserts zero unsuppressed findings, so every determinism
+//! invariant the rules encode is machine-checked on each `cargo test`.
+//! The remaining tests feed the rule engine in-memory fixtures (plus
+//! the two on-disk torture fixtures under `tests/fixtures/`, which the
+//! tree walker deliberately skips) — one positive and one suppressed
+//! case per rule, and the lexing corner cases that could silently
+//! blind a rule if the masker regressed.
+
+use std::path::Path;
+
+use cnc_fl::analysis::{analyze_files, analyze_tree, FileData};
+
+/// Lint one in-memory file (no README) and return its finding rules.
+fn rules_of(path: &str, src: &str) -> Vec<String> {
+    analyze_files(&[FileData::new(path, src)], None)
+        .findings
+        .iter()
+        .map(|f| f.rule.to_string())
+        .collect()
+}
+
+fn assert_clean(path: &str, src: &str) {
+    let found = rules_of(path, src);
+    assert!(found.is_empty(), "expected clean, got {found:?}");
+}
+
+// -------------------------------------------------------------------
+// the gate
+// -------------------------------------------------------------------
+
+#[test]
+fn tree_is_clean() {
+    let report = analyze_tree(Path::new(env!("CARGO_MANIFEST_DIR"))).unwrap();
+    let listing: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        report.findings.is_empty(),
+        "cnclint found {} unsuppressed finding(s):\n{}",
+        report.findings.len(),
+        listing.join("\n")
+    );
+    assert_eq!(report.rules_run, 6);
+    assert!(report.files_scanned > 40, "walker lost most of the tree");
+}
+
+// -------------------------------------------------------------------
+// lexer corner cases (on-disk fixtures, scanned under engine paths)
+// -------------------------------------------------------------------
+
+#[test]
+fn lexing_torture_fixture_is_invisible_to_every_rule() {
+    // nested block comments, raw strings with fences, `//` inside
+    // strings, lifetimes vs char literals — all masked, zero findings
+    // even under the strictest (engine) path scope.
+    let src = include_str!("fixtures/lexing_tricky.rs");
+    assert_clean("src/fleet/lexing_tricky.rs", src);
+}
+
+#[test]
+fn split_label_collision_fixture_still_fires() {
+    // regression: the pre-fix shape of cnc/optimize.rs's double
+    // split("cohort") must keep producing exactly one finding.
+    let src = include_str!("fixtures/split_label_collision.rs");
+    let found = rules_of("src/cnc/optimize_regression.rs", src);
+    assert_eq!(found, vec!["no-ambient-rng"], "{found:?}");
+}
+
+// -------------------------------------------------------------------
+// no-unordered-iter
+// -------------------------------------------------------------------
+
+#[test]
+fn unordered_iter_positive_and_suppressed() {
+    let bad = r"
+use std::collections::HashMap;
+pub fn order(m: &HashMap<u64, usize>) -> Vec<u64> {
+    m.keys().copied().collect()
+}
+";
+    assert_eq!(rules_of("src/fleet/x.rs", bad), vec!["no-unordered-iter"]);
+    // same file outside the engine dirs: out of scope
+    assert_clean("src/exp/x.rs", bad);
+
+    let ok = r"
+use std::collections::HashMap;
+pub fn count(m: &HashMap<u64, usize>) -> usize {
+    // cnclint: allow(no-unordered-iter): counting, order-independent
+    m.keys().count()
+}
+";
+    assert_clean("src/fleet/x.rs", ok);
+}
+
+#[test]
+fn unordered_iter_catches_for_loops_over_bound_names() {
+    let bad = r"
+use std::collections::HashSet;
+pub fn walk(seen: &HashSet<u64>) {
+    for id in seen {
+        drop(id);
+    }
+}
+";
+    assert_eq!(rules_of("src/coordinator/x.rs", bad), vec!["no-unordered-iter"]);
+}
+
+// -------------------------------------------------------------------
+// no-wall-clock
+// -------------------------------------------------------------------
+
+#[test]
+fn wall_clock_positive_and_suppressed() {
+    let bad = "pub fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+    assert_eq!(rules_of("src/netsim/x.rs", bad), vec!["no-wall-clock"]);
+    // the clock-owning files are exempt
+    assert_clean("src/obs/trace.rs", bad);
+    // tests/ and benches/ are out of scope entirely
+    assert_clean("tests/x.rs", bad);
+
+    let ok = "// cnclint: allow(no-wall-clock): diagnostics only, never folded into round state\n\
+              pub fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+    assert_clean("src/netsim/x.rs", ok);
+}
+
+// -------------------------------------------------------------------
+// no-ambient-rng
+// -------------------------------------------------------------------
+
+#[test]
+fn ambient_rng_positive_and_suppressed() {
+    let bad = "pub fn roll() -> f64 { rand::random() }\n";
+    assert_eq!(rules_of("src/cnc/x.rs", bad), vec!["no-ambient-rng"]);
+
+    let ok = "// cnclint: allow(no-ambient-rng): fixture exercising the ban itself\n\
+              pub fn roll() -> f64 { rand::random() }\n";
+    assert_clean("src/cnc/x.rs", ok);
+
+    // distinct labels in one module are fine
+    let distinct = r#"
+pub fn two(rng: &Pcg64) -> (Pcg64, Pcg64) {
+    (rng.split("alpha"), rng.split("beta"))
+}
+"#;
+    assert_clean("src/cnc/x.rs", distinct);
+
+    // duplicate labels under #[cfg(test)] are tolerated (tests pin
+    // determinism on purpose-made streams)
+    let test_side = "#[cfg(test)]\nmod tests {\n    fn f(r: &Pcg64) {\n        \
+                     r.split(\"dup\");\n        r.split(\"dup\");\n    }\n}\n";
+    assert_clean("src/cnc/x.rs", test_side);
+}
+
+// -------------------------------------------------------------------
+// no-unwrap-in-lib
+// -------------------------------------------------------------------
+
+#[test]
+fn unwrap_in_lib_positive_and_suppressed() {
+    let bad = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    assert_eq!(rules_of("src/coordinator/x.rs", bad), vec!["no-unwrap-in-lib"]);
+    assert_eq!(rules_of("src/model/x.rs", bad), vec!["no-unwrap-in-lib"]);
+    // non-engine modules may unwrap (exp/, util/, …)
+    assert_clean("src/util/x.rs", bad);
+
+    // expect() is equally banned
+    let expect = "pub fn f(x: Option<u32>) -> u32 { x.expect(\"set\") }\n";
+    assert_eq!(rules_of("src/transport/x.rs", expect), vec!["no-unwrap-in-lib"]);
+
+    // test modules are exempt
+    let in_tests =
+        "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
+    assert_clean("src/coordinator/x.rs", in_tests);
+
+    let ok = "pub fn f(x: Option<u32>) -> u32 {\n    \
+              // cnclint: allow(no-unwrap-in-lib): caller guarantees Some by construction\n    \
+              x.unwrap()\n}\n";
+    assert_clean("src/coordinator/x.rs", ok);
+}
+
+// -------------------------------------------------------------------
+// config-literal-exhaustive
+// -------------------------------------------------------------------
+
+#[test]
+fn config_literal_positive_suppressed_and_defining_module() {
+    let bad = "fn make() -> FleetConfig {\n    FleetConfig { rounds: 3, seed: 1 }\n}\n";
+    assert_eq!(rules_of("tests/x.rs", bad), vec!["config-literal-exhaustive"]);
+
+    let ok = "fn make() -> FleetConfig {\n    \
+              FleetConfig { rounds: 3, ..Default::default() }\n}\n";
+    assert_clean("tests/x.rs", ok);
+
+    // nested `..` at depth 2 does not satisfy the outer literal
+    let nested = "fn make() -> FleetConfig {\n    FleetConfig { transport: \
+                  TransportConfig { ..Default::default() }, rounds: 3 }\n}\n";
+    assert_eq!(rules_of("tests/x.rs", nested), vec!["config-literal-exhaustive"]);
+
+    // the defining module's exhaustive Default impl is exempt
+    let defining = "pub struct FleetConfig {\n    pub rounds: usize,\n}\n\
+                    impl Default for FleetConfig {\n    fn default() -> FleetConfig {\n        \
+                    FleetConfig { rounds: 50 }\n    }\n}\n";
+    assert_clean("src/fleet/async_round.rs", defining);
+
+    let suppressed = "fn make() -> FleetConfig {\n    \
+                      // cnclint: allow(config-literal-exhaustive): asserts every field on purpose\n    \
+                      FleetConfig { rounds: 3, seed: 1 }\n}\n";
+    assert_clean("tests/x.rs", suppressed);
+}
+
+// -------------------------------------------------------------------
+// csv-schema-sync
+// -------------------------------------------------------------------
+
+const CSV_FIXTURE_OK: &str = r#"
+pub struct RoundRecord {
+    pub round: usize,
+    pub accuracy: f64,
+}
+impl RunHistory {
+    pub fn to_csv(&self) -> CsvTable {
+        CsvTable::new(&[
+            "round",
+            "accuracy",
+        ])
+    }
+}
+"#;
+
+#[test]
+fn csv_schema_sync_positive_and_suppressed() {
+    assert_clean("src/metrics/mod.rs", CSV_FIXTURE_OK);
+
+    // a field the header never emits
+    let drifted = CSV_FIXTURE_OK.replace(
+        "pub accuracy: f64,",
+        "pub accuracy: f64,\n    pub extra_things: usize,",
+    );
+    assert_eq!(rules_of("src/metrics/mod.rs", &drifted), vec!["csv-schema-sync"]);
+
+    let excused = CSV_FIXTURE_OK.replace(
+        "pub accuracy: f64,",
+        "pub accuracy: f64,\n    \
+         // cnclint: allow(csv-schema-sync): reported via the trace stream\n    \
+         pub extra_things: usize,",
+    );
+    assert_clean("src/metrics/mod.rs", &excused);
+
+    // a column no field backs
+    let phantom = CSV_FIXTURE_OK.replace("\"accuracy\",", "\"accuracy\",\n            \"phantom\",");
+    assert_eq!(rules_of("src/metrics/mod.rs", &phantom), vec!["csv-schema-sync"]);
+}
+
+#[test]
+fn csv_schema_sync_checks_the_readme_table() {
+    let files = [FileData::new("src/metrics/mod.rs", CSV_FIXTURE_OK)];
+    let good = "## CSV schema\n\n| column | meaning |\n|---|---|\n\
+                | `round` | global round index |\n| `accuracy` | test accuracy |\n";
+    assert!(analyze_files(&files, Some(good)).findings.is_empty());
+
+    let wrong_order = "## CSV schema\n\n| column | meaning |\n|---|---|\n\
+                       | `accuracy` | test accuracy |\n| `round` | global round index |\n";
+    let r = analyze_files(&files, Some(wrong_order));
+    assert_eq!(r.findings.len(), 1);
+    assert_eq!(r.findings[0].file, "README.md");
+    assert_eq!(r.findings[0].rule, "csv-schema-sync");
+
+    let missing_section = "# readme\n\nno schema table here\n";
+    let r = analyze_files(&files, Some(missing_section));
+    assert_eq!(r.findings.len(), 1);
+    assert_eq!(r.findings[0].file, "README.md");
+}
+
+// -------------------------------------------------------------------
+// suppression hygiene
+// -------------------------------------------------------------------
+
+#[test]
+fn suppressions_require_a_reason_and_a_known_rule() {
+    let no_reason = "pub fn f(x: Option<u32>) -> u32 {\n    \
+                     // cnclint: allow(no-unwrap-in-lib):\n    \
+                     x.unwrap()\n}\n";
+    let found = rules_of("src/coordinator/x.rs", no_reason);
+    assert!(
+        found.contains(&"suppression-syntax".to_string()),
+        "reasonless allow must be rejected: {found:?}"
+    );
+    assert!(
+        found.contains(&"no-unwrap-in-lib".to_string()),
+        "a malformed allow must not suppress the finding: {found:?}"
+    );
+
+    let unknown = "// cnclint: allow(no-such-rule): some reason\npub fn f() {}\n";
+    assert_eq!(rules_of("src/cnc/x.rs", unknown), vec!["suppression-syntax"]);
+}
+
+#[test]
+fn suppression_must_sit_on_or_directly_above_the_finding() {
+    let too_far = "pub fn f(x: Option<u32>) -> u32 {\n    \
+                   // cnclint: allow(no-unwrap-in-lib): stale marker\n    \
+                   let y = x;\n    y.unwrap()\n}\n";
+    assert_eq!(rules_of("src/coordinator/x.rs", too_far), vec!["no-unwrap-in-lib"]);
+}
