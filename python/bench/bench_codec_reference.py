@@ -1,0 +1,209 @@
+"""Reference measurement seeding ``rust/BENCH_codec.json``.
+
+The rust binary (``cargo run --release --bin bench_codec``) is the
+authoritative generator of the codec-fold perf artifact; this numpy
+script reproduces its exact workload — decode-then-fold vs
+encoded-domain fold over the same pre-encoded payload pool — for
+environments without a Rust toolchain, and labels its output
+``"backend": "python-reference"`` so nobody mistakes the numbers for
+the engine's. CI regenerates the artifact with the rust binary
+(``"backend": "rust"``) and validates the same schema and acceptance
+bar (encoded <= decode-then-fold at 10^4 commits for quant8/topk0.1).
+
+Workload (mirrors ``rust/src/bin/bench_codec.rs`` --quick):
+
+* shape ``mlp-small`` (784 -> 32 -> 10: tensors of 25088/32/320/10 f32)
+* a pool of 64 gaussian updates cycled to 10^3 / 10^4 commits
+* quant8: per-tensor affine u8 grid. Baseline dequantizes every payload
+  into a dense scratch then folds; the encoded fold does
+  ``acc += (w*scale)*codes`` + a per-tensor f64 bias, one dequantize at
+  finish.
+* topk0.1: per-tensor top-10% magnitude entries. Baseline densifies
+  into scratch then folds the full arena; the encoded fold scatter-adds
+  only the kept entries.
+* raw: both paths are the same dense fold (a noise floor).
+
+Run from the repo root:  python3 python/bench/bench_codec_reference.py
+"""
+
+import json
+import math
+import time
+from pathlib import Path
+
+import numpy as np
+
+TENSORS = [784 * 32, 32, 320, 10]  # mlp-small
+POOL = 64
+WEIGHT = 600
+COMMIT_COUNTS = [1_000, 10_000]
+KEEP_FRAC = 0.1
+
+MIN_ITERS = 3
+MIN_TIME_S = 0.3
+MAX_ITERS = 50
+
+
+def bench(fn):
+    """Median ns/iter, Bencher::coarse()-style (warmup, then >=3 iters
+    and >=0.3 s)."""
+    fn()  # warmup
+    samples = []
+    start = time.perf_counter()
+    while (len(samples) < MIN_ITERS or time.perf_counter() - start < MIN_TIME_S) \
+            and len(samples) < MAX_ITERS:
+        t0 = time.perf_counter()
+        fn()
+        samples.append((time.perf_counter() - t0) * 1e9)
+    return float(np.median(samples))
+
+
+def keep_count(n, frac):
+    return max(1, min(n, math.ceil(n * frac - 1e-6)))
+
+
+def make_pool(rng):
+    return [
+        [rng.normal(0.0, 0.05, size=n).astype(np.float32) for n in TENSORS]
+        for _ in range(POOL)
+    ]
+
+
+def quantize8(update):
+    grids = []
+    for t in update:
+        lo, hi = float(t.min()), float(t.max())
+        scale = (hi - lo) / 255.0 if hi > lo else 1.0
+        codes = np.clip(np.rint((t - lo) / scale), 0, 255).astype(np.uint8)
+        grids.append((codes, np.float32(lo), np.float32(scale)))
+    return grids
+
+
+def sparsify_topk(update):
+    kept = []
+    for t in update:
+        k = keep_count(t.size, KEEP_FRAC)
+        idx = np.argpartition(-np.abs(t), k - 1)[:k]
+        idx = np.sort(idx).astype(np.uint32)
+        kept.append((idx, t[idx]))
+    return kept
+
+
+def fold_raw(pool, commits):
+    acc = [np.zeros(n, dtype=np.float32) for n in TENSORS]
+    w = np.float32(WEIGHT)
+    for i in range(commits):
+        for a, t in zip(acc, pool[i % POOL]):
+            a += w * t
+    inv = np.float32(1.0 / (WEIGHT * commits))
+    return [a * inv for a in acc]
+
+
+def fold_quant8_decode(encoded, commits):
+    acc = [np.zeros(n, dtype=np.float32) for n in TENSORS]
+    scratch = [np.empty(n, dtype=np.float32) for n in TENSORS]
+    w = np.float32(WEIGHT)
+    for i in range(commits):
+        for a, s, (codes, lo, scale) in zip(acc, scratch, encoded[i % POOL]):
+            np.multiply(codes, scale, out=s, dtype=np.float32)
+            s += lo
+            a += w * s
+    inv = np.float32(1.0 / (WEIGHT * commits))
+    return [a * inv for a in acc]
+
+
+def fold_quant8_encoded(encoded, commits):
+    acc = [np.zeros(n, dtype=np.float32) for n in TENSORS]
+    bias = [0.0] * len(TENSORS)
+    for i in range(commits):
+        for t, (a, (codes, lo, scale)) in enumerate(zip(acc, encoded[i % POOL])):
+            a += np.float32(WEIGHT * scale) * codes
+            bias[t] += WEIGHT * float(lo)
+    inv = 1.0 / (WEIGHT * commits)
+    return [((a.astype(np.float64) + b) * inv).astype(np.float32)
+            for a, b in zip(acc, bias)]
+
+
+def fold_topk_decode(encoded, commits):
+    acc = [np.zeros(n, dtype=np.float32) for n in TENSORS]
+    scratch = [np.empty(n, dtype=np.float32) for n in TENSORS]
+    w = np.float32(WEIGHT)
+    for i in range(commits):
+        for a, s, (idx, vals) in zip(acc, scratch, encoded[i % POOL]):
+            s.fill(0.0)
+            s[idx] = vals
+            a += w * s
+    inv = np.float32(1.0 / (WEIGHT * commits))
+    return [a * inv for a in acc]
+
+
+def fold_topk_encoded(encoded, commits):
+    acc = [np.zeros(n, dtype=np.float32) for n in TENSORS]
+    w = np.float32(WEIGHT)
+    for i in range(commits):
+        for a, (idx, vals) in zip(acc, encoded[i % POOL]):
+            a[idx] += w * vals  # indices are unique per payload
+    inv = np.float32(1.0 / (WEIGHT * commits))
+    return [a * inv for a in acc]
+
+
+def main():
+    rng = np.random.default_rng(0xC0DEC)
+    pool = make_pool(rng)
+    q8 = [quantize8(u) for u in pool]
+    topk = [sparsify_topk(u) for u in pool]
+
+    rows = []
+    for commits in COMMIT_COUNTS:
+        raw_ns = bench(lambda c=commits: fold_raw(pool, c))
+        rows.append({
+            "commits": commits, "codec": "raw",
+            "bytes_per_round": commits * sum(TENSORS) * 4,
+            "decode_fold_ns": round(raw_ns, 1),
+            "encoded_fold_ns": round(raw_ns, 1),
+            "speedup": 1.0,
+        })
+        q_dec = bench(lambda c=commits: fold_quant8_decode(q8, c))
+        q_enc = bench(lambda c=commits: fold_quant8_encoded(q8, c))
+        rows.append({
+            "commits": commits, "codec": "quant8",
+            "bytes_per_round": commits * (sum(TENSORS) + len(TENSORS) * 8),
+            "decode_fold_ns": round(q_dec, 1),
+            "encoded_fold_ns": round(q_enc, 1),
+            "speedup": round(q_dec / q_enc, 3),
+        })
+        t_dec = bench(lambda c=commits: fold_topk_decode(topk, c))
+        t_enc = bench(lambda c=commits: fold_topk_encoded(topk, c))
+        kept = sum(keep_count(n, KEEP_FRAC) for n in TENSORS)
+        rows.append({
+            "commits": commits, "codec": "topk0.1",
+            "bytes_per_round": commits * (kept * 8 + len(TENSORS) * 4),
+            "decode_fold_ns": round(t_dec, 1),
+            "encoded_fold_ns": round(t_enc, 1),
+            "speedup": round(t_dec / t_enc, 3),
+        })
+        for r in rows[-3:]:
+            print(f"{r['commits']:>6} commits  {r['codec']:<8} "
+                  f"decode+fold {r['decode_fold_ns'] / 1e6:10.2f} ms  "
+                  f"encoded {r['encoded_fold_ns'] / 1e6:10.2f} ms  "
+                  f"{r['speedup']:.2f}x")
+
+    doc = {
+        "bench": "codec",
+        "backend": "python-reference",
+        "note": ("numpy reference measurement of the bench_codec workload; "
+                 "CI regenerates this artifact with "
+                 "`cargo run --release --bin bench_codec -- --quick` "
+                 "(backend: rust)"),
+        "shape": "mlp-small",
+        "weight": WEIGHT,
+        "pool": POOL,
+        "rows": rows,
+    }
+    out = Path(__file__).resolve().parents[2] / "rust" / "BENCH_codec.json"
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+//! `bench_codec`: the encoded-domain aggregation bench — the tracked
+//! perf artifact (`BENCH_codec.json`) of the codec fold trajectory.
+//!
+//! For raw / quant8 / topk:0.1 at 10³ and 10⁴ commits it times one
+//! server-side round fold two ways over the *same* pre-encoded wire
+//! payloads:
+//!
+//! * **decode-then-fold** — the pre-ISSUE-9 pipeline: every payload is
+//!   decoded into a dense scratch arena (`EncodedUpdate::decode_into`,
+//!   the old `apply_wire` cost without its allocation) and pushed into
+//!   the dense [`Aggregator`]. Raw payloads skip the decode (the old
+//!   path folded them directly), so the raw rows are a noise floor.
+//! * **encoded fold** — [`EncodedAggregator::push_encoded`]: quant8
+//!   codes fold as `Σ(w·s)·c` f32 lanes + per-tensor f64 bias, top-k
+//!   entries merge index-wise into a sparse accumulator, and exactly
+//!   one dequantize/densify happens at `finish`.
+//!
+//! `--quick` runs the CI-sized configuration (`mlp-small`); the default
+//! is the paper shape family's `mlp-784`. All timing goes through
+//! [`cnc_fl::util::bench::Bencher`] (the lint's `no-wall-clock` rule
+//! keeps raw clock reads out of this binary), and results land in
+//! `BENCH_codec.json` next to `BENCH_lint.json`/`BENCH_weather.json`
+//! in the perf-trajectory series. CI re-generates the artifact in quick
+//! mode and asserts the encoded fold beats decode-then-fold at 10⁴
+//! commits for both lossy codecs.
+
+use std::sync::Arc;
+
+use cnc_fl::model::aggregate::Aggregator;
+use cnc_fl::model::compress::PayloadCodec;
+use cnc_fl::model::encoded::{EncodedAggregator, EncodedUpdate};
+use cnc_fl::model::params::ModelParams;
+use cnc_fl::model::shape::ModelShape;
+use cnc_fl::util::bench::{black_box, Bencher};
+use cnc_fl::util::rng::Pcg64;
+
+/// Distinct updates in the cycled pool — enough to defeat trivial
+/// value-level caching, small enough that 10⁴-commit cells don't hold
+/// 10⁴ arenas.
+const POOL: usize = 64;
+
+/// Commit weight per update (the MockTrainer's per-client data size).
+const WEIGHT: usize = 600;
+
+struct Row {
+    commits: usize,
+    codec_label: String,
+    bytes_per_round: usize,
+    decode_fold_ns: f64,
+    encoded_fold_ns: f64,
+}
+
+fn update_pool(shape: &Arc<ModelShape>) -> Vec<ModelParams> {
+    (0..POOL)
+        .map(|i| {
+            let mut rng = Pcg64::new(0xC0DEC, i as u64);
+            let mut m = ModelParams::zeros(shape);
+            for v in m.as_mut_slice() {
+                *v = rng.normal_scaled(0.0, 0.05) as f32;
+            }
+            m
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let preset = if quick { "mlp-small" } else { "mlp-784" };
+    let shape = ModelShape::preset(preset).expect("known preset");
+    let mut b = Bencher::coarse();
+
+    let dense_pool = update_pool(&shape);
+    let codecs = [
+        PayloadCodec::Raw,
+        PayloadCodec::Quant8,
+        PayloadCodec::TopK { keep_frac: 0.1 },
+    ];
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &commits in &[1_000usize, 10_000] {
+        for codec in codecs {
+            let label = codec.label();
+            let encoded_pool: Vec<EncodedUpdate> = dense_pool
+                .iter()
+                .map(|m| codec.encode(m.clone()).expect("encode pool update"))
+                .collect();
+
+            // decode-then-fold: the old engine's per-update cost. Raw
+            // folded the owned dense update directly (no wire work), so
+            // its baseline is the plain dense push.
+            let decode_fold = if codec.is_raw() {
+                b.bench(&format!("decode+fold {commits:>6} commits ({label})"), || {
+                    let mut agg = Aggregator::new(&shape);
+                    for i in 0..commits {
+                        agg.push(&dense_pool[i % POOL], WEIGHT);
+                    }
+                    black_box(agg.finish().expect("non-empty fold"))
+                })
+            } else {
+                let mut scratch = ModelParams::zeros(&shape);
+                b.bench(&format!("decode+fold {commits:>6} commits ({label})"), || {
+                    let mut agg = Aggregator::new(&shape);
+                    for i in 0..commits {
+                        encoded_pool[i % POOL].decode_into(&mut scratch);
+                        agg.push(&scratch, WEIGHT);
+                    }
+                    black_box(agg.finish().expect("non-empty fold"))
+                })
+            };
+
+            // encoded fold: push the wire payloads straight into the
+            // codec-matched lanes; one dequantize/densify at finish.
+            let encoded_fold =
+                b.bench(&format!("encoded-fold {commits:>6} commits ({label})"), || {
+                    let mut agg = EncodedAggregator::for_codec(&shape, codec);
+                    for i in 0..commits {
+                        agg.push_encoded(&encoded_pool[i % POOL], WEIGHT);
+                    }
+                    black_box(agg.finish().expect("non-empty fold"))
+                });
+
+            rows.push(Row {
+                commits,
+                codec_label: label,
+                bytes_per_round: commits * codec.payload_bytes_for(&shape),
+                decode_fold_ns: decode_fold.median_ns,
+                encoded_fold_ns: encoded_fold.median_ns,
+            });
+        }
+    }
+
+    let mut table = String::from(
+        "\n## encoded-domain fold vs decode-then-fold\n\n\
+         | commits | codec | bytes/round | decode+fold | encoded fold | speedup |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for r in &rows {
+        let speedup = r.decode_fold_ns / r.encoded_fold_ns;
+        table.push_str(&format!(
+            "| {} | {} | {:.3} MB | {} | {} | {:.2}x |\n",
+            r.commits,
+            r.codec_label,
+            r.bytes_per_round as f64 / 1e6,
+            cnc_fl::util::bench::fmt_ns(r.decode_fold_ns),
+            cnc_fl::util::bench::fmt_ns(r.encoded_fold_ns),
+            speedup,
+        ));
+        json_rows.push(format!(
+            "    {{\"commits\": {}, \"codec\": \"{}\", \"bytes_per_round\": {}, \
+             \"decode_fold_ns\": {:.1}, \"encoded_fold_ns\": {:.1}, \
+             \"speedup\": {:.3}}}",
+            r.commits,
+            r.codec_label,
+            r.bytes_per_round,
+            r.decode_fold_ns,
+            r.encoded_fold_ns,
+            speedup,
+        ));
+    }
+    println!("{table}");
+
+    let json = format!(
+        "{{\n  \"bench\": \"codec\",\n  \"backend\": \"rust\",\n  \"shape\": \
+         \"{}\",\n  \"weight\": {WEIGHT},\n  \"pool\": {POOL},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        shape.name(),
+        json_rows.join(",\n"),
+    );
+    match std::fs::write("BENCH_codec.json", &json) {
+        Ok(()) => println!("wrote BENCH_codec.json"),
+        Err(e) => eprintln!("BENCH_codec.json not written: {e}"),
+    }
+
+    println!("{}", b.markdown_table());
+}

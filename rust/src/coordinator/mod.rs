@@ -18,6 +18,7 @@ pub use trainer::{MockTrainer, PjrtTrainer, SharedTrainer, Trainer};
 use anyhow::Result;
 
 use crate::model::compress::PayloadCodec;
+use crate::model::encoded::EncodedUpdate;
 use crate::model::params::ModelParams;
 use crate::runtime::ParallelExecutor;
 
@@ -51,13 +52,17 @@ pub(crate) fn cohort_survivors(
 }
 
 /// Train the `active` cohort — `(client id, data size)` pairs in slot
-/// order — against `global`, passing every update through the wire
-/// `codec` (`PayloadCodec::apply_wire`: the identity for `Raw`, the
-/// lossy encode → decode otherwise, so Quant8/TopK lossiness reaches
-/// the aggregate and hence the accuracy) and folding the received
-/// reconstruction through `fold` in slot order (the `model::aggregate`
-/// determinism contract), in parallel when the executor is wider than
-/// one thread and the backend is shared. The codec runs inside the
+/// order — against `global`, **encoding** every update into its wire
+/// form (`PayloadCodec::encode`: the identity move for `Raw`, the lossy
+/// quant8/top-k payload otherwise) and folding the *encoded* update
+/// through `fold` in slot order (the `model::aggregate` determinism
+/// contract), in parallel when the executor is wider than one thread
+/// and the backend is shared. The server side never reconstructs a
+/// dense arena per update: the fold closures push straight into an
+/// [`EncodedAggregator`](crate::model::encoded::EncodedAggregator), so
+/// codec lossiness still reaches the aggregate (both paths fold the
+/// same encoded payload) while the per-update decode of the old
+/// `apply_wire` pipeline is gone entirely. The codec runs inside the
 /// worker on the parallel path, so compression parallelizes with
 /// training. Returns the summed training loss.
 ///
@@ -72,7 +77,7 @@ pub(crate) fn train_cohort(
     epochs: usize,
     round: usize,
     codec: PayloadCodec,
-    mut fold: impl FnMut(&ModelParams, usize),
+    mut fold: impl FnMut(&EncodedUpdate, usize),
 ) -> Result<f64> {
     let mut loss_sum = 0.0f64;
     let parallel =
@@ -85,7 +90,7 @@ pub(crate) fn train_cohort(
             |i| {
                 let (upd, loss) =
                     shared.local_train_shared(active[i].0, global, epochs, round)?;
-                Ok((codec.apply_wire(upd)?, loss))
+                Ok((codec.encode(upd)?, loss))
             },
             |i, (upd, loss)| {
                 loss_sum += loss as f64;
@@ -96,7 +101,7 @@ pub(crate) fn train_cohort(
     } else {
         for &(client, data_size) in active {
             let (upd, loss) = trainer.local_train(client, global, epochs, round)?;
-            let upd = codec.apply_wire(upd)?;
+            let upd = codec.encode(upd)?;
             loss_sum += loss as f64;
             fold(&upd, data_size);
         }

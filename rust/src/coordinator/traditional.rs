@@ -11,11 +11,13 @@
 //!    across a worker pool when the backend is thread-safe
 //!    (`Trainer::as_shared`), serially otherwise;
 //! 4. updates are "transmitted" (simulated uplink: Eq 3/4 costs recorded
-//!    for the codec-compressed Z(w), and each update passes the wire
-//!    codec's lossy round trip — `transport::TransportPlan`) and
-//!    **streamed** into the data-weighted `Aggregator` in cohort slot
-//!    order — O(1) models in memory, and bit-identical results for any
-//!    worker count (see `model::aggregate`'s determinism contract);
+//!    for the codec-compressed Z(w), each update *encoded* into the wire
+//!    form — `transport::TransportPlan`) and **streamed** into the
+//!    data-weighted encoded-domain aggregator (`model::encoded`) in
+//!    cohort slot order, which folds quant8/top-k payloads without a
+//!    per-update decode — O(1) models in memory, and bit-identical
+//!    results for any worker count (see `model::aggregate`'s determinism
+//!    contract);
 //! 5. the new global model is evaluated on the test set.
 //!
 //! All parameter movement (broadcast down, uplink back) is charged
@@ -29,7 +31,7 @@ use crate::cnc::optimize::{CohortStrategy, RbStrategy};
 use crate::cnc::CncSystem;
 use crate::coordinator::trainer::Trainer;
 use crate::metrics::{RoundRecord, RunHistory};
-use crate::model::aggregate::Aggregator;
+use crate::model::encoded::EncodedAggregator;
 use crate::model::params::ModelParams;
 use crate::obs::{Observer, Phase};
 use crate::runtime::ParallelExecutor;
@@ -215,12 +217,13 @@ fn run_rounds(
             );
         }
 
-        // local training, streamed into the aggregator in slot order
-        // (identical fold order on the serial and parallel paths) — the
-        // shared `coordinator::train_cohort` path, same as the fleet
-        // engine's
+        // local training, streamed into the encoded-domain aggregator in
+        // slot order (identical fold order on the serial and parallel
+        // paths) — the shared `coordinator::train_cohort` path, same as
+        // the fleet engine's. Raw lanes are bit-identical to the seed
+        // `Aggregator`; quant8/top-k fold without a per-update decode.
         let sp = obs.tracer.begin_timed(Phase::Train);
-        let mut agg = Aggregator::new(global.shape());
+        let mut agg = EncodedAggregator::for_codec(global.shape(), plan.codec());
         let loss_sum = crate::coordinator::train_cohort(
             trainer,
             &executor,
@@ -229,7 +232,7 @@ fn run_rounds(
             cfg.epoch_local,
             round,
             plan.codec(),
-            |upd, weight| agg.push(upd, weight),
+            |upd, weight| agg.push_encoded(upd, weight),
         )?;
         let compute_wall_s = obs.tracer.end(sp);
         let sp = obs.tracer.begin(Phase::Commit);

@@ -64,10 +64,12 @@
 //! radio uplink per cohort member (at the codec-compressed Z(w) — the
 //! plan scales the channel's payload for the run and restores it at the
 //! end), the shard → region backhaul per committed partial and the
-//! region → root backhaul per merged region. Client updates pass the
-//! wire codec's lossy round trip before the shard fold; partials and the
-//! broadcast are charged but kept arithmetically exact (see the
-//! transport module docs). `transport.codec = Raw` (the default) is
+//! region → root backhaul per merged region. Client updates are encoded
+//! into their lossy wire payload and folded **in the encoded domain**
+//! (`model::encoded` — the shard fold, the region merge and the root
+//! merge all stay encoded; exactly one dequantize/densify at the root's
+//! `finish`); partials and the broadcast are charged but kept
+//! arithmetically exact (see the transport module docs). `transport.codec = Raw` (the default) is
 //! bit-identical to the pre-transport engine; per-round
 //! `uplink_bytes`/`backhaul_bytes`/`broadcast_bytes`/`comm_delay_s`
 //! land in the CSV. An uplink transfer is recorded in the round its
@@ -565,7 +567,8 @@ fn run_rounds(
                 );
             }
             let sp = obs.tracer.begin_timed(Phase::Train);
-            let mut update = ShardUpdate::new(global.shape(), d.shard, round);
+            let mut update =
+                ShardUpdate::for_codec(global.shape(), plan.codec(), d.shard, round);
             // byzantine weather swaps a fraction of updates for poisoned
             // payloads right at the wire point; the guard then decides
             // admission. The fold runs in slot order on the caller
@@ -574,7 +577,13 @@ fn run_rounds(
             // and thread-count-independent. Calm weather takes the
             // `poisoned = None` path with zero extra RNG draws, and
             // admission never modifies an update — honest folds are
-            // bit-identical to the pre-weather engine.
+            // bit-identical to the pre-weather engine. Honest encoded
+            // payloads are admitted *in the encoded domain*
+            // (`UpdateGuard::admit_encoded` — no densify) and folded
+            // into the shard's encoded lanes; a poisoned slot decodes
+            // first so the poison hits the same dense payload the old
+            // decode-per-update pipeline produced (NaN/∞ would clamp
+            // inside a re-encode and dodge the guard).
             let mut byz_rng = (wx.byzantine_frac > 0.0)
                 .then(|| weather.byzantine_rng(round, d.shard));
             let loss_sum = crate::coordinator::train_cohort(
@@ -589,14 +598,24 @@ fn run_rounds(
                     let mut poisoned = None;
                     if let Some(rng) = byz_rng.as_mut() {
                         if rng.next_f64() < wx.byzantine_frac {
-                            poisoned = Some(poison(upd, rng.below(3)));
+                            poisoned = Some(poison(&upd.decode(), rng.below(3)));
                         }
                     }
-                    let candidate = poisoned.as_ref().unwrap_or(upd);
-                    if guard.admit(candidate) {
-                        update.push(candidate, weight);
-                    } else {
-                        update.rejected_updates += 1;
+                    match &poisoned {
+                        Some(p) => {
+                            if guard.admit(p) {
+                                update.push(p, weight);
+                            } else {
+                                update.rejected_updates += 1;
+                            }
+                        }
+                        None => {
+                            if guard.admit_encoded(upd) {
+                                update.push_encoded(upd, weight);
+                            } else {
+                                update.rejected_updates += 1;
+                            }
+                        }
                     }
                 },
             )?;

@@ -2,8 +2,12 @@
 //! folds over shard partials, and a root fold over region partials.
 //!
 //! Each shard folds its cohort's updates with a local streaming
-//! [`Aggregator`] exactly as the flat coordinator does (Eq 1, slot
-//! order), producing a [`ShardUpdate`]: the unnormalized partial sums
+//! [`EncodedAggregator`] exactly as the flat coordinator does (Eq 1,
+//! slot order — bit-identical to the dense
+//! [`Aggregator`](crate::model::aggregate::Aggregator) on the raw
+//! codec, and folding quant8/top-k payloads in the encoded domain so
+//! backhaul merges never densify per update), producing a
+//! [`ShardUpdate`]: the unnormalized partial sums
 //! `Σ wᵢ·xᵢ` / `Σ wᵢ` tagged with the round whose global model the shard
 //! trained on. A [`RegionAggregator`] folds its region's shard partials
 //! (shard order) into a [`RegionUpdate`]; the [`RootAggregator`] then
@@ -32,7 +36,8 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::model::aggregate::Aggregator;
+use crate::model::compress::PayloadCodec;
+use crate::model::encoded::{EncodedAggregator, EncodedUpdate};
 use crate::model::params::ModelParams;
 use crate::model::shape::ModelShape;
 use crate::runtime::ParallelExecutor;
@@ -48,17 +53,29 @@ pub struct ShardUpdate {
     /// (poisoned payloads) — carried up the hierarchy like staleness is,
     /// so the root can report the round's total guard activity
     pub rejected_updates: usize,
-    agg: Aggregator,
+    agg: EncodedAggregator,
 }
 
 impl ShardUpdate {
-    /// An empty shard fold laid out for `shape` (the global model's).
+    /// An empty shard fold laid out for `shape` (the global model's),
+    /// with dense (raw-codec) accumulation lanes.
     pub fn new(shape: &Arc<ModelShape>, shard: usize, round_tag: usize) -> Self {
+        Self::for_codec(shape, PayloadCodec::Raw, shard, round_tag)
+    }
+
+    /// An empty shard fold whose lanes match `codec`, so the cohort's
+    /// encoded wire payloads fold without a per-update decode.
+    pub fn for_codec(
+        shape: &Arc<ModelShape>,
+        codec: PayloadCodec,
+        shard: usize,
+        round_tag: usize,
+    ) -> Self {
         ShardUpdate {
             shard,
             round_tag,
             rejected_updates: 0,
-            agg: Aggregator::new(shape),
+            agg: EncodedAggregator::for_codec(shape, codec),
         }
     }
 
@@ -66,6 +83,12 @@ impl ShardUpdate {
     /// same determinism contract as the flat coordinator).
     pub fn push(&mut self, update: &ModelParams, weight: usize) {
         self.agg.push(update, weight);
+    }
+
+    /// Fold one cohort member's *encoded* wire payload in, staying in
+    /// the encoded domain (see [`EncodedAggregator::push_encoded`]).
+    pub fn push_encoded(&mut self, update: &EncodedUpdate, weight: usize) {
+        self.agg.push_encoded(update, weight);
     }
 
     pub fn count(&self) -> usize {
@@ -103,16 +126,19 @@ pub struct RegionUpdate {
     /// (shard-fold rejections carried in by the partials, plus every
     /// folded update of a trim-dropped partial)
     pub rejected_updates: usize,
-    agg: Aggregator,
+    agg: EncodedAggregator,
 }
 
 /// Folds one region's shard partials under the bounded-staleness policy.
 /// The fold order (shard order within the region) is the caller's
-/// determinism contract, exactly like [`Aggregator::push`]'s.
+/// determinism contract, exactly like [`EncodedAggregator::push`]'s.
+/// The region arena starts with dense lanes and **adopts** the lane kind
+/// of the first non-empty shard partial it merges, so encoded shard
+/// folds ride the backhaul and up the tiers without densifying.
 #[derive(Debug, Clone)]
 pub struct RegionAggregator {
     region: usize,
-    agg: Aggregator,
+    agg: EncodedAggregator,
     max_staleness: usize,
     decay: f64,
     accepted: usize,
@@ -126,7 +152,7 @@ impl RegionAggregator {
     /// `decay` is the per-round multiplicative weight discount for stale
     /// updates (must be in (0, 1]); `max_staleness = 0` accepts only
     /// current-round updates. The arena is laid out for `shape`; a shard
-    /// update of a different layout panics (see `model::aggregate`).
+    /// update of a different layout panics (see `model::encoded`).
     pub fn new(
         shape: &Arc<ModelShape>,
         region: usize,
@@ -139,7 +165,7 @@ impl RegionAggregator {
         );
         RegionAggregator {
             region,
-            agg: Aggregator::new(shape),
+            agg: EncodedAggregator::new(shape),
             max_staleness,
             decay,
             accepted: 0,
@@ -204,7 +230,7 @@ impl RegionAggregator {
 /// The root of the aggregation hierarchy for one commit round.
 #[derive(Debug, Clone)]
 pub struct RootAggregator {
-    root: Aggregator,
+    root: EncodedAggregator,
     max_staleness: usize,
     decay: f64,
     accepted: usize,
@@ -224,7 +250,7 @@ impl RootAggregator {
             "staleness decay {decay} outside (0, 1]"
         );
         RootAggregator {
-            root: Aggregator::new(shape),
+            root: EncodedAggregator::new(shape),
             max_staleness,
             decay,
             accepted: 0,

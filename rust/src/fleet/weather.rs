@@ -40,6 +40,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::model::encoded::EncodedUpdate;
 use crate::model::params::ModelParams;
 use crate::util::rng::Pcg64;
 
@@ -537,6 +538,22 @@ impl UpdateGuard {
         }
         sq.sqrt() <= self.policy.clip_norm
     }
+
+    /// [`admit`](Self::admit) straight off the wire form — the norm and
+    /// finiteness checks run on the *encoded* payload
+    /// ([`EncodedUpdate::l2_norm`] / [`EncodedUpdate::is_finite`]:
+    /// integer code moments for quant8, kept entries for top-k), so
+    /// admission never densifies an update. A raw (dense) payload takes
+    /// the exact [`admit`](Self::admit) path, bit-for-bit.
+    pub fn admit_encoded(&self, update: &EncodedUpdate) -> bool {
+        if !self.policy.enabled {
+            return true;
+        }
+        match update {
+            EncodedUpdate::Dense(m) => self.admit(m),
+            enc => enc.is_finite() && enc.l2_norm() <= self.policy.clip_norm,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -791,6 +808,47 @@ mod tests {
             .all(|v| v.is_infinite() && *v > 0.0));
         let scaled = poison(&p, 2);
         assert!(scaled.as_slice().iter().all(|&v| v == 0.25e6));
+    }
+
+    #[test]
+    fn encoded_admission_matches_dense_admission() {
+        use crate::model::compress::PayloadCodec;
+        let guard = UpdateGuard::new(&GuardPolicy::default());
+        let honest = params_with(0.3);
+        let codecs = [
+            PayloadCodec::Raw,
+            PayloadCodec::Quant8,
+            PayloadCodec::TopK { keep_frac: 0.25 },
+        ];
+        for codec in codecs {
+            let enc = codec.encode(honest.clone()).unwrap();
+            assert!(guard.admit_encoded(&enc), "{}", enc.codec_label());
+            assert_eq!(
+                guard.admit_encoded(&enc),
+                guard.admit(&enc.decode()),
+                "{}",
+                enc.codec_label()
+            );
+        }
+        // the ×1e6 norm attack stays rejectable without densifying: the
+        // quant8 grid keeps the hostile magnitude, and the integer-moment
+        // norm sees it. Top-k drops all but the kept entries on *both*
+        // paths, so its verdict is pinned to the decoded one instead.
+        let hot = poison(&honest, 2);
+        for codec in codecs {
+            let enc = codec.encode(hot.clone()).unwrap();
+            assert_eq!(
+                guard.admit_encoded(&enc),
+                guard.admit(&enc.decode()),
+                "{}",
+                enc.codec_label()
+            );
+        }
+        assert!(!guard.admit_encoded(&PayloadCodec::Raw.encode(hot.clone()).unwrap()));
+        assert!(!guard.admit_encoded(&PayloadCodec::Quant8.encode(hot.clone()).unwrap()));
+        let off = UpdateGuard::new(&GuardPolicy::off());
+        let enc = PayloadCodec::Quant8.encode(hot).unwrap();
+        assert!(off.admit_encoded(&enc));
     }
 
     #[test]

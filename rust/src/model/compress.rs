@@ -129,14 +129,27 @@ impl PayloadCodec {
     }
 
     /// Apply the wire's encode → decode to an owned update — what the
-    /// engines call on every transmitted client update. `Raw` is the
-    /// identity and moves the params through untouched (no clone, no
-    /// arithmetic — the bit-identity contract of `--codec raw`).
-    pub fn apply_wire(&self, params: ModelParams) -> Result<ModelParams> {
-        if self.is_raw() {
-            Ok(params)
-        } else {
-            self.round_trip(&params)
+    /// p2p chain (and any caller that needs the *decoded* wire view)
+    /// calls per transmitted update; the server-side fold now consumes
+    /// [`encode`](Self::encode) directly instead. `Raw` is the identity
+    /// and moves the params through untouched (no clone, no arithmetic —
+    /// the bit-identity contract of `--codec raw`); lossy codecs decode
+    /// back into the owned arena, so no fresh arena is allocated per
+    /// update.
+    pub fn apply_wire(&self, mut params: ModelParams) -> Result<ModelParams> {
+        match self {
+            PayloadCodec::Raw => Ok(params),
+            PayloadCodec::Quant8 => {
+                let q = quantize8(&params);
+                dequantize8_into(&q, &mut params);
+                Ok(params)
+            }
+            PayloadCodec::TopK { keep_frac } => {
+                self.validate()?;
+                let s = sparsify_topk(&params, *keep_frac);
+                s.densify_into(&mut params);
+                Ok(params)
+            }
         }
     }
 }
@@ -230,14 +243,27 @@ pub fn quantize8(params: &ModelParams) -> Quantized {
 
 pub fn dequantize8(q: &Quantized) -> ModelParams {
     let mut m = ModelParams::zeros(&q.shape);
+    dequantize8_into(q, &mut m);
+    m
+}
+
+/// [`dequantize8`] into an existing arena — every slot is overwritten,
+/// so a scratch arena can be reused across updates without re-zeroing.
+/// Panics when the arena's layout differs from the payload's.
+pub fn dequantize8_into(q: &Quantized, out: &mut ModelParams) {
+    assert!(
+        crate::model::shape::same(&q.shape, out.shape()),
+        "decoding `{}` payload into `{}` arena",
+        q.shape.name(),
+        out.shape().name()
+    );
     for (i, (codes, (&lo, &scale))) in
         q.codes.iter().zip(q.mins.iter().zip(&q.scales)).enumerate()
     {
-        for (dst, &c) in m.tensor_mut(i).iter_mut().zip(codes) {
+        for (dst, &c) in out.tensor_mut(i).iter_mut().zip(codes) {
             *dst = lo + c as f32 * scale;
         }
     }
-    m
 }
 
 // ---------------------------------------------------------------------------
@@ -262,9 +288,14 @@ pub fn sparsify_topk(params: &ModelParams, frac: f32) -> SparseUpdate {
             let k = keep_count(t.len(), frac);
             let mut idx: Vec<u32> = (0..t.len() as u32).collect();
             // partial selection of the top-k by |value|; total_cmp is
-            // NaN-safe (positive NaN > inf > finite)
+            // NaN-safe (positive NaN > inf > finite). Tied magnitudes
+            // break by ascending index, so the *selected set* is
+            // deterministic even when ties straddle the k boundary.
             idx.select_nth_unstable_by(k - 1, |&a, &b| {
-                t[b as usize].abs().total_cmp(&t[a as usize].abs())
+                t[b as usize]
+                    .abs()
+                    .total_cmp(&t[a as usize].abs())
+                    .then(a.cmp(&b))
             });
             let mut kept: Vec<(u32, f32)> =
                 idx[..k].iter().map(|&i| (i, t[i as usize])).collect();
@@ -283,13 +314,27 @@ impl SparseUpdate {
     /// elsewhere (the carried shape fixes the arena layout).
     pub fn densify(&self) -> ModelParams {
         let mut m = ModelParams::zeros(&self.shape);
+        self.densify_into(&mut m);
+        m
+    }
+
+    /// [`densify`](Self::densify) into an existing arena (zero-filled
+    /// first, then scattered) — the scratch-reuse decode. Panics when
+    /// the arena's layout differs from the payload's.
+    pub fn densify_into(&self, out: &mut ModelParams) {
+        assert!(
+            crate::model::shape::same(&self.shape, out.shape()),
+            "decoding `{}` payload into `{}` arena",
+            self.shape.name(),
+            out.shape().name()
+        );
+        out.as_mut_slice().fill(0.0);
         for (i, kept) in self.entries.iter().enumerate() {
-            let t = m.tensor_mut(i);
+            let t = out.tensor_mut(i);
             for &(idx, v) in kept {
                 t[idx as usize] = v;
             }
         }
-        m
     }
 
     pub fn nnz(&self) -> usize {
@@ -451,6 +496,60 @@ mod tests {
         assert!(d.tensor(3)[1].is_nan());
         // a NaN-free tensor of the same model is unaffected
         assert!(d.tensor(0).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn topk_tied_magnitudes_select_deterministically_by_index() {
+        // regression for the selection tiebreak: with more tied
+        // magnitudes than k, the kept set must be the lowest indices of
+        // the tie class — pinned, not whatever partition order the
+        // selection algorithm happened to leave
+        let mut m = ModelParams::zeros(&shape());
+        m.tensor_mut(3)
+            .copy_from_slice(&[0.5, -0.5, 0.5, 0.5, -0.5, 0.5, 0.5, -0.5, 0.5, 0.5]);
+        let s = sparsify_topk(&m, 0.3); // k = 3, all 10 magnitudes tie
+        let kept: Vec<u32> = s.entries[3].iter().map(|&(i, _)| i).collect();
+        assert_eq!(kept, vec![0, 1, 2]);
+        // a mixed case: ties only around the boundary
+        m.tensor_mut(3)
+            .copy_from_slice(&[0.1, 2.0, 0.5, 0.5, 0.5, 0.5, 0.0, 3.0, 0.2, 0.3]);
+        let s = sparsify_topk(&m, 0.3);
+        let kept: Vec<u32> = s.entries[3].iter().map(|&(i, _)| i).collect();
+        assert_eq!(kept, vec![1, 2, 7]); // |3|, |2|, then first of the 0.5 tie
+        // and selection is reproducible call-to-call
+        let again: Vec<u32> = sparsify_topk(&m, 0.3).entries[3]
+            .iter()
+            .map(|&(i, _)| i)
+            .collect();
+        assert_eq!(kept, again);
+    }
+
+    #[test]
+    fn dequantize8_into_matches_and_overwrites_the_scratch() {
+        let m = random_params(20);
+        let q = quantize8(&m);
+        let mut scratch = random_params(21); // dirty arena
+        dequantize8_into(&q, &mut scratch);
+        assert_eq!(scratch, dequantize8(&q));
+    }
+
+    #[test]
+    fn densify_into_matches_and_zero_fills_the_scratch() {
+        let m = random_params(22);
+        let s = sparsify_topk(&m, 0.1);
+        let mut scratch = random_params(23); // dirty arena
+        s.densify_into(&mut scratch);
+        assert_eq!(scratch, s.densify());
+    }
+
+    #[test]
+    #[should_panic(expected = "decoding")]
+    fn densify_into_rejects_mismatched_arena() {
+        let m = random_params(24);
+        let s = sparsify_topk(&m, 0.1);
+        let small = ModelShape::preset("mlp-small").unwrap();
+        let mut scratch = ModelParams::zeros(&small);
+        s.densify_into(&mut scratch);
     }
 
     #[test]

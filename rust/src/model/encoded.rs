@@ -1,0 +1,1040 @@
+//! Encoded-domain aggregation: fold compressed client updates without a
+//! per-update decode.
+//!
+//! The transport plane (PR 5) charges Eq (3)/(4) for the *compressed*
+//! payload, but the server still paid full price arithmetically: every
+//! quant8/top-k update was decoded back to a dense f32 arena
+//! (`dequantize8` / `densify`) before [`Aggregator`]-style accumulation.
+//! At 10⁴+ commits/round that decode+densify dominates the fold — the
+//! server-side aggregation bottleneck the massive-device FL surveys flag
+//! (arXiv:2006.02931, arXiv:2310.05269).
+//!
+//! [`EncodedAggregator`] folds in the wire domain instead:
+//!
+//! * **quant8** — each update's decoded entry is `lo + c·s` (per-tensor
+//!   affine grid), so its weighted contribution splits into a per-tensor
+//!   bias `w·lo` plus a fused per-entry term `(w·s)·c`. The fold keeps a
+//!   flat f32 lane arena for `Σ (wᵢ·sᵢ)·cᵢ[j]` (one u8 load + one FMA per
+//!   entry — no dense reconstruction) and an f64 `Σ wᵢ·loᵢ` per tensor.
+//!   Because every update carries its *own* grid, integer `Σ c` lanes
+//!   cannot be shared across updates (the ISSUE's i32/i64 sketch); the
+//!   fused float lane is the form that actually folds per-update grids
+//!   without a decode.
+//! * **top-k** — sparse updates merge index-wise into a per-tensor
+//!   accumulator kept as an index-**sorted** `Vec<(u32, f32)>`
+//!   (deterministic iteration; no hash maps), promoted to a dense lane
+//!   once occupancy crosses half the tensor so later pushes are O(k)
+//!   scatter-adds. It densifies exactly once, at [`finish`].
+//! * **raw** — a dense lane arena whose operations are transcribed
+//!   line-for-line from [`Aggregator`] (`add_scaled` fold, bitwise
+//!   copy on merge-into-empty, identical panic/error messages), so the
+//!   `--codec raw` engines stay **bit-identical** to the seed fold.
+//!
+//! [`finish`]: EncodedAggregator::finish
+//!
+//! # Equivalence contract
+//!
+//! * **raw**: bit-identical to [`Aggregator`] for any push/merge/
+//!   merge_scaled/finish sequence — pinned by `tests/encoded_agg_props.rs`
+//!   across all shape presets, serial and parallel.
+//! * **quant8 / top-k**: the encoded fold computes the same weighted sum
+//!   as decode-then-fold with the same or higher intermediate precision
+//!   (f32 lanes + f64 bias vs. an all-f32 dense fold), so the finished
+//!   means agree within accumulation rounding — bounded well under
+//!   `1e-4` absolute for the tested update distributions, and property-
+//!   tested at that bound. The *codec loss* itself (grid rounding,
+//!   dropped entries) is identical on both paths by construction: both
+//!   fold the same encoded payload.
+//!
+//! # Mixed pushes
+//!
+//! A dense update can always be folded into an encoded accumulator (the
+//! byzantine weather path decodes, poisons, then pushes dense): it lands
+//! in a dense **side lane** combined at `finish`. Folding one *encoded*
+//! kind into an accumulator built for another is a programming error and
+//! panics, mirroring the shape contract of [`Aggregator`].
+
+use std::cmp::Ordering;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::model::compress::{
+    dequantize8_into, quantize8, sparsify_topk, PayloadCodec, Quantized, SparseUpdate,
+};
+use crate::model::params::ModelParams;
+use crate::model::shape::{self, ModelShape};
+
+#[cfg(doc)]
+use crate::model::aggregate::Aggregator;
+
+/// One client update in its wire form — what the engines now hand the
+/// fold closure instead of a decoded dense arena.
+#[derive(Debug, Clone)]
+pub enum EncodedUpdate {
+    /// raw codec: the dense params, moved through untouched
+    Dense(ModelParams),
+    /// quant8 codec: u8 codes + per-tensor affine grid
+    Quant8(Quantized),
+    /// top-k codec: index-sorted (index, value) pairs per tensor
+    TopK(SparseUpdate),
+}
+
+impl EncodedUpdate {
+    /// The arena layout this update decodes into.
+    pub fn shape(&self) -> &Arc<ModelShape> {
+        match self {
+            EncodedUpdate::Dense(m) => m.shape(),
+            EncodedUpdate::Quant8(q) => &q.shape,
+            EncodedUpdate::TopK(s) => &s.shape,
+        }
+    }
+
+    /// Codec tag for diagnostics and mixed-push panics.
+    pub fn codec_label(&self) -> &'static str {
+        match self {
+            EncodedUpdate::Dense(_) => "raw",
+            EncodedUpdate::Quant8(_) => "quant8",
+            EncodedUpdate::TopK(_) => "topk",
+        }
+    }
+
+    /// True when every value the decoder would reconstruct is finite —
+    /// the guard's finite check without densifying. A quant8 payload
+    /// decodes to `lo + c·s`, finite iff its grid is finite (`quantize8`
+    /// always emits finite grids, but a hand-built payload may not).
+    pub fn is_finite(&self) -> bool {
+        match self {
+            EncodedUpdate::Dense(m) => m.as_slice().iter().all(|v| v.is_finite()),
+            EncodedUpdate::Quant8(q) => {
+                q.mins.iter().all(|v| v.is_finite())
+                    && q.scales.iter().all(|v| v.is_finite())
+            }
+            EncodedUpdate::TopK(s) => s
+                .entries
+                .iter()
+                .all(|t| t.iter().all(|&(_, v)| v.is_finite())),
+        }
+    }
+
+    /// L2 norm of the decoded update, computed from the encoded form.
+    /// Top-k sums its kept values directly (dropped entries are exact
+    /// zeros); quant8 expands `Σ (lo + c·s)²` into the integer moments
+    /// `Σ c` and `Σ c²` (both fit u64 for any supported shape), so the
+    /// norm costs one u8 pass and no float grid reconstruction.
+    pub fn l2_norm(&self) -> f64 {
+        let sq: f64 = match self {
+            EncodedUpdate::Dense(m) => m
+                .as_slice()
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum(),
+            EncodedUpdate::Quant8(q) => q
+                .codes
+                .iter()
+                .zip(q.mins.iter().zip(&q.scales))
+                .map(|(codes, (&lo, &s))| {
+                    let mut c1 = 0u64; // Σ c   ≤ 255·n
+                    let mut c2 = 0u64; // Σ c²  ≤ 255²·n
+                    for &c in codes {
+                        c1 += c as u64;
+                        c2 += (c as u64) * (c as u64);
+                    }
+                    let (n, lo, s) = (codes.len() as f64, lo as f64, s as f64);
+                    n * lo * lo + 2.0 * lo * s * c1 as f64 + s * s * c2 as f64
+                })
+                .sum(),
+            EncodedUpdate::TopK(s) => s
+                .entries
+                .iter()
+                .flat_map(|t| t.iter())
+                .map(|&(_, v)| (v as f64) * (v as f64))
+                .sum(),
+        };
+        sq.sqrt()
+    }
+
+    /// Reconstruct the dense update (allocates a fresh arena).
+    pub fn decode(&self) -> ModelParams {
+        let mut out = ModelParams::zeros(self.shape());
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Reconstruct the dense update into an existing arena — the
+    /// scratch-reuse decode for the poison path and the bench baseline.
+    pub fn decode_into(&self, out: &mut ModelParams) {
+        assert!(
+            shape::same(self.shape(), out.shape()),
+            "decoding `{}` update into `{}` arena",
+            self.shape().name(),
+            out.shape().name()
+        );
+        match self {
+            EncodedUpdate::Dense(m) => out.as_mut_slice().copy_from_slice(m.as_slice()),
+            EncodedUpdate::Quant8(q) => dequantize8_into(q, out),
+            EncodedUpdate::TopK(s) => s.densify_into(out),
+        }
+    }
+}
+
+impl PayloadCodec {
+    /// Encode an owned update into its wire form *without* decoding it
+    /// back — what the engines now call per transmitted client update.
+    /// `Raw` moves the params through untouched (no clone, no arithmetic
+    /// — the bit-identity contract of `--codec raw`).
+    pub fn encode(&self, params: ModelParams) -> Result<EncodedUpdate> {
+        match self {
+            PayloadCodec::Raw => Ok(EncodedUpdate::Dense(params)),
+            PayloadCodec::Quant8 => Ok(EncodedUpdate::Quant8(quantize8(&params))),
+            PayloadCodec::TopK { keep_frac } => {
+                self.validate()?;
+                Ok(EncodedUpdate::TopK(sparsify_topk(&params, *keep_frac)))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the encoded-domain accumulator
+// ---------------------------------------------------------------------------
+
+/// Streaming data-weighted average over encoded updates — the
+/// encoded-domain counterpart of [`Aggregator`], with the same
+/// determinism contract (callers push/merge in canonical slot order) and
+/// the same shape contract (layout mismatch panics).
+#[derive(Debug, Clone)]
+pub struct EncodedAggregator {
+    lanes: Lanes,
+    /// running `Σ wᵢ` (f64: exact for integer data-size weights)
+    weight_sum: f64,
+    count: usize,
+}
+
+#[derive(Debug, Clone)]
+enum Lanes {
+    /// raw codec (and plain dense folds): `Σ wᵢ·xᵢ` over the flat arena,
+    /// transcribed from [`Aggregator`] so the raw path is bit-identical
+    Dense(ModelParams),
+    Quant(QuantLanes),
+    TopK(TopkLanes),
+}
+
+#[derive(Debug, Clone)]
+struct QuantLanes {
+    /// per-entry `Σ (wᵢ·sᵢ_t)·cᵢ[j]` — flat f32 arena in model layout
+    acc: ModelParams,
+    /// per-tensor `Σ wᵢ·loᵢ_t`
+    bias: Vec<f64>,
+    /// dense side lane for decoded pushes (see module docs)
+    side: Option<Box<ModelParams>>,
+}
+
+#[derive(Debug, Clone)]
+struct TopkLanes {
+    shape: Arc<ModelShape>,
+    /// one accumulator per tensor, index-sorted while sparse
+    tensors: Vec<SparseAcc>,
+    /// dense side lane for decoded pushes (see module docs)
+    side: Option<Box<ModelParams>>,
+}
+
+#[derive(Debug, Clone)]
+enum SparseAcc {
+    /// `(index, Σ wᵢ·vᵢ)` sorted by index — merged index-wise per push
+    Sparse(Vec<(u32, f32)>),
+    /// promoted once occupancy crosses half the tensor: O(k) scatter-add
+    Dense(Vec<f32>),
+}
+
+impl Lanes {
+    fn label(&self) -> &'static str {
+        match self {
+            Lanes::Dense(_) => "raw",
+            Lanes::Quant(_) => "quant8",
+            Lanes::TopK(_) => "topk",
+        }
+    }
+}
+
+impl EncodedAggregator {
+    /// An empty accumulator with a dense (raw) lane — drop-in for
+    /// [`Aggregator::new`]. Merging an encoded partial into it while
+    /// still empty adopts the partial's encoding, so per-round roots can
+    /// stay codec-agnostic.
+    pub fn new(shape: &Arc<ModelShape>) -> Self {
+        Self::for_codec(shape, PayloadCodec::Raw)
+    }
+
+    /// An empty accumulator laid out for `codec`'s wire form.
+    pub fn for_codec(shape: &Arc<ModelShape>, codec: PayloadCodec) -> Self {
+        let lanes = match codec {
+            PayloadCodec::Raw => Lanes::Dense(ModelParams::zeros(shape)),
+            PayloadCodec::Quant8 => Lanes::Quant(QuantLanes {
+                acc: ModelParams::zeros(shape),
+                bias: vec![0.0; shape.num_tensors()],
+                side: None,
+            }),
+            PayloadCodec::TopK { .. } => Lanes::TopK(TopkLanes {
+                shape: Arc::clone(shape),
+                tensors: vec![SparseAcc::Sparse(Vec::new()); shape.num_tensors()],
+                side: None,
+            }),
+        };
+        EncodedAggregator {
+            lanes,
+            weight_sum: 0.0,
+            count: 0,
+        }
+    }
+
+    /// The layout this aggregator folds over.
+    pub fn shape(&self) -> &Arc<ModelShape> {
+        match &self.lanes {
+            Lanes::Dense(acc) => acc.shape(),
+            Lanes::Quant(l) => l.acc.shape(),
+            Lanes::TopK(l) => &l.shape,
+        }
+    }
+
+    /// The wire form this accumulator folds natively.
+    pub fn codec_label(&self) -> &'static str {
+        self.lanes.label()
+    }
+
+    /// Number of updates folded so far.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Sum of the weights folded so far.
+    pub fn total_weight(&self) -> f64 {
+        self.weight_sum
+    }
+
+    /// Fold one *dense* update in — [`Aggregator::push`] semantics. On a
+    /// dense-lane accumulator this is the exact seed fold; on an encoded
+    /// accumulator it lands in the side lane.
+    pub fn push(&mut self, update: &ModelParams, weight: usize) {
+        assert!(
+            shape::same(self.shape(), update.shape()),
+            "aggregating `{}` update into `{}` accumulator",
+            update.shape().name(),
+            self.shape().name()
+        );
+        let w = weight as f32;
+        match &mut self.lanes {
+            Lanes::Dense(acc) => acc.add_scaled(update, w),
+            Lanes::Quant(l) => side_add(&mut l.side, update, w),
+            Lanes::TopK(l) => side_add(&mut l.side, update, w),
+        }
+        self.weight_sum += weight as f64;
+        self.count += 1;
+    }
+
+    /// Fold one encoded update in without decoding it. Raw payloads take
+    /// the dense path; an encoded payload of a *different* kind than the
+    /// accumulator's lanes panics (programming error, like a shape
+    /// mismatch).
+    pub fn push_encoded(&mut self, update: &EncodedUpdate, weight: usize) {
+        if let EncodedUpdate::Dense(m) = update {
+            self.push(m, weight);
+            return;
+        }
+        assert!(
+            shape::same(self.shape(), update.shape()),
+            "aggregating `{}` update into `{}` accumulator",
+            update.shape().name(),
+            self.shape().name()
+        );
+        match (&mut self.lanes, update) {
+            (Lanes::Quant(l), EncodedUpdate::Quant8(q)) => l.push(q, weight),
+            (Lanes::TopK(l), EncodedUpdate::TopK(s)) => l.push(s, weight),
+            (lanes, upd) => panic!(
+                "aggregating `{}`-encoded update into `{}`-lane accumulator",
+                upd.codec_label(),
+                lanes.label()
+            ),
+        }
+        self.weight_sum += weight as f64;
+        self.count += 1;
+    }
+
+    /// L2 norm of the mean update this aggregator would produce
+    /// (`‖Σ wᵢ·xᵢ‖ / Σ wᵢ`), f64-accumulated — [`Aggregator::mean_l2_norm`]
+    /// semantics; the trimmed-mean guard orders shard partials by this.
+    pub fn mean_l2_norm(&self) -> f64 {
+        if self.count == 0 || self.weight_sum <= 0.0 {
+            return 0.0;
+        }
+        let sq: f64 = match &self.lanes {
+            Lanes::Dense(acc) => acc
+                .as_slice()
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum(),
+            Lanes::Quant(l) => {
+                let tensors = l.acc.shape().num_tensors();
+                (0..tensors)
+                    .map(|t| {
+                        let b = l.bias[t];
+                        let side_t = l.side.as_ref().map(|m| m.tensor(t));
+                        l.acc
+                            .tensor(t)
+                            .iter()
+                            .enumerate()
+                            .map(|(j, &a)| {
+                                let s = side_t.map_or(0.0, |s| s[j] as f64);
+                                let v = a as f64 + b + s;
+                                v * v
+                            })
+                            .sum::<f64>()
+                    })
+                    .sum()
+            }
+            Lanes::TopK(l) => (0..l.shape.num_tensors())
+                .map(|t| {
+                    let side_t = l.side.as_ref().map(|m| m.tensor(t));
+                    l.tensors[t].sq_sum(l.shape.elements(t), side_t)
+                })
+                .sum(),
+        };
+        sq.sqrt() / self.weight_sum
+    }
+
+    /// Fold another accumulator's partial sums into this one — the
+    /// backhaul step of the fleet hierarchy, staying encoded. Merging
+    /// into an **empty** accumulator adopts the partial's lanes (bitwise
+    /// copy on the dense path — [`Aggregator::merge`] semantics). Panics
+    /// on layout or lane-kind mismatch.
+    pub fn merge(&mut self, other: &EncodedAggregator) {
+        self.assert_merge_shapes(other);
+        if self.count == 0 {
+            match (&mut self.lanes, &other.lanes) {
+                // bitwise copy into the existing arena — no fresh
+                // allocation for the per-round root of the hierarchy
+                (Lanes::Dense(acc), Lanes::Dense(o)) => {
+                    acc.as_mut_slice().copy_from_slice(o.as_slice());
+                }
+                (lanes, o) => *lanes = o.clone(),
+            }
+            self.weight_sum = other.weight_sum;
+            self.count = other.count;
+            return;
+        }
+        self.fold_lanes(other, 1.0);
+        self.weight_sum += other.weight_sum;
+        self.count += other.count;
+    }
+
+    /// [`merge`](Self::merge) with the incoming partial's weight scaled
+    /// by `factor` — the staleness-decay hook. `factor == 1.0` takes the
+    /// exact (unscaled) merge path.
+    pub fn merge_scaled(&mut self, other: &EncodedAggregator, factor: f64) {
+        if factor == 1.0 {
+            self.merge(other);
+            return;
+        }
+        self.assert_merge_shapes(other);
+        if self.count == 0 && !lanes_match(&self.lanes, &other.lanes) {
+            // an empty accumulator adopts the incoming encoding, scaled
+            let mut lanes = other.lanes.clone();
+            lanes.scale(factor);
+            self.lanes = lanes;
+        } else {
+            self.fold_lanes(other, factor);
+        }
+        self.weight_sum += factor * other.weight_sum;
+        self.count += other.count;
+    }
+
+    /// Normalize and return the aggregate — the round's **single**
+    /// dequantize/densify. Error cases match [`Aggregator::finish`].
+    pub fn finish(self) -> Result<ModelParams> {
+        if self.count == 0 {
+            bail!("weighted_average of zero models");
+        }
+        if self.weight_sum <= 0.0 {
+            bail!("weighted_average with zero total weight");
+        }
+        let inv = 1.0 / self.weight_sum;
+        match self.lanes {
+            Lanes::Dense(mut acc) => {
+                acc.scale(inv as f32);
+                Ok(acc)
+            }
+            Lanes::Quant(l) => {
+                let QuantLanes { mut acc, bias, side } = l;
+                let tensors = acc.shape().num_tensors();
+                for t in 0..tensors {
+                    let b = bias[t];
+                    let side_t = side.as_ref().map(|m| m.tensor(t));
+                    let dst = acc.tensor_mut(t);
+                    for (j, d) in dst.iter_mut().enumerate() {
+                        let s = side_t.map_or(0.0, |s| s[j] as f64);
+                        *d = ((*d as f64 + b + s) * inv) as f32;
+                    }
+                }
+                Ok(acc)
+            }
+            Lanes::TopK(l) => {
+                let TopkLanes { shape, tensors, side } = l;
+                let mut out = match side {
+                    Some(b) => *b,
+                    None => ModelParams::zeros(&shape),
+                };
+                for (t, acc) in tensors.iter().enumerate() {
+                    let dst = out.tensor_mut(t);
+                    match acc {
+                        SparseAcc::Dense(d) => {
+                            for (o, &v) in dst.iter_mut().zip(d) {
+                                *o = ((*o as f64 + v as f64) * inv) as f32;
+                            }
+                        }
+                        SparseAcc::Sparse(pairs) => {
+                            for &(i, v) in pairs {
+                                dst[i as usize] += v;
+                            }
+                            for o in dst.iter_mut() {
+                                *o = ((*o as f64) * inv) as f32;
+                            }
+                        }
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    fn assert_merge_shapes(&self, other: &EncodedAggregator) {
+        assert!(
+            shape::same(self.shape(), other.shape()),
+            "merging `{}` partial into `{}` accumulator",
+            other.shape().name(),
+            self.shape().name()
+        );
+    }
+
+    fn fold_lanes(&mut self, other: &EncodedAggregator, factor: f64) {
+        let f = factor as f32;
+        match (&mut self.lanes, &other.lanes) {
+            (Lanes::Dense(acc), Lanes::Dense(o)) => acc.add_scaled(o, f),
+            (Lanes::Quant(a), Lanes::Quant(b)) => {
+                a.acc.add_scaled(&b.acc, f);
+                for (x, &y) in a.bias.iter_mut().zip(&b.bias) {
+                    *x += factor * y;
+                }
+                if let Some(o) = &b.side {
+                    side_add(&mut a.side, o, f);
+                }
+            }
+            (Lanes::TopK(a), Lanes::TopK(b)) => {
+                for (t, (x, y)) in a.tensors.iter_mut().zip(&b.tensors).enumerate() {
+                    x.fold_from(y, f, a.shape.elements(t));
+                }
+                if let Some(o) = &b.side {
+                    side_add(&mut a.side, o, f);
+                }
+            }
+            (lanes, o) => panic!(
+                "merging `{}`-lane partial into `{}`-lane accumulator",
+                o.label(),
+                lanes.label()
+            ),
+        }
+    }
+}
+
+fn lanes_match(a: &Lanes, b: &Lanes) -> bool {
+    std::mem::discriminant(a) == std::mem::discriminant(b)
+}
+
+fn side_add(side: &mut Option<Box<ModelParams>>, update: &ModelParams, w: f32) {
+    side.get_or_insert_with(|| Box::new(ModelParams::zeros(update.shape())))
+        .add_scaled(update, w);
+}
+
+impl Lanes {
+    fn scale(&mut self, factor: f64) {
+        let f = factor as f32;
+        match self {
+            Lanes::Dense(acc) => acc.scale(f),
+            Lanes::Quant(l) => {
+                l.acc.scale(f);
+                for b in &mut l.bias {
+                    *b *= factor;
+                }
+                if let Some(s) = &mut l.side {
+                    s.scale(f);
+                }
+            }
+            Lanes::TopK(l) => {
+                for acc in &mut l.tensors {
+                    match acc {
+                        SparseAcc::Sparse(pairs) => {
+                            for (_, v) in pairs.iter_mut() {
+                                *v *= f;
+                            }
+                        }
+                        SparseAcc::Dense(d) => {
+                            for v in d.iter_mut() {
+                                *v *= f;
+                            }
+                        }
+                    }
+                }
+                if let Some(s) = &mut l.side {
+                    s.scale(f);
+                }
+            }
+        }
+    }
+}
+
+impl QuantLanes {
+    fn push(&mut self, q: &Quantized, weight: usize) {
+        let w64 = weight as f64;
+        let tensors = self.acc.shape().num_tensors();
+        for t in 0..tensors {
+            self.bias[t] += w64 * q.mins[t] as f64;
+            let ws = weight as f32 * q.scales[t];
+            let dst = self.acc.tensor_mut(t);
+            // the decode-free hot loop: one u8 load + one FMA per entry
+            for (d, &c) in dst.iter_mut().zip(&q.codes[t]) {
+                *d += ws * c as f32;
+            }
+        }
+    }
+}
+
+impl TopkLanes {
+    fn push(&mut self, upd: &SparseUpdate, weight: usize) {
+        let w = weight as f32;
+        for (t, kept) in upd.entries.iter().enumerate() {
+            self.tensors[t].scatter_add(kept, w, self.shape.elements(t));
+        }
+    }
+}
+
+impl SparseAcc {
+    /// Fold one update's index-sorted kept pairs in, scaled by `w`.
+    fn scatter_add(&mut self, kept: &[(u32, f32)], w: f32, len: usize) {
+        match self {
+            SparseAcc::Dense(d) => {
+                for &(i, v) in kept {
+                    d[i as usize] += w * v;
+                }
+            }
+            SparseAcc::Sparse(acc) => {
+                let merged = merge_sorted(acc, kept, w);
+                *self = Self::from_merged(merged, len);
+            }
+        }
+    }
+
+    /// Fold another accumulator's partial in, scaled by `f`.
+    fn fold_from(&mut self, other: &SparseAcc, f: f32, len: usize) {
+        match (&mut *self, other) {
+            (SparseAcc::Dense(d), SparseAcc::Dense(o)) => {
+                for (x, &y) in d.iter_mut().zip(o) {
+                    *x += f * y;
+                }
+            }
+            (SparseAcc::Dense(d), SparseAcc::Sparse(o)) => {
+                for &(i, v) in o {
+                    d[i as usize] += f * v;
+                }
+            }
+            (SparseAcc::Sparse(acc), SparseAcc::Dense(o)) => {
+                // the incoming partial already crossed the density
+                // threshold — promote ourselves and add elementwise
+                let mut d = vec![0.0f32; len];
+                for &(i, v) in acc.iter() {
+                    d[i as usize] = v;
+                }
+                for (x, &y) in d.iter_mut().zip(o) {
+                    *x += f * y;
+                }
+                *self = SparseAcc::Dense(d);
+            }
+            (SparseAcc::Sparse(acc), SparseAcc::Sparse(o)) => {
+                let merged = merge_sorted(acc, o, f);
+                *self = Self::from_merged(merged, len);
+            }
+        }
+    }
+
+    fn from_merged(merged: Vec<(u32, f32)>, len: usize) -> SparseAcc {
+        if merged.len() * 2 > len {
+            // occupancy crossed half the tensor: promote to a dense lane
+            // so every later push is an O(k) scatter-add
+            let mut d = vec![0.0f32; len];
+            for &(i, v) in &merged {
+                d[i as usize] = v;
+            }
+            SparseAcc::Dense(d)
+        } else {
+            SparseAcc::Sparse(merged)
+        }
+    }
+
+    /// `Σ (acc[j] + side[j])²` over the tensor, in f64.
+    fn sq_sum(&self, len: usize, side: Option<&[f32]>) -> f64 {
+        match self {
+            SparseAcc::Dense(d) => (0..len)
+                .map(|j| {
+                    let s = side.map_or(0.0, |s| s[j] as f64);
+                    let v = d[j] as f64 + s;
+                    v * v
+                })
+                .sum(),
+            SparseAcc::Sparse(pairs) => match side {
+                None => pairs
+                    .iter()
+                    .map(|&(_, v)| (v as f64) * (v as f64))
+                    .sum(),
+                Some(s) => {
+                    // walk the dense side with a cursor into the sorted
+                    // sparse overlay
+                    let mut p = 0usize;
+                    (0..len)
+                        .map(|j| {
+                            let mut v = s[j] as f64;
+                            if p < pairs.len() && pairs[p].0 as usize == j {
+                                v += pairs[p].1 as f64;
+                                p += 1;
+                            }
+                            v * v
+                        })
+                        .sum()
+                }
+            },
+        }
+    }
+}
+
+/// Index-wise merge of two index-sorted pair lists; `kept` is scaled by
+/// `w` on the way in.
+fn merge_sorted(acc: &[(u32, f32)], kept: &[(u32, f32)], w: f32) -> Vec<(u32, f32)> {
+    let mut merged = Vec::with_capacity(acc.len() + kept.len());
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < acc.len() && b < kept.len() {
+        let (ia, va) = acc[a];
+        let (ib, vb) = kept[b];
+        match ia.cmp(&ib) {
+            Ordering::Less => {
+                merged.push((ia, va));
+                a += 1;
+            }
+            Ordering::Greater => {
+                merged.push((ib, w * vb));
+                b += 1;
+            }
+            Ordering::Equal => {
+                merged.push((ia, va + w * vb));
+                a += 1;
+                b += 1;
+            }
+        }
+    }
+    merged.extend_from_slice(&acc[a..]);
+    merged.extend(kept[b..].iter().map(|&(i, v)| (i, w * v)));
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::aggregate::Aggregator;
+    use crate::util::rng::Pcg64;
+
+    fn shape() -> Arc<ModelShape> {
+        ModelShape::preset("mlp-small").unwrap()
+    }
+
+    fn random_params(shape: &Arc<ModelShape>, seed: u64) -> ModelParams {
+        let mut m = ModelParams::zeros(shape);
+        let mut rng = Pcg64::seed_from(seed);
+        for v in m.as_mut_slice() {
+            *v = rng.normal_scaled(0.0, 0.05) as f32;
+        }
+        m
+    }
+
+    fn bitwise_eq(a: &ModelParams, b: &ModelParams) -> bool {
+        a.as_slice()
+            .iter()
+            .zip(b.as_slice())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn raw_lane_fold_is_bitwise_the_seed_aggregator() {
+        let s = shape();
+        let mut seed_agg = Aggregator::new(&s);
+        let mut enc = EncodedAggregator::new(&s);
+        for i in 0..7 {
+            let m = random_params(&s, i);
+            let w = 100 + 37 * i as usize;
+            seed_agg.push(&m, w);
+            enc.push_encoded(&EncodedUpdate::Dense(m.clone()), w);
+        }
+        assert_eq!(enc.count(), seed_agg.count());
+        assert_eq!(enc.total_weight(), seed_agg.total_weight());
+        assert_eq!(enc.mean_l2_norm(), seed_agg.mean_l2_norm());
+        let a = seed_agg.finish().unwrap();
+        let b = enc.finish().unwrap();
+        assert!(bitwise_eq(&a, &b));
+    }
+
+    #[test]
+    fn raw_lane_merge_matches_seed_aggregator_bitwise() {
+        let s = shape();
+        let (mut sa, mut sb) = (Aggregator::new(&s), Aggregator::new(&s));
+        let (mut ea, mut eb) = (EncodedAggregator::new(&s), EncodedAggregator::new(&s));
+        for i in 0..4 {
+            let m = random_params(&s, 10 + i);
+            sa.push(&m, 50);
+            ea.push(&m, 50);
+        }
+        for i in 0..3 {
+            let m = random_params(&s, 20 + i);
+            sb.push(&m, 80);
+            eb.push(&m, 80);
+        }
+        let mut s_root = Aggregator::new(&s);
+        s_root.merge(&sa);
+        s_root.merge_scaled(&sb, 0.25);
+        let mut e_root = EncodedAggregator::new(&s);
+        e_root.merge(&ea);
+        e_root.merge_scaled(&eb, 0.25);
+        assert_eq!(e_root.total_weight(), s_root.total_weight());
+        assert!(bitwise_eq(
+            &s_root.finish().unwrap(),
+            &e_root.finish().unwrap()
+        ));
+    }
+
+    #[test]
+    fn quant8_encoded_fold_matches_decode_then_fold() {
+        let s = shape();
+        let codec = PayloadCodec::Quant8;
+        let mut decoded = Aggregator::new(&s);
+        let mut enc = EncodedAggregator::for_codec(&s, codec);
+        for i in 0..15 {
+            let upd = codec.encode(random_params(&s, 40 + i)).unwrap();
+            let w = 100 + 13 * i as usize;
+            decoded.push(&upd.decode(), w);
+            enc.push_encoded(&upd, w);
+        }
+        let a = decoded.finish().unwrap();
+        let b = enc.finish().unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-4, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn topk_encoded_fold_matches_decode_then_fold_and_promotes() {
+        let s = shape();
+        let codec = PayloadCodec::TopK { keep_frac: 0.2 };
+        let mut decoded = Aggregator::new(&s);
+        let mut enc = EncodedAggregator::for_codec(&s, codec);
+        // 15 updates at 20% keep: random supports push occupancy past
+        // 50%, so the promotion path runs
+        for i in 0..15 {
+            let upd = codec.encode(random_params(&s, 60 + i)).unwrap();
+            decoded.push(&upd.decode(), 100);
+            enc.push_encoded(&upd, 100);
+        }
+        let a = decoded.finish().unwrap();
+        let b = enc.finish().unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-4, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn topk_sparse_accumulator_stays_index_sorted() {
+        let s = shape();
+        let codec = PayloadCodec::TopK { keep_frac: 0.01 };
+        let mut enc = EncodedAggregator::for_codec(&s, codec);
+        for i in 0..3 {
+            let upd = codec.encode(random_params(&s, 80 + i)).unwrap();
+            enc.push_encoded(&upd, 100);
+        }
+        if let Lanes::TopK(l) = &enc.lanes {
+            for acc in &l.tensors {
+                if let SparseAcc::Sparse(pairs) = acc {
+                    assert!(pairs.windows(2).all(|w| w[0].0 < w[1].0));
+                }
+            }
+        } else {
+            panic!("expected topk lanes");
+        }
+    }
+
+    #[test]
+    fn dense_push_into_encoded_lanes_lands_in_the_side_lane() {
+        let s = shape();
+        let codec = PayloadCodec::Quant8;
+        let mut decoded = Aggregator::new(&s);
+        let mut enc = EncodedAggregator::for_codec(&s, codec);
+        let upd = codec.encode(random_params(&s, 90)).unwrap();
+        decoded.push(&upd.decode(), 100);
+        enc.push_encoded(&upd, 100);
+        // a dense (e.g. poisoned-then-admitted) update joins the fold
+        let dense = random_params(&s, 91);
+        decoded.push(&dense, 60);
+        enc.push(&dense, 60);
+        assert_eq!(enc.count(), 2);
+        let a = decoded.finish().unwrap();
+        let b = enc.finish().unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-4, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn encoded_merge_matches_decode_then_fold_with_decay() {
+        let s = shape();
+        let codec = PayloadCodec::Quant8;
+        let mut decoded = Aggregator::new(&s);
+        let (mut ea, mut eb) = (
+            EncodedAggregator::for_codec(&s, codec),
+            EncodedAggregator::for_codec(&s, codec),
+        );
+        let mut decoded_a = Aggregator::new(&s);
+        let mut decoded_b = Aggregator::new(&s);
+        for i in 0..4 {
+            let upd = codec.encode(random_params(&s, 100 + i)).unwrap();
+            decoded_a.push(&upd.decode(), 100);
+            ea.push_encoded(&upd, 100);
+        }
+        for i in 0..4 {
+            let upd = codec.encode(random_params(&s, 110 + i)).unwrap();
+            decoded_b.push(&upd.decode(), 100);
+            eb.push_encoded(&upd, 100);
+        }
+        decoded.merge(&decoded_a);
+        decoded.merge_scaled(&decoded_b, 0.5);
+        // an empty encoded root adopts the first partial's lanes
+        let mut root = EncodedAggregator::new(&s);
+        root.merge(&ea);
+        root.merge_scaled(&eb, 0.5);
+        assert_eq!(root.codec_label(), "quant8");
+        assert_eq!(root.total_weight(), decoded.total_weight());
+        let a = decoded.finish().unwrap();
+        let b = root.finish().unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-4, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn empty_adoption_under_scaled_merge_applies_the_factor() {
+        let s = shape();
+        let codec = PayloadCodec::TopK { keep_frac: 0.1 };
+        let mut part = EncodedAggregator::for_codec(&s, codec);
+        let upd = codec.encode(random_params(&s, 120)).unwrap();
+        part.push_encoded(&upd, 100);
+        let mut root = EncodedAggregator::new(&s);
+        root.merge_scaled(&part, 0.5);
+        assert_eq!(root.total_weight(), 50.0);
+        let mut reference = Aggregator::new(&s);
+        reference.push(&upd.decode(), 100);
+        let mut ref_root = Aggregator::new(&s);
+        ref_root.merge_scaled(&reference, 0.5);
+        let a = ref_root.finish().unwrap();
+        let b = root.finish().unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-4, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn encoded_norms_match_the_decoded_update() {
+        let s = shape();
+        for codec in [
+            PayloadCodec::Raw,
+            PayloadCodec::Quant8,
+            PayloadCodec::TopK { keep_frac: 0.2 },
+        ] {
+            let upd = codec.encode(random_params(&s, 130)).unwrap();
+            let dense = upd.decode();
+            let want: f64 = dense
+                .as_slice()
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum::<f64>()
+                .sqrt();
+            let got = upd.l2_norm();
+            assert!(
+                (got - want).abs() <= 1e-6 * want.max(1.0),
+                "{codec:?}: {got} vs {want}"
+            );
+            assert!(upd.is_finite());
+        }
+    }
+
+    #[test]
+    fn non_finite_topk_payload_is_flagged() {
+        let s = shape();
+        let mut m = random_params(&s, 140);
+        m.as_mut_slice()[0] = f32::NAN;
+        let upd = PayloadCodec::TopK { keep_frac: 0.2 }.encode(m).unwrap();
+        assert!(!upd.is_finite());
+    }
+
+    #[test]
+    fn decode_into_reuses_the_arena() {
+        let s = shape();
+        let codec = PayloadCodec::Quant8;
+        let upd = codec.encode(random_params(&s, 150)).unwrap();
+        let mut scratch = random_params(&s, 151);
+        upd.decode_into(&mut scratch);
+        assert!(bitwise_eq(&scratch, &upd.decode()));
+    }
+
+    #[test]
+    fn finish_error_cases_match_the_seed_aggregator() {
+        let s = shape();
+        assert!(EncodedAggregator::new(&s).finish().is_err());
+        let mut zero_w = EncodedAggregator::for_codec(&s, PayloadCodec::Quant8);
+        let upd = PayloadCodec::Quant8.encode(random_params(&s, 160)).unwrap();
+        zero_w.push_encoded(&upd, 0);
+        assert!(zero_w.finish().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "aggregating")]
+    fn mixed_encoded_push_panics() {
+        let s = shape();
+        let mut enc = EncodedAggregator::for_codec(&s, PayloadCodec::Quant8);
+        let upd = PayloadCodec::TopK { keep_frac: 0.5 }
+            .encode(ModelParams::zeros(&s))
+            .unwrap();
+        enc.push_encoded(&upd, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "merging")]
+    fn mixed_lane_merge_panics_when_nonempty() {
+        let s = shape();
+        let mut a = EncodedAggregator::for_codec(&s, PayloadCodec::Quant8);
+        a.push_encoded(
+            &PayloadCodec::Quant8.encode(ModelParams::zeros(&s)).unwrap(),
+            10,
+        );
+        let mut b = EncodedAggregator::for_codec(&s, PayloadCodec::TopK { keep_frac: 0.5 });
+        b.push_encoded(
+            &PayloadCodec::TopK { keep_frac: 0.5 }
+                .encode(ModelParams::zeros(&s))
+                .unwrap(),
+            10,
+        );
+        a.merge(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "merging")]
+    fn shape_mismatch_merge_panics() {
+        let small = shape();
+        let paper = ModelShape::paper();
+        let mut a = EncodedAggregator::new(&small);
+        a.push(&ModelParams::zeros(&small), 10);
+        let mut b = EncodedAggregator::new(&paper);
+        b.push(&ModelParams::zeros(&paper), 10);
+        a.merge(&b);
+    }
+}

@@ -1,14 +1,16 @@
 //! Rust-side model state: the runtime arena-layout descriptor
 //! (`shape`), the flat-arena parameter store, streaming FedAvg
-//! aggregation, and the update-compression codecs of the paper's
-//! related work [4].
+//! aggregation — dense and encoded-domain — and the update-compression
+//! codecs of the paper's related work [4].
 
 pub mod aggregate;
 pub mod compress;
+pub mod encoded;
 pub mod params;
 pub mod shape;
 
 pub use aggregate::{weighted_average, Aggregator};
 pub use compress::PayloadCodec;
+pub use encoded::{EncodedAggregator, EncodedUpdate};
 pub use params::ModelParams;
 pub use shape::ModelShape;

@@ -16,9 +16,10 @@
 //! `from_blob`/`to_blob` are single chunked byte copies (a `memcpy` on
 //! little-endian hosts) instead of per-scalar `from_le_bytes` loops, and
 //! the aggregation hot loops (`add_scaled`, `scale`, `max_abs_diff`) are
-//! one pass over the whole arena, unrolled 8-wide so LLVM auto-vectorizes
-//! — the dynamic layout adds one `Arc` pointer per model and nothing to
-//! the loops themselves.
+//! one pass over the whole arena in 4×8-lane blocks (four independent
+//! 8-wide accumulator groups per iteration) so LLVM auto-vectorizes with
+//! multiple SIMD registers in flight — the dynamic layout adds one `Arc`
+//! pointer per model and nothing to the loops themselves.
 //!
 //! The FedAvg aggregation built on these primitives lives in
 //! [`crate::model::aggregate`].
@@ -176,20 +177,18 @@ impl ModelParams {
     }
 
     /// Accumulate `weight * other` into self — the hot loop of
-    /// aggregation. One pass over the arena, unrolled 8-wide.
+    /// aggregation. One pass over the arena in 4×8-lane blocks: four
+    /// independent 8-wide groups per iteration give the autovectorizer
+    /// several full SIMD registers of independent FMAs to schedule,
+    /// where the seed's single 8-wide unroll pinned it to one.
     pub fn add_scaled(&mut self, other: &ModelParams, weight: f32) {
         debug_assert_eq!(self.data.len(), other.data.len());
-        let mut dst = self.data.chunks_exact_mut(8);
-        let mut src = other.data.chunks_exact(8);
+        let mut dst = self.data.chunks_exact_mut(32);
+        let mut src = other.data.chunks_exact(32);
         for (d, s) in dst.by_ref().zip(src.by_ref()) {
-            d[0] += weight * s[0];
-            d[1] += weight * s[1];
-            d[2] += weight * s[2];
-            d[3] += weight * s[3];
-            d[4] += weight * s[4];
-            d[5] += weight * s[5];
-            d[6] += weight * s[6];
-            d[7] += weight * s[7];
+            for l in 0..32 {
+                d[l] += weight * s[l];
+            }
         }
         for (d, &s) in dst.into_remainder().iter_mut().zip(src.remainder()) {
             *d += weight * s;
@@ -204,13 +203,16 @@ impl ModelParams {
     }
 
     /// Max |a - b| across the arena (test / convergence diagnostics).
+    /// 32 independent max lanes (4×8) break the reduction's dependency
+    /// chain the same way [`add_scaled`](Self::add_scaled) does; `max`
+    /// is associative and commutative, so the lane split is exact.
     pub fn max_abs_diff(&self, other: &ModelParams) -> f32 {
         debug_assert_eq!(self.data.len(), other.data.len());
-        let mut acc = [0.0f32; 8];
-        let mut a = self.data.chunks_exact(8);
-        let mut b = other.data.chunks_exact(8);
+        let mut acc = [0.0f32; 32];
+        let mut a = self.data.chunks_exact(32);
+        let mut b = other.data.chunks_exact(32);
         for (x, y) in a.by_ref().zip(b.by_ref()) {
-            for l in 0..8 {
+            for l in 0..32 {
                 acc[l] = acc[l].max((x[l] - y[l]).abs());
             }
         }
@@ -325,8 +327,8 @@ mod tests {
         acc.add_scaled(&filled(&s, 2.0), 0.5);
         acc.add_scaled(&filled(&s, 4.0), 0.25);
         assert!((acc.tensor(1)[7] - 2.0).abs() < 1e-6);
-        // the unroll remainder (arena length is not a multiple of 8) is
-        // covered too
+        // the unroll remainder (arena length is not a multiple of the
+        // 32-lane block) is covered too
         let last = *acc.as_slice().last().unwrap();
         assert!((last - 2.0).abs() < 1e-6);
     }

@@ -1,0 +1,276 @@
+//! Equivalence contract of the encoded-domain aggregation stack
+//! (`model::encoded`) against the dense seed path:
+//!
+//! * raw codec: the encoded fold is **bit-identical** to the dense
+//!   [`Aggregator`] — flat, hierarchical, serial and parallel;
+//! * quant8 / top-k: the encoded fold tracks decode-then-fold within a
+//!   stated absolute tolerance (both paths fold the *same* lossy wire
+//!   payload, so the codec's loss itself cancels out);
+//! * the `UpdateGuard` rejects identically whether admission runs on
+//!   the decoded update or on the encoded form, under byzantine
+//!   weather, and the full engine stays guarded on the encoded path.
+
+use std::sync::Arc;
+
+use cnc_fl::cnc::CncSystem;
+use cnc_fl::coordinator::trainer::MockTrainer;
+use cnc_fl::fleet::async_round::{run_with_model, FleetConfig};
+use cnc_fl::fleet::hierarchy::{fold_regions_guarded, ShardUpdate};
+use cnc_fl::fleet::weather::{poison, GuardPolicy, UpdateGuard, WeatherSpec};
+use cnc_fl::model::aggregate::Aggregator;
+use cnc_fl::model::compress::PayloadCodec;
+use cnc_fl::model::encoded::EncodedAggregator;
+use cnc_fl::model::params::ModelParams;
+use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
+use cnc_fl::netsim::channel::ChannelParams;
+use cnc_fl::netsim::compute::PowerProfile;
+use cnc_fl::runtime::ParallelExecutor;
+use cnc_fl::util::rng::Pcg64;
+
+/// Absolute tolerance for the lossy-codec contract (documented in
+/// `model::encoded`): both paths fold identical payloads, so the only
+/// divergence is f32 summation order, orders of magnitude below this.
+const LOSSY_TOL: f32 = 1e-4;
+
+fn random_update(shape: &Arc<ModelShape>, seed: u64) -> ModelParams {
+    let mut rng = Pcg64::seed_from(seed);
+    let mut m = ModelParams::zeros(shape);
+    for v in m.as_mut_slice() {
+        *v = rng.normal_scaled(0.0, 0.05) as f32;
+    }
+    m
+}
+
+fn bitwise_eq(a: &ModelParams, b: &ModelParams) -> bool {
+    a.as_slice()
+        .iter()
+        .zip(b.as_slice())
+        .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn max_abs_diff(a: &ModelParams, b: &ModelParams) -> f32 {
+    a.as_slice()
+        .iter()
+        .zip(b.as_slice())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn raw_encoded_fold_is_bitwise_the_dense_aggregator_on_every_preset() {
+    for preset in PRESET_NAMES {
+        let shape = ModelShape::preset(preset).unwrap();
+        let updates: Vec<(ModelParams, usize)> = (0..12)
+            .map(|i| (random_update(&shape, i), 100 + 97 * i as usize))
+            .collect();
+        let mut dense = Aggregator::new(&shape);
+        let mut encoded = EncodedAggregator::for_codec(&shape, PayloadCodec::Raw);
+        for (m, w) in &updates {
+            dense.push(m, *w);
+            let enc = PayloadCodec::Raw.encode(m.clone()).unwrap();
+            encoded.push_encoded(&enc, *w);
+        }
+        assert_eq!(dense.count(), encoded.count());
+        assert_eq!(dense.total_weight(), encoded.total_weight());
+        let (a, b) = (dense.finish().unwrap(), encoded.finish().unwrap());
+        assert!(bitwise_eq(&a, &b), "{preset}: raw encoded fold drifted");
+    }
+}
+
+#[test]
+fn raw_hierarchical_fold_matches_flat_bitwise_across_executor_widths() {
+    for preset in PRESET_NAMES {
+        let shape = ModelShape::preset(preset).unwrap();
+        let updates: Vec<(ModelParams, usize)> = (0..9)
+            .map(|i| (random_update(&shape, 1000 + i), 50 + 31 * i as usize))
+            .collect();
+        // flat dense fold — the seed semantics
+        let mut flat = Aggregator::new(&shape);
+        for (m, w) in &updates {
+            flat.push(m, *w);
+        }
+        let flat = flat.finish().unwrap();
+        // one shard, one region: merge-into-empty is a bitwise copy, so
+        // every executor width must reproduce the flat fold exactly
+        let mut shard = ShardUpdate::for_codec(&shape, PayloadCodec::Raw, 0, 3);
+        for (m, w) in &updates {
+            let enc = PayloadCodec::Raw.encode(m.clone()).unwrap();
+            shard.push_encoded(&enc, *w);
+        }
+        for threads in [1, 2, 4] {
+            let ex = ParallelExecutor::new(threads);
+            let due: Vec<Vec<&ShardUpdate>> = vec![vec![&shard]];
+            let (root, _) =
+                fold_regions_guarded(&shape, &due, 3, 0, 1.0, 0.0, &ex).unwrap();
+            let hier = root.finish().unwrap();
+            assert!(
+                bitwise_eq(&flat, &hier),
+                "{preset}: single-shard hierarchy drifted at {threads} threads"
+            );
+        }
+        // three shards over two regions: widths must agree bit-for-bit
+        // with each other (slot-ordered reduction)
+        let shards: Vec<ShardUpdate> = (0..3)
+            .map(|s| {
+                let mut u = ShardUpdate::for_codec(&shape, PayloadCodec::Raw, s, 3);
+                for (m, w) in updates.iter().skip(s * 3).take(3) {
+                    let enc = PayloadCodec::Raw.encode(m.clone()).unwrap();
+                    u.push_encoded(&enc, *w);
+                }
+                u
+            })
+            .collect();
+        let due: Vec<Vec<&ShardUpdate>> =
+            vec![shards[0..2].iter().collect(), shards[2..3].iter().collect()];
+        let serial = {
+            let ex = ParallelExecutor::new(1);
+            let (root, _) =
+                fold_regions_guarded(&shape, &due, 3, 0, 1.0, 0.0, &ex).unwrap();
+            root.finish().unwrap()
+        };
+        for threads in [2, 4] {
+            let ex = ParallelExecutor::new(threads);
+            let (root, _) =
+                fold_regions_guarded(&shape, &due, 3, 0, 1.0, 0.0, &ex).unwrap();
+            let m = root.finish().unwrap();
+            assert!(
+                bitwise_eq(&serial, &m),
+                "{preset}: parallel region fold drifted at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn lossy_encoded_fold_tracks_decode_then_fold_within_tolerance() {
+    let codecs = [
+        PayloadCodec::Quant8,
+        PayloadCodec::TopK { keep_frac: 0.25 },
+        PayloadCodec::TopK { keep_frac: 0.05 },
+    ];
+    for preset in PRESET_NAMES {
+        let shape = ModelShape::preset(preset).unwrap();
+        for codec in codecs {
+            let mut baseline = Aggregator::new(&shape);
+            let mut encoded = EncodedAggregator::for_codec(&shape, codec);
+            for i in 0..10 {
+                let m = random_update(&shape, 2000 + i);
+                let w = 200 + 57 * i as usize;
+                let enc = codec.encode(m).unwrap();
+                baseline.push(&enc.decode(), w);
+                encoded.push_encoded(&enc, w);
+            }
+            let (a, b) = (baseline.finish().unwrap(), encoded.finish().unwrap());
+            let diff = max_abs_diff(&a, &b);
+            assert!(
+                diff < LOSSY_TOL,
+                "{preset}/{}: encoded fold diverged by {diff}",
+                codec.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn guard_rejections_are_identical_on_the_dense_and_encoded_paths() {
+    // replay the engine's byzantine wire point on both fold paths with
+    // the same poison draws: the rejection ledger must not depend on
+    // whether admission saw the decoded arena or the encoded payload
+    let shape = ModelShape::preset("mlp-small").unwrap();
+    let guard = UpdateGuard::new(&GuardPolicy::default());
+    let codecs = [
+        PayloadCodec::Raw,
+        PayloadCodec::Quant8,
+        PayloadCodec::TopK { keep_frac: 0.1 },
+    ];
+    for codec in codecs {
+        let mut draw_rng = Pcg64::seed_from(77);
+        let mut dense_rejects = 0usize;
+        let mut encoded_rejects = 0usize;
+        let mut dense = Aggregator::new(&shape);
+        let mut encoded = EncodedAggregator::for_codec(&shape, codec);
+        for i in 0..40 {
+            let enc = codec.encode(random_update(&shape, 3000 + i)).unwrap();
+            let poisoned = (draw_rng.next_f64() < 0.4)
+                .then(|| poison(&enc.decode(), draw_rng.below(3)));
+            match &poisoned {
+                Some(p) => {
+                    // poisoned slots take the dense path in both folds
+                    if guard.admit(p) {
+                        dense.push(p, 600);
+                        encoded.push(p, 600);
+                    } else {
+                        dense_rejects += 1;
+                        encoded_rejects += 1;
+                    }
+                }
+                None => {
+                    if guard.admit(&enc.decode()) {
+                        dense.push(&enc.decode(), 600);
+                    } else {
+                        dense_rejects += 1;
+                    }
+                    if guard.admit_encoded(&enc) {
+                        encoded.push_encoded(&enc, 600);
+                    } else {
+                        encoded_rejects += 1;
+                    }
+                }
+            }
+        }
+        assert!(dense_rejects > 0, "{}: no poison fired", codec.label());
+        assert_eq!(
+            dense_rejects,
+            encoded_rejects,
+            "{}: guard verdicts diverged between paths",
+            codec.label()
+        );
+        assert_eq!(dense.count(), encoded.count());
+        let (a, b) = (dense.finish().unwrap(), encoded.finish().unwrap());
+        assert!(a.as_slice().iter().all(|v| v.is_finite()));
+        if codec.is_raw() {
+            assert!(bitwise_eq(&a, &b), "raw paths must agree bitwise");
+        } else {
+            let diff = max_abs_diff(&a, &b);
+            assert!(diff < LOSSY_TOL, "{}: diverged by {diff}", codec.label());
+        }
+    }
+}
+
+#[test]
+fn byzantine_engine_on_the_encoded_path_stays_guarded_and_deterministic() {
+    let run_width = |threads: usize| {
+        let ch = ChannelParams {
+            fading_samples: 4,
+            ..Default::default()
+        };
+        let mut sys = CncSystem::bootstrap(30, 600, 1, PowerProfile::Bimodal, ch, 21);
+        let mut trainer = MockTrainer::new(30, 600);
+        let mut cfg = FleetConfig {
+            rounds: 4,
+            shards: 2,
+            weather: WeatherSpec::Byzantine { frac: 0.5 },
+            threads,
+            ..Default::default()
+        };
+        cfg.transport.codec = PayloadCodec::Quant8;
+        run_with_model(&mut sys, &mut trainer, &cfg, "byz-enc").unwrap()
+    };
+    let (serial, global) = run_width(1);
+    let rejected: usize = serial.rounds.iter().map(|r| r.rejected_updates).sum();
+    assert!(rejected > 0, "byzantine weather must reject something");
+    assert!(global.as_slice().iter().all(|v| v.is_finite()));
+    for r in &serial.rounds {
+        assert!(r.accuracy.is_finite());
+    }
+    // the encoded shard fold preserves the engine's width-independence
+    for threads in [2, 4] {
+        let (parallel, pglobal) = run_width(threads);
+        for (a, b) in serial.rounds.iter().zip(&parallel.rounds) {
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.rejected_updates, b.rejected_updates);
+        }
+        assert!(bitwise_eq(&global, &pglobal), "{threads} threads drifted");
+    }
+}
