@@ -1,0 +1,146 @@
+"""Reference measurement seeding ``rust/BENCH_fleet.json``.
+
+The rust bench (``cargo bench --bench bench_fleet``) is the
+authoritative generator of the engine-driver perf artifact; this numpy
+script reproduces its workload shape — fixed-cohort fleet rounds at
+10^3..10^6 clients under the loop driver, the event driver, and the
+event driver with diurnal arrival waves — for environments without a
+Rust toolchain, and labels its output ``"backend": "python-reference"``
+so nobody mistakes the numbers for the engine's. CI validates the same
+schema and acceptance bar against whichever backend produced the file:
+the event driver's per-round cost grows <= ~2x from 10^5 to 10^6
+clients at a fixed cohort (the round's work tracks the cohort, not the
+fleet).
+
+Workload (mirrors the ``engine drivers`` section of
+``rust/benches/bench_fleet.rs``):
+
+* 128 shards, cohort 512 split proportionally across them, 10 rounds,
+  ``mlp-784``-sized updates (203,530 f32 params)
+* per round, each engine touches only its started shards: uniform
+  cohort selection over the shard stratum index range (O(cohort_s)),
+  a mock local step per cohort member (scaled gradient toward a
+  target on the shared arena), and a shard fold + root merge
+* the loop driver starts every idle shard each round; the event driver
+  is identical with waves degenerate (``Always``); ``event-diurnal``
+  wakes each shard only inside its seeded diurnal window
+  (period 5, window fraction drawn from [0.3, 0.6)), so asleep shards
+  are never touched — their strata stay unmaterialized
+* registry strata materialize lazily: a shard's delay/distance view is
+  built on first touch and cached, so fleet size prices the first
+  round, not every round
+
+Run from the repo root:  python3 python/bench/bench_fleet_reference.py
+"""
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+PARAMS = 784 * 256 + 256 + 256 * 10 + 10  # mlp-784: 203,530
+SHARDS = 128
+COHORT = 512
+ROUNDS = 10
+CLIENT_COUNTS = [1_000, 10_000, 100_000, 1_000_000]
+RATE = np.float32(0.3)
+SEED = 0xF1EE7
+
+
+def split_proportional(total, sizes):
+    """Largest-remainder proportional split (mirrors the registry's)."""
+    fleet = sum(sizes)
+    quotas = [total * s / fleet for s in sizes]
+    out = [int(q) for q in quotas]
+    rest = total - sum(out)
+    order = sorted(range(len(sizes)), key=lambda i: (out[i] - quotas[i], i))
+    for i in order[:rest]:
+        out[i] += 1
+    return out
+
+
+def diurnal_windows(rng, shards, period, floor, peak):
+    offsets = rng.integers(0, period, size=shards)
+    frac = rng.uniform(floor, peak, size=shards)
+    windows = np.clip(np.rint(period * frac), 1, period).astype(int)
+    return offsets, windows
+
+
+def run_engine(clients, engine, rng):
+    """One fleet run; returns (elapsed_s, shard_commits)."""
+    sizes = [clients // SHARDS] * SHARDS
+    for i in range(clients % SHARDS):
+        sizes[i] += 1
+    cohorts = split_proportional(COHORT, sizes)
+    if engine == "event-diurnal":
+        offsets, windows = diurnal_windows(rng, SHARDS, 5, 0.3, 0.6)
+    global_model = np.zeros(PARAMS, dtype=np.float32)
+    strata = {}  # shard -> materialized view (lazy, cached)
+    commits = 0
+    t0 = time.perf_counter()
+    for rnd in range(ROUNDS):
+        partials = []
+        for s in range(SHARDS):
+            if cohorts[s] == 0:
+                continue
+            if engine == "event-diurnal" and \
+                    (rnd + offsets[s]) % 5 >= windows[s]:
+                continue  # asleep: the shard is never touched
+            if s not in strata:
+                # first touch materializes the shard's stratum view
+                strata[s] = rng.normal(1.0, 0.2, size=sizes[s]) \
+                    .astype(np.float32)
+            view = strata[s]
+            cohort = rng.integers(0, sizes[s], size=cohorts[s])
+            acc = np.zeros(PARAMS, dtype=np.float32)
+            for c in cohort:
+                # mock local step: move toward the target on the arena
+                step = RATE * np.float32(view[c]) * \
+                    (np.float32(1.0) - global_model)
+                acc += step
+            partials.append((acc, cohorts[s]))
+            commits += 1
+        if partials:
+            weight = sum(w for _, w in partials)
+            folded = np.zeros(PARAMS, dtype=np.float32)
+            for acc, w in partials:
+                folded += acc * np.float32(w)
+            global_model = global_model + folded / np.float32(weight * COHORT)
+    return time.perf_counter() - t0, commits
+
+
+def main():
+    rows = []
+    for clients in CLIENT_COUNTS:
+        for engine in ("loop", "event", "event-diurnal"):
+            rng = np.random.default_rng(SEED)
+            elapsed, commits = run_engine(clients, engine, rng)
+            per_round_ms = elapsed * 1e3 / ROUNDS
+            rows.append({
+                "clients": clients, "shards": SHARDS, "cohort": COHORT,
+                "engine": engine, "rounds": ROUNDS,
+                "shard_commits": commits,
+                "per_round_ms": round(per_round_ms, 3),
+            })
+            print(f"{clients:>9} clients  {engine:<13} "
+                  f"{commits:>5} commits  {per_round_ms:10.2f} ms/round")
+
+    doc = {
+        "bench": "fleet_engine",
+        "backend": "python-reference",
+        "note": ("numpy reference measurement of the bench_fleet "
+                 "engine-driver workload; `cargo bench --bench "
+                 "bench_fleet` regenerates this artifact with the real "
+                 "engines (backend: rust)"),
+        "cohort": COHORT,
+        "shards": SHARDS,
+        "rows": rows,
+    }
+    out = Path(__file__).resolve().parents[2] / "rust" / "BENCH_fleet.json"
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,10 @@
 //! (bytes/round and wire+fold time for raw vs quant8 vs topk:0.1), and
 //! the update-guard admission table (calm vs byzantine:0.2, guard
 //! on/off) — the latter also written to `BENCH_weather.json`, the first
-//! machine-readable bench artifact of the perf-trajectory series.
+//! machine-readable bench artifact of the perf-trajectory series — and
+//! the engine-driver table (loop vs event per-round wall time at
+//! 10³–10⁶ clients with a fixed cohort, written to `BENCH_fleet.json`:
+//! the million-client acceptance artifact).
 //!
 //! The flat path pays O(cohort³) in the Hungarian RB assignment plus
 //! O(cohort·n_rb) channel modelling per round; sharding cuts both to K
@@ -20,14 +23,16 @@
 //! Run: `cargo bench --bench bench_fleet`
 
 use std::sync::Mutex;
+use std::time::Instant;
 
 use cnc_fl::cnc::optimize::{CohortStrategy, RbStrategy, SchedulingOptimizer};
 use cnc_fl::cnc::CncSystem;
+use cnc_fl::coordinator::MockTrainer;
 use cnc_fl::exp::presets::default_m;
 use cnc_fl::fleet::weather::poison;
 use cnc_fl::fleet::{
-    decide_traditional_sharded, fold_regions, FleetTopology, GuardPolicy,
-    RootAggregator, ShardBy, ShardUpdate, UpdateGuard,
+    self, decide_traditional_sharded, fold_regions, FleetConfig, FleetTopology,
+    GuardPolicy, RootAggregator, ShardBy, ShardUpdate, UpdateGuard, WaveSpec,
 };
 use cnc_fl::model::aggregate::Aggregator;
 use cnc_fl::model::compress::PayloadCodec;
@@ -157,6 +162,96 @@ fn main() {
         ));
     }
     println!("{table}");
+
+    // --- engine drivers: loop vs event, per-round wall, fixed cohort ----
+    // the million-client acceptance bar: with the registry strata
+    // materialized lazily and the cohort held fixed, a 10× bigger fleet
+    // may only grow the event driver's per-round cost ≤ ~2× (the round's
+    // work tracks the cohort — Uniform selection + Random RBs keep the
+    // decision itself cohort-bound, so any fleet-proportional cost left
+    // in the drivers shows up here). `event-diurnal` adds Fleet1M-style
+    // arrival waves: asleep shards are never touched at all. One timed
+    // run per cell (full engine runs are too heavy for median sampling);
+    // bootstrap and trainer construction stay outside the timer.
+    let fixed_cohort = 512usize;
+    let engine_shards = 128usize;
+    let engine_rounds = 10usize;
+    let mut engine_table = String::from(
+        "\n## engine drivers (per-round wall, fixed cohort of 512)\n\n\
+         | clients | engine | rounds | shard commits | per round |\n\
+         |---|---|---|---|---|\n",
+    );
+    let mut engine_json = Vec::new();
+    for &u in &[1_000usize, 10_000, 100_000, 1_000_000] {
+        for (engine, waves) in [
+            ("loop", WaveSpec::Always),
+            ("event", WaveSpec::Always),
+            (
+                "event-diurnal",
+                WaveSpec::Diurnal {
+                    period_rounds: 5,
+                    floor: 0.3,
+                    peak: 0.6,
+                },
+            ),
+        ] {
+            let mut channel = ChannelParams::default();
+            channel.fading_samples = 2;
+            let mut sys = CncSystem::bootstrap(
+                u,
+                600,
+                1,
+                PowerProfile::Bimodal,
+                channel,
+                0xF1EE7,
+            );
+            let mut t = MockTrainer::new(u, 600);
+            let cfg = FleetConfig {
+                rounds: engine_rounds,
+                shards: engine_shards,
+                regions: 8,
+                max_staleness: 2,
+                cohort_size: fixed_cohort,
+                n_rb: fixed_cohort,
+                cohort_strategy: CohortStrategy::Uniform,
+                rb_strategy: RbStrategy::Random,
+                waves,
+                seed: 0xF1EE7,
+                ..Default::default()
+            };
+            let start = Instant::now();
+            let h = if engine == "loop" {
+                fleet::run(&mut sys, &mut t, &cfg, engine).unwrap()
+            } else {
+                fleet::event::run(&mut sys, &mut t, &cfg, engine).unwrap()
+            };
+            let per_round_ms =
+                start.elapsed().as_secs_f64() * 1e3 / engine_rounds as f64;
+            let commits: usize =
+                h.rounds.iter().map(|r| r.shards_committed).sum();
+            engine_table.push_str(&format!(
+                "| {u} | {engine} | {engine_rounds} | {commits} | {per_round_ms:.2} ms |\n",
+            ));
+            engine_json.push(format!(
+                "    {{\"clients\": {u}, \"shards\": {engine_shards}, \
+                 \"cohort\": {fixed_cohort}, \"engine\": \"{engine}\", \
+                 \"rounds\": {engine_rounds}, \"shard_commits\": {commits}, \
+                 \"per_round_ms\": {per_round_ms:.3}}}",
+            ));
+            black_box(h);
+        }
+    }
+    println!("{engine_table}");
+    let engine_doc = format!(
+        "{{\n  \"bench\": \"fleet_engine\",\n  \"backend\": \"rust\",\n  \
+         \"cohort\": {fixed_cohort},\n  \"shards\": {engine_shards},\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        engine_json.join(",\n"),
+    );
+    match std::fs::write("BENCH_fleet.json", &engine_doc) {
+        Ok(()) => println!("wrote BENCH_fleet.json"),
+        Err(e) => eprintln!("BENCH_fleet.json not written: {e}"),
+    }
 
     // --- root-fold tiers: two-level vs three-level ----------------------
     // one shard summary per 100 clients (≥10³ summaries at 10⁵ clients);

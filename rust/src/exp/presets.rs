@@ -10,7 +10,7 @@ use crate::cnc::CncSystem;
 use crate::coordinator::traditional::TraditionalConfig;
 use crate::coordinator::trainer::{MockTrainer, PjrtTrainer, Trainer};
 use crate::data::{Partition, Split, SynthSpec};
-use crate::fleet::FleetConfig;
+use crate::fleet::{FleetConfig, WaveSpec};
 use crate::model::shape::ModelShape;
 use crate::netsim::channel::ChannelParams;
 use crate::netsim::compute::PowerProfile;
@@ -95,7 +95,7 @@ pub fn case(name: &str) -> Result<Case> {
 /// Table 2, sized far past the paper's 100 clients (ROADMAP north-star).
 /// Mock-backend only — these probe the decision/aggregation layers, not
 /// PJRT throughput.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FleetCase {
     pub name: &'static str,
     pub num_clients: usize,
@@ -110,6 +110,9 @@ pub struct FleetCase {
     pub global_rounds: usize,
     /// model-shape preset the case trains (`--model` overrides)
     pub model: &'static str,
+    /// arrival waves under `--engine event` (`WaveSpec::Always` =
+    /// every shard awake; the loop engine ignores waves)
+    pub waves: WaveSpec,
 }
 
 impl FleetCase {
@@ -120,10 +123,12 @@ impl FleetCase {
 }
 
 /// The fleet-scale cases: 10⁴ and 10⁵ clients on the paper's model,
-/// the 10⁴ fleet on the ≈1M-param `mlp-wide` (the model-size axis), and
-/// the 10⁵ fleet over 10³ shards grouped into regions — the three-level
-/// (region → shard → client) topology whose root fold stays O(regions).
-pub const FLEET_CASES: [FleetCase; 4] = [
+/// the 10⁴ fleet on the ≈1M-param `mlp-wide` (the model-size axis), the
+/// 10⁵ fleet over 10³ shards grouped into regions — the three-level
+/// (region → shard → client) topology whose root fold stays O(regions) —
+/// and the 10⁶-client `Fleet1M` over 10⁴ shards with diurnal arrival
+/// waves, sized for the discrete-event engine (`--engine event`).
+pub const FLEET_CASES: [FleetCase; 5] = [
     FleetCase {
         name: "Fleet10k",
         num_clients: 10_000,
@@ -133,6 +138,7 @@ pub const FLEET_CASES: [FleetCase; 4] = [
         max_staleness: 2,
         global_rounds: 5,
         model: "mlp-784",
+        waves: WaveSpec::Always,
     },
     FleetCase {
         name: "Fleet100k",
@@ -143,6 +149,7 @@ pub const FLEET_CASES: [FleetCase; 4] = [
         max_staleness: 3,
         global_rounds: 3,
         model: "mlp-784",
+        waves: WaveSpec::Always,
     },
     FleetCase {
         name: "Fleet10kWide",
@@ -153,6 +160,7 @@ pub const FLEET_CASES: [FleetCase; 4] = [
         max_staleness: 2,
         global_rounds: 3,
         model: "mlp-wide",
+        waves: WaveSpec::Always,
     },
     FleetCase {
         name: "Fleet100kRegions",
@@ -163,6 +171,18 @@ pub const FLEET_CASES: [FleetCase; 4] = [
         max_staleness: 3,
         global_rounds: 3,
         model: "mlp-784",
+        waves: WaveSpec::Always,
+    },
+    FleetCase {
+        name: "Fleet1M",
+        num_clients: 1_000_000,
+        shards: 10_000,
+        regions: 100,
+        cohort_size: 20_000,
+        max_staleness: 3,
+        global_rounds: 200,
+        model: "mlp-small",
+        waves: WaveSpec::Diurnal { period_rounds: 24, floor: 0.25, peak: 0.6 },
     },
 ];
 
@@ -174,7 +194,7 @@ pub fn fleet_case(name: &str) -> Result<FleetCase> {
         .ok_or_else(|| {
             anyhow::anyhow!(
                 "unknown fleet case `{name}` \
-                 (Fleet10k|Fleet100k|Fleet10kWide|Fleet100kRegions)"
+                 (Fleet10k|Fleet100k|Fleet10kWide|Fleet100kRegions|Fleet1M)"
             )
         })
 }
@@ -204,6 +224,7 @@ pub fn fleet_config(
         cohort_strategy: CohortStrategy::PowerGrouping {
             m: default_m(shard_clients, shard_cohort),
         },
+        waves: case.waves,
         seed,
         ..Default::default()
     }
@@ -440,7 +461,17 @@ mod tests {
         }
         let big = fleet_case("Fleet100k").unwrap();
         assert_eq!(big.num_clients, 100_000);
-        assert!(fleet_case("Fleet1M").is_err());
+        assert!(fleet_case("Fleet2M").is_err());
+        // the million-client case: 10⁶ clients, 10⁴ shards, diurnal waves
+        let million = fleet_case("Fleet1M").unwrap();
+        assert_eq!(million.num_clients, 1_000_000);
+        assert_eq!(million.shards, 10_000);
+        assert_eq!(million.regions, 100);
+        assert!(million.global_rounds >= 100);
+        assert!(matches!(million.waves, WaveSpec::Diurnal { .. }));
+        let million_cfg = fleet_config(&million, None, 7);
+        assert_eq!(million_cfg.waves, million.waves);
+        assert!(million_cfg.validate().is_ok());
         // the region-tier case: 10⁵ clients over 10³ shards, 25 regions
         let reg = fleet_case("Fleet100kRegions").unwrap();
         assert_eq!(reg.shards, 1000);

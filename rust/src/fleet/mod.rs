@@ -35,7 +35,14 @@
 //! `UpdateGuard` rejection policy (`tests/failure_injection.rs` is the
 //! robustness gate).
 
+//! Two drivers share one phase core (`async_round::EngineCore`): the
+//! fixed-cadence loop (`fleet::async_round`, `--engine loop`) and the
+//! discrete-event priority-queue clock (`fleet::event`,
+//! `--engine event`) whose arrival waves + lazy registry strata keep
+//! per-round cost tracking the cohort, not the fleet.
+
 pub mod async_round;
+pub mod event;
 pub mod hierarchy;
 pub mod registry;
 pub mod weather;
@@ -44,6 +51,7 @@ pub use async_round::{
     run, run_traced, run_with_model, run_with_model_traced, shard_periods,
     FleetConfig,
 };
+pub use event::{Engine, EventRecord, WaveGen, WaveSpec};
 pub use hierarchy::{
     fold_regions, fold_regions_guarded, RegionAggregator, RegionUpdate,
     RootAggregator, ShardUpdate,

@@ -7,8 +7,10 @@
 //! decision O(fleet²) or worse (the Hungarian RB assignment is cubic in
 //! the cohort). [`FleetTopology`] partitions the pooled fleet into K
 //! shards by **locality** (radio distance — a geography proxy) or **power
-//! stratum** (Eq 8 delay), hands each shard its own [`ResourcePool`] view
-//! (and a cached `CostMatrix` sub-view for P2P), and fans per-shard
+//! stratum** (Eq 8 delay), materializes each shard's [`ResourcePool`]
+//! view **lazily on first use** (idle strata cost ~0 bytes — see
+//! [`FleetTopology::shard_pool`]; P2P gets a cached `CostMatrix`
+//! sub-view the same way), and fans per-shard
 //! `SchedulingOptimizer` decisions out over `runtime::ParallelExecutor` —
 //! K independent O(shard²) problems instead of one O(fleet²) one. Shards
 //! are then grouped into R **regions** (contiguous cut over the region
@@ -37,7 +39,7 @@
 //! between shards. Rebalancing invalidates the cached cost-matrix views.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 use anyhow::{bail, Result};
 
@@ -63,16 +65,26 @@ pub enum ShardBy {
     Power,
 }
 
-/// One shard: a contiguous stratum of the fleet with its own modelled
-/// resource view.
+/// One shard: a contiguous stratum of the fleet. The shard-local
+/// [`ResourcePool`] view is **materialized lazily** — partitioning a
+/// 10⁶-client fleet into 10⁴ shards records only member lists and two
+/// precomputed means; a shard that never decides (idle, dark, or asleep
+/// in a wave trough) never pays the O(members) view clone. Fetch the
+/// view through [`FleetTopology::shard_pool`].
 #[derive(Debug, Clone)]
 pub struct Shard {
     pub id: usize,
     /// fleet pool indices, ascending
     pub members: Vec<usize>,
-    /// shard-local resource view (delays/data sizes/sites re-indexed
-    /// 0..members.len(), same channel model)
-    pub pool: ResourcePool,
+    /// lazily-materialized shard-local resource view (delays/data
+    /// sizes/sites re-indexed 0..members.len(), same channel model);
+    /// empty until the first `FleetTopology::shard_pool` call
+    pool: OnceLock<ResourcePool>,
+    /// mean Eq 8 local delay, precomputed at partition time (one scalar
+    /// pass — no per-shard allocation)
+    mean_delay_s: f64,
+    /// mean radio distance, precomputed the same way
+    mean_distance_m: f64,
 }
 
 impl Shard {
@@ -91,26 +103,35 @@ impl Shard {
 
     /// Mean Eq 8 local delay of the shard (drives the async cadence).
     pub fn mean_delay_s(&self) -> f64 {
-        stats::mean(&self.pool.fleet.delays_s)
+        self.mean_delay_s
     }
 
     /// Mean radio distance of the shard (drives the region grouping).
     pub fn mean_distance_m(&self) -> f64 {
-        let d: Vec<f64> =
-            self.pool.sites.iter().map(|s| s.distance_m).collect();
-        stats::mean(&d)
+        self.mean_distance_m
     }
 
-    /// Shard-local t_max − t_min over a shard-local cohort.
-    pub fn delay_spread_s(&self, cohort_local: &[usize]) -> f64 {
-        if cohort_local.is_empty() {
-            return 0.0;
-        }
-        let d: Vec<f64> = cohort_local
+    /// Has this shard's resource view been materialized yet?
+    pub fn pool_materialized(&self) -> bool {
+        self.pool.get().is_some()
+    }
+}
+
+/// Build one shard's resource view out of the fleet source pool —
+/// exactly the clone the eager partition used to take up front.
+fn materialize_pool(source: &ResourcePool, members: &[usize]) -> ResourcePool {
+    let fleet = FleetInfo {
+        delays_s: members.iter().map(|&c| source.fleet.delays_s[c]).collect(),
+        data_sizes: members
             .iter()
-            .map(|&i| self.pool.fleet.delays_s[i])
-            .collect();
-        stats::max(&d) - stats::min(&d)
+            .map(|&c| source.fleet.data_sizes[c])
+            .collect(),
+    };
+    let sites = members.iter().map(|&c| source.sites[c].clone()).collect();
+    ResourcePool {
+        fleet,
+        sites,
+        channel: source.channel.clone(),
     }
 }
 
@@ -150,6 +171,10 @@ pub struct FleetTopology {
     next_client_id: u64,
     shard_by: ShardBy,
     region_by: ShardBy,
+    /// the pooled fleet the current strata were cut from — the single
+    /// source every lazily-materialized shard view is sliced out of
+    /// (refreshed by `rebalance`/`churn`)
+    source: ResourcePool,
     /// per-shard P2P cost sub-views, built once per topology by
     /// `cache_cost_views` (cleared on rebalance). Empty until cached.
     cost_views: Vec<CostMatrix>,
@@ -213,22 +238,26 @@ fn partition(
         for &c in &members {
             shard_of_client[c] = id;
         }
-        let fleet = FleetInfo {
-            delays_s: members.iter().map(|&c| pool.fleet.delays_s[c]).collect(),
-            data_sizes: members
-                .iter()
-                .map(|&c| pool.fleet.data_sizes[c])
-                .collect(),
+        // the two per-shard scalars every round needs (cadence + region
+        // key) are one streamed pass here; the O(members) pool view is
+        // deferred until a decision actually touches the shard
+        let (mean_delay_s, mean_distance_m) = if members.is_empty() {
+            (0.0, 0.0)
+        } else {
+            let len = members.len() as f64;
+            (
+                members.iter().map(|&c| pool.fleet.delays_s[c]).sum::<f64>()
+                    / len,
+                members.iter().map(|&c| pool.sites[c].distance_m).sum::<f64>()
+                    / len,
+            )
         };
-        let sites = members.iter().map(|&c| pool.sites[c].clone()).collect();
         shards.push(Shard {
             id,
             members,
-            pool: ResourcePool {
-                fleet,
-                sites,
-                channel: pool.channel.clone(),
-            },
+            pool: OnceLock::new(),
+            mean_delay_s,
+            mean_distance_m,
         });
     }
     Ok((shards, shard_of_client))
@@ -293,9 +322,44 @@ impl FleetTopology {
             next_client_id: u as u64,
             shard_by,
             region_by,
+            source: pool.clone(),
             cost_views: Vec::new(),
             cost_views_fingerprint: None,
         })
+    }
+
+    /// The shard-local [`ResourcePool`] view, materialized on first use
+    /// and cached until the next rebalance. Safe to call from executor
+    /// workers (`OnceLock` races resolve to one winner; both sides
+    /// compute the identical deterministic slice).
+    pub fn shard_pool(&self, s: usize) -> &ResourcePool {
+        self.shards[s]
+            .pool
+            .get_or_init(|| materialize_pool(&self.source, &self.shards[s].members))
+    }
+
+    /// How many shard views have actually been materialized — the
+    /// laziness observable the event engine's bench asserts on.
+    pub fn materialized_pools(&self) -> usize {
+        self.shards.iter().filter(|s| s.pool_materialized()).count()
+    }
+
+    /// Shard-local t_max − t_min over a shard-local cohort, read straight
+    /// from the source pool (no shard view materialization).
+    pub fn shard_delay_spread_s(
+        &self,
+        shard: usize,
+        cohort_local: &[usize],
+    ) -> f64 {
+        if cohort_local.is_empty() {
+            return 0.0;
+        }
+        let members = &self.shards[shard].members;
+        let d: Vec<f64> = cohort_local
+            .iter()
+            .map(|&i| self.source.fleet.delays_s[members[i]])
+            .collect();
+        stats::max(&d) - stats::min(&d)
     }
 
     pub fn num_shards(&self) -> usize {
@@ -372,6 +436,7 @@ impl FleetTopology {
         self.regions = regions;
         self.shard_of_client = shard_of_client;
         self.region_of_shard = region_of_shard;
+        self.source = pool.clone();
         self.cost_views.clear();
         self.cost_views_fingerprint = None;
         Ok(())
@@ -565,7 +630,7 @@ pub fn decide_traditional_sharded(
             // cnclint: allow(no-unwrap-in-lib): a poisoned optimizer mutex means a worker already panicked — propagate the abort
             let mut opt = optimizers[s].lock().expect("optimizer poisoned");
             let decision = opt.decide_traditional(
-                &shard.pool,
+                fleet.shard_pool(s),
                 cohort_strategy,
                 rb_strategy,
                 cohorts[s],
@@ -628,7 +693,7 @@ pub fn decide_p2p_sharded(
             // cnclint: allow(no-unwrap-in-lib): a poisoned optimizer mutex means a worker already panicked — propagate the abort
             let mut opt = optimizers[s].lock().expect("optimizer poisoned");
             let mut d = opt.decide_p2p(
-                &shard.pool,
+                fleet.shard_pool(s),
                 sub,
                 &crate::cnc::optimize::PartitionStrategy::All,
                 path_strategy,
@@ -694,9 +759,10 @@ mod tests {
                     assert_eq!(f.shard_of_client[c], s.id);
                     assert_eq!(s.to_global(local), c);
                     // shard-local views mirror the global pool
-                    assert_eq!(s.pool.fleet.delays_s[local], p.fleet.delays_s[c]);
+                    let sp = f.shard_pool(s.id);
+                    assert_eq!(sp.fleet.delays_s[local], p.fleet.delays_s[c]);
                     assert_eq!(
-                        s.pool.sites[local].distance_m,
+                        sp.sites[local].distance_m,
                         p.sites[c].distance_m
                     );
                 }
@@ -733,8 +799,8 @@ mod tests {
         let p = pool(20, 1);
         let f = flat(&p, 1, ShardBy::Power).unwrap();
         assert_eq!(f.shards[0].members, (0..20).collect::<Vec<_>>());
-        assert_eq!(f.shards[0].pool.fleet.delays_s, p.fleet.delays_s);
-        assert_eq!(f.shards[0].pool.fleet.data_sizes, p.fleet.data_sizes);
+        assert_eq!(f.shard_pool(0).fleet.delays_s, p.fleet.delays_s);
+        assert_eq!(f.shard_pool(0).fleet.data_sizes, p.fleet.data_sizes);
         assert_eq!(f.client_ids, (0..20u64).collect::<Vec<_>>());
     }
 
@@ -743,9 +809,9 @@ mod tests {
         let p = pool(60, 2);
         let f = flat(&p, 4, ShardBy::Power).unwrap();
         // shard s's slowest member is ≤ shard s+1's fastest member
-        for w in f.shards.windows(2) {
-            let max_lo = stats::max(&w[0].pool.fleet.delays_s);
-            let min_hi = stats::min(&w[1].pool.fleet.delays_s);
+        for s in 0..f.num_shards() - 1 {
+            let max_lo = stats::max(&f.shard_pool(s).fleet.delays_s);
+            let min_hi = stats::min(&f.shard_pool(s + 1).fleet.delays_s);
             assert!(max_lo <= min_hi + 1e-12);
         }
     }
@@ -934,6 +1000,35 @@ mod tests {
                 assert_eq!(f.shard_of_client[c], d.shard);
             }
         }
+    }
+
+    #[test]
+    fn shard_pools_materialize_lazily_and_identically() {
+        let p = pool(48, 21);
+        let f = FleetTopology::build(&p, 6, ShardBy::Power, 2, ShardBy::Power)
+            .unwrap();
+        assert_eq!(f.materialized_pools(), 0, "partition must not build views");
+        // precomputed per-shard means are bit-identical to the means of
+        // the views materialized later
+        for s in 0..6 {
+            let want_delay = f.shards[s].mean_delay_s();
+            let want_dist = f.shards[s].mean_distance_m();
+            let sp = f.shard_pool(s);
+            assert_eq!(want_delay, stats::mean(&sp.fleet.delays_s));
+            let d: Vec<f64> = sp.sites.iter().map(|x| x.distance_m).collect();
+            assert_eq!(want_dist, stats::mean(&d));
+        }
+        assert_eq!(f.materialized_pools(), 6);
+        // the cohort delay spread reads the source pool — it must not
+        // force a view, and must agree with the view's delays
+        let h = FleetTopology::build(&p, 6, ShardBy::Power, 2, ShardBy::Power)
+            .unwrap();
+        let locals: Vec<usize> = (0..h.shards[0].len()).collect();
+        let spread = h.shard_delay_spread_s(0, &locals);
+        assert_eq!(h.materialized_pools(), 0);
+        let d = &f.shard_pool(0).fleet.delays_s;
+        assert_eq!(spread, stats::max(d) - stats::min(d));
+        assert_eq!(h.shard_delay_spread_s(0, &[]), 0.0);
     }
 
     #[test]

@@ -28,7 +28,9 @@ use cnc_fl::exp::presets::{
     self, case, traditional_config, Backend, Method, CASES,
 };
 use cnc_fl::cnc::announce::AnnouncementBus;
-use cnc_fl::fleet::{self, GuardPolicy, WeatherSpec};
+use cnc_fl::fleet::{
+    self, Engine as FleetEngine, GuardPolicy, WaveSpec, WeatherSpec,
+};
 use cnc_fl::model::shape::{ModelShape, PRESET_NAMES};
 use cnc_fl::netsim::channel::ChannelParams;
 use cnc_fl::netsim::topology::TopologyGen;
@@ -56,8 +58,9 @@ fn usage() -> String {
      \x20 shapes           print the built-in model-shape presets\n\
      \x20 run              one traditional-architecture training run\n\
      \x20 fleet            sharded/async fleet-engine run (Fleet10k/Fleet100k/\n\
-     \x20                  Fleet10kWide/Fleet100kRegions; --regions/--churn/\n\
-     \x20                  --codec/--weather/--guard knobs)\n\
+     \x20                  Fleet10kWide/Fleet100kRegions/Fleet1M; --engine\n\
+     \x20                  loop|event, --regions/--churn/--codec/--weather/\n\
+     \x20                  --guard/--wave knobs)\n\
      \x20 p2p              one peer-to-peer training run\n\
      \x20 fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11\n\
      \x20                  regenerate that figure's CSV series\n\
@@ -315,8 +318,10 @@ fn run_traditional(args: &[String]) -> Result<()> {
 
 fn run_fleet(args: &[String]) -> Result<()> {
     let cmd = Command::new("fleet", "sharded/async fleet-engine training run (mock backend)")
-        .opt("case", Some("Fleet10k"), "Fleet10k | Fleet100k | Fleet10kWide | Fleet100kRegions")
+        .opt("case", Some("Fleet10k"), "Fleet10k | Fleet100k | Fleet10kWide | Fleet100kRegions | Fleet1M")
         .opt("preset", None, "alias for --case")
+        .opt("engine", Some("loop"), "round driver: loop (fixed cadence) | event (discrete-event clock)")
+        .opt("wave", None, "override arrival waves: always | diurnal[:PERIOD[:FLOOR:PEAK]] (event engine only)")
         .opt("shards", None, "override the case's shard count")
         .opt("regions", None, "override the case's region count (<= shards)")
         .opt("max-staleness", None, "override the staleness bound (0 = sync)")
@@ -369,6 +374,10 @@ fn run_fleet(args: &[String]) -> Result<()> {
     cfg.guard = guard;
     cfg.threads = m.usize_("threads")?;
     cfg.verbose = m.bool_("verbose")?;
+    let engine: FleetEngine = m.str_("engine")?.parse()?;
+    if let Some(spec) = m.get("wave") {
+        cfg.waves = spec.parse::<WaveSpec>()?;
+    }
     cfg.validate()?;
 
     let shape = match m.get("model") {
@@ -411,7 +420,18 @@ fn run_fleet(args: &[String]) -> Result<()> {
         .display()
         .to_string();
     let mut obs = make_observer(&m, default_trace)?;
-    let h = fleet::run_traced(&mut sys, trainer.as_mut(), &cfg, &label, &mut obs)?;
+    let h = match engine {
+        FleetEngine::Loop => {
+            fleet::run_traced(&mut sys, trainer.as_mut(), &cfg, &label, &mut obs)?
+        }
+        FleetEngine::Event => fleet::event::run_traced(
+            &mut sys,
+            trainer.as_mut(),
+            &cfg,
+            &label,
+            &mut obs,
+        )?,
+    };
 
     let out = PathBuf::from(m.str_("out")?).join(format!(
         "fleet_{}_{}_{}s_{}k{}{}{}.csv",

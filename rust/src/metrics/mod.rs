@@ -11,7 +11,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::util::csv::CsvTable;
+use crate::util::csv::{CsvAppender, CsvTable};
 use crate::util::stats;
 
 /// Everything measured in one global training round.
@@ -76,6 +76,11 @@ pub struct RoundRecord {
     /// pre-event level, recorded once on the recovering round (0 on
     /// every other round)
     pub recovery_rounds: usize,
+    /// the fleet driver's simulated-clock reading when the round closed:
+    /// `(round + 1)` seconds under the fixed-cadence loop and the event
+    /// queue's round-close time under `fleet --engine event` (identical
+    /// in the degenerate case); 0.0 for the flat coordinators
+    pub sim_time_s: f64,
 }
 
 impl RoundRecord {
@@ -203,9 +208,12 @@ impl RunHistory {
         stats::mean(&v)
     }
 
-    /// Export the standard per-round CSV (one row per round).
-    pub fn to_csv(&self) -> CsvTable {
-        let mut t = CsvTable::new(&[
+    /// The one per-round CSV header (the `csv-schema-sync` lint keys on
+    /// this literal): both the buffered [`Self::to_csv`] table and the
+    /// streaming [`Self::write_csv`] path start here, so the two can
+    /// never drift.
+    fn csv_header() -> CsvTable {
+        CsvTable::new(&[
             "round",
             "accuracy",
             "train_loss",
@@ -234,47 +242,86 @@ impl RunHistory {
             "tx_delay_p50_s",
             "tx_delay_p95_s",
             "tx_delay_p99_s",
-        ]);
-        let cum_local = self.cumulative(Metric::LocalDelayRound);
-        let cum_tx = self.cumulative(Metric::TxDelayRound);
-        let cum_e = self.cumulative(Metric::TxEnergyRound);
-        for (i, r) in self.rounds.iter().enumerate() {
-            t.push_f64(&[
-                r.round as f64,
-                r.accuracy,
-                r.train_loss,
-                r.local_delay_round_s(),
-                r.local_delay_diff_s(),
-                r.tx_delay_round_s(),
-                r.tx_energy_round_j(),
-                cum_local[i],
-                cum_tx[i],
-                cum_e[i],
-                r.shards_committed as f64,
-                r.staleness_mean,
-                r.shard_spread_max_s(),
-                r.regions_committed as f64,
-                r.rebalance_moves as f64,
-                r.uplink_bytes as f64,
-                r.backhaul_bytes as f64,
-                r.broadcast_bytes as f64,
-                r.comm_delay_s,
-                r.rejected_updates as f64,
-                r.outage_regions as f64,
-                r.recovery_rounds as f64,
-                r.local_delay_q_s(0.5),
-                r.local_delay_q_s(0.95),
-                r.local_delay_q_s(0.99),
-                r.tx_delay_q_s(0.5),
-                r.tx_delay_q_s(0.95),
-                r.tx_delay_q_s(0.99),
-            ]);
+            "sim_time_s",
+        ])
+    }
+
+    /// One round's CSV cells. The `cum_*` columns take *running*
+    /// accumulators so a streaming writer needs no lookahead —
+    /// accumulate-then-emit is exactly `stats::cumsum`'s op order, so
+    /// buffered and streamed rows agree bitwise.
+    fn csv_row(
+        r: &RoundRecord,
+        cum_local: f64,
+        cum_tx: f64,
+        cum_e: f64,
+    ) -> [f64; 29] {
+        [
+            r.round as f64,
+            r.accuracy,
+            r.train_loss,
+            r.local_delay_round_s(),
+            r.local_delay_diff_s(),
+            r.tx_delay_round_s(),
+            r.tx_energy_round_j(),
+            cum_local,
+            cum_tx,
+            cum_e,
+            r.shards_committed as f64,
+            r.staleness_mean,
+            r.shard_spread_max_s(),
+            r.regions_committed as f64,
+            r.rebalance_moves as f64,
+            r.uplink_bytes as f64,
+            r.backhaul_bytes as f64,
+            r.broadcast_bytes as f64,
+            r.comm_delay_s,
+            r.rejected_updates as f64,
+            r.outage_regions as f64,
+            r.recovery_rounds as f64,
+            r.local_delay_q_s(0.5),
+            r.local_delay_q_s(0.95),
+            r.local_delay_q_s(0.99),
+            r.tx_delay_q_s(0.5),
+            r.tx_delay_q_s(0.95),
+            r.tx_delay_q_s(0.99),
+            r.sim_time_s,
+        ]
+    }
+
+    /// Export the standard per-round CSV (one row per round) as an
+    /// in-memory table.
+    pub fn to_csv(&self) -> CsvTable {
+        let mut t = Self::csv_header();
+        let mut cum_local = 0.0f64;
+        let mut cum_tx = 0.0f64;
+        let mut cum_e = 0.0f64;
+        for r in &self.rounds {
+            cum_local += r.local_delay_round_s();
+            cum_tx += r.tx_delay_round_s();
+            cum_e += r.tx_energy_round_j();
+            t.push_f64(&Self::csv_row(r, cum_local, cum_tx, cum_e));
         }
         t
     }
 
+    /// Write the per-round CSV incrementally — header at create, one
+    /// row appended per round, O(1) memory regardless of run length
+    /// (at hundreds of rounds × 10⁴ shards the buffered table is real
+    /// memory). Byte-identical to `to_csv().write_to(path)`; the test
+    /// below pins it.
     pub fn write_csv(&self, path: &Path) -> Result<()> {
-        self.to_csv().write_to(path)
+        let mut w = CsvAppender::create(path, &Self::csv_header().header)?;
+        let mut cum_local = 0.0f64;
+        let mut cum_tx = 0.0f64;
+        let mut cum_e = 0.0f64;
+        for r in &self.rounds {
+            cum_local += r.local_delay_round_s();
+            cum_tx += r.tx_delay_round_s();
+            cum_e += r.tx_energy_round_j();
+            w.append_f64(&Self::csv_row(r, cum_local, cum_tx, cum_e))?;
+        }
+        w.finish()
     }
 }
 
@@ -359,7 +406,7 @@ mod tests {
              uplink_bytes,backhaul_bytes,broadcast_bytes,comm_delay_s,\
              rejected_updates,outage_regions,recovery_rounds,\
              local_delay_p50_s,local_delay_p95_s,local_delay_p99_s,\
-             tx_delay_p50_s,tx_delay_p95_s,tx_delay_p99_s"
+             tx_delay_p50_s,tx_delay_p95_s,tx_delay_p99_s,sim_time_s"
         ));
         let row = text.lines().nth(1).unwrap();
         assert!(row.contains(",3,0.5,2,2,7"), "{row}");
@@ -377,7 +424,7 @@ mod tests {
         let text = h.to_csv().to_string();
         let row = text.lines().nth(1).unwrap();
         assert!(
-            row.ends_with(",101770,2048,407080,1.25,0,0,0,1,1,1,0.5,0.5,0.5"),
+            row.ends_with(",101770,2048,407080,1.25,0,0,0,1,1,1,0.5,0.5,0.5,0"),
             "{row}"
         );
         // the flat default charges nothing
@@ -396,7 +443,7 @@ mod tests {
         h.push(r);
         let text = h.to_csv().to_string();
         let row = text.lines().nth(1).unwrap();
-        assert!(row.ends_with(",13,2,4,1,1,1,0.5,0.5,0.5"), "{row}");
+        assert!(row.ends_with(",13,2,4,1,1,1,0.5,0.5,0.5,0"), "{row}");
         // calm/flat defaults report nothing
         let d = RoundRecord::default();
         assert_eq!(d.rejected_updates, 0);
@@ -424,10 +471,10 @@ mod tests {
         let header = text.lines().next().unwrap();
         assert!(header.ends_with(
             "local_delay_p50_s,local_delay_p95_s,local_delay_p99_s,\
-             tx_delay_p50_s,tx_delay_p95_s,tx_delay_p99_s"
+             tx_delay_p50_s,tx_delay_p95_s,tx_delay_p99_s,sim_time_s"
         ));
         let row = text.lines().nth(1).unwrap();
-        assert!(row.ends_with(",2,7.2,7.84,0.5,0.725,0.745"), "{row}");
+        assert!(row.ends_with(",2,7.2,7.84,0.5,0.725,0.745,0"), "{row}");
     }
 
     #[test]
@@ -455,6 +502,50 @@ mod tests {
         let text = t.to_string();
         assert!(text.starts_with("round,accuracy"));
         assert_eq!(text.lines().count(), 6);
+    }
+
+    #[test]
+    fn sim_time_column_round_trips_to_csv() {
+        let mut h = RunHistory::new("simtime");
+        let mut r = rec(0, 0.4, &[1.0], &[0.5], &[0.1]);
+        r.sim_time_s = 1.0;
+        h.push(r);
+        let mut r = rec(1, 0.5, &[1.0], &[0.5], &[0.1]);
+        r.sim_time_s = 2.0;
+        h.push(r);
+        let text = h.to_csv().to_string();
+        assert!(text.lines().nth(1).unwrap().ends_with(",1"));
+        assert!(text.lines().nth(2).unwrap().ends_with(",2"));
+    }
+
+    #[test]
+    fn streamed_csv_is_byte_identical_to_buffered() {
+        // the incremental writer (header at create, one appended row per
+        // round, running cum_* accumulators) must reproduce the buffered
+        // table exactly — same format_num/escape, same cumsum op order
+        let mut h = RunHistory::new("stream");
+        for i in 0..40 {
+            let mut r = rec(
+                i,
+                0.02 * i as f64,
+                &[1.0 / (i + 1) as f64, 0.37 * i as f64, 2.0],
+                &[0.125, 1.0 / 3.0],
+                &[0.05, 0.7],
+            );
+            r.shards_committed = i % 5;
+            r.staleness_mean = i as f64 / 7.0;
+            r.uplink_bytes = 101_770 * i;
+            r.comm_delay_s = 0.31 * i as f64;
+            r.rejected_updates = i % 3;
+            r.sim_time_s = (i + 1) as f64;
+            h.push(r);
+        }
+        let dir = std::env::temp_dir().join("cnc_fl_metrics_stream_test");
+        let path = dir.join("rounds.csv");
+        h.write_csv(&path).unwrap();
+        let streamed = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(streamed, h.to_csv().to_string());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

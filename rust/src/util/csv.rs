@@ -77,6 +77,75 @@ impl CsvTable {
     }
 }
 
+/// An incremental CSV writer: the header goes to disk at `create` and
+/// every appended row streams through a buffered writer — nothing is
+/// retained in memory, so a hundreds-of-rounds × 10⁴-shard run costs
+/// O(1) instead of holding the whole table (the same append-row-at-a-
+/// time discipline as the JSONL `TraceSink`). Rows are rendered by the
+/// exact same `format_num`/`escape` pair as [`CsvTable::to_string`],
+/// so a streamed file is **byte-identical** to the buffered one
+/// (`metrics` pins it).
+#[derive(Debug)]
+pub struct CsvAppender {
+    w: std::io::BufWriter<std::fs::File>,
+    width: usize,
+}
+
+impl CsvAppender {
+    /// Create (truncate) `path`, write the header line, and hand back
+    /// the appender.
+    pub fn create(path: &Path, header: &[String]) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("mkdir -p {}", dir.display()))?;
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        w.write_all(header.join(",").as_bytes())?;
+        w.write_all(b"\n")?;
+        Ok(CsvAppender {
+            w,
+            width: header.len(),
+        })
+    }
+
+    /// Append one row of already-formatted cells; panics on column
+    /// mismatch (programming error, not data error — same contract as
+    /// [`CsvTable::push_raw`]).
+    pub fn append_raw(&mut self, cells: &[String]) -> Result<()> {
+        assert_eq!(
+            cells.len(),
+            self.width,
+            "CSV row width {} != header width {}",
+            cells.len(),
+            self.width
+        );
+        let line = cells
+            .iter()
+            .map(|c| escape(c))
+            .collect::<Vec<_>>()
+            .join(",");
+        self.w.write_all(line.as_bytes())?;
+        self.w.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Append one row of f64s via [`format_num`] — cell-for-cell what
+    /// [`CsvTable::push_f64`] + `to_string` would have produced.
+    pub fn append_f64(&mut self, cells: &[f64]) -> Result<()> {
+        let rendered: Vec<String> =
+            cells.iter().map(|x| format_num(*x)).collect();
+        self.append_raw(&rendered)
+    }
+
+    /// Flush the buffered tail to disk.
+    pub fn finish(mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
 /// Format an f64 compactly but losslessly enough for plotting (9 sig figs).
 pub fn format_num(x: f64) -> String {
     if x == x.trunc() && x.abs() < 1e15 {
@@ -139,5 +208,30 @@ mod tests {
         t.write_to(&path).unwrap();
         assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n7\n");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn appender_matches_buffered_table_byte_for_byte() {
+        let dir = std::env::temp_dir().join("cnc_fl_csv_appender_test");
+        let path = dir.join("a.csv");
+        let mut t = CsvTable::new(&["round", "acc", "name"]);
+        t.push_f64(&[1.0, 1.0 / 3.0, 0.25]);
+        t.push_raw(vec!["2".into(), "a,b".into(), "say \"hi\"".into()]);
+        let mut a = CsvAppender::create(&path, &t.header).unwrap();
+        a.append_f64(&[1.0, 1.0 / 3.0, 0.25]).unwrap();
+        a.append_raw(&["2".into(), "a,b".into(), "say \"hi\"".into()])
+            .unwrap();
+        a.finish().unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), t.to_string());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[should_panic]
+    fn appender_width_mismatch_panics() {
+        let dir = std::env::temp_dir().join("cnc_fl_csv_appender_panic");
+        let path = dir.join("p.csv");
+        let mut a = CsvAppender::create(&path, &["a".into(), "b".into()]).unwrap();
+        let _ = a.append_f64(&[1.0]);
     }
 }

@@ -371,10 +371,11 @@ fn shards_always_partition_and_views_always_match() {
                 for s in &f.shards {
                     let sorted = s.members.windows(2).all(|w| w[0] < w[1]);
                     prop_assert(sorted, "members must be id-sorted")?;
+                    let sp = f.shard_pool(s.id);
                     for (local, &c) in s.members.iter().enumerate() {
                         prop_assert(
-                            s.pool.fleet.delays_s[local] == sys.pool.fleet.delays_s[c]
-                                && s.pool.fleet.data_sizes[local]
+                            sp.fleet.delays_s[local] == sys.pool.fleet.delays_s[c]
+                                && sp.fleet.data_sizes[local]
                                     == sys.pool.fleet.data_sizes[c],
                             "shard view must mirror the global pool",
                         )?;
@@ -504,6 +505,121 @@ fn fleet_engine_runs_every_shape_preset_without_recompiling() {
             h.final_accuracy() > h.rounds[0].accuracy.min(0.2),
             "{name}: training must improve"
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// discrete-event driver ≡ loop driver, bitwise, with waves degenerate
+// ---------------------------------------------------------------------------
+
+/// Three topology shapes spanning the engine's regimes: one-shard
+/// synchronous (the flat-coordinator degenerate corner), multi-shard
+/// async with bounded staleness, and the region tier under injected
+/// churn. With `waves: Always` (the default) the event driver must be a
+/// pure re-sequencing of the loop driver — same phases, same RNG
+/// streams, same fold order — so both CSVs and both final models are
+/// bit-identical.
+fn event_loop_shapes() -> Vec<(usize, FleetConfig)> {
+    vec![
+        (
+            30,
+            FleetConfig {
+                rounds: 4,
+                shards: 1,
+                regions: 1,
+                max_staleness: 0,
+                cohort_size: 6,
+                n_rb: 6,
+                cohort_strategy: CohortStrategy::PowerGrouping { m: 5 },
+                seed: 11,
+                ..Default::default()
+            },
+        ),
+        (
+            36,
+            FleetConfig {
+                rounds: 5,
+                shards: 3,
+                regions: 1,
+                max_staleness: 2,
+                cohort_size: 6,
+                n_rb: 6,
+                seed: 23,
+                ..Default::default()
+            },
+        ),
+        (
+            40,
+            FleetConfig {
+                rounds: 4,
+                shards: 4,
+                regions: 2,
+                max_staleness: 1,
+                cohort_size: 8,
+                n_rb: 8,
+                churn_every: 2,
+                churn_rate: 0.1,
+                seed: 37,
+                ..Default::default()
+            },
+        ),
+    ]
+}
+
+#[test]
+fn event_driver_is_bitwise_the_loop_driver_across_shapes_and_threads() {
+    for (u, base) in event_loop_shapes() {
+        for threads in [1usize, 4] {
+            let mut cfg = base.clone();
+            cfg.threads = threads;
+            let (loop_h, loop_m) = {
+                let mut sys = system(u, cfg.seed);
+                let mut t = MockTrainer::new(u, 600);
+                fleet::run_with_model(&mut sys, &mut t, &cfg, "loop").unwrap()
+            };
+            let (ev_h, ev_m) = {
+                let mut sys = system(u, cfg.seed);
+                let mut t = MockTrainer::new(u, 600);
+                fleet::event::run_with_model(&mut sys, &mut t, &cfg, "event")
+                    .unwrap()
+            };
+            assert_eq!(
+                loop_h.to_csv().to_string(),
+                ev_h.to_csv().to_string(),
+                "shards {} threads {threads}: CSVs diverged",
+                cfg.shards
+            );
+            assert_eq!(
+                loop_m.max_abs_diff(&ev_m),
+                0.0,
+                "shards {} threads {threads}: final models diverged",
+                cfg.shards
+            );
+        }
+    }
+}
+
+#[test]
+fn event_trace_is_identical_across_thread_counts() {
+    // the priority-queue clock is the only event ordering — worker-pool
+    // scheduling must never leak into the trace or the outputs
+    let (u, base) = event_loop_shapes().remove(2);
+    let mut runs = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let mut cfg = base.clone();
+        cfg.threads = threads;
+        let mut sys = system(u, cfg.seed);
+        let mut t = MockTrainer::new(u, 600);
+        let (h, m, trace) =
+            fleet::event::run_recorded(&mut sys, &mut t, &cfg, "trace").unwrap();
+        runs.push((h.to_csv().to_string(), m, trace));
+    }
+    // 5 events per round, every round closed
+    assert_eq!(runs[0].2.len(), 5 * base.rounds);
+    for r in &runs[1..] {
+        assert_eq!(runs[0].0, r.0, "CSV must not depend on thread count");
+        assert_eq!(runs[0].1.max_abs_diff(&r.1), 0.0);
+        assert_eq!(runs[0].2, r.2, "event trace must not depend on threads");
     }
 }
 
